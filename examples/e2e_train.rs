@@ -1,0 +1,98 @@
+//! End-to-end stack validation (DESIGN.md E2E): train the tiny GPT-2 whose
+//! training step was AOT-compiled from JAX (+ the Pallas flash-attention
+//! kernel) through PJRT, driven entirely from rust — then compare the
+//! *measured* per-step wallclock against MONET's *modeled* cycle count for
+//! the same workload on the FuseMax HDA, the model-vs-measured discipline
+//! Stream inherits.
+//!
+//! Run: `cargo run --release --example e2e_train -- [steps]`
+//! (requires `make artifacts` first)
+
+use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::hardware::presets::FuseMaxParams;
+use monet::mapping::MappingConfig;
+use monet::report::write_csv;
+use monet::runtime::{Corpus, Gpt2Runner, Runtime};
+use monet::scheduler::{schedule, Partition};
+use monet::workload::models::{gpt2, Gpt2Config};
+use monet::workload::op::Optimizer;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    // ---- real execution through the AOT artifacts ----
+    let rt = Runtime::new("artifacts")?;
+    let mut runner = Gpt2Runner::load(&rt, "tiny")?;
+    let meta = runner.meta.clone();
+    println!(
+        "tiny GPT-2 ({} params) on PJRT [{}]; {} steps on a synthetic byte corpus",
+        meta.num_params,
+        rt.platform(),
+        steps
+    );
+    let mut corpus = Corpus::synthetic(meta.vocab, 64 * 1024, 42);
+    let mut losses: Vec<f64> = vec![];
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let tokens = corpus.next_batch(meta.batch, meta.seq + 1);
+        let loss = runner.step(&tokens)? as f64;
+        losses.push(loss);
+        if step % 25 == 0 || step == 1 {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    let wall = t0.elapsed();
+    let ms_per_step = wall.as_secs_f64() * 1e3 / steps as f64;
+    println!(
+        "\nloss {:.3} → {:.3} over {steps} steps ({:.1} ms/step measured)",
+        losses[0],
+        losses[losses.len() - 1],
+        ms_per_step
+    );
+    assert!(
+        losses[losses.len() - 1] < 0.7 * losses[0],
+        "training failed to reduce loss — stack broken"
+    );
+    write_csv(
+        "results/e2e_train_loss.csv",
+        "step,loss",
+        losses.iter().enumerate().map(|(i, l)| vec![(i + 1).to_string(), format!("{l:.5}")]),
+    )?;
+
+    // ---- MONET's model of the same workload ----
+    let cfg = Gpt2Config {
+        vocab: meta.vocab,
+        seq: meta.seq,
+        d_model: meta.d_model,
+        n_head: 4,
+        n_layer: meta.n_layer,
+        mlp_ratio: 4,
+        batch: meta.batch,
+    };
+    let fwd = gpt2(cfg);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = FuseMaxParams::baseline().build();
+    let r = schedule(
+        &tg.graph,
+        &Partition::singletons(&tg.graph),
+        &accel,
+        &MappingConfig::fusemax_default(),
+    );
+    let modeled_ms = r.latency_cycles / (accel.clock_ghz * 1e9) * 1e3;
+    println!(
+        "\nmodel-vs-measured: MONET predicts {:.3} ms/step on FuseMax@{}GHz ({:.3e} cycles);",
+        modeled_ms, accel.clock_ghz, r.latency_cycles
+    );
+    println!(
+        "measured {:.1} ms/step on this CPU — a {:.0}× gap consistent with a {}-lane dataflow
+accelerator vs one interpreted-Pallas CPU core (absolute-scale sanity, not calibration).",
+        ms_per_step,
+        ms_per_step / modeled_ms,
+        accel.total_macs()
+    );
+    println!("loss curve written to results/e2e_train_loss.csv");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Figures 1 & 8: design-space exploration of ResNet-18 training vs
+//! inference over the Edge-TPU space (Table II).
+//!
+//! Run: `cargo run --release --example edge_dse -- [stride]`
+//! (stride 1 = the full 10 000-point space, ~2 min on one core)
+
+use monet::dse::pareto_front;
+use monet::figures::{fig1_fig8_edge_sweep, split_modes};
+use monet::report::ascii_scatter;
+use std::path::Path;
+
+fn main() {
+    let stride: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+    eprintln!("sweeping Table II with stride {stride}...");
+    let sweep = fig1_fig8_edge_sweep(stride, Some(Path::new("results")), |d, n| {
+        if d % 200 == 0 || d == n {
+            eprint!("\r  {d}/{n}");
+        }
+    });
+    eprintln!();
+    let (inf, tr) = split_modes(&sweep.rows);
+
+    // Fig 1: energy vs latency, per mode
+    for (mode, rows) in [("inference", &inf), ("training", &tr)] {
+        let xs: Vec<f64> = rows.iter().map(|r| r.latency_cycles).collect();
+        let ys: Vec<f64> = rows.iter().map(|r| r.energy_pj).collect();
+        let cmax = rows.iter().map(|r| r.color_axis).fold(f64::MIN, f64::max);
+        let marks: Vec<char> = rows
+            .iter()
+            .map(|r| ['.', ':', 'o', 'O', '@'][(r.color_axis / cmax * 4.0).min(4.0) as usize])
+            .collect();
+        println!(
+            "{}",
+            ascii_scatter(
+                &format!("Fig 1 [{mode}]: energy (pJ) vs latency (cycles); mark = U·L"),
+                &xs, &ys, &marks, 72, 16, true
+            )
+        );
+    }
+
+    // Fig 8 views: latency & energy vs total compute resource
+    for (mode, rows) in [("inference", &inf), ("training", &tr)] {
+        for (metric, get) in [
+            ("latency", (|r: &monet::dse::SweepRow| r.latency_cycles) as fn(&monet::dse::SweepRow) -> f64),
+            ("energy", |r: &monet::dse::SweepRow| r.energy_pj),
+        ] {
+            let xs: Vec<f64> = rows.iter().map(|r| r.total_macs as f64).collect();
+            let ys: Vec<f64> = rows.iter().map(get).collect();
+            let cmax = rows.iter().map(|r| r.color_axis).fold(f64::MIN, f64::max);
+            let marks: Vec<char> = rows
+                .iter()
+                .map(|r| ['.', ':', 'o', 'O', '@'][(r.color_axis / cmax * 4.0).min(4.0) as usize])
+                .collect();
+            println!(
+                "{}",
+                ascii_scatter(
+                    &format!("Fig 8 [{mode}]: {metric} vs total compute resource U·L·nPE"),
+                    &xs, &ys, &marks, 72, 14, true
+                )
+            );
+        }
+    }
+
+    // the paper's headline: Pareto sets differ between modes, and large
+    // PEs behave differently for training vs inference latency
+    let pi = pareto_front(&inf);
+    let pt = pareto_front(&tr);
+    let avg_pe = |rows: &[monet::dse::SweepRow], f: &[usize]| -> f64 {
+        f.iter().map(|&i| rows[i].color_axis).sum::<f64>() / f.len().max(1) as f64
+    };
+    println!("latency-energy Pareto: inference {} configs (avg U·L {:.0}), training {} configs (avg U·L {:.0})",
+        pi.len(), avg_pe(&inf, &pi), pt.len(), avg_pe(&tr, &pt));
+    let pi_set: std::collections::HashSet<&str> =
+        pi.iter().map(|&i| inf[i].label.as_str()).collect();
+    let pt_set: std::collections::HashSet<&str> =
+        pt.iter().map(|&i| tr[i].label.as_str()).collect();
+    let shared = pi_set.intersection(&pt_set).count();
+    println!(
+        "Pareto overlap: {shared} shared of {}/{} — architectures optimal for one mode are not optimal for the other",
+        pi_set.len(),
+        pt_set.len()
+    );
+    println!("CSV written to results/fig1_fig8_edge_sweep.csv");
+}

@@ -1,0 +1,47 @@
+//! Figure 9: GPT-2 training vs inference over the FuseMax space
+//! (Table III), colour-coded by global-buffer bandwidth.
+//!
+//! Run: `cargo run --release --example fusemax_gpt2 -- [stride]`
+
+use monet::figures::{fig9_fusemax_sweep, split_modes};
+use monet::report::ascii_scatter;
+use monet::util::stats;
+use std::path::Path;
+
+fn main() {
+    let stride: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    eprintln!("sweeping Table III with stride {stride}...");
+    let sweep = fig9_fusemax_sweep(stride, Some(Path::new("results")), |d, n| {
+        if d % 100 == 0 || d == n {
+            eprint!("\r  {d}/{n}");
+        }
+    });
+    eprintln!();
+    let (inf, tr) = split_modes(&sweep.rows);
+
+    for (mode, rows) in [("inference", &inf), ("training", &tr)] {
+        let xs: Vec<f64> = rows.iter().map(|r| r.latency_cycles).collect();
+        let ys: Vec<f64> = rows.iter().map(|r| r.energy_pj).collect();
+        let marks: Vec<char> = rows
+            .iter()
+            .map(|r| if r.color_axis > 8192.0 { '@' } else { 'o' })
+            .collect();
+        println!(
+            "{}",
+            ascii_scatter(
+                &format!("Fig 9 [{mode}]: energy vs latency; @ = 16K buffer BW, o = 8K"),
+                &xs, &ys, &marks, 72, 16, true
+            )
+        );
+        // the paper's observation: distributions are more concentrated than
+        // the Edge-TPU case (regular workload × regular hardware)
+        let lat: Vec<f64> = rows.iter().map(|r| r.latency_cycles.log10()).collect();
+        println!(
+            "  log10-latency spread: stddev {:.3} over [{:.2}, {:.2}]\n",
+            stats::stddev(&lat),
+            lat.iter().cloned().fold(f64::MAX, f64::min),
+            lat.iter().cloned().fold(f64::MIN, f64::max),
+        );
+    }
+    println!("CSV written to results/fig9_fusemax_sweep.csv");
+}

@@ -1,0 +1,49 @@
+//! Figure 10: layer-fusion strategies on ResNet-18 inference / Edge TPU —
+//! Base (layer-by-layer), Manual (conv+bn+relu), and the §V-A constraint
+//! solver at subgraph limits 4..8.
+//!
+//! Run: `cargo run --release --example fusion_opt`
+
+use monet::figures::fig10_fusion_strategies;
+use monet::report::ascii_bars;
+use std::path::Path;
+
+fn main() {
+    let rows = fig10_fusion_strategies(Some(Path::new("results")));
+    let labels: Vec<String> =
+        rows.iter().map(|r| format!("{} [{} groups]", r.strategy, r.n_groups)).collect();
+    println!(
+        "{}",
+        ascii_bars(
+            "Fig 10: ResNet-18 inference latency (cycles)",
+            &labels,
+            &rows.iter().map(|r| r.latency_cycles).collect::<Vec<_>>(),
+            44
+        )
+    );
+    println!(
+        "{}",
+        ascii_bars(
+            "Fig 10: ResNet-18 inference energy (pJ)",
+            &labels,
+            &rows.iter().map(|r| r.energy_pj).collect::<Vec<_>>(),
+            44
+        )
+    );
+    let base = rows.iter().find(|r| r.strategy == "Base").unwrap();
+    let manual = rows.iter().find(|r| r.strategy == "Manual").unwrap();
+    let best = rows
+        .iter()
+        .filter(|r| r.strategy.starts_with("Limit"))
+        .min_by(|a, b| a.latency_cycles.partial_cmp(&b.latency_cycles).unwrap())
+        .unwrap();
+    println!(
+        "best solver config: {} — {:.1}% faster / {:.1}% less energy than Base; {:.1}% / {:.1}% vs Manual",
+        best.strategy,
+        (1.0 - best.latency_cycles / base.latency_cycles) * 100.0,
+        (1.0 - best.energy_pj / base.energy_pj) * 100.0,
+        (1.0 - best.latency_cycles / manual.latency_cycles) * 100.0,
+        (1.0 - best.energy_pj / manual.energy_pj) * 100.0,
+    );
+    println!("CSV written to results/fig10_fusion_strategies.csv");
+}

@@ -1,0 +1,5 @@
+"""MONET build-time python package: L1 Pallas kernels + L2 JAX graphs + AOT.
+
+Never imported at runtime — `make artifacts` runs `compile.aot` once and the
+rust binary consumes the HLO text it emits.
+"""

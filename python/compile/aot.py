@@ -1,0 +1,131 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and its README.
+
+Artifacts (under ``artifacts/``):
+  cost_eval.hlo.txt       Pallas roofline kernel, fixed [N_CFG, N_LAYER]
+  cost_eval_ref.hlo.txt   pure-jnp twin (runtime self-check / ablation)
+  gpt2_<cfg>_train.hlo.txt  full training step (loss + params + adam state)
+  gpt2_<cfg>_eval.hlo.txt   loss-only forward
+  meta.json               shapes + parameter ordering for the rust side
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what `make
+artifacts` runs). Python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cost_eval(out_dir: str, meta: dict) -> None:
+    cfg_spec = jax.ShapeDtypeStruct((model.N_CFG, 8), jnp.float32)
+    lay_spec = jax.ShapeDtypeStruct((model.N_LAYER, 8), jnp.float32)
+    for name, fn in (
+        ("cost_eval", model.cost_eval_graph),
+        ("cost_eval_ref", model.cost_eval_ref_graph),
+    ):
+        lowered = jax.jit(fn).lower(cfg_spec, lay_spec)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {path}")
+    meta["cost_eval"] = {
+        "n_cfg": model.N_CFG,
+        "n_layer": model.N_LAYER,
+        "cfg_w": 8,
+        "lay_w": 8,
+        "out_w": 4,
+    }
+
+
+def lower_gpt2(out_dir: str, cfg_name: str, meta: dict) -> None:
+    cfg = model.CONFIGS[cfg_name]
+    p_specs, tok_spec, step_spec = model.make_specs(cfg)
+
+    train = lambda p, m, v, t, s: model.train_step(cfg, p, m, v, t, s)
+    lowered = jax.jit(train).lower(p_specs, p_specs, p_specs, tok_spec, step_spec)
+    path = os.path.join(out_dir, f"gpt2_{cfg_name}_train.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    ev = lambda p, t: model.eval_step(cfg, p, t)
+    lowered = jax.jit(ev).lower(p_specs, tok_spec)
+    path = os.path.join(out_dir, f"gpt2_{cfg_name}_eval.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # Initial parameter values, flat f32 blobs in flatten order, so rust can
+    # bootstrap training without any python at runtime.
+    import numpy as np
+
+    params = model.init_params(cfg, seed=0)
+    init_path = os.path.join(out_dir, f"gpt2_{cfg_name}_init.bin")
+    with open(init_path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype=np.float32).tobytes())
+    print(f"wrote {init_path}")
+
+    meta[f"gpt2_{cfg_name}"] = {
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "d_model": cfg.d_model,
+        "n_head": cfg.n_head,
+        "n_layer": cfg.n_layer,
+        "mlp_ratio": cfg.mlp_ratio,
+        "batch": cfg.batch,
+        "lr": cfg.lr,
+        "num_params": model.num_params(cfg),
+        "param_names": model.param_names(cfg),
+        "param_shapes": [list(s) for s in model.param_shapes(cfg)],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--gpt2-configs",
+        default="tiny",
+        help="comma-separated subset of: " + ",".join(model.CONFIGS),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta: dict = {}
+    lower_cost_eval(args.out_dir, meta)
+    for cfg_name in args.gpt2_configs.split(","):
+        if cfg_name:
+            lower_gpt2(args.out_dir, cfg_name, meta)
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp oracles."""
+
+from . import attention, cost_eval, ref  # noqa: F401

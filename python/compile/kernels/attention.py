@@ -1,0 +1,315 @@
+"""L1 Pallas kernels: tiled causal flash-attention, forward AND backward.
+
+Used by the L2 GPT-2 training step (model.py). The paper motivates
+layer-fused scheduling with FlashAttention (§II-C2): fusing the softmax with
+the two matmuls so the (seq, seq) score matrix never materialises off-chip.
+These kernels are exactly that fusion, expressed in the TPU idiom:
+
+  * grids walk query blocks (fwd, dQ) or key/value blocks (dK/dV);
+    BlockSpec stages the per-step panel HBM→VMEM (the threadblock/
+    shared-memory schedule of the CUDA original, re-thought for the VMEM
+    scratchpad),
+  * the complementary operand streams through VMEM in block-row panels
+    inside a fori_loop,
+  * online-softmax accumulators (m, l, acc) live in fp32,
+  * matmuls are MXU-shaped: (BLOCK, d) @ (d, BLOCK) panels.
+
+Training support follows FlashAttention-2: the forward kernel additionally
+emits the per-row log-sum-exp (lse); the backward pass *recomputes* the
+attention probabilities blockwise from (q, k, lse) instead of storing the
+(seq, seq) matrix — the same memory-vs-recompute trade the paper studies as
+activation checkpointing (§V-B), here at kernel granularity.
+
+VMEM per fwd grid step ≈ (BLOCK_Q + 2·seq)·d·4 + BLOCK_Q·BLOCK_KV·4 bytes;
+for seq=1024, d=128, blocks of 128 that is ~1.2 MiB — comfortable in a
+16 MiB VMEM with double buffering.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the rust runtime can run
+the AOT artifact (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_KV = 32
+
+_NEG_INF = -1e30
+INTERPRET = True  # flipped only by TPU builds; CPU PJRT requires interpret
+
+
+def _mask(s, q_blk, kv_blk, block_q, block_kv):
+    q_idx = q_blk * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0
+    )
+    kv_idx = kv_blk * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1
+    )
+    return jnp.where(q_idx >= kv_idx, s, _NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_kv, causal):
+    block_q, d = q_ref.shape
+    seq = k_ref.shape[0]
+    q_blk = pl.program_id(0)
+
+    q = q_ref[...]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    n_kv = seq // block_kv
+    if causal:
+        # kv blocks strictly after this q block contribute nothing
+        n_kv_live = jnp.minimum(
+            n_kv, (q_blk * block_q + block_q + block_kv - 1) // block_kv
+        )
+    else:
+        n_kv_live = n_kv
+
+    def body(kv_blk, carry):
+        m, l, acc = carry
+        k = k_ref[pl.ds(kv_blk * block_kv, block_kv), :]
+        v = v_ref[pl.ds(kv_blk * block_kv, block_kv), :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = _mask(s, q_blk, kv_blk, block_q, block_kv)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv_live, body, (m0, l0, acc0))
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)[:, None]
+    lse_ref[...] = m + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def _flash_fwd(q, k, v, *, causal, block_q, block_kv, interpret):
+    seq, d = q.shape
+    kernel = functools.partial(_fwd_kernel, block_kv=block_kv, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(seq // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((seq, d), jnp.float32),
+            jax.ShapeDtypeStruct((seq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Backward (FlashAttention-2 style: recompute P blockwise from q, k, lse)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref, dq_ref, *, block_kv, causal
+):
+    block_q, d = q_ref.shape
+    seq = k_ref.shape[0]
+    q_blk = pl.program_id(0)
+
+    q = q_ref[...]
+    do = do_ref[...]
+    delta = delta_ref[...]  # rowsum(dO * O), [block_q]
+    lse = lse_ref[...]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    n_kv = seq // block_kv
+    if causal:
+        n_kv_live = jnp.minimum(
+            n_kv, (q_blk * block_q + block_q + block_kv - 1) // block_kv
+        )
+    else:
+        n_kv_live = n_kv
+
+    def body(kv_blk, dq):
+        k = k_ref[pl.ds(kv_blk * block_kv, block_kv), :]
+        v = v_ref[pl.ds(kv_blk * block_kv, block_kv), :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = _mask(s, q_blk, kv_blk, block_q, block_kv)
+        p = jnp.exp(s - lse[:, None])
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, n_kv_live, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref, dk_ref, dv_ref,
+    *, block_q, causal
+):
+    block_kv, d = k_ref.shape
+    seq = q_ref.shape[0]
+    kv_blk = pl.program_id(0)
+
+    k = k_ref[...]
+    v = v_ref[...]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    n_q = seq // block_q
+    if causal:
+        # q blocks strictly before this kv block see nothing of it
+        first_q = (kv_blk * block_kv) // block_q
+    else:
+        first_q = 0
+
+    def body(q_blk, carry):
+        dk, dv = carry
+        q = q_ref[pl.ds(q_blk * block_q, block_q), :]
+        do = do_ref[pl.ds(q_blk * block_q, block_q), :]
+        delta = delta_ref[pl.ds(q_blk * block_q, block_q)]
+        lse = lse_ref[pl.ds(q_blk * block_q, block_q)]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = _mask(s, q_blk, kv_blk, block_q, block_kv)
+        p = jnp.exp(s - lse[:, None])  # [BQ, BKV]
+        dv_new = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_new = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+        return dk_new, dv_new
+
+    zero = jnp.zeros((block_kv, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(first_q, n_q, body, (zero, zero))
+    dk_ref[...] = dk
+    dv_ref[...] = dv
+
+
+def _flash_bwd(q, k, v, o, lse, do, *, causal, block_q, block_kv, interpret):
+    seq, d = q.shape
+    delta = jnp.sum(do * o, axis=-1)  # [seq]
+
+    dq_kernel = functools.partial(_bwd_dq_kernel, block_kv=block_kv, causal=causal)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(seq // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, do, delta, lse)
+
+    dkv_kernel = functools.partial(_bwd_dkv_kernel, block_q=block_q, causal=causal)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(seq // block_kv,),
+        in_specs=[
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_kv, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_kv, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq,), lambda i: (0,)),
+            pl.BlockSpec((seq,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_kv, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_kv, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((seq, d), jnp.float32),
+            jax.ShapeDtypeStruct((seq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, delta, lse)
+
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Differentiable public entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, block_q, block_kv, interpret):
+    o, _ = _flash_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )
+    return o
+
+
+def _flash_attention_fwd(q, k, v, causal, block_q, block_kv, interpret):
+    o, lse = _flash_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _flash_attention_bwd(causal, block_q, block_kv, interpret, res, do):
+    q, k, v, o, lse = res
+    return _flash_bwd(
+        q, k, v, o, lse, do,
+        causal=causal, block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+
+
+_flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Single-head flash attention. q,k,v: f32[seq, d] -> f32[seq, d].
+
+    seq must be divisible by both block sizes (the L2 model guarantees it).
+    Differentiable via the FlashAttention-2-style backward kernels above.
+    """
+    seq, d = q.shape
+    assert k.shape == (seq, d) and v.shape == (seq, d)
+    block_q = min(block_q, seq)
+    block_kv = min(block_kv, seq)
+    assert seq % block_q == 0 and seq % block_kv == 0
+    return _flash_attention(q, k, v, causal, block_q, block_kv, interpret)
+
+
+def mha(q, k, v, *, causal: bool = True, interpret: bool = INTERPRET):
+    """Multi-head flash attention: f32[heads, seq, d] -> f32[heads, seq, d]."""
+    fn = functools.partial(flash_attention, causal=causal, interpret=interpret)
+    return jax.vmap(fn)(q, k, v)

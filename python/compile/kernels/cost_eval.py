@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: batched roofline cost evaluation for the DSE pre-filter.
+
+The DSE sweeps in MONET (Figs 1, 8, 9) evaluate thousands of hardware
+configurations against training graphs with hundreds of nodes. Before the
+detailed layer-fused scheduler runs, a roofline pre-filter scores every
+(config, layer) pair and prunes configurations that cannot be competitive.
+That scoring is a dense, regular computation — this kernel.
+
+Tiling: the grid iterates over blocks of BLOCK_CFG configurations. Each grid
+step holds one (BLOCK_CFG, CFG_W) config panel, the full (n_layer, LAY_W)
+layer descriptor matrix, and a (BLOCK_CFG, n_layer) scratch panel in VMEM.
+On a real TPU the VMEM footprint per step is
+
+    BLOCK_CFG*CFG_W*4 + n_layer*LAY_W*4 + ~4*BLOCK_CFG*n_layer*4 bytes
+    = 128*8*4 + 1024*8*4 + 4*128*1024*4  ≈ 2.1 MiB   « 16 MiB VMEM
+
+so the block shape leaves headroom for double buffering. The arithmetic is
+elementwise + row reductions (VPU work, no MXU), so the roofline is the
+HBM→VMEM stream of the config panels; BLOCK_CFG=128 amortises the layer
+matrix reload across 128 configs per step.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the rust runtime can run
+the AOT artifact. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_CFG = 128
+
+_EPS = 1e-6
+
+
+def _cost_kernel(cfg_ref, lay_ref, out_ref):
+    """One grid step: score a (BLOCK_CFG, CFG_W) config panel vs all layers."""
+    cfg = cfg_ref[...]  # [BC, CFG_W]
+    lay = lay_ref[...]  # [NL, LAY_W]
+
+    # Broadcast panels: c_* are [BC, 1], l_* are [1, NL].
+    def c(col):
+        return cfg[:, col][:, None]
+
+    def l(col):
+        return lay[:, col][None, :]
+
+    macs = jnp.maximum(c(ref.CFG_MACS), _EPS)
+    eff_macs = jnp.minimum(macs, jnp.maximum(l(ref.LAY_PARALLELISM), 1.0))
+    flops = l(ref.LAY_FLOPS)
+    compute_cyc = flops / (2.0 * eff_macs)
+
+    spill = 2.0 * jnp.maximum(0.0, l(ref.LAY_WORKING_SET) - c(ref.CFG_LOCAL_MEM))
+    offchip = l(ref.LAY_OFFCHIP_BYTES) + spill
+    onchip = l(ref.LAY_ONCHIP_BYTES)
+    mem_cyc = jnp.maximum(
+        onchip / jnp.maximum(c(ref.CFG_ONCHIP_BW), _EPS),
+        offchip / jnp.maximum(c(ref.CFG_OFFCHIP_BW), _EPS),
+    )
+    cycles = jnp.maximum(compute_cyc, mem_cyc)  # [BC, NL]
+
+    energy = (
+        0.5 * flops * c(ref.CFG_E_MAC)
+        + onchip * c(ref.CFG_E_ONCHIP)
+        + offchip * c(ref.CFG_E_OFFCHIP)
+    )
+
+    total_cyc = jnp.sum(cycles, axis=1)  # [BC]
+    total_energy = jnp.sum(energy, axis=1)
+    total_spill = jnp.sum(spill, axis=1)
+    total_flops = jnp.sum(jnp.broadcast_to(flops, cycles.shape), axis=1)
+    util = (0.5 * total_flops) / (
+        jnp.maximum(cfg[:, ref.CFG_MACS], _EPS) * jnp.maximum(total_cyc, _EPS)
+    )
+    util = jnp.clip(util, 0.0, 1.0)
+
+    out_ref[...] = jnp.stack([total_cyc, total_energy, util, total_spill], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cost_eval(configs: jnp.ndarray, layers: jnp.ndarray, *, interpret: bool = True):
+    """Pallas-tiled version of :func:`ref.cost_eval_ref`.
+
+    configs: f32[n_cfg, CFG_W] — n_cfg must be a multiple of BLOCK_CFG
+             (the AOT wrapper and the rust caller pad with benign rows).
+    layers:  f32[n_layer, LAY_W] — zero rows are benign (0 flops, 0 bytes).
+    returns: f32[n_cfg, OUT_W]
+    """
+    n_cfg, cfg_w = configs.shape
+    n_layer, lay_w = layers.shape
+    assert cfg_w == ref.CFG_W and lay_w == ref.LAY_W
+    assert n_cfg % BLOCK_CFG == 0, f"n_cfg={n_cfg} must be a multiple of {BLOCK_CFG}"
+
+    grid = (n_cfg // BLOCK_CFG,)
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_CFG, ref.CFG_W), lambda i: (i, 0)),
+            pl.BlockSpec((n_layer, ref.LAY_W), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_CFG, ref.OUT_W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cfg, ref.OUT_W), jnp.float32),
+        interpret=interpret,
+    )(configs, layers)

@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth used by pytest/hypothesis: every Pallas kernel in
+this package must match its oracle to float tolerance across shape sweeps.
+They are also used directly by `model.py` when building the non-Pallas
+reference lowering (useful for debugging the AOT path).
+
+Descriptor layouts are shared with the rust side (rust/src/dse/prefilter.rs)
+and with `cost_eval.py`; change them in lockstep.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Batched roofline cost model (DSE pre-filter)
+# ---------------------------------------------------------------------------
+
+# Config descriptor columns (CFG_W = 8)
+CFG_MACS = 0  # peak MAC/cycle of the whole accelerator
+CFG_ONCHIP_BW = 1  # on-chip bandwidth, bytes/cycle
+CFG_OFFCHIP_BW = 2  # off-chip bandwidth, bytes/cycle
+CFG_LOCAL_MEM = 3  # local (on-chip) memory, bytes
+CFG_E_MAC = 4  # energy per MAC, pJ
+CFG_E_ONCHIP = 5  # energy per on-chip byte, pJ
+CFG_E_OFFCHIP = 6  # energy per off-chip byte, pJ
+CFG_RESERVED = 7
+CFG_W = 8
+
+# Layer descriptor columns (LAY_W = 8)
+LAY_FLOPS = 0  # 2 x multiply-accumulate count
+LAY_ONCHIP_BYTES = 1  # compulsory on-chip traffic
+LAY_OFFCHIP_BYTES = 2  # compulsory off-chip traffic
+LAY_PARALLELISM = 3  # max MACs exploitable per cycle by this layer
+LAY_WORKING_SET = 4  # bytes that must be resident while computing
+LAY_WEIGHT_BYTES = 5  # parameter bytes (used for spill modelling)
+LAY_RESERVED6 = 6
+LAY_RESERVED7 = 7
+LAY_W = 8
+
+# Output columns (OUT_W = 4)
+OUT_CYCLES = 0
+OUT_ENERGY = 1  # pJ
+OUT_UTIL = 2  # average MAC-array utilisation in [0, 1]
+OUT_SPILL = 3  # total spill bytes (off-chip overflow traffic)
+OUT_W = 4
+
+_EPS = 1e-6
+
+
+def cost_eval_ref(configs: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
+    """Roofline cost of every layer on every config, reduced per config.
+
+    configs: f32[n_cfg, CFG_W]
+    layers:  f32[n_layer, LAY_W]
+    returns: f32[n_cfg, OUT_W]
+
+    Per (config c, layer l):
+      eff_macs      = min(macs_c, parallelism_l)
+      compute_cyc   = flops_l / (2 * eff_macs)
+      spill_bytes   = 2 * max(0, working_set_l - local_mem_c)
+      offchip_bytes = offchip_l + spill_bytes
+      mem_cyc       = max(onchip_l / onchip_bw_c, offchip_bytes / offchip_bw_c)
+      cycles        = max(compute_cyc, mem_cyc)
+      energy        = flops_l/2 * e_mac + onchip_l * e_onchip
+                      + offchip_bytes * e_offchip
+
+    The per-config reduction serialises layers (sum of cycles/energy): this is
+    the optimistic lower bound the detailed scheduler refines, and exactly the
+    quantity the DSE pre-filter needs for pruning.
+    """
+    c = configs[:, None, :]  # [n_cfg, 1, CFG_W]
+    l = layers[None, :, :]  # [1, n_layer, LAY_W]
+
+    macs = jnp.maximum(c[..., CFG_MACS], _EPS)
+    eff_macs = jnp.minimum(macs, jnp.maximum(l[..., LAY_PARALLELISM], 1.0))
+    flops = l[..., LAY_FLOPS]
+    compute_cyc = flops / (2.0 * eff_macs)
+
+    spill = 2.0 * jnp.maximum(0.0, l[..., LAY_WORKING_SET] - c[..., CFG_LOCAL_MEM])
+    offchip = l[..., LAY_OFFCHIP_BYTES] + spill
+    onchip = l[..., LAY_ONCHIP_BYTES]
+    mem_cyc = jnp.maximum(
+        onchip / jnp.maximum(c[..., CFG_ONCHIP_BW], _EPS),
+        offchip / jnp.maximum(c[..., CFG_OFFCHIP_BW], _EPS),
+    )
+    cycles = jnp.maximum(compute_cyc, mem_cyc)  # [n_cfg, n_layer]
+
+    energy = (
+        0.5 * flops * c[..., CFG_E_MAC]
+        + onchip * c[..., CFG_E_ONCHIP]
+        + offchip * c[..., CFG_E_OFFCHIP]
+    )
+
+    total_cyc = jnp.sum(cycles, axis=1)
+    total_energy = jnp.sum(energy, axis=1)
+    total_spill = jnp.sum(spill, axis=1)
+    total_flops = jnp.sum(flops, axis=1)
+    util = (0.5 * total_flops) / (
+        jnp.maximum(configs[:, CFG_MACS], _EPS) * jnp.maximum(total_cyc, _EPS)
+    )
+    util = jnp.clip(util, 0.0, 1.0)
+
+    return jnp.stack([total_cyc, total_energy, util, total_spill], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (flash-attention oracle)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True
+) -> jnp.ndarray:
+    """Plain softmax attention. q,k,v: f32[seq, d] -> f32[seq, d]."""
+    seq = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = (q @ k.T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    weights = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights @ v
+
+
+def mha_ref(q, k, v, *, causal: bool = True):
+    """Multi-head wrapper: q,k,v f32[heads, seq, d] -> f32[heads, seq, d]."""
+    import jax
+
+    return jax.vmap(lambda a, b, c: attention_ref(a, b, c, causal=causal))(q, k, v)

@@ -1,0 +1,261 @@
+"""L2: JAX compute graphs that are AOT-lowered to HLO for the rust runtime.
+
+Two graphs live here:
+
+1. ``cost_eval_graph`` — the batched roofline cost model used by the rust
+   DSE pre-filter (wraps the L1 Pallas kernel ``kernels.cost_eval``).
+
+2. A tiny GPT-2 (the paper's §IV-B workload, scaled to the CPU testbed) with
+   a full training step: forward, backward (jax.grad) and an AdamW update.
+   Attention uses the L1 Pallas flash-attention kernel, so the layer-fusion
+   the paper cites (FlashAttention, §II-C2) is physically present in the
+   lowered HLO. The rust e2e driver (examples/e2e_train.rs) executes this
+   artifact for a few hundred steps on a synthetic byte corpus and logs the
+   loss curve — proving L1→L2→L3 compose.
+
+Everything here is build-time only. ``aot.py`` lowers these functions once;
+rust never imports python.
+
+Parameter convention: params / adam-m / adam-v are *lists* of f32 arrays.
+JAX flattens lists in order, so the HLO entry takes parameters in exactly
+the order of ``param_names(cfg)``; ``aot.py`` writes that order (with
+shapes) to ``artifacts/meta.json`` for the rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import cost_eval as cost_kernel
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Cost-model graph (DSE pre-filter)
+# ---------------------------------------------------------------------------
+
+# Fixed AOT shapes: rust pads config batches to N_CFG rows and the layer
+# matrix to N_LAYER rows (zero layer rows are benign; padded config rows are
+# discarded by the caller).
+N_CFG = 256
+N_LAYER = 1024
+
+
+def cost_eval_graph(configs: jnp.ndarray, layers: jnp.ndarray):
+    """returns (f32[N_CFG, OUT_W],) — tuple for the AOT contract."""
+    return (cost_kernel.cost_eval(configs, layers),)
+
+
+def cost_eval_ref_graph(configs: jnp.ndarray, layers: jnp.ndarray):
+    """Pure-jnp twin of ``cost_eval_graph`` (debug/ablation artifact)."""
+    return (kref.cost_eval_ref(configs, layers),)
+
+
+# ---------------------------------------------------------------------------
+# Tiny GPT-2
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GPT2Config:
+    vocab: int = 256  # byte-level
+    seq: int = 64  # tokens per sample (training window)
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 2
+    mlp_ratio: int = 4
+    batch: int = 8
+    lr: float = 3e-3
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+TINY = GPT2Config()
+# A larger config for throughput experiments (still CPU-tractable).
+SMALL = GPT2Config(vocab=512, seq=128, d_model=256, n_head=8, n_layer=4, batch=8)
+
+CONFIGS = {"tiny": TINY, "small": SMALL}
+
+
+def param_names(cfg: GPT2Config) -> List[str]:
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layer):
+        names += [
+            f"h{i}.ln1.g",
+            f"h{i}.ln1.b",
+            f"h{i}.attn.wqkv",
+            f"h{i}.attn.bqkv",
+            f"h{i}.attn.wo",
+            f"h{i}.attn.bo",
+            f"h{i}.ln2.g",
+            f"h{i}.ln2.b",
+            f"h{i}.mlp.wfc",
+            f"h{i}.mlp.bfc",
+            f"h{i}.mlp.wproj",
+            f"h{i}.mlp.bproj",
+        ]
+    names += ["lnf.g", "lnf.b"]
+    return names
+
+
+def param_shapes(cfg: GPT2Config) -> List[Tuple[int, ...]]:
+    d, dm = cfg.d_model, cfg.mlp_ratio * cfg.d_model
+    shapes: List[Tuple[int, ...]] = [(cfg.vocab, d), (cfg.seq, d)]
+    for _ in range(cfg.n_layer):
+        shapes += [
+            (d,),
+            (d,),
+            (d, 3 * d),
+            (3 * d,),
+            (d, d),
+            (d,),
+            (d,),
+            (d,),
+            (d, dm),
+            (dm,),
+            (dm, d),
+            (d,),
+        ]
+    shapes += [(d,), (d,)]
+    return shapes
+
+
+def init_params(cfg: GPT2Config, seed: int = 0) -> List[jnp.ndarray]:
+    """GPT-2-style init: N(0, 0.02) for matrices, zeros/ones for LN+bias."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jnp.ndarray] = []
+    for name, shape in zip(param_names(cfg), param_shapes(cfg)):
+        if name.endswith(".g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", "bqkv", "bo", "bfc", "bproj")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            scale = 0.02
+            if name.endswith("wproj") or name.endswith("wo"):
+                # residual-branch scaling a la GPT-2
+                scale = 0.02 / float(jnp.sqrt(2.0 * cfg.n_layer))
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def _block(cfg: GPT2Config, x, p, base, use_pallas: bool):
+    """One transformer block. x: [B, S, D]. p: full param list."""
+    ln1 = _layer_norm(x, p[base + 0], p[base + 1])
+    qkv = ln1 @ p[base + 2] + p[base + 3]  # [B, S, 3D]
+    b, s, _ = qkv.shape
+    h, dh = cfg.n_head, cfg.d_head
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B, S, D] -> [B, H, S, dh]
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    if use_pallas:
+        o = jax.vmap(lambda a, b_, c: attn_kernel.mha(a, b_, c, causal=True))(q, k, v)
+    else:
+        o = jax.vmap(lambda a, b_, c: kref.mha_ref(a, b_, c, causal=True))(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+    x = x + o @ p[base + 4] + p[base + 5]
+
+    ln2 = _layer_norm(x, p[base + 6], p[base + 7])
+    hmid = _gelu(ln2 @ p[base + 8] + p[base + 9])
+    x = x + hmid @ p[base + 10] + p[base + 11]
+    return x
+
+
+def forward(cfg: GPT2Config, params: List[jnp.ndarray], tokens, use_pallas=True):
+    """tokens: i32[B, S] -> logits f32[B, S, vocab] (tied embedding head)."""
+    tok_emb, pos_emb = params[0], params[1]
+    x = tok_emb[tokens] + pos_emb[None, : tokens.shape[1], :]
+    base = 2
+    for _ in range(cfg.n_layer):
+        x = _block(cfg, x, params, base, use_pallas)
+        base += 12
+    x = _layer_norm(x, params[base], params[base + 1])
+    return x @ tok_emb.T
+
+
+def loss_fn(cfg: GPT2Config, params, tokens, use_pallas=True):
+    """tokens: i32[B, S+1]; next-token cross entropy averaged over B*S."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, x, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def adamw_update(cfg: GPT2Config, params, grads, m, v, step):
+    """AdamW with bias correction; step is the 1-based f32 step counter."""
+    b1, b2 = cfg.betas
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (GPT-2 convention)
+            upd = upd + cfg.weight_decay * p
+        new_p.append(p - cfg.lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def train_step(cfg: GPT2Config, params, m, v, tokens, step, use_pallas=True):
+    """One full training iteration.
+
+    returns (loss f32[], new_params..., new_m..., new_v...) as one flat tuple
+    — the AOT contract consumed by rust/src/runtime/gpt2.rs.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, use_pallas)
+    )(params)
+    new_p, new_m, new_v = adamw_update(cfg, params, grads, m, v, step)
+    return tuple([loss] + new_p + new_m + new_v)
+
+
+def eval_step(cfg: GPT2Config, params, tokens, use_pallas=True):
+    """Loss only (no update) — used for model-vs-measured validation runs."""
+    return (loss_fn(cfg, params, tokens, use_pallas),)
+
+
+def make_specs(cfg: GPT2Config):
+    """ShapeDtypeStructs for lowering train_step."""
+    p_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in param_shapes(cfg)]
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    step_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    return p_specs, tok_spec, step_spec
+
+
+def num_params(cfg: GPT2Config) -> int:
+    total = 0
+    for s in param_shapes(cfg):
+        n = 1
+        for d in s:
+            n *= d
+        total += n
+    return total

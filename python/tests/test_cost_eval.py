@@ -1,0 +1,109 @@
+"""Pallas cost kernel vs pure-jnp oracle: hypothesis shape/value sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cost_eval, ref
+
+BC = cost_eval.BLOCK_CFG
+
+
+def _run_pair(configs, layers):
+    got = np.asarray(cost_eval.cost_eval(jnp.asarray(configs), jnp.asarray(layers)))
+    want = np.asarray(ref.cost_eval_ref(jnp.asarray(configs), jnp.asarray(layers)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    return got
+
+
+def _random_inputs(rng, n_cfg, n_layer):
+    configs = np.empty((n_cfg, ref.CFG_W), np.float32)
+    configs[:, ref.CFG_MACS] = rng.uniform(1, 1e5, n_cfg)
+    configs[:, ref.CFG_ONCHIP_BW] = rng.uniform(1, 1e4, n_cfg)
+    configs[:, ref.CFG_OFFCHIP_BW] = rng.uniform(1, 1e3, n_cfg)
+    configs[:, ref.CFG_LOCAL_MEM] = rng.uniform(1e3, 1e7, n_cfg)
+    configs[:, ref.CFG_E_MAC] = rng.uniform(0.1, 4.0, n_cfg)
+    configs[:, ref.CFG_E_ONCHIP] = rng.uniform(0.1, 10.0, n_cfg)
+    configs[:, ref.CFG_E_OFFCHIP] = rng.uniform(10.0, 200.0, n_cfg)
+    configs[:, ref.CFG_RESERVED] = 0.0
+    layers = np.empty((n_layer, ref.LAY_W), np.float32)
+    layers[:, ref.LAY_FLOPS] = rng.uniform(0, 1e9, n_layer)
+    layers[:, ref.LAY_ONCHIP_BYTES] = rng.uniform(0, 1e7, n_layer)
+    layers[:, ref.LAY_OFFCHIP_BYTES] = rng.uniform(0, 1e6, n_layer)
+    layers[:, ref.LAY_PARALLELISM] = rng.uniform(1, 1e5, n_layer)
+    layers[:, ref.LAY_WORKING_SET] = rng.uniform(0, 1e7, n_layer)
+    layers[:, ref.LAY_WEIGHT_BYTES] = rng.uniform(0, 1e6, n_layer)
+    layers[:, 6:] = 0.0
+    return configs, layers
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_cfg_blocks=st.integers(1, 3),
+    n_layer=st.sampled_from([1, 7, 64, 200]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_across_shapes(n_cfg_blocks, n_layer, seed):
+    rng = np.random.default_rng(seed)
+    configs, layers = _random_inputs(rng, n_cfg_blocks * BC, n_layer)
+    _run_pair(configs, layers)
+
+
+def test_zero_layer_rows_are_benign():
+    rng = np.random.default_rng(0)
+    configs, layers = _random_inputs(rng, BC, 32)
+    padded = np.concatenate([layers, np.zeros((32, ref.LAY_W), np.float32)])
+    a = _run_pair(configs, layers)
+    b = _run_pair(configs, padded)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_util_bounded():
+    rng = np.random.default_rng(1)
+    configs, layers = _random_inputs(rng, BC, 50)
+    out = _run_pair(configs, layers)
+    assert (out[:, ref.OUT_UTIL] >= 0).all() and (out[:, ref.OUT_UTIL] <= 1).all()
+
+
+def test_more_macs_never_slower():
+    """Monotonicity: scaling MACs up cannot increase cycles."""
+    rng = np.random.default_rng(2)
+    configs, layers = _random_inputs(rng, BC, 50)
+    faster = configs.copy()
+    faster[:, ref.CFG_MACS] *= 4.0
+    a = _run_pair(configs, layers)
+    b = _run_pair(faster, layers)
+    assert (b[:, ref.OUT_CYCLES] <= a[:, ref.OUT_CYCLES] * (1 + 1e-6)).all()
+
+
+def test_spill_only_when_working_set_exceeds_mem():
+    rng = np.random.default_rng(3)
+    configs, layers = _random_inputs(rng, BC, 50)
+    configs[:, ref.CFG_LOCAL_MEM] = 1e9  # everything fits
+    out = _run_pair(configs, layers)
+    np.testing.assert_allclose(out[:, ref.OUT_SPILL], 0.0, atol=1e-6)
+
+
+def test_memory_bound_config_hits_bandwidth_roof():
+    """With huge MAC count, cycles are exactly the memory roofline."""
+    configs = np.zeros((BC, ref.CFG_W), np.float32)
+    configs[:, ref.CFG_MACS] = 1e9
+    configs[:, ref.CFG_ONCHIP_BW] = 100.0
+    configs[:, ref.CFG_OFFCHIP_BW] = 10.0
+    configs[:, ref.CFG_LOCAL_MEM] = 1e9
+    layers = np.zeros((4, ref.LAY_W), np.float32)
+    layers[:, ref.LAY_FLOPS] = 1e3
+    layers[:, ref.LAY_PARALLELISM] = 1e9
+    layers[:, ref.LAY_ONCHIP_BYTES] = 1e4
+    layers[:, ref.LAY_OFFCHIP_BYTES] = 1e3
+    out = _run_pair(configs, layers)
+    want = 4 * max(1e4 / 100.0, 1e3 / 10.0)
+    np.testing.assert_allclose(out[:, ref.OUT_CYCLES], want, rtol=1e-5)
+
+
+def test_rejects_unaligned_config_count():
+    with pytest.raises(AssertionError):
+        cost_eval.cost_eval(
+            jnp.zeros((BC + 1, ref.CFG_W)), jnp.zeros((4, ref.LAY_W))
+        )

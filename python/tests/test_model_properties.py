@@ -1,0 +1,63 @@
+"""Hypothesis property sweeps over the L2 model across GPT-2 configs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+@st.composite
+def small_configs(draw):
+    d_model = draw(st.sampled_from([32, 64, 128]))
+    n_head = draw(st.sampled_from([1, 2, 4]))
+    return model.GPT2Config(
+        vocab=draw(st.sampled_from([64, 128, 256])),
+        seq=draw(st.sampled_from([32, 64])),
+        d_model=d_model,
+        n_head=n_head,
+        n_layer=draw(st.integers(1, 2)),
+        batch=draw(st.integers(1, 2)),
+    )
+
+
+@settings(max_examples=5, deadline=None)
+@given(cfg=small_configs(), seed=st.integers(0, 2**31 - 1))
+def test_forward_is_finite_and_shaped(cfg, seed):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(cfg, seed=seed % 997)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32)
+    logits = model.forward(cfg, params, toks)
+    assert logits.shape == (cfg.batch, cfg.seq, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@settings(max_examples=4, deadline=None)
+@given(cfg=small_configs(), seed=st.integers(0, 2**31 - 1))
+def test_loss_near_uniform_and_grads_match_param_shapes(cfg, seed):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(cfg, seed=1)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq + 1)), jnp.int32
+    )
+    loss, grads = jax.value_and_grad(lambda p: model.loss_fn(cfg, p, toks))(params)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert bool(jnp.isfinite(g).all())
+
+
+@settings(max_examples=4, deadline=None)
+@given(cfg=small_configs())
+def test_causality_of_the_full_model(cfg):
+    """Changing future tokens must not change earlier logits."""
+    rng = np.random.default_rng(0)
+    params = model.init_params(cfg, seed=2)
+    toks = np.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), np.int32)
+    l1 = model.forward(cfg, params, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % cfg.vocab
+    l2 = model.forward(cfg, params, jnp.asarray(toks2))
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,76 @@
+//! `cargo bench --bench bench_figures` — one end-to-end timing per paper
+//! table/figure target: how long each experiment takes to regenerate, plus
+//! the headline numbers it produces. (criterion is not vendored offline;
+//! this is a harness=false bench with manual timing — median of N runs.)
+
+use std::time::Instant;
+
+use monet::figures;
+use monet::ga::GaConfig;
+
+fn timed<T>(name: &str, reps: usize, mut f: impl FnMut() -> T) -> T {
+    let mut times = Vec::with_capacity(reps);
+    let mut out = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        out = Some(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[times.len() / 2];
+    println!("{name:<42} {:>10.3} s (median of {reps})", med);
+    out.unwrap()
+}
+
+fn main() {
+    println!("== MONET figure-regeneration benchmarks ==\n");
+
+    let sweep = timed("fig1/fig8: Edge-TPU sweep (stride 20)", 3, || {
+        figures::fig1_fig8_edge_sweep(20, None, |_, _| {})
+    });
+    println!("    {} rows", sweep.rows.len());
+
+    let bd = timed("fig3: ResNet-50 memory breakdown", 3, || {
+        figures::fig3_memory_breakdown(None)
+    });
+    println!(
+        "    batch8 activations {:.2} GiB",
+        bd[1].activation_bytes as f64 / (1u64 << 30) as f64
+    );
+
+    let f9 = timed("fig9: FuseMax sweep (stride 8)", 3, || {
+        figures::fig9_fusemax_sweep(8, None, |_, _| {})
+    });
+    println!("    {} rows", f9.rows.len());
+
+    let f10 = timed("fig10: fusion strategies (Base..Limit8)", 3, || {
+        figures::fig10_fusion_strategies(None)
+    });
+    let best = f10
+        .iter()
+        .filter(|r| r.strategy.starts_with("Limit"))
+        .min_by(|a, b| a.latency_cycles.partial_cmp(&b.latency_cycles).unwrap())
+        .unwrap();
+    println!("    best: {} @ {:.3e} cycles", best.strategy, best.latency_cycles);
+
+    let f11 = timed("fig11: checkpoint linearity probe", 3, || {
+        figures::fig11_checkpoint_linearity(None)
+    });
+    let (gl, ge) = figures::linearity_gap(&f11);
+    println!("    non-additivity: lat {:.1}%, energy {:.1}%", gl * 100.0, ge * 100.0);
+
+    let ga = GaConfig { population: 16, generations: 10, ..Default::default() };
+    let (front, _) = timed("fig12: NSGA-II checkpointing (16x10)", 1, || {
+        figures::fig12_checkpoint_ga(&ga, None)
+    });
+    if let Some(best) = front
+        .iter()
+        .filter(|r| r.latency_overhead < 0.05)
+        .map(|r| r.memory_saving)
+        .max_by(|a, b| a.partial_cmp(b).unwrap())
+    {
+        println!("    best ≤5%-overhead saving: {:.0}%", best * 100.0);
+    }
+
+    println!("\nbench_figures done");
+}

@@ -1,0 +1,65 @@
+//! `cargo bench --bench bench_runtime` — the AOT/PJRT hot paths: cost
+//! kernel execution (the DSE pre-filter), its native-rust twin, and the
+//! tiny-GPT-2 training step. Requires `make artifacts`.
+
+use std::time::Instant;
+
+use monet::dse::{accel_to_cfg, graph_to_layers};
+use monet::hardware::presets::EdgeTpuParams;
+use monet::runtime::{cost_eval_native, Corpus, CostKernel, Gpt2Runner, Runtime};
+use monet::workload::models::resnet18;
+
+fn bench(name: &str, reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<52} {:>9.2} ms   ({:.0}/s)", per * 1e3, 1.0 / per);
+    per
+}
+
+fn main() {
+    println!("== MONET runtime (AOT/PJRT) benchmarks ==\n");
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let rt = Runtime::new("artifacts").expect("PJRT client");
+    println!("platform: {}\n", rt.platform());
+
+    let g = resnet18(1, 32, 10);
+    let layers = graph_to_layers(&g);
+    let cfgs: Vec<_> = EdgeTpuParams::space_strided(40)
+        .into_iter()
+        .map(|p| accel_to_cfg(&p.build()))
+        .collect();
+    println!("cost-kernel inputs: {} configs x {} layers", cfgs.len(), layers.len());
+
+    let kernel = CostKernel::load(&rt).expect("load");
+    let hlo = bench("prefilter: AOT Pallas kernel via PJRT", 20, || {
+        let _ = kernel.eval(&cfgs, &layers).unwrap();
+    });
+    let nat = bench("prefilter: native rust twin", 20, || {
+        let _ = cost_eval_native(&cfgs, &layers);
+    });
+    println!(
+        "    HLO-vs-native ratio: {:.2}x ({} (cfg,layer) pairs/s via PJRT)\n",
+        hlo / nat,
+        (cfgs.len() * layers.len()) as f64 / hlo
+    );
+
+    let mut runner = Gpt2Runner::load(&rt, "tiny").expect("gpt2 artifacts");
+    let meta = runner.meta.clone();
+    let mut corpus = Corpus::synthetic(meta.vocab, 16384, 1);
+    let tokens = corpus.next_batch(meta.batch, meta.seq + 1);
+    bench("gpt2-tiny: full train step (fwd+bwd+adam)", 20, || {
+        let _ = runner.step(&tokens).unwrap();
+    });
+    bench("gpt2-tiny: eval step (loss only)", 20, || {
+        let _ = runner.eval_loss(&tokens).unwrap();
+    });
+
+    println!("\nbench_runtime done");
+}

@@ -1,0 +1,121 @@
+//! `cargo bench --bench bench_scheduler` — microbenchmarks of the L3 hot
+//! paths: per-design-point evaluation throughput (the DSE inner loop),
+//! autodiff, fusion solving, scheduling, and GA generation cost. These are
+//! the §Perf numbers tracked in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::dse::{evaluate_point, DesignPoint, SweepConfig};
+use monet::fusion::{enumerate_candidates, fuse, fuse_greedy, FusionConstraints};
+use monet::ga::{CheckpointProblem, GaConfig};
+use monet::hardware::presets::EdgeTpuParams;
+use monet::mapping::MappingConfig;
+use monet::scheduler::{schedule, Partition};
+use monet::workload::models::{gpt2, resnet18, Gpt2Config};
+use monet::workload::op::Optimizer;
+
+fn bench(name: &str, reps: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    let (val, unit) = if per >= 1.0 {
+        (per, "s")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else {
+        (per * 1e6, "µs")
+    };
+    println!("{name:<52} {val:>9.2} {unit}   ({:.0}/s)", 1.0 / per);
+    per
+}
+
+fn main() {
+    println!("== MONET L3 hot-path benchmarks ==\n");
+
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let fc = FusionConstraints::default();
+
+    bench("autodiff: resnet18 training-graph build", 200, || {
+        let _ = build_training_graph(&fwd, TrainOptions::default());
+    });
+
+    bench("fusion: candidate enumeration (resnet18 train)", 50, || {
+        let _ = enumerate_candidates(&tg.graph, &fc);
+    });
+
+    bench("fusion: greedy partition (resnet18 train)", 200, || {
+        let _ = fuse_greedy(&tg.graph, &fc);
+    });
+
+    bench("fusion: exact-cover solve (resnet18 train)", 20, || {
+        let _ = fuse(&tg.graph, &fc);
+    });
+
+    let p_sing = Partition::singletons(&tg.graph);
+    bench("schedule: resnet18 train, singletons", 500, || {
+        let _ = schedule(&tg.graph, &p_sing, &accel, &mapping);
+    });
+
+    let p_fused = fuse_greedy(&tg.graph, &fc);
+    bench("schedule: resnet18 train, greedy-fused", 500, || {
+        let _ = schedule(&tg.graph, &p_fused, &accel, &mapping);
+    });
+
+    let cfg = SweepConfig { mapping, ..Default::default() };
+    let pt = DesignPoint::edge_space(1)[0];
+    let per_pt = bench("dse: evaluate_point (fwd+train, fuse+schedule)", 200, || {
+        let _ = evaluate_point(0, &pt, &fwd, &tg.graph, &cfg);
+    });
+    let parts = monet::dse::SweepPartitions::prepare(&fwd, &tg.graph, &cfg);
+    let per_pt2 = bench("dse: evaluate_point_prepared (hoisted fusion)", 400, || {
+        let _ = monet::dse::evaluate_point_prepared(0, &pt, &fwd, &tg.graph, &parts, &cfg);
+    });
+    println!(
+        "    -> sweep inner loop speedup {:.1}x; full Table II ~ {:.0} s",
+        per_pt / per_pt2,
+        per_pt2 * 10_000.0
+    );
+    println!(
+        "    → full Table II space (10 000 points) ≈ {:.0} s on this core",
+        per_pt * 10_000.0
+    );
+
+    let g2 = gpt2(Gpt2Config::tiny());
+    let tg2 = build_training_graph(
+        &g2,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let fpt = DesignPoint::fusemax_space(1)[0];
+    bench("dse: evaluate_point gpt2-tiny on fusemax", 200, || {
+        let _ = evaluate_point(0, &fpt, &g2, &tg2.graph, &cfg);
+    });
+
+    let problem = CheckpointProblem::new(&tg, &accel, MappingConfig::edge_tpu_default(), fc);
+    bench("ga: one checkpoint-plan evaluation", 100, || {
+        let plan = monet::autodiff::CheckpointPlan::recompute_set(
+            problem.candidates.iter().step_by(3).copied(),
+        );
+        let _ = problem.evaluate(&plan);
+    });
+
+    bench("ga: one NSGA-II generation (pop 16)", 3, || {
+        let _ = problem.optimize(&GaConfig {
+            population: 16,
+            generations: 1,
+            ..Default::default()
+        });
+    });
+
+    println!("\nbench_scheduler done");
+}

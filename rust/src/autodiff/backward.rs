@@ -1,0 +1,593 @@
+//! Training-graph generation: symbolic backward-pass construction.
+//!
+//! This is MONET's core workflow contribution (paper §III), rebuilt from
+//! scratch: where the paper runs ONNX Runtime Training and then decomposes
+//! composite gradient ops (ConvGrad, SoftmaxGrad, …) with custom ONNX
+//! passes, we differentiate our IR directly — emitting the *decomposed*
+//! primitives immediately: separate input-gradient, weight-gradient and
+//! bias/affine-gradient nodes, explicit gradient accumulation for fan-out,
+//! and per-parameter optimizer-update nodes.
+//!
+//! Every tensor the backward pass reads from the forward pass becomes a
+//! *saved-activation edge* (`Edge::is_activation`), which is exactly the
+//! checkpointing candidate set 𝒜 of §II-A / §V-B.
+
+use std::collections::HashMap;
+
+use crate::workload::graph::{Graph, NodeId};
+use crate::workload::op::{EltwiseKind, OpKind, Optimizer, Phase};
+
+/// Result of the autodiff pass.
+#[derive(Debug, Clone)]
+pub struct TrainingGraph {
+    /// Combined forward + backward (+ optimizer) graph. Forward nodes keep
+    /// their ids from the input graph (0..fwd_len).
+    pub graph: Graph,
+    /// Number of forward nodes (prefix of `graph.nodes`).
+    pub fwd_len: usize,
+    /// fwd node -> node producing the gradient w.r.t. its *output*.
+    pub grad_of: HashMap<NodeId, NodeId>,
+    /// Optimizer-update nodes, one per parameter tensor.
+    pub update_nodes: Vec<NodeId>,
+    pub optimizer: Optimizer,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TrainOptions {
+    pub optimizer: Optimizer,
+    /// Include optimizer-update nodes (false models pure fwd+bwd).
+    pub include_update: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { optimizer: Optimizer::Sgd, include_update: true }
+    }
+}
+
+/// Differentiate a forward graph into a full training-iteration graph.
+pub fn build_training_graph(fwd: &Graph, opts: TrainOptions) -> TrainingGraph {
+    let mut g = fwd.clone();
+    let fwd_len = fwd.len();
+    let topo = fwd.topo_order();
+
+    // Gradient contributions accumulated per forward node's output.
+    let mut contrib: Vec<Vec<NodeId>> = vec![vec![]; fwd_len];
+    let mut grad_of: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut update_nodes: Vec<NodeId> = vec![];
+
+    // helper: record that `src_grad_node` contributes grad to fwd node `t`
+    // (gradient tensor has the byte size of t's output).
+    let add_contrib = |contrib: &mut Vec<Vec<NodeId>>, t: NodeId, gnode: NodeId| {
+        contrib[t].push(gnode);
+    };
+
+    for &n in topo.iter().rev() {
+        let node = fwd.node(n).clone();
+
+        // ---- resolve the accumulated output gradient of n ----
+        let grad_out: Option<NodeId> = if matches!(node.kind, OpKind::Loss { .. }) {
+            None // the loss seeds gradients; it has no incoming grad
+        } else {
+            let contribs = contrib[n].clone();
+            match contribs.len() {
+                0 => {
+                    // No consumer needed this node's gradient (e.g. dead
+                    // branch) — nothing to backpropagate through it.
+                    continue;
+                }
+                1 => Some(contribs[0]),
+                _ => {
+                    // fan-out: accumulate with a chain of binary adds
+                    let elems = node.kind.out_elems();
+                    let bytes = elems * g.elem_bytes;
+                    let mut acc = contribs[0];
+                    for &c in &contribs[1..] {
+                        let add = g.add_node_with_origin(
+                            format!("gacc[{}]", node.name),
+                            OpKind::Eltwise { kind: EltwiseKind::Add, elems, arity: 2 },
+                            Phase::Backward,
+                            n,
+                        );
+                        g.add_edge(acc, add, bytes);
+                        g.add_edge(c, add, bytes);
+                        acc = add;
+                    }
+                    Some(acc)
+                }
+            }
+        };
+        if let Some(gn) = grad_out {
+            grad_of.insert(n, gn);
+        }
+
+        let preds: Vec<NodeId> = fwd.predecessors(n).collect();
+        let in_bytes = |g: &Graph, p: NodeId| g.node(p).kind.out_elems() * g.elem_bytes;
+        let gbytes = node.kind.out_elems() * g.elem_bytes;
+
+        // convenience for the per-parameter optimizer step
+        let mut emit_update =
+            |g: &mut Graph, wgrad: NodeId, elems: u64, label: &str| {
+                if !opts.include_update {
+                    return;
+                }
+                let up = g.add_node_with_origin(
+                    format!("opt[{label}]"),
+                    OpKind::OptimizerStep { opt: opts.optimizer, elems },
+                    Phase::Update,
+                    n,
+                );
+                g.add_edge(wgrad, up, elems * g.elem_bytes);
+                update_nodes.push(up);
+            };
+
+        match node.kind.clone() {
+            OpKind::Loss { rows, classes } => {
+                // dL/dlogits = softmax(logits) - onehot: softmax-grad cost,
+                // consumes the saved logits.
+                let gnode = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::SoftmaxGrad { rows, cols: classes },
+                    Phase::Backward,
+                    n,
+                );
+                let p = preds[0];
+                let b = in_bytes(&g, p);
+                g.add_activation_edge(p, gnode, b);
+                add_contrib(&mut contrib, p, gnode);
+            }
+
+            OpKind::Conv(spec) => {
+                let go = grad_out.unwrap();
+                let p = preds[0];
+                // dX — transposed conv, consumes grad_out (+weights)
+                if fwd.in_degree(p) > 0 || !matches!(fwd.node(p).kind, OpKind::Eltwise { kind: EltwiseKind::Identity, .. }) {
+                    let dx = g.add_node_with_origin(
+                        format!("dX[{}]", node.name),
+                        OpKind::ConvInputGrad(spec),
+                        Phase::Backward,
+                        n,
+                    );
+                    g.add_edge(go, dx, gbytes);
+                    add_contrib(&mut contrib, p, dx);
+                }
+                // dW — consumes grad_out + saved input activation
+                let dw = g.add_node_with_origin(
+                    format!("dW[{}]", node.name),
+                    OpKind::ConvWeightGrad(spec),
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dw, gbytes);
+                let b = in_bytes(&g, p);
+                g.add_activation_edge(p, dw, b);
+                emit_update(&mut g, dw, spec.weight_elems(), &node.name);
+            }
+
+            OpKind::Gemm(spec) => {
+                let go = grad_out.unwrap();
+                if spec.weight_b {
+                    let p = preds[0];
+                    // dA = dC · Bᵀ (weights re-read, no activation needed)
+                    let dx = g.add_node_with_origin(
+                        format!("dX[{}]", node.name),
+                        OpKind::GemmInputGrad(spec),
+                        Phase::Backward,
+                        n,
+                    );
+                    g.add_edge(go, dx, gbytes);
+                    add_contrib(&mut contrib, p, dx);
+                    // dB = Aᵀ · dC (consumes saved input activation)
+                    let dw = g.add_node_with_origin(
+                        format!("dW[{}]", node.name),
+                        OpKind::GemmWeightGrad(spec),
+                        Phase::Backward,
+                        n,
+                    );
+                    g.add_edge(go, dw, gbytes);
+                    let b = in_bytes(&g, p);
+                    g.add_activation_edge(p, dw, b);
+                    emit_update(&mut g, dw, (spec.k * spec.n) as u64, &node.name);
+                } else {
+                    // activation·activation matmul (QKᵀ, PV): both operands
+                    // get gradients, each needing the *other* saved operand.
+                    let (pa, pb) = (preds[0], preds[1]);
+                    let da = g.add_node_with_origin(
+                        format!("dA[{}]", node.name),
+                        OpKind::GemmInputGrad(spec),
+                        Phase::Backward,
+                        n,
+                    );
+                    g.add_edge(go, da, gbytes);
+                    let bb = in_bytes(&g, pb);
+                    g.add_activation_edge(pb, da, bb);
+                    add_contrib(&mut contrib, pa, da);
+
+                    let db = g.add_node_with_origin(
+                        format!("dB[{}]", node.name),
+                        OpKind::GemmWeightGrad(spec),
+                        Phase::Backward,
+                        n,
+                    );
+                    g.add_edge(go, db, gbytes);
+                    let ba = in_bytes(&g, pa);
+                    g.add_activation_edge(pa, db, ba);
+                    add_contrib(&mut contrib, pb, db);
+                }
+            }
+
+            OpKind::Eltwise { kind, elems, .. } => {
+                let go = grad_out.unwrap();
+                match kind {
+                    EltwiseKind::Add => {
+                        // grad flows unchanged to both inputs
+                        for &p in &preds {
+                            add_contrib(&mut contrib, p, go);
+                        }
+                    }
+                    EltwiseKind::Identity => {
+                        for &p in &preds {
+                            add_contrib(&mut contrib, p, go);
+                        }
+                    }
+                    EltwiseKind::Mul => {
+                        // d(a·b)/da = grad·b — each side saves the other
+                        for (i, &p) in preds.iter().enumerate() {
+                            let other = preds[1 - i];
+                            let dn = g.add_node_with_origin(
+                                format!("d[{}]/{}", node.name, i),
+                                OpKind::EltwiseGrad { kind, elems },
+                                Phase::Backward,
+                                n,
+                            );
+                            g.add_edge(go, dn, gbytes);
+                            let b = in_bytes(&g, other);
+                            g.add_activation_edge(other, dn, b);
+                            add_contrib(&mut contrib, p, dn);
+                        }
+                    }
+                    // unary non-linearities: need a saved forward tensor.
+                    // ReLU needs only its output's sign; GeLU/Tanh/Sigmoid
+                    // need the forward activation (we save the op's output,
+                    // matching what frameworks retain).
+                    _ => {
+                        let dn = g.add_node_with_origin(
+                            format!("d[{}]", node.name),
+                            OpKind::EltwiseGrad { kind, elems },
+                            Phase::Backward,
+                            n,
+                        );
+                        g.add_edge(go, dn, gbytes);
+                        g.add_activation_edge(n, dn, gbytes);
+                        if let Some(&p) = preds.first() {
+                            add_contrib(&mut contrib, p, dn);
+                        }
+                    }
+                }
+            }
+
+            OpKind::Norm { kind, elems, channels } => {
+                let go = grad_out.unwrap();
+                let dn = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::NormGrad { kind, elems, channels },
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dn, gbytes);
+                // needs the saved normalised input
+                let p = preds[0];
+                let b = in_bytes(&g, p);
+                g.add_activation_edge(p, dn, b);
+                add_contrib(&mut contrib, p, dn);
+                // scale+shift parameter update (2·channels params)
+                emit_update(&mut g, dn, 2 * channels as u64, &node.name);
+            }
+
+            OpKind::Pool(spec) => {
+                let go = grad_out.unwrap();
+                let dn = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::PoolGrad(spec),
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dn, gbytes);
+                // max-pool routing needs saved argmax indices (output-sized)
+                g.add_activation_edge(n, dn, gbytes);
+                add_contrib(&mut contrib, preds[0], dn);
+            }
+
+            OpKind::Softmax { rows, cols } => {
+                let go = grad_out.unwrap();
+                let dn = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::SoftmaxGrad { rows, cols },
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dn, gbytes);
+                // softmax backward consumes its own saved output
+                g.add_activation_edge(n, dn, gbytes);
+                add_contrib(&mut contrib, preds[0], dn);
+            }
+
+            OpKind::Embed { rows, dim, lookups } => {
+                let go = grad_out.unwrap();
+                let dn = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::EmbedGrad { rows, dim, lookups },
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dn, gbytes);
+                emit_update(&mut g, dn, (rows * dim) as u64, &node.name);
+            }
+
+            OpKind::Reduce { kind, in_elems, out_elems } => {
+                let go = grad_out.unwrap();
+                // broadcast back: modelled as a reduce-shaped grad op
+                let dn = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::Reduce { kind, in_elems: out_elems, out_elems: in_elems },
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dn, gbytes);
+                add_contrib(&mut contrib, preds[0], dn);
+            }
+
+            OpKind::Transpose { elems } | OpKind::Reshape { elems } => {
+                let go = grad_out.unwrap();
+                let dn = g.add_node_with_origin(
+                    format!("d[{}]", node.name),
+                    OpKind::Transpose { elems },
+                    Phase::Backward,
+                    n,
+                );
+                g.add_edge(go, dn, gbytes);
+                add_contrib(&mut contrib, preds[0], dn);
+            }
+
+            // backward-only kinds can never appear in a forward graph
+            OpKind::ConvInputGrad(_)
+            | OpKind::ConvWeightGrad(_)
+            | OpKind::GemmInputGrad(_)
+            | OpKind::GemmWeightGrad(_)
+            | OpKind::PoolGrad(_)
+            | OpKind::EltwiseGrad { .. }
+            | OpKind::NormGrad { .. }
+            | OpKind::SoftmaxGrad { .. }
+            | OpKind::EmbedGrad { .. }
+            | OpKind::OptimizerStep { .. } => {
+                panic!("gradient op {:?} in a forward graph", node.kind)
+            }
+        }
+    }
+
+    TrainingGraph { graph: g, fwd_len, grad_of, update_nodes, optimizer: opts.optimizer }
+}
+
+impl TrainingGraph {
+    /// Forward nodes whose outputs must be saved for the backward pass —
+    /// the unique sources of the activation-edge set 𝒜.
+    pub fn saved_activation_sources(&self) -> Vec<NodeId> {
+        let mut srcs: Vec<NodeId> = self
+            .graph
+            .edges
+            .iter()
+            .filter(|e| e.is_activation)
+            .map(|e| e.src)
+            .collect();
+        srcs.sort_unstable();
+        srcs.dedup();
+        srcs
+    }
+
+    /// Total bytes of saved activations (the Fig 3 "activations" bar).
+    pub fn saved_activation_bytes(&self) -> u64 {
+        self.saved_activation_sources()
+            .iter()
+            .map(|&n| self.graph.out_bytes(n))
+            .sum()
+    }
+
+    /// Parameter bytes (Fig 3 "parameters" bar).
+    pub fn param_bytes(&self) -> u64 {
+        let from_updates: u64 = self
+            .update_nodes
+            .iter()
+            .map(|&n| self.graph.node(n).kind.out_elems() * self.graph.elem_bytes)
+            .sum();
+        from_updates
+    }
+
+    /// Gradient bytes == parameter bytes (one grad per param).
+    pub fn grad_bytes(&self) -> u64 {
+        self.param_bytes()
+    }
+
+    /// Optimizer-state bytes (Fig 3 "optimizer states" bar). GaLore holds
+    /// its states in the rank-compressed domain (§II-A, [17]).
+    pub fn optimizer_state_bytes(&self) -> u64 {
+        self.optimizer.state_bytes(self.param_bytes())
+    }
+
+    /// Saved-activation bytes under Gist-style compression (§II-A, [18]):
+    /// ReLU outputs kept only as 1-bit signs, max-pool routing kept as
+    /// small indices; everything else stored raw.
+    pub fn saved_activation_bytes_gist(&self) -> u64 {
+        use crate::workload::op::{EltwiseKind, OpKind};
+        self.saved_activation_sources()
+            .iter()
+            .map(|&n| {
+                let bytes = self.graph.out_bytes(n);
+                match &self.graph.node(n).kind {
+                    // 1 bit per element instead of elem_bytes
+                    OpKind::Eltwise { kind: EltwiseKind::Relu, .. } => {
+                        (bytes / (8 * self.graph.elem_bytes)).max(1)
+                    }
+                    // pool argmax indices: 1 byte per output element
+                    OpKind::Pool(_) => (bytes / self.graph.elem_bytes).max(1),
+                    _ => bytes,
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::{gpt2, mlp, resnet18, Gpt2Config};
+    use crate::workload::op::Phase;
+
+    fn train(g: &Graph, opt: Optimizer) -> TrainingGraph {
+        build_training_graph(g, TrainOptions { optimizer: opt, include_update: true })
+    }
+
+    #[test]
+    fn mlp_training_graph_is_dag() {
+        let fwd = mlp(2, 32, 64, 2, 10);
+        let tg = train(&fwd, Optimizer::Sgd);
+        assert!(tg.graph.is_dag());
+        assert!(tg.graph.len() > fwd.len() * 2);
+    }
+
+    #[test]
+    fn one_update_per_parameter_tensor() {
+        let fwd = mlp(2, 32, 64, 2, 10);
+        let tg = train(&fwd, Optimizer::Adam);
+        // 3 linear layers → 3 weight updates
+        assert_eq!(tg.update_nodes.len(), 3);
+        let updates: u64 = tg
+            .update_nodes
+            .iter()
+            .map(|&n| tg.graph.node(n).kind.out_elems())
+            .sum();
+        assert_eq!(updates, (32 * 64 + 64 * 64 + 64 * 10) as u64);
+    }
+
+    #[test]
+    fn resnet18_training_node_count_matches_paper_scale() {
+        // The paper quotes N ≈ 500 for ResNet-18 training (§V-A); their
+        // ONNX decomposition also materialises transposes/reshapes that we
+        // fold into the gradient primitives, so our count sits lower but in
+        // the same "several-hundred-node" regime.
+        let fwd = resnet18(1, 32, 10);
+        let tg = train(&fwd, Optimizer::Sgd);
+        let n = tg.graph.len();
+        assert!(n > 150 && n < 700, "n={n}");
+        assert!(tg.graph.is_dag());
+    }
+
+    #[test]
+    fn backward_macs_roughly_double_forward() {
+        // classic rule of thumb: bwd ≈ 2× fwd MACs for conv nets
+        let fwd = resnet18(1, 32, 10);
+        let tg = train(&fwd, Optimizer::Sgd);
+        let f = tg.graph.total_macs(Some(Phase::Forward)) as f64;
+        let b = tg.graph.total_macs(Some(Phase::Backward)) as f64;
+        let ratio = b / f;
+        assert!(ratio > 1.5 && ratio < 2.6, "ratio={ratio}");
+    }
+
+    #[test]
+    fn activation_edges_exist_and_point_backward() {
+        let fwd = resnet18(1, 32, 10);
+        let tg = train(&fwd, Optimizer::Sgd);
+        let acts = tg.graph.activation_edges();
+        assert!(!acts.is_empty());
+        for &e in &acts {
+            let edge = tg.graph.edge(e);
+            assert!(edge.src < tg.fwd_len, "activation source must be a fwd node");
+            assert!(edge.dst >= tg.fwd_len, "activation consumer must be bwd");
+        }
+    }
+
+    #[test]
+    fn fanout_gets_accumulation_nodes() {
+        // residual blocks fan out → gradient accumulation adds must appear
+        let fwd = resnet18(1, 32, 10);
+        let tg = train(&fwd, Optimizer::Sgd);
+        let gacc = tg
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| n.name.starts_with("gacc["))
+            .count();
+        assert!(gacc > 0);
+    }
+
+    #[test]
+    fn adam_states_double_params() {
+        let fwd = mlp(1, 16, 16, 1, 4);
+        let sgd = train(&fwd, Optimizer::Sgd);
+        let adam = train(&fwd, Optimizer::Adam);
+        assert_eq!(sgd.optimizer_state_bytes(), 0);
+        assert_eq!(adam.optimizer_state_bytes(), 2 * adam.param_bytes());
+    }
+
+    #[test]
+    fn galore_shrinks_states_but_costs_flops() {
+        use crate::workload::op::GALORE_COMPRESSION;
+        let fwd = mlp(1, 16, 16, 1, 4);
+        let adam = train(&fwd, Optimizer::Adam);
+        let galore = train(&fwd, Optimizer::Galore);
+        assert_eq!(
+            galore.optimizer_state_bytes(),
+            adam.optimizer_state_bytes() / GALORE_COMPRESSION
+        );
+        // the update itself does more work (projections)
+        let upd_macs = |tg: &TrainingGraph| {
+            tg.update_nodes
+                .iter()
+                .map(|&n| tg.graph.node(n).kind.macs())
+                .sum::<u64>()
+        };
+        assert!(upd_macs(&galore) > upd_macs(&adam));
+    }
+
+    #[test]
+    fn gist_compression_reduces_activation_bytes() {
+        use crate::workload::models::resnet18;
+        let tg = train(&resnet18(1, 32, 10), Optimizer::Sgd);
+        let raw = tg.saved_activation_bytes();
+        let gist = tg.saved_activation_bytes_gist();
+        // ReLU outputs are ~1/3 of the saved set in our decomposition
+        // (conv inputs and norm inputs stay raw), so Gist trims that third
+        // to sign bits — a 20-35% cut at this granularity
+        assert!(gist < raw * 4 / 5, "gist {gist} !< 0.8*raw {raw}");
+        assert!(gist > raw / 4);
+    }
+
+    #[test]
+    fn gpt2_training_graph() {
+        let tg = train(&gpt2(Gpt2Config::tiny()), Optimizer::Adam);
+        assert!(tg.graph.is_dag());
+        // attention matmuls produce dA and dB nodes
+        let dabs = tg
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| n.name.starts_with("dA[") || n.name.starts_with("dB["))
+            .count();
+        assert_eq!(dabs, 2 * 2 * 2); // 2 matmuls × 2 grads × 2 layers
+    }
+
+    #[test]
+    fn grad_of_covers_loss_input_chain() {
+        let fwd = mlp(1, 8, 8, 1, 4);
+        let tg = train(&fwd, Optimizer::Sgd);
+        // every weight-bearing fwd node's input has a gradient producer
+        for n in 0..tg.fwd_len {
+            let kind = &tg.graph.node(n).kind;
+            if kind.is_gemm() {
+                assert!(
+                    tg.grad_of.contains_key(&n),
+                    "gemm node {n} missing output grad"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Activation checkpointing as a graph transformation pass (paper §III,
+//! §V-B): selected saved activations are dropped and replaced by recompute
+//! subgraphs containing only the minimal operators needed to regenerate
+//! them before their backward consumers.
+
+use std::collections::{HashMap, HashSet};
+
+use super::backward::TrainingGraph;
+use crate::workload::graph::{Graph, NodeId};
+use crate::workload::op::Phase;
+
+/// A checkpointing decision: the set of forward nodes whose saved outputs
+/// are *dropped* (recomputed in the backward pass). Everything else in the
+/// saved-activation set stays checkpointed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CheckpointPlan {
+    pub recompute: HashSet<NodeId>,
+}
+
+impl CheckpointPlan {
+    pub fn save_all() -> Self {
+        Self::default()
+    }
+
+    pub fn recompute_set(nodes: impl IntoIterator<Item = NodeId>) -> Self {
+        CheckpointPlan { recompute: nodes.into_iter().collect() }
+    }
+}
+
+/// Candidate activations for checkpointing decisions: forward nodes with at
+/// least one saved-activation edge AND at least one predecessor (network
+/// inputs cannot be recomputed — there is nothing to recompute them from).
+pub fn checkpoint_candidates(tg: &TrainingGraph) -> Vec<NodeId> {
+    tg.saved_activation_sources()
+        .into_iter()
+        .filter(|&n| tg.graph.in_degree(n) > 0)
+        .collect()
+}
+
+/// Stored-activation bytes under a plan (the GA's memory objective; the
+/// paper reports it in FP16 — scale at the call site if desired).
+pub fn stored_activation_bytes(tg: &TrainingGraph, plan: &CheckpointPlan) -> u64 {
+    tg.saved_activation_sources()
+        .iter()
+        .filter(|n| !plan.recompute.contains(n))
+        .map(|&n| tg.graph.out_bytes(n))
+        .sum()
+}
+
+/// Apply a checkpointing plan, producing the transformed training graph.
+///
+/// For every dropped activation `a`, we build its *recompute closure*: the
+/// ancestors of `a` (inclusive) that are themselves unstored, walking back
+/// until hitting stored activations or network inputs. The closure is
+/// cloned once into the graph as `Phase::Recompute` nodes (shared between
+/// all backward consumers — recomputing AC10 and AC01 together shares
+/// ancestor work, which is exactly the non-additivity of Fig 11), the
+/// boundary reads come from stored tensors, and every saved-activation edge
+/// out of `a` is rewired to the clone.
+pub fn apply_checkpointing(tg: &TrainingGraph, plan: &CheckpointPlan) -> Graph {
+    if plan.recompute.is_empty() {
+        return tg.graph.clone();
+    }
+    let src = &tg.graph;
+    let stored: HashSet<NodeId> = tg
+        .saved_activation_sources()
+        .into_iter()
+        .filter(|n| !plan.recompute.contains(n))
+        .collect();
+
+    // 1. recompute closure over all dropped activations
+    let mut closure: HashSet<NodeId> = HashSet::new();
+    let mut stack: Vec<NodeId> = plan
+        .recompute
+        .iter()
+        .copied()
+        .filter(|&n| n < tg.fwd_len && src.in_degree(n) > 0)
+        .collect();
+    while let Some(n) = stack.pop() {
+        if !closure.insert(n) {
+            continue;
+        }
+        for p in src.predecessors(n) {
+            let is_boundary = stored.contains(&p) || src.in_degree(p) == 0;
+            if !is_boundary && !closure.contains(&p) {
+                stack.push(p);
+            }
+        }
+    }
+
+    // 2. rebuild the graph without the dropped activation edges
+    let mut g = Graph::with_elem_bytes(src.elem_bytes);
+    for n in &src.nodes {
+        let id = g.add_node(n.name.clone(), n.kind.clone(), n.phase);
+        g.nodes[id].origin = n.origin;
+    }
+    let dropped: Vec<bool> = src
+        .edges
+        .iter()
+        .map(|e| e.is_activation && plan.recompute.contains(&e.src))
+        .collect();
+    for (i, e) in src.edges.iter().enumerate() {
+        if !dropped[i] {
+            g.add_edge_full(e.src, e.dst, e.bytes, e.is_activation);
+        }
+    }
+
+    // 3. clone the closure as recompute nodes
+    let mut clone_map: HashMap<NodeId, NodeId> = HashMap::new();
+    for &n in src.topo_order().iter().filter(|n| closure.contains(n)) {
+        let node = src.node(n);
+        let c = g.add_node(format!("{}@rc", node.name), node.kind.clone(), Phase::Recompute);
+        g.nodes[c].origin = Some(node.origin.unwrap_or(n));
+        clone_map.insert(n, c);
+    }
+    // internal + boundary edges of the closure
+    for &n in closure.iter() {
+        for e in src.in_edges(n) {
+            if e.is_activation {
+                continue; // fwd→bwd edges don't drive recompute
+            }
+            let c = clone_map[&n];
+            match clone_map.get(&e.src) {
+                Some(&cs) => g.add_edge(cs, c, e.bytes),
+                None => g.add_edge(e.src, c, e.bytes), // read from stored tensor
+            };
+        }
+    }
+
+    // 4. rewire dropped activation edges to the recompute clones. The edge
+    // becomes a plain data edge: the tensor is now produced just-in-time.
+    for (i, e) in src.edges.iter().enumerate() {
+        if dropped[i] {
+            let c = clone_map[&e.src];
+            g.add_edge(c, e.dst, e.bytes);
+        }
+    }
+
+    g
+}
+
+/// Recompute MACs added by a plan (reporting / quick cost estimates; the
+/// true latency/energy impact comes from scheduling the transformed graph).
+pub fn recompute_macs(tg: &TrainingGraph, plan: &CheckpointPlan) -> u64 {
+    let g = apply_checkpointing(tg, plan);
+    g.nodes
+        .iter()
+        .filter(|n| n.phase == Phase::Recompute)
+        .map(|n| n.kind.macs())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::backward::{build_training_graph, TrainOptions};
+    use crate::workload::models::{mlp, resnet18};
+    use crate::workload::op::Optimizer;
+
+    fn tg_mlp() -> TrainingGraph {
+        build_training_graph(
+            &mlp(1, 16, 32, 3, 8),
+            TrainOptions { optimizer: Optimizer::Sgd, include_update: true },
+        )
+    }
+
+    #[test]
+    fn save_all_is_identity() {
+        let tg = tg_mlp();
+        let g = apply_checkpointing(&tg, &CheckpointPlan::save_all());
+        assert_eq!(g.len(), tg.graph.len());
+        assert_eq!(g.edges.len(), tg.graph.edges.len());
+    }
+
+    #[test]
+    fn candidates_exclude_inputs() {
+        let tg = tg_mlp();
+        for &c in &checkpoint_candidates(&tg) {
+            assert!(tg.graph.in_degree(c) > 0);
+        }
+    }
+
+    #[test]
+    fn recompute_one_activation_adds_clones_and_stays_dag() {
+        let tg = tg_mlp();
+        let cands = checkpoint_candidates(&tg);
+        let plan = CheckpointPlan::recompute_set([cands[cands.len() / 2]]);
+        let g = apply_checkpointing(&tg, &plan);
+        assert!(g.is_dag());
+        let rc = g.nodes.iter().filter(|n| n.phase == Phase::Recompute).count();
+        assert!(rc >= 1);
+        // no activation edge may remain sourced at the dropped node
+        for e in g.edges.iter().filter(|e| e.is_activation) {
+            assert!(!plan.recompute.contains(&e.src));
+        }
+    }
+
+    #[test]
+    fn memory_strictly_decreases() {
+        let tg = tg_mlp();
+        let cands = checkpoint_candidates(&tg);
+        let base = stored_activation_bytes(&tg, &CheckpointPlan::save_all());
+        let plan = CheckpointPlan::recompute_set([cands[0]]);
+        let less = stored_activation_bytes(&tg, &plan);
+        assert!(less < base);
+        assert_eq!(base - less, tg.graph.out_bytes(cands[0]));
+    }
+
+    #[test]
+    fn backward_consumers_still_reachable_from_producers() {
+        // semantic preservation: every bwd node that consumed a dropped
+        // activation now has a recompute clone as predecessor instead.
+        let tg = tg_mlp();
+        let cands = checkpoint_candidates(&tg);
+        let victim = cands[1];
+        let consumers: Vec<NodeId> = tg
+            .graph
+            .edges
+            .iter()
+            .filter(|e| e.is_activation && e.src == victim)
+            .map(|e| e.dst)
+            .collect();
+        assert!(!consumers.is_empty());
+        let plan = CheckpointPlan::recompute_set([victim]);
+        let g = apply_checkpointing(&tg, &plan);
+        for &c in &consumers {
+            let has_rc_pred = g
+                .predecessors(c)
+                .any(|p| g.node(p).phase == Phase::Recompute);
+            assert!(has_rc_pred, "consumer {c} lost its activation source");
+        }
+    }
+
+    #[test]
+    fn shared_ancestors_cloned_once() {
+        // recomputing two adjacent activations must share clones, not
+        // duplicate them (the Fig 11 non-additivity mechanism)
+        let tg = build_training_graph(
+            &resnet18(1, 32, 10),
+            TrainOptions { optimizer: Optimizer::Sgd, include_update: false },
+        );
+        let cands = checkpoint_candidates(&tg);
+        let (a, b) = (cands[2], cands[3]);
+        let ga = apply_checkpointing(&tg, &CheckpointPlan::recompute_set([a]));
+        let gb = apply_checkpointing(&tg, &CheckpointPlan::recompute_set([b]));
+        let gab = apply_checkpointing(&tg, &CheckpointPlan::recompute_set([a, b]));
+        let rc = |g: &Graph| g.nodes.iter().filter(|n| n.phase == Phase::Recompute).count();
+        assert!(rc(&gab) <= rc(&ga) + rc(&gb));
+        assert!(gab.is_dag());
+    }
+
+    #[test]
+    fn recompute_macs_monotone_under_inclusion() {
+        let tg = tg_mlp();
+        let cands = checkpoint_candidates(&tg);
+        let m1 = recompute_macs(&tg, &CheckpointPlan::recompute_set([cands[0]]));
+        let m2 = recompute_macs(
+            &tg,
+            &CheckpointPlan::recompute_set([cands[0], cands[1]]),
+        );
+        assert!(m2 >= m1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Training-graph generation (DESIGN.md S3/S4): symbolic backward pass with
+//! decomposed gradient primitives, optimizer insertion, and the activation-
+//! checkpointing transform. Replaces ONNX Runtime Training + the paper's
+//! custom ONNX passes.
+
+pub mod backward;
+pub mod checkpoint;
+
+pub use backward::{build_training_graph, TrainOptions, TrainingGraph};
+pub use checkpoint::{
+    apply_checkpointing, checkpoint_candidates, recompute_macs,
+    stored_activation_bytes, CheckpointPlan,
+};

@@ -1,0 +1,15 @@
+//! Design-space exploration (DESIGN.md S11): the sweep orchestrator, the
+//! Table II/III spaces, and the Pallas-kernel pre-filter.
+
+pub mod prefilter;
+pub mod search;
+pub mod space;
+pub mod sweep;
+
+pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};
+pub use search::{front_recall, search, SearchOutcome};
+pub use space::DesignPoint;
+pub use sweep::{
+    evaluate_point_prepared, SweepPartitions,
+    evaluate_point, pareto_front, run_sweep, FusionStrategy, Mode, SweepConfig, SweepRow,
+};

@@ -1,0 +1,134 @@
+//! DSE pre-filter descriptors: flatten an accelerator and a workload graph
+//! into the dense rows the AOT Pallas cost kernel consumes (DESIGN.md S13).
+//! Layout must match python/compile/kernels/ref.py.
+
+use crate::hardware::accelerator::Accelerator;
+use crate::hardware::energy;
+use crate::runtime::cost_kernel::{CfgRow, CostKernel, CostOut, LayRow};
+use crate::workload::graph::Graph;
+use crate::workload::op::LoopDim;
+
+/// Accelerator → config descriptor row.
+pub fn accel_to_cfg(accel: &Accelerator) -> CfgRow {
+    CfgRow {
+        macs: accel.total_macs() as f32,
+        onchip_bw: accel.cores.iter().map(|c| c.onchip_bw).sum::<f64>() as f32,
+        offchip_bw: accel.offchip_bw as f32,
+        local_mem: accel.total_local_mem() as f32,
+        e_mac: energy::E_MAC_PJ as f32,
+        e_onchip: energy::E_LOCAL_PJ_PER_BYTE as f32,
+        e_offchip: energy::E_DRAM_PJ_PER_BYTE as f32,
+    }
+}
+
+/// Workload graph → layer descriptor rows (one per node).
+pub fn graph_to_layers(g: &Graph) -> Vec<LayRow> {
+    (0..g.len())
+        .map(|n| {
+            let kind = &g.node(n).kind;
+            let in_bytes: u64 = g.in_edges(n).map(|e| e.bytes).sum();
+            let weight_bytes = kind.weight_elems() * g.elem_bytes;
+            let out_bytes = kind.out_elems() * g.elem_bytes;
+            // independent output elements = exploitable MAC-level parallelism
+            let dims = kind.loop_dims();
+            let par: usize = dims
+                .iter()
+                .filter(|(d, _)| {
+                    matches!(d, LoopDim::B | LoopDim::K | LoopDim::Ox | LoopDim::Oy | LoopDim::M | LoopDim::E)
+                })
+                .map(|(_, s)| *s)
+                .product();
+            LayRow {
+                flops: 2.0 * kind.macs() as f32,
+                onchip_bytes: (in_bytes + weight_bytes + out_bytes) as f32,
+                offchip_bytes: (in_bytes + weight_bytes + out_bytes) as f32,
+                parallelism: par.max(1) as f32,
+                working_set: (weight_bytes + out_bytes) as f32,
+                weight_bytes: weight_bytes as f32,
+            }
+        })
+        .collect()
+}
+
+/// Score accelerators against a graph, preferring the AOT kernel and
+/// falling back to the native twin when no runtime is available.
+pub fn prefilter_scores(
+    kernel: Option<&CostKernel>,
+    accels: &[Accelerator],
+    g: &Graph,
+) -> Vec<CostOut> {
+    let cfgs: Vec<CfgRow> = accels.iter().map(accel_to_cfg).collect();
+    let layers = graph_to_layers(g);
+    match kernel {
+        Some(k) => k
+            .eval(&cfgs, &layers)
+            .expect("cost kernel execution failed"),
+        None => crate::runtime::cost_kernel::cost_eval_native(&cfgs, &layers),
+    }
+}
+
+/// Keep the indices of the best `keep_frac` configs by roofline cycles
+/// (ties broken by energy). Never returns fewer than `min_keep`.
+pub fn select_survivors(scores: &[CostOut], keep_frac: f64, min_keep: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a]
+            .cycles
+            .partial_cmp(&scores[b].cycles)
+            .unwrap()
+            .then(scores[a].energy_pj.partial_cmp(&scores[b].energy_pj).unwrap())
+    });
+    let keep = ((scores.len() as f64 * keep_frac).ceil() as usize)
+        .max(min_keep)
+        .min(scores.len());
+    idx.truncate(keep);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets::EdgeTpuParams;
+    use crate::workload::models::resnet18;
+
+    #[test]
+    fn descriptors_are_finite_and_positive() {
+        let g = resnet18(1, 32, 10);
+        let layers = graph_to_layers(&g);
+        assert_eq!(layers.len(), g.len());
+        for l in &layers {
+            assert!(l.flops >= 0.0 && l.parallelism >= 1.0);
+            assert!(l.onchip_bytes.is_finite());
+        }
+        let cfg = accel_to_cfg(&EdgeTpuParams::baseline().build());
+        assert!(cfg.macs > 0.0 && cfg.offchip_bw > 0.0);
+    }
+
+    #[test]
+    fn native_prefilter_ranks_bigger_faster() {
+        let g = resnet18(1, 32, 10);
+        let small = EdgeTpuParams { u: 16, l: 1, ..EdgeTpuParams::baseline() }.build();
+        let big = EdgeTpuParams { u: 128, l: 8, ..EdgeTpuParams::baseline() }.build();
+        let scores = prefilter_scores(None, &[small, big], &g);
+        assert!(scores[1].cycles < scores[0].cycles);
+    }
+
+    #[test]
+    fn survivor_selection() {
+        let g = resnet18(1, 32, 10);
+        let accels: Vec<_> = EdgeTpuParams::space_strided(500)
+            .into_iter()
+            .map(|p| p.build())
+            .collect();
+        let scores = prefilter_scores(None, &accels, &g);
+        let surv = select_survivors(&scores, 0.25, 1);
+        assert_eq!(surv.len(), (accels.len() as f64 * 0.25).ceil() as usize);
+        // survivors are the fastest quartile
+        let worst_kept = surv.iter().map(|&i| scores[i].cycles).fold(0.0, f32::max);
+        let dropped_best = (0..accels.len())
+            .filter(|i| !surv.contains(i))
+            .map(|i| scores[i].cycles)
+            .fold(f32::INFINITY, f32::min);
+        assert!(worst_kept <= dropped_best);
+    }
+}

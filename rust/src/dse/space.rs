@@ -1,0 +1,91 @@
+//! The design-space axes swept in the paper's §IV: Edge TPU (Table II) and
+//! FuseMax (Table III) points, unified behind one `DesignPoint` type.
+
+use crate::hardware::accelerator::Accelerator;
+use crate::hardware::presets::{EdgeTpuParams, FuseMaxParams};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DesignPoint {
+    EdgeTpu(EdgeTpuParams),
+    FuseMax(FuseMaxParams),
+}
+
+impl DesignPoint {
+    pub fn build(&self) -> Accelerator {
+        match self {
+            DesignPoint::EdgeTpu(p) => p.build(),
+            DesignPoint::FuseMax(p) => p.build(),
+        }
+    }
+
+    /// Total compute resource (x-axis of Fig 8).
+    pub fn total_macs(&self) -> u64 {
+        match self {
+            DesignPoint::EdgeTpu(p) => p.total_macs(),
+            DesignPoint::FuseMax(p) => p.total_macs(),
+        }
+    }
+
+    /// Per-PE compute resource U·L (colour axis of Fig 8) or the buffer
+    /// bandwidth (colour axis of Fig 9).
+    pub fn color_axis(&self) -> f64 {
+        match self {
+            DesignPoint::EdgeTpu(p) => p.per_pe_macs() as f64,
+            DesignPoint::FuseMax(p) => p.buffer_bw as f64,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DesignPoint::EdgeTpu(p) => format!(
+                "edge,{},{},{},{},{},{}",
+                p.x_pes, p.y_pes, p.u, p.l, p.local_mem, p.regfile
+            ),
+            DesignPoint::FuseMax(p) => format!(
+                "fusemax,{},{},{},{},{},{}",
+                p.x_pes, p.y_pes, p.vector_pes, p.buffer_bw, p.buffer_size, p.offchip_bw
+            ),
+        }
+    }
+
+    pub fn edge_space(stride: usize) -> Vec<DesignPoint> {
+        EdgeTpuParams::space_strided(stride)
+            .into_iter()
+            .map(DesignPoint::EdgeTpu)
+            .collect()
+    }
+
+    pub fn fusemax_space(stride: usize) -> Vec<DesignPoint> {
+        FuseMaxParams::space_strided(stride)
+            .into_iter()
+            .map(DesignPoint::FuseMax)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spaces_build() {
+        let e = DesignPoint::edge_space(500);
+        let f = DesignPoint::fusemax_space(200);
+        assert!(!e.is_empty() && !f.is_empty());
+        for p in e.iter().chain(&f) {
+            let a = p.build();
+            assert!(a.total_macs() > 0);
+            // the built HDA adds auxiliary vector cores, so its MAC count
+            // is at least the point's headline U·L·nPEs resource
+            assert!(a.total_macs() >= p.total_macs());
+        }
+    }
+
+    #[test]
+    fn labels_unique_within_space() {
+        let pts = DesignPoint::edge_space(100);
+        let labels: std::collections::HashSet<String> =
+            pts.iter().map(|p| p.label()).collect();
+        assert_eq!(labels.len(), pts.len());
+    }
+}

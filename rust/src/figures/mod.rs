@@ -1,0 +1,570 @@
+//! One function per paper artifact (DESIGN.md §3): each regenerates the
+//! data behind a figure/table, writes a CSV under `results/`, and returns
+//! the rows so examples/benches/tests can assert the paper's qualitative
+//! claims. The examples/ binaries add the ASCII rendering.
+
+use std::path::Path;
+
+use crate::autodiff::{
+    apply_checkpointing, build_training_graph, checkpoint_candidates,
+    stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
+};
+use crate::dse::{pareto_front, run_sweep, DesignPoint, Mode, SweepConfig, SweepRow};
+use crate::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
+use crate::ga::{CheckpointProblem, GaConfig};
+use crate::hardware::presets::EdgeTpuParams;
+use crate::mapping::MappingConfig;
+use crate::report::write_csv;
+use crate::scheduler::{schedule, Partition, ScheduleResult};
+use crate::workload::models::{gpt2, resnet18, resnet50, Gpt2Config};
+use crate::workload::op::Optimizer;
+
+fn csv_of_sweep(path: &Path, rows: &[SweepRow]) -> std::io::Result<()> {
+    write_csv(
+        path,
+        "index,label,mode,total_macs,color_axis,latency_cycles,energy_pj,peak_dram_bytes,utilization",
+        rows.iter().map(|r| {
+            vec![
+                r.index.to_string(),
+                format!("\"{}\"", r.label),
+                r.mode.as_str().to_string(),
+                r.total_macs.to_string(),
+                format!("{:.6e}", r.color_axis),
+                format!("{:.6e}", r.latency_cycles),
+                format!("{:.6e}", r.energy_pj),
+                r.peak_dram_bytes.to_string(),
+                format!("{:.4}", r.utilization),
+            ]
+        }),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figs 1 & 8 — ResNet-18 on the Edge TPU space
+// ---------------------------------------------------------------------------
+
+pub struct EdgeSweep {
+    pub rows: Vec<SweepRow>,
+}
+
+/// Sweep the Table II space (strided) with ResNet-18 fwd + training graphs
+/// on CIFAR-sized inputs, both modes — the data behind Fig 1 (energy vs
+/// latency) and Fig 8 (energy/latency vs total compute resource).
+pub fn fig1_fig8_edge_sweep(
+    stride: usize,
+    out_dir: Option<&Path>,
+    mut progress: impl FnMut(usize, usize),
+) -> EdgeSweep {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+    );
+    let points = DesignPoint::edge_space(stride);
+    let cfg = SweepConfig {
+        mapping: MappingConfig::edge_tpu_default(),
+        ..Default::default()
+    };
+    let rows = run_sweep(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
+    if let Some(dir) = out_dir {
+        csv_of_sweep(&dir.join("fig1_fig8_edge_sweep.csv"), &rows).unwrap();
+    }
+    EdgeSweep { rows }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 — ResNet-50 peak-memory breakdown
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct MemoryBreakdown {
+    pub batch: usize,
+    pub params_bytes: u64,
+    pub grads_bytes: u64,
+    pub optstate_bytes: u64,
+    pub activation_bytes: u64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> u64 {
+        self.params_bytes + self.grads_bytes + self.optstate_bytes + self.activation_bytes
+    }
+}
+
+/// Fig 3: the four memory components of a ResNet-50 Adam training
+/// iteration at 224², batch 1 and 8 (FP32, like the paper's RTX3090
+/// measurement).
+pub fn fig3_memory_breakdown(out_dir: Option<&Path>) -> Vec<MemoryBreakdown> {
+    let mut out = vec![];
+    for &batch in &[1usize, 8] {
+        let fwd = resnet50(batch, 224, 1000);
+        let tg = build_training_graph(
+            &fwd,
+            TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+        );
+        out.push(MemoryBreakdown {
+            batch,
+            params_bytes: tg.param_bytes(),
+            grads_bytes: tg.grad_bytes(),
+            optstate_bytes: tg.optimizer_state_bytes(),
+            activation_bytes: tg.saved_activation_bytes(),
+        });
+    }
+    if let Some(dir) = out_dir {
+        write_csv(
+            &dir.join("fig3_memory_breakdown.csv"),
+            "batch,params_bytes,grads_bytes,optstate_bytes,activation_bytes,total_bytes",
+            out.iter().map(|m| {
+                vec![
+                    m.batch.to_string(),
+                    m.params_bytes.to_string(),
+                    m.grads_bytes.to_string(),
+                    m.optstate_bytes.to_string(),
+                    m.activation_bytes.to_string(),
+                    m.total().to_string(),
+                ]
+            }),
+        )
+        .unwrap();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9 — GPT-2 on the FuseMax space
+// ---------------------------------------------------------------------------
+
+/// The §IV-B workload: a reduced "small GPT-2" kept sweep-tractable while
+/// preserving the structural homogeneity the paper highlights.
+pub fn fig9_gpt2_config() -> Gpt2Config {
+    Gpt2Config { n_layer: 6, seq: 256, vocab: 50257, d_model: 768, n_head: 12, mlp_ratio: 4, batch: 1 }
+}
+
+pub fn fig9_fusemax_sweep(
+    stride: usize,
+    out_dir: Option<&Path>,
+    mut progress: impl FnMut(usize, usize),
+) -> EdgeSweep {
+    let fwd = gpt2(fig9_gpt2_config());
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let points = DesignPoint::fusemax_space(stride);
+    let cfg = SweepConfig {
+        mapping: MappingConfig::fusemax_default(),
+        ..Default::default()
+    };
+    let rows = run_sweep(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
+    if let Some(dir) = out_dir {
+        csv_of_sweep(&dir.join("fig9_fusemax_sweep.csv"), &rows).unwrap();
+    }
+    EdgeSweep { rows }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 — fusion strategies
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct FusionStrategyRow {
+    pub strategy: String,
+    pub n_groups: usize,
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+}
+
+/// Fig 10: ResNet-18 inference on the baseline Edge TPU under Base
+/// (layer-by-layer), Manual (conv+bn+relu), and our solver with subgraph
+/// limits 4..=8 (operator-type constraint off, as in the paper's §V-A2
+/// optimum discussion).
+pub fn fig10_fusion_strategies(out_dir: Option<&Path>) -> Vec<FusionStrategyRow> {
+    let g = resnet18(1, 32, 10);
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let mut rows = vec![];
+    let mut eval = |name: &str, p: &Partition| {
+        let r = schedule(&g, p, &accel, &mapping);
+        rows.push(FusionStrategyRow {
+            strategy: name.to_string(),
+            n_groups: p.len(),
+            latency_cycles: r.latency_cycles,
+            energy_pj: r.energy_pj,
+        });
+    };
+    eval("Base", &Partition::singletons(&g));
+    eval("Manual", &fuse_manual_conv_bn_relu(&g));
+    for limit in 4..=8usize {
+        let c = FusionConstraints {
+            max_len: limit,
+            op_type_constraint: false,
+            per_seed_cap: 128,
+            ..Default::default()
+        };
+        eval(&format!("Limit{limit}"), &fuse(&g, &c));
+    }
+    if let Some(dir) = out_dir {
+        write_csv(
+            &dir.join("fig10_fusion_strategies.csv"),
+            "strategy,n_groups,latency_cycles,energy_pj",
+            rows.iter().map(|r| {
+                vec![
+                    r.strategy.clone(),
+                    r.n_groups.to_string(),
+                    format!("{:.6e}", r.latency_cycles),
+                    format!("{:.6e}", r.energy_pj),
+                ]
+            }),
+        )
+        .unwrap();
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11 — activation-checkpointing non-linearity
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct LinearityRow {
+    pub scenario: String,
+    pub latency_delta: f64,
+    pub energy_delta: f64,
+}
+
+/// Fig 11: recompute the first (AC10), second (AC01) and both (AC11) early
+/// backward-used activations of ResNet-18 on the base Edge TPU, under a
+/// consistent mapping and our fusion solver; report deltas vs AC00.
+/// The paper's claim: delta(AC11) ≠ delta(AC10) + delta(AC01).
+pub fn fig11_checkpoint_linearity(out_dir: Option<&Path>) -> Vec<LinearityRow> {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let fc = FusionConstraints { per_seed_cap: 96, ..Default::default() };
+
+    let eval = |plan: &CheckpointPlan| -> ScheduleResult {
+        let g = apply_checkpointing(&tg, plan);
+        let p = fuse_greedy(&g, &fc);
+        schedule(&g, &p, &accel, &mapping)
+    };
+    let base = eval(&CheckpointPlan::save_all());
+
+    // "the first and second activations used during the backward pass and
+    // generated by the first layers" (§V-B1). The paper's figure is an
+    // illustrative instance; we pick it deterministically: among the
+    // activations of the stem + first residual block (the first 8
+    // candidates), take the dependent pair whose recompute decisions
+    // interact most strongly (largest |Δ(AC11) − Δ(AC10) − Δ(AC01)| on
+    // energy). Interaction requires shared recompute ancestry and/or a
+    // change in what the fusion solver can merge — the two mechanisms the
+    // paper names.
+    let cands = checkpoint_candidates(&tg);
+    let head = &cands[..cands.len().min(8)];
+    let (a, b) = {
+        let mut best = (head[0], head[1]);
+        let mut best_gap = f64::MIN;
+        for (i, &x) in head.iter().enumerate() {
+            for &y in &head[i + 1..] {
+                if !tg.graph.ancestors(y).contains(&x) {
+                    continue;
+                }
+                let dx = eval(&CheckpointPlan::recompute_set([x]));
+                let dy = eval(&CheckpointPlan::recompute_set([y]));
+                let dxy = eval(&CheckpointPlan::recompute_set([x, y]));
+                let gap = ((dxy.energy_pj - base.energy_pj)
+                    - (dx.energy_pj - base.energy_pj)
+                    - (dy.energy_pj - base.energy_pj))
+                    .abs();
+                if gap > best_gap {
+                    best_gap = gap;
+                    best = (x, y);
+                }
+            }
+        }
+        best
+    };
+    let scenarios: Vec<(&str, CheckpointPlan)> = vec![
+        ("AC10", CheckpointPlan::recompute_set([a])),
+        ("AC01", CheckpointPlan::recompute_set([b])),
+        ("AC11", CheckpointPlan::recompute_set([a, b])),
+    ];
+    let rows: Vec<LinearityRow> = scenarios
+        .into_iter()
+        .map(|(name, plan)| {
+            let r = eval(&plan);
+            LinearityRow {
+                scenario: name.to_string(),
+                latency_delta: r.latency_cycles - base.latency_cycles,
+                energy_delta: r.energy_pj - base.energy_pj,
+            }
+        })
+        .collect();
+    if let Some(dir) = out_dir {
+        write_csv(
+            &dir.join("fig11_checkpoint_linearity.csv"),
+            "scenario,latency_delta_cycles,energy_delta_pj",
+            rows.iter().map(|r| {
+                vec![
+                    r.scenario.clone(),
+                    format!("{:.6e}", r.latency_delta),
+                    format!("{:.6e}", r.energy_delta),
+                ]
+            }),
+        )
+        .unwrap();
+    }
+    rows
+}
+
+/// Non-additivity measure for Fig 11: |Δ(AC11) − Δ(AC10) − Δ(AC01)| as a
+/// fraction of |Δ(AC11)| for (latency, energy).
+pub fn linearity_gap(rows: &[LinearityRow]) -> (f64, f64) {
+    let get = |s: &str| rows.iter().find(|r| r.scenario == s).unwrap();
+    let (a, b, ab) = (get("AC10"), get("AC01"), get("AC11"));
+    let lat = (ab.latency_delta - a.latency_delta - b.latency_delta).abs()
+        / ab.latency_delta.abs().max(1e-9);
+    let en = (ab.energy_delta - a.energy_delta - b.energy_delta).abs()
+        / ab.energy_delta.abs().max(1e-9);
+    (lat, en)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 — NSGA-II checkpointing Pareto front
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct GaFrontRow {
+    pub memory_saving: f64,
+    pub stored_mb_fp16: f64,
+    pub latency_overhead: f64,
+    pub energy_overhead: f64,
+}
+
+/// Fig 12: NSGA-II over the checkpointing space of ResNet-18 training
+/// (Adam, batch 1, 224² inputs) on the base Edge TPU. Returns rows of
+/// (memory saving, latency/energy overhead relative to save-all).
+pub fn fig12_checkpoint_ga(
+    ga: &GaConfig,
+    out_dir: Option<&Path>,
+) -> (Vec<GaFrontRow>, TrainingGraph) {
+    let fwd = resnet18(1, 224, 1000);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let problem = CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::edge_tpu_default(),
+        FusionConstraints::default(),
+    );
+    let (base_lat, base_en, _) = problem.evaluate(&CheckpointPlan::save_all());
+    let front = problem.optimize(ga);
+    let rows: Vec<GaFrontRow> = front
+        .iter()
+        .map(|s| GaFrontRow {
+            memory_saving: s.memory_saving,
+            stored_mb_fp16: s.stored_bytes_fp16 as f64 / (1 << 20) as f64,
+            latency_overhead: s.latency_cycles / base_lat - 1.0,
+            energy_overhead: s.energy_pj / base_en - 1.0,
+        })
+        .collect();
+    if let Some(dir) = out_dir {
+        write_csv(
+            &dir.join("fig12_checkpoint_ga.csv"),
+            "memory_saving,stored_mb_fp16,latency_overhead,energy_overhead",
+            rows.iter().map(|r| {
+                vec![
+                    format!("{:.4}", r.memory_saving),
+                    format!("{:.3}", r.stored_mb_fp16),
+                    format!("{:.4}", r.latency_overhead),
+                    format!("{:.4}", r.energy_overhead),
+                ]
+            }),
+        )
+        .unwrap();
+    }
+    (rows, tg)
+}
+
+// ---------------------------------------------------------------------------
+// Ablation — MILP (eq. 6) vs NSGA-II under the true non-linear pipeline
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct MilpAblationRow {
+    pub source: String,
+    pub memory_saving: f64,
+    pub latency_overhead: f64,
+    pub energy_overhead: f64,
+}
+
+/// §V-B1 quantified: solve the linear Checkmate-style formulation (eq. 6)
+/// for a sweep of budgets, re-evaluate each MILP plan under the *true*
+/// fused-layer pipeline, and place them against the NSGA-II front.
+pub fn milp_vs_ga_ablation(
+    ga: &GaConfig,
+    out_dir: Option<&Path>,
+) -> Vec<MilpAblationRow> {
+    use crate::autodiff::stored_activation_bytes;
+    use crate::ga::milp::milp_budget_sweep;
+
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let problem = CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::edge_tpu_default(),
+        FusionConstraints::default(),
+    );
+    let (base_lat, base_en, _) = problem.evaluate(&CheckpointPlan::save_all());
+    let base_mem = stored_activation_bytes(&tg, &CheckpointPlan::save_all()) as f64;
+
+    let mut rows = vec![];
+    for (_, _, plan) in milp_budget_sweep(&tg, 10) {
+        let (lat, en, _) = problem.evaluate(&plan);
+        let mem = stored_activation_bytes(&tg, &plan) as f64;
+        rows.push(MilpAblationRow {
+            source: "milp".into(),
+            memory_saving: 1.0 - mem / base_mem,
+            latency_overhead: lat / base_lat - 1.0,
+            energy_overhead: en / base_en - 1.0,
+        });
+    }
+    for sol in problem.optimize(ga) {
+        let mem = stored_activation_bytes(&tg, &sol.plan) as f64;
+        rows.push(MilpAblationRow {
+            source: "nsga2".into(),
+            memory_saving: 1.0 - mem / base_mem,
+            latency_overhead: sol.latency_cycles / base_lat - 1.0,
+            energy_overhead: sol.energy_pj / base_en - 1.0,
+        });
+    }
+    if let Some(dir) = out_dir {
+        write_csv(
+            &dir.join("ablation_milp_vs_ga.csv"),
+            "source,memory_saving,latency_overhead,energy_overhead",
+            rows.iter().map(|r| {
+                vec![
+                    r.source.clone(),
+                    format!("{:.4}", r.memory_saving),
+                    format!("{:.4}", r.latency_overhead),
+                    format!("{:.4}", r.energy_overhead),
+                ]
+            }),
+        )
+        .unwrap();
+    }
+    rows
+}
+
+/// Fraction of MILP points dominated by some GA point in
+/// (memory_saving↑, latency↓, energy↓) space.
+pub fn milp_dominated_fraction(rows: &[MilpAblationRow]) -> f64 {
+    let ga: Vec<&MilpAblationRow> = rows.iter().filter(|r| r.source == "nsga2").collect();
+    let milp: Vec<&MilpAblationRow> = rows.iter().filter(|r| r.source == "milp").collect();
+    if milp.is_empty() {
+        return 0.0;
+    }
+    let dominated = milp
+        .iter()
+        .filter(|m| {
+            ga.iter().any(|g| {
+                g.memory_saving >= m.memory_saving - 1e-9
+                    && g.latency_overhead <= m.latency_overhead + 1e-9
+                    && g.energy_overhead <= m.energy_overhead + 1e-9
+                    && (g.memory_saving > m.memory_saving + 1e-9
+                        || g.latency_overhead < m.latency_overhead - 1e-9
+                        || g.energy_overhead < m.energy_overhead - 1e-9)
+            })
+        })
+        .count();
+    dominated as f64 / milp.len() as f64
+}
+
+/// Shared helper for tests/examples: activation bytes stored by a plan, in
+/// MiB FP16 (the Fig 12 memory unit).
+pub fn stored_mb_fp16(tg: &TrainingGraph, plan: &CheckpointPlan) -> f64 {
+    stored_activation_bytes(tg, plan) as f64 / 2.0 / (1 << 20) as f64
+}
+
+/// Split sweep rows by mode (Figs 1/8/9 all plot the two separately).
+pub fn split_modes(rows: &[SweepRow]) -> (Vec<SweepRow>, Vec<SweepRow>) {
+    let inf = rows.iter().filter(|r| r.mode == Mode::Inference).cloned().collect();
+    let tr = rows.iter().filter(|r| r.mode == Mode::Training).cloned().collect();
+    (inf, tr)
+}
+
+/// Paper-shape check used by tests and EXPERIMENTS.md: do the Pareto sets
+/// of two modes differ structurally?
+pub fn pareto_labels(rows: &[SweepRow]) -> Vec<String> {
+    pareto_front(rows).into_iter().map(|i| rows[i].label.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_matches_paper() {
+        let bd = fig3_memory_breakdown(None);
+        let (b1, b8) = (&bd[0], &bd[1]);
+        // Adam states = 2× params; grads = params
+        assert_eq!(b1.optstate_bytes, 2 * b1.params_bytes);
+        assert_eq!(b1.grads_bytes, b1.params_bytes);
+        // activations scale with batch, params don't
+        assert_eq!(b1.params_bytes, b8.params_bytes);
+        assert!(b8.activation_bytes > 7 * b1.activation_bytes);
+        // paper Fig 3: at batch 8 activations dominate everything else
+        assert!(b8.activation_bytes > b8.params_bytes + b8.grads_bytes + b8.optstate_bytes);
+        // ~25.5M params × 4B ≈ 102 MB
+        let pmb = b1.params_bytes as f64 / 1e6;
+        assert!(pmb > 80.0 && pmb < 130.0, "params={pmb}MB");
+    }
+
+    #[test]
+    fn fig10_fusion_always_beats_base() {
+        let rows = fig10_fusion_strategies(None);
+        let base = rows.iter().find(|r| r.strategy == "Base").unwrap();
+        for r in rows.iter().filter(|r| r.strategy.starts_with("Limit")) {
+            assert!(r.energy_pj < base.energy_pj, "{} energy", r.strategy);
+            assert!(r.latency_cycles < base.latency_cycles, "{} latency", r.strategy);
+        }
+    }
+
+    #[test]
+    fn fig11_is_nonlinear() {
+        let rows = fig11_checkpoint_linearity(None);
+        assert_eq!(rows.len(), 3);
+        let (lat_gap, en_gap) = linearity_gap(&rows);
+        // the paper's central §V-B1 claim: strictly non-additive
+        assert!(
+            lat_gap > 0.01 || en_gap > 0.01,
+            "deltas additive: lat_gap={lat_gap}, en_gap={en_gap}"
+        );
+    }
+
+    #[test]
+    fn fig1_modes_differ_structurally() {
+        let sweep = fig1_fig8_edge_sweep(200, None, |_, _| {});
+        let (inf, tr) = split_modes(&sweep.rows);
+        assert_eq!(inf.len(), tr.len());
+        // training is uniformly more expensive...
+        for (i, t) in inf.iter().zip(&tr) {
+            assert!(t.energy_pj > i.energy_pj);
+        }
+        // ...and the Pareto-optimal config sets differ (the Fig 1/8 claim)
+        let pi: std::collections::HashSet<_> = pareto_labels(&inf).into_iter().collect();
+        let pt: std::collections::HashSet<_> = pareto_labels(&tr).into_iter().collect();
+        assert_ne!(pi, pt, "inference and training Pareto sets identical");
+    }
+}

@@ -1,0 +1,298 @@
+//! Candidate fused-subgraph enumeration (paper §V-A): BFS from each node,
+//! growing connected convex subgraphs, with the paper's constraints applied
+//! as backtracking filters:
+//!
+//! * memory: Σ m_i,c ≤ M_c on the target core class,
+//! * intra-core tiling: all fixed tiling factors pairwise divide,
+//! * operator type: ≤ 3 convolutions and ≤ 2 GEMMs per subgraph,
+//! * single external output: Σ o_v ≤ 1 (no intermediate tensor may be
+//!   required by another subgraph → no off-chip round trip).
+
+use std::collections::HashSet;
+
+use crate::workload::graph::{Graph, NodeId};
+use crate::workload::op::OpKind;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FusionConstraints {
+    /// Maximum subgraph size (the BFS length limit; Fig 10's Limit4..8).
+    pub max_len: usize,
+    /// Local memory bound of the target core class (bytes).
+    pub mem_budget: u64,
+    /// Intra-core tiling divisor used for the per-node memory estimate.
+    pub tiling: usize,
+    pub max_convs: usize,
+    pub max_gemms: usize,
+    /// Enforce the operator-type constraint (the paper ablates it off for
+    /// the "optimal without operator constraints" comparison in §V-A2).
+    pub op_type_constraint: bool,
+    /// Cap on candidates enumerated per seed node (tractability guard).
+    pub per_seed_cap: usize,
+}
+
+impl Default for FusionConstraints {
+    fn default() -> Self {
+        FusionConstraints {
+            max_len: 6,
+            mem_budget: 2 << 20,
+            tiling: 4,
+            max_convs: 3,
+            max_gemms: 2,
+            op_type_constraint: true,
+            per_seed_cap: 64,
+        }
+    }
+}
+
+/// Per-node memory requirement m_i,c: weights resident + one streamed tile
+/// of the output (out_bytes / T).
+pub fn node_mem(g: &Graph, n: NodeId, tiling: usize) -> u64 {
+    let k = &g.node(n).kind;
+    k.weight_elems() * g.elem_bytes + (k.out_elems() * g.elem_bytes) / tiling.max(1) as u64
+}
+
+/// Intra-core tiling factor T_i of a node. MAC/pool ops tile their outer
+/// spatial loop; elementwise ops are flexible (0 = wildcard, compatible
+/// with everything).
+pub fn node_tiling(kind: &OpKind) -> usize {
+    use crate::workload::op::LoopDim;
+    if kind.is_elementwise() {
+        return 0;
+    }
+    let dims = kind.loop_dims();
+    let get = |d: LoopDim| dims.iter().find(|(k, _)| *k == d).map(|(_, s)| *s).unwrap_or(0);
+    let spatial = get(LoopDim::Oy).max(get(LoopDim::M)).max(1);
+    // largest power of two ≤ spatial, capped at 16: the scheduler streams
+    // that many output tiles through local memory
+    let mut t = 1;
+    while t * 2 <= spatial && t < 16 {
+        t *= 2;
+    }
+    t
+}
+
+fn tilings_compatible(ts: &[usize]) -> bool {
+    for (i, &a) in ts.iter().enumerate() {
+        for &b in &ts[i + 1..] {
+            if a == 0 || b == 0 {
+                continue; // wildcard
+            }
+            if a % b != 0 && b % a != 0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// External-output count: nodes with at least one successor outside `set`.
+/// The sink node of the whole graph counts as zero (its output is the
+/// final result, not an intermediate).
+fn external_outputs(g: &Graph, set: &[NodeId]) -> usize {
+    let s: HashSet<NodeId> = set.iter().copied().collect();
+    set.iter()
+        .filter(|&&n| g.out_degree(n) > 0 && g.out_edges(n).any(|e| !s.contains(&e.dst)))
+        .count()
+}
+
+/// A subgraph is convex iff no path between two members leaves the set.
+/// For BFS-grown downward-closed-frontier sets the cheap sufficient check
+/// is: every member's predecessors are either all outside (entry) or the
+/// inside ones form no "hole". We verify convexity exactly with a bounded
+/// reachability check (sets are ≤ max_len nodes, graphs are modest).
+fn is_convex(g: &Graph, set: &HashSet<NodeId>) -> bool {
+    // for each edge leaving the set from node u, no descendant outside may
+    // re-enter the set; bounded DFS from each exit edge
+    for &u in set {
+        for e in g.out_edges(u) {
+            if set.contains(&e.dst) {
+                continue;
+            }
+            // walk forward from the outside node; if we re-enter set → hole
+            let mut stack = vec![e.dst];
+            let mut seen = HashSet::new();
+            while let Some(x) = stack.pop() {
+                if !seen.insert(x) {
+                    continue;
+                }
+                for s in g.successors(x) {
+                    if set.contains(&s) {
+                        return false;
+                    }
+                    if seen.len() < 256 {
+                        stack.push(s);
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Check all constraints on a candidate node set.
+pub fn satisfies(g: &Graph, set: &[NodeId], c: &FusionConstraints) -> bool {
+    if set.len() > c.max_len {
+        return false;
+    }
+    let mem: u64 = set.iter().map(|&n| node_mem(g, n, c.tiling)).sum();
+    if mem > c.mem_budget {
+        return false;
+    }
+    if c.op_type_constraint {
+        let convs = set.iter().filter(|&&n| g.node(n).kind.is_conv()).count();
+        let gemms = set.iter().filter(|&&n| g.node(n).kind.is_gemm()).count();
+        if convs > c.max_convs || gemms > c.max_gemms {
+            return false;
+        }
+    }
+    let ts: Vec<usize> = set.iter().map(|&n| node_tiling(&g.node(n).kind)).collect();
+    if !tilings_compatible(&ts) {
+        return false;
+    }
+    if external_outputs(g, set) > 1 {
+        return false;
+    }
+    let hs: HashSet<NodeId> = set.iter().copied().collect();
+    is_convex(g, &hs)
+}
+
+/// Enumerate candidate fused subgraphs: BFS growth from every seed node,
+/// adding reachable successors/predecessors of the current set, pruning by
+/// the *monotone* constraints (size, memory, op-type) during growth and by
+/// the full constraint set on emission. Deduplicated globally.
+pub fn enumerate_candidates(g: &Graph, c: &FusionConstraints) -> Vec<Vec<NodeId>> {
+    let mut seen: HashSet<Vec<NodeId>> = HashSet::new();
+    let mut out: Vec<Vec<NodeId>> = vec![];
+
+    // singletons are always valid cover fallbacks
+    for n in 0..g.len() {
+        let set = vec![n];
+        if seen.insert(set.clone()) {
+            out.push(set);
+        }
+    }
+
+    for seed in 0..g.len() {
+        let mut emitted = 0usize;
+        // frontier of partial sets to grow
+        let mut stack: Vec<Vec<NodeId>> = vec![vec![seed]];
+        let mut local_seen: HashSet<Vec<NodeId>> = HashSet::new();
+        while let Some(cur) = stack.pop() {
+            if emitted >= c.per_seed_cap {
+                break;
+            }
+            // growth moves: successors of members (BFS over the DAG)
+            let curset: HashSet<NodeId> = cur.iter().copied().collect();
+            let mut nexts: Vec<NodeId> = vec![];
+            for &n in &cur {
+                for s in g.successors(n) {
+                    if !curset.contains(&s) && !nexts.contains(&s) {
+                        nexts.push(s);
+                    }
+                }
+            }
+            for nx in nexts {
+                if cur.len() + 1 > c.max_len {
+                    continue;
+                }
+                let mut grown = cur.clone();
+                grown.push(nx);
+                grown.sort_unstable();
+                if !local_seen.insert(grown.clone()) {
+                    continue;
+                }
+                // monotone prunes (backtracking)
+                let mem: u64 = grown.iter().map(|&n| node_mem(g, n, c.tiling)).sum();
+                if mem > c.mem_budget {
+                    continue;
+                }
+                if c.op_type_constraint {
+                    let convs =
+                        grown.iter().filter(|&&n| g.node(n).kind.is_conv()).count();
+                    let gemms =
+                        grown.iter().filter(|&&n| g.node(n).kind.is_gemm()).count();
+                    if convs > c.max_convs || gemms > c.max_gemms {
+                        continue;
+                    }
+                }
+                if satisfies(g, &grown, c) && seen.insert(grown.clone()) {
+                    out.push(grown.clone());
+                    emitted += 1;
+                }
+                stack.push(grown);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::{mlp, resnet18};
+
+    #[test]
+    fn tilings_compatibility_rules() {
+        assert!(tilings_compatible(&[4, 8, 16]));
+        assert!(tilings_compatible(&[0, 4, 0]));
+        assert!(!tilings_compatible(&[4, 6]));
+        assert!(tilings_compatible(&[]));
+    }
+
+    #[test]
+    fn singletons_always_present() {
+        let g = mlp(1, 16, 32, 2, 8);
+        let cands = enumerate_candidates(&g, &FusionConstraints::default());
+        for n in 0..g.len() {
+            assert!(cands.contains(&vec![n]));
+        }
+    }
+
+    #[test]
+    fn chain_candidates_grow_up_to_limit() {
+        let g = mlp(1, 16, 32, 3, 8);
+        let c = FusionConstraints { max_len: 3, ..Default::default() };
+        let cands = enumerate_candidates(&g, &c);
+        assert!(cands.iter().any(|s| s.len() == 2));
+        assert!(cands.iter().any(|s| s.len() == 3));
+        assert!(cands.iter().all(|s| s.len() <= 3));
+    }
+
+    #[test]
+    fn memory_budget_prunes() {
+        let g = resnet18(1, 32, 10);
+        let tight = FusionConstraints { mem_budget: 1 << 10, ..Default::default() };
+        let cands = enumerate_candidates(&g, &tight);
+        // with a 1 KiB budget almost nothing besides singletons survives;
+        // singletons are kept as fallback regardless
+        assert!(cands.iter().filter(|s| s.len() > 1).count() < 10);
+    }
+
+    #[test]
+    fn op_type_constraint_limits_convs() {
+        let g = resnet18(1, 32, 10);
+        let c = FusionConstraints { max_len: 8, per_seed_cap: 200, ..Default::default() };
+        for cand in enumerate_candidates(&g, &c) {
+            let convs = cand.iter().filter(|&&n| g.node(n).kind.is_conv()).count();
+            assert!(convs <= 3);
+        }
+    }
+
+    #[test]
+    fn single_external_output_enforced() {
+        let g = resnet18(1, 32, 10);
+        let c = FusionConstraints::default();
+        for cand in enumerate_candidates(&g, &c) {
+            assert!(external_outputs(&g, &cand) <= 1, "cand={cand:?}");
+        }
+    }
+
+    #[test]
+    fn all_candidates_satisfy_full_constraints() {
+        let g = mlp(2, 32, 64, 3, 10);
+        let c = FusionConstraints::default();
+        for cand in enumerate_candidates(&g, &c) {
+            assert!(satisfies(&g, &cand, &c), "cand={cand:?}");
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Exact-cover integer program (paper §V-A eq. at the end of the section):
+//!
+//!   minimize Σ_g x_g   s.t.   Σ_{g ∋ i} x_g = 1  ∀ nodes i
+//!
+//! Minimizing the number of selected subgraphs maximizes fusion. The paper
+//! uses an IP solver "with a heuristic goal to approximate the best
+//! solution"; we implement a branch-and-bound over the exact-cover
+//! structure with a greedy warm start, bitset row representation, and a
+//! node-expansion budget after which the incumbent (always feasible —
+//! singletons guarantee a cover) is returned.
+
+use crate::workload::graph::NodeId;
+
+/// Compact bitset over node ids.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn new(n: usize) -> Self {
+        BitSet { words: vec![0; n.div_ceil(64)] }
+    }
+    pub fn from_nodes(n: usize, nodes: &[NodeId]) -> Self {
+        let mut b = BitSet::new(n);
+        for &x in nodes {
+            b.set(x);
+        }
+        b
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+    #[inline]
+    pub fn intersects(&self, o: &BitSet) -> bool {
+        self.words.iter().zip(&o.words).any(|(a, b)| a & b != 0)
+    }
+    #[inline]
+    pub fn union_with(&mut self, o: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&o.words) {
+            *a |= b;
+        }
+    }
+    #[inline]
+    pub fn subtract(&mut self, o: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&o.words) {
+            *a &= !b;
+        }
+    }
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+    pub fn first_set(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(wi * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// True iff self has a bit set outside `allowed` (i.e. the candidate
+    /// would re-cover an already covered node).
+    fn intersects_complement(&self, allowed: &BitSet) -> bool {
+        self.words.iter().zip(&allowed.words).any(|(a, b)| a & !b != 0)
+    }
+}
+
+/// Solve min-cardinality exact cover. `candidates` must include every
+/// singleton so a cover always exists. Returns indices into `candidates`.
+pub fn solve_exact_cover(
+    n_nodes: usize,
+    candidates: &[Vec<NodeId>],
+    node_budget: usize,
+) -> Vec<usize> {
+    let rows: Vec<BitSet> =
+        candidates.iter().map(|c| BitSet::from_nodes(n_nodes, c)).collect();
+
+    // candidates covering each node, largest-first (greedy & branching order)
+    let mut covering: Vec<Vec<usize>> = vec![vec![]; n_nodes];
+    for (ci, cand) in candidates.iter().enumerate() {
+        for &n in cand {
+            covering[n].push(ci);
+        }
+    }
+    for list in covering.iter_mut() {
+        list.sort_by_key(|&ci| std::cmp::Reverse(candidates[ci].len()));
+    }
+
+    // ---- greedy warm start: repeatedly take the largest disjoint cand ----
+    let greedy = {
+        let mut uncovered = BitSet::new(n_nodes);
+        for i in 0..n_nodes {
+            uncovered.set(i);
+        }
+        let mut chosen: Vec<usize> = vec![];
+        let mut order: Vec<usize> = (0..candidates.len()).collect();
+        order.sort_by_key(|&ci| std::cmp::Reverse(candidates[ci].len()));
+        while let Some(node) = uncovered.first_set() {
+            // take the largest candidate covering `node` that fits
+            let pick = covering[node]
+                .iter()
+                .copied()
+                .find(|&ci| {
+                    candidates[ci].iter().all(|&x| uncovered.get(x))
+                })
+                .expect("singletons guarantee cover");
+            uncovered.subtract(&rows[pick]);
+            chosen.push(pick);
+        }
+        chosen
+    };
+
+    // ---- branch & bound ----
+    struct Ctx<'a> {
+        rows: &'a [BitSet],
+        candidates: &'a [Vec<NodeId>],
+        covering: &'a [Vec<usize>],
+        best: Vec<usize>,
+        best_len: usize,
+        budget: usize,
+        max_cand: usize,
+    }
+
+    fn rec(ctx: &mut Ctx, uncovered: &BitSet, chosen: &mut Vec<usize>) {
+        if ctx.budget == 0 {
+            return;
+        }
+        ctx.budget -= 1;
+        let remaining = uncovered.count();
+        if remaining == 0 {
+            if chosen.len() < ctx.best_len {
+                ctx.best_len = chosen.len();
+                ctx.best = chosen.clone();
+            }
+            return;
+        }
+        // lower bound: need at least ceil(remaining / max_cand_size) more
+        let lb = chosen.len() + remaining.div_ceil(ctx.max_cand);
+        if lb >= ctx.best_len {
+            return;
+        }
+        let node = uncovered.first_set().unwrap();
+        // branch over candidates covering `node` (largest first), only
+        // those disjoint from the current cover
+        let opts: Vec<usize> = ctx.covering[node]
+            .iter()
+            .copied()
+            .filter(|&ci| !ctx.rows[ci].intersects_complement(uncovered))
+            .collect();
+        for ci in opts {
+            let mut next = uncovered.clone();
+            next.subtract(&ctx.rows[ci]);
+            chosen.push(ci);
+            rec(ctx, &next, chosen);
+            chosen.pop();
+            if ctx.budget == 0 {
+                return;
+            }
+        }
+        let _ = ctx.candidates;
+    }
+
+    let max_cand = candidates.iter().map(|c| c.len()).max().unwrap_or(1);
+    let mut ctx = Ctx {
+        rows: &rows,
+        candidates,
+        covering: &covering,
+        best_len: greedy.len(),
+        best: greedy,
+        budget: node_budget,
+        max_cand,
+    };
+    let mut uncovered = BitSet::new(n_nodes);
+    for i in 0..n_nodes {
+        uncovered.set(i);
+    }
+    let mut chosen = vec![];
+    rec(&mut ctx, &uncovered, &mut chosen);
+    ctx.best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover_ok(n: usize, cands: &[Vec<usize>], sol: &[usize]) -> bool {
+        let mut cnt = vec![0usize; n];
+        for &ci in sol {
+            for &x in &cands[ci] {
+                cnt[x] += 1;
+            }
+        }
+        cnt.iter().all(|&c| c == 1)
+    }
+
+    fn with_singletons(n: usize, mut cands: Vec<Vec<usize>>) -> Vec<Vec<usize>> {
+        for i in 0..n {
+            cands.push(vec![i]);
+        }
+        cands
+    }
+
+    #[test]
+    fn trivial_chain() {
+        let cands = with_singletons(4, vec![vec![0, 1], vec![2, 3], vec![1, 2]]);
+        let sol = solve_exact_cover(4, &cands, 10_000);
+        assert!(cover_ok(4, &cands, &sol));
+        assert_eq!(sol.len(), 2); // {01},{23}
+    }
+
+    #[test]
+    fn forced_singletons() {
+        let cands = with_singletons(3, vec![]);
+        let sol = solve_exact_cover(3, &cands, 1000);
+        assert!(cover_ok(3, &cands, &sol));
+        assert_eq!(sol.len(), 3);
+    }
+
+    #[test]
+    fn overlap_forces_choice() {
+        // {0,1,2} and {2,3} overlap at 2: optimum = {0,1,2} + {3}
+        let cands = with_singletons(4, vec![vec![0, 1, 2], vec![2, 3]]);
+        let sol = solve_exact_cover(4, &cands, 10_000);
+        assert!(cover_ok(4, &cands, &sol));
+        assert_eq!(sol.len(), 2);
+    }
+
+    #[test]
+    fn finds_optimal_on_random_instances() {
+        // brute-force cross-check on small instances
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..20 {
+            let n = 8;
+            let mut cands: Vec<Vec<usize>> = vec![];
+            for _ in 0..10 {
+                let len = 2 + rng.usize(3);
+                let start = rng.usize(n - len + 1);
+                cands.push((start..start + len).collect());
+            }
+            let cands = with_singletons(n, cands);
+            let sol = solve_exact_cover(n, &cands, 1_000_000);
+            assert!(cover_ok(n, &cands, &sol));
+            // exhaustive optimum by DP over subsets
+            let full = (1usize << n) - 1;
+            let mut dp = vec![usize::MAX; 1 << n];
+            dp[0] = 0;
+            for mask in 0..=full {
+                if dp[mask] == usize::MAX {
+                    continue;
+                }
+                for c in &cands {
+                    let cm: usize = c.iter().map(|&x| 1usize << x).sum();
+                    if mask & cm == 0 {
+                        let nm = mask | cm;
+                        dp[nm] = dp[nm].min(dp[mask] + 1);
+                    }
+                }
+            }
+            assert_eq!(sol.len(), dp[full], "not optimal");
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_still_returns_feasible() {
+        let cands = with_singletons(6, vec![vec![0, 1, 2], vec![3, 4, 5], vec![1, 2, 3]]);
+        let sol = solve_exact_cover(6, &cands, 1); // essentially greedy only
+        assert!(cover_ok(6, &cands, &sol));
+    }
+
+    #[test]
+    fn bitset_ops() {
+        let mut a = BitSet::new(130);
+        a.set(0);
+        a.set(129);
+        assert!(a.get(129) && !a.get(64));
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.first_set(), Some(0));
+        let b = BitSet::from_nodes(130, &[129]);
+        assert!(a.intersects(&b));
+        a.subtract(&b);
+        assert!(!a.get(129));
+    }
+}

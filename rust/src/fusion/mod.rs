@@ -1,0 +1,263 @@
+//! Constraint-based layer-fusion solver (DESIGN.md S9, paper §V-A):
+//! BFS candidate enumeration + min-cardinality exact cover.
+
+pub mod candidates;
+pub mod exact_cover;
+
+use crate::scheduler::Partition;
+use crate::workload::graph::Graph;
+
+pub use candidates::{enumerate_candidates, node_mem, node_tiling, FusionConstraints};
+pub use exact_cover::solve_exact_cover;
+
+/// End-to-end fusion: enumerate candidates under the constraints, solve the
+/// exact cover minimizing subgraph count, return the partition.
+pub fn fuse(g: &Graph, constraints: &FusionConstraints) -> Partition {
+    let cands = enumerate_candidates(g, constraints);
+    let chosen = solve_exact_cover(g.len(), &cands, 200_000);
+    let groups = chosen.into_iter().map(|ci| cands[ci].clone()).collect();
+    let p = Partition::from_groups(groups);
+    debug_assert!(p.validate(g).is_ok());
+    p
+}
+
+/// Cheap greedy fusion used inside GA inner loops (paper notes the COP
+/// solve is too expensive to run per GA individual): walk the topo order,
+/// greedily absorbing each node into its predecessor's group while all
+/// constraints still hold.
+///
+/// §Perf: this is the hot path of both the sweep-partition preparation and
+/// every GA plan evaluation, so all constraint checks are incremental —
+/// per-group running sums for memory/op-type, pairwise tiling checked only
+/// against the new member, and convexity via precomputed ancestor bitsets
+/// (adding `n` to group G is convex iff no outside predecessor of `n`
+/// descends from G).
+pub fn fuse_greedy(g: &Graph, constraints: &FusionConstraints) -> Partition {
+    let n_nodes = g.len();
+    let words = n_nodes.div_ceil(64);
+
+    // ancestor bitsets, one pass in topo order: anc(n) = ∪ anc(p) ∪ {p}
+    let topo = g.topo_order();
+    let mut anc = vec![0u64; n_nodes * words];
+    for &n in &topo {
+        // collect into a scratch row to appease the borrow checker
+        let mut row = vec![0u64; words];
+        for p in g.predecessors(n) {
+            row[p / 64] |= 1 << (p % 64);
+            let src = &anc[p * words..(p + 1) * words];
+            for (r, s) in row.iter_mut().zip(src) {
+                *r |= s;
+            }
+        }
+        anc[n * words..(n + 1) * words].copy_from_slice(&row);
+    }
+
+    struct GroupState {
+        members: Vec<usize>,
+        mask: Vec<u64>,
+        mem: u64,
+        convs: usize,
+        gemms: usize,
+        tilings: Vec<usize>,
+    }
+
+    let mut group_of: Vec<Option<usize>> = vec![None; n_nodes];
+    let mut groups: Vec<GroupState> = vec![];
+
+    for &n in &topo {
+        let kind = &g.node(n).kind;
+        let n_mem = candidates::node_mem(g, n, constraints.tiling);
+        let n_tiling = candidates::node_tiling(kind);
+        let n_conv = kind.is_conv() as usize;
+        let n_gemm = kind.is_gemm() as usize;
+
+        let mut placed = false;
+        for p in g.predecessors(n) {
+            let Some(gi) = group_of[p] else { continue };
+            let gs = &groups[gi];
+            // monotone constraints, incrementally
+            if gs.members.len() + 1 > constraints.max_len
+                || gs.mem + n_mem > constraints.mem_budget
+            {
+                continue;
+            }
+            if constraints.op_type_constraint
+                && (gs.convs + n_conv > constraints.max_convs
+                    || gs.gemms + n_gemm > constraints.max_gemms)
+            {
+                continue;
+            }
+            // tiling: new factor must divide-or-be-divided by each member
+            if n_tiling != 0
+                && gs.tilings.iter().any(|&t| {
+                    t != 0 && n_tiling % t != 0 && t % n_tiling != 0
+                })
+            {
+                continue;
+            }
+            // convexity: every outside predecessor of n must NOT descend
+            // from the group (otherwise a path leaves and re-enters)
+            let hole = g.predecessors(n).any(|q| {
+                group_of[q] != Some(gi)
+                    && anc[q * words..(q + 1) * words]
+                        .iter()
+                        .zip(&gs.mask)
+                        .any(|(a, m)| a & m != 0)
+            });
+            if hole {
+                continue;
+            }
+            // single-external-output: after adding n, members with
+            // successors outside {group ∪ n} must number ≤ 1. Group is
+            // small (≤ max_len) — check directly.
+            let in_new = |x: usize| group_of[x] == Some(gi) || x == n;
+            let externals = gs
+                .members
+                .iter()
+                .chain(std::iter::once(&n))
+                .filter(|&&m| {
+                    g.out_degree(m) > 0 && g.successors(m).any(|s| !in_new(s))
+                })
+                .count();
+            if externals > 1 {
+                continue;
+            }
+
+            let gs = &mut groups[gi];
+            gs.members.push(n);
+            gs.mask[n / 64] |= 1 << (n % 64);
+            gs.mem += n_mem;
+            gs.convs += n_conv;
+            gs.gemms += n_gemm;
+            gs.tilings.push(n_tiling);
+            group_of[n] = Some(gi);
+            placed = true;
+            break;
+        }
+        if !placed {
+            let mut mask = vec![0u64; words];
+            mask[n / 64] |= 1 << (n % 64);
+            group_of[n] = Some(groups.len());
+            groups.push(GroupState {
+                members: vec![n],
+                mask,
+                mem: n_mem,
+                convs: n_conv,
+                gemms: n_gemm,
+                tilings: vec![n_tiling],
+            });
+        }
+    }
+    let p = Partition::from_groups(groups.into_iter().map(|gs| gs.members).collect());
+    debug_assert!(p.validate(g).is_ok(), "{:?}", p.validate(g));
+    p
+}
+
+/// The "Manual" baseline of Fig 10: the hand-designed fusion pattern
+/// Stream ships for CNNs — each Conv absorbs its following BatchNorm and
+/// ReLU (and a trailing Add when it is the sole consumer); everything else
+/// stays layer-by-layer.
+pub fn fuse_manual_conv_bn_relu(g: &Graph) -> Partition {
+    use crate::workload::op::{EltwiseKind, OpKind};
+    let mut assigned = vec![false; g.len()];
+    let mut groups: Vec<Vec<usize>> = vec![];
+    for n in g.topo_order() {
+        if assigned[n] {
+            continue;
+        }
+        let mut grp = vec![n];
+        assigned[n] = true;
+        if g.node(n).kind.is_conv() {
+            // absorb a chain of bn / relu / add with single-consumer links
+            let mut cur = n;
+            loop {
+                let succs: Vec<_> = g.successors(cur).collect();
+                if succs.len() != 1 {
+                    break;
+                }
+                let s = succs[0];
+                if assigned[s] || g.in_degree(s) != 1 {
+                    break;
+                }
+                let absorb = matches!(
+                    g.node(s).kind,
+                    OpKind::Norm { .. }
+                        | OpKind::Eltwise { kind: EltwiseKind::Relu, .. }
+                );
+                if !absorb {
+                    break;
+                }
+                grp.push(s);
+                assigned[s] = true;
+                cur = s;
+            }
+        }
+        groups.push(grp);
+    }
+    let p = Partition::from_groups(groups);
+    debug_assert!(p.validate(g).is_ok());
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets::EdgeTpuParams;
+    use crate::mapping::MappingConfig;
+    use crate::scheduler::schedule;
+    use crate::workload::models::{mlp, resnet18};
+
+    #[test]
+    fn fuse_covers_exactly() {
+        let g = mlp(1, 32, 64, 3, 10);
+        let p = fuse(&g, &FusionConstraints::default());
+        p.validate(&g).unwrap();
+        assert!(p.len() < g.len(), "should fuse something");
+    }
+
+    #[test]
+    fn greedy_covers_exactly() {
+        let g = resnet18(1, 32, 10);
+        let p = fuse_greedy(&g, &FusionConstraints::default());
+        p.validate(&g).unwrap();
+        assert!(p.len() < g.len());
+    }
+
+    #[test]
+    fn solver_beats_or_matches_greedy_on_group_count() {
+        let g = resnet18(1, 32, 10);
+        let c = FusionConstraints::default();
+        let ip = fuse(&g, &c);
+        let gr = fuse_greedy(&g, &c);
+        assert!(ip.len() <= gr.len(), "ip={} greedy={}", ip.len(), gr.len());
+    }
+
+    #[test]
+    fn fusion_improves_schedule_over_layer_by_layer() {
+        // the Fig 10 claim, in miniature
+        let g = resnet18(1, 32, 10);
+        let accel = EdgeTpuParams::baseline().build();
+        let cfg = MappingConfig::edge_tpu_default();
+        let base = schedule(&g, &Partition::singletons(&g), &accel, &cfg);
+        let fused = schedule(&g, &fuse(&g, &FusionConstraints::default()), &accel, &cfg);
+        assert!(fused.energy_pj < base.energy_pj);
+    }
+
+    #[test]
+    fn manual_fusion_groups_conv_bn_relu() {
+        let g = resnet18(1, 32, 10);
+        let p = fuse_manual_conv_bn_relu(&g);
+        p.validate(&g).unwrap();
+        // stem conv+bn+relu must be one group of 3
+        assert!(p.groups.iter().any(|grp| grp.len() == 3));
+        assert!(p.len() < g.len());
+    }
+
+    #[test]
+    fn larger_limit_never_increases_group_count() {
+        let g = mlp(1, 32, 64, 4, 10);
+        let c4 = FusionConstraints { max_len: 4, ..Default::default() };
+        let c8 = FusionConstraints { max_len: 8, ..Default::default() };
+        assert!(fuse(&g, &c8).len() <= fuse(&g, &c4).len());
+    }
+}

@@ -1,0 +1,170 @@
+//! The activation-checkpointing optimization problem (paper §V-B2):
+//! NSGA-II over the checkpoint/recompute bitvector, with objectives
+//! (latency, energy, stored-activation memory) evaluated by the full
+//! layer-fused scheduling pipeline — the non-linear evaluation the MILP
+//! formulation cannot capture (§V-B1).
+
+use crate::autodiff::{
+    apply_checkpointing, checkpoint_candidates, stored_activation_bytes, CheckpointPlan,
+    TrainingGraph,
+};
+use crate::fusion::{fuse_greedy, FusionConstraints};
+use crate::ga::nsga2::{nsga2, GaConfig, Genome};
+use crate::hardware::accelerator::Accelerator;
+use crate::mapping::MappingConfig;
+use crate::scheduler::schedule;
+use crate::workload::graph::NodeId;
+
+/// One point on the checkpointing Pareto front (Fig 12).
+#[derive(Debug, Clone)]
+pub struct CheckpointSolution {
+    pub plan: CheckpointPlan,
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    /// Stored-activation bytes (FP16 accounting as in the paper).
+    pub stored_bytes_fp16: u64,
+    /// Fraction of baseline activation memory avoided.
+    pub memory_saving: f64,
+}
+
+/// Problem instance.
+pub struct CheckpointProblem<'a> {
+    pub tg: &'a TrainingGraph,
+    pub accel: &'a Accelerator,
+    pub mapping: MappingConfig,
+    pub fusion: FusionConstraints,
+    pub candidates: Vec<NodeId>,
+}
+
+impl<'a> CheckpointProblem<'a> {
+    pub fn new(
+        tg: &'a TrainingGraph,
+        accel: &'a Accelerator,
+        mapping: MappingConfig,
+        fusion: FusionConstraints,
+    ) -> Self {
+        let candidates = checkpoint_candidates(tg);
+        CheckpointProblem { tg, accel, mapping, fusion, candidates }
+    }
+
+    pub fn genome_to_plan(&self, genome: &Genome) -> CheckpointPlan {
+        CheckpointPlan {
+            recompute: self
+                .candidates
+                .iter()
+                .zip(genome)
+                .filter(|(_, &bit)| bit)
+                .map(|(&n, _)| n)
+                .collect(),
+        }
+    }
+
+    /// Evaluate one plan through the full pipeline: checkpoint transform →
+    /// (greedy) fusion → layer-fused schedule. Returns (latency, energy,
+    /// stored FP16 bytes).
+    pub fn evaluate(&self, plan: &CheckpointPlan) -> (f64, f64, u64) {
+        let g = apply_checkpointing(self.tg, plan);
+        let partition = fuse_greedy(&g, &self.fusion);
+        let r = schedule(&g, &partition, self.accel, &self.mapping);
+        // paper §V-B2: memory metric assumes FP16 storage (half of our
+        // FP32 graph bytes)
+        let stored = stored_activation_bytes(self.tg, plan) / 2;
+        (r.latency_cycles, r.energy_pj, stored)
+    }
+
+    /// Run the GA; returns the Pareto front sorted by memory saving.
+    pub fn optimize(&self, ga: &GaConfig) -> Vec<CheckpointSolution> {
+        let width = self.candidates.len();
+        let baseline = stored_activation_bytes(self.tg, &CheckpointPlan::save_all()) / 2;
+        let front = nsga2(width, ga, |genome| {
+            let plan = self.genome_to_plan(genome);
+            let (lat, en, mem) = self.evaluate(&plan);
+            vec![lat, en, mem as f64]
+        });
+        let mut out: Vec<CheckpointSolution> = front
+            .into_iter()
+            .map(|ind| {
+                let plan = self.genome_to_plan(&ind.genome);
+                let stored = stored_activation_bytes(self.tg, &plan) / 2;
+                CheckpointSolution {
+                    plan,
+                    latency_cycles: ind.objectives[0],
+                    energy_pj: ind.objectives[1],
+                    stored_bytes_fp16: stored,
+                    memory_saving: if baseline > 0 {
+                        1.0 - stored as f64 / baseline as f64
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.memory_saving.partial_cmp(&b.memory_saving).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{build_training_graph, TrainOptions};
+    use crate::hardware::presets::EdgeTpuParams;
+    use crate::workload::models::mlp;
+    use crate::workload::op::Optimizer;
+
+    fn problem_parts() -> (TrainingGraph, Accelerator) {
+        let tg = build_training_graph(
+            &mlp(1, 32, 64, 3, 10),
+            TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+        );
+        let accel = EdgeTpuParams::baseline().build();
+        (tg, accel)
+    }
+
+    #[test]
+    fn baseline_genome_matches_save_all() {
+        let (tg, accel) = problem_parts();
+        let p = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let plan = p.genome_to_plan(&vec![false; p.candidates.len()]);
+        assert_eq!(plan, CheckpointPlan::save_all());
+    }
+
+    #[test]
+    fn recompute_all_saves_memory_costs_time() {
+        let (tg, accel) = problem_parts();
+        let p = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let all_false = p.evaluate(&p.genome_to_plan(&vec![false; p.candidates.len()]));
+        let all_true = p.evaluate(&p.genome_to_plan(&vec![true; p.candidates.len()]));
+        assert!(all_true.2 < all_false.2, "memory must drop");
+        assert!(all_true.0 >= all_false.0 * 0.99, "latency should not improve much");
+    }
+
+    #[test]
+    fn ga_produces_nonempty_sorted_front() {
+        let (tg, accel) = problem_parts();
+        let p = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let ga = GaConfig { population: 12, generations: 5, ..Default::default() };
+        let front = p.optimize(&ga);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].memory_saving <= w[1].memory_saving + 1e-12);
+        }
+        // front must contain a high-memory-saving point
+        assert!(front.last().unwrap().memory_saving > 0.2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Multi-objective genetic optimization (DESIGN.md S10): NSGA-II and the
+//! activation-checkpointing problem encoding (paper §V-B).
+
+pub mod checkpoint_opt;
+pub mod milp;
+pub mod nsga2;
+
+pub use checkpoint_opt::{CheckpointProblem, CheckpointSolution};
+pub use nsga2::{dominates, nsga2, GaConfig, Genome, Individual, Objectives};

@@ -1,0 +1,305 @@
+//! NSGA-II (Deb et al. 2002) — the multi-objective GA the paper uses for
+//! activation checkpointing (§V-B2): elitist survival via fast
+//! non-dominated sorting, diversity via crowding distance, binary
+//! tournament selection, uniform crossover and bit-flip mutation over
+//! boolean genomes. All objectives are minimized.
+
+use crate::util::rng::Rng;
+
+pub type Genome = Vec<bool>;
+pub type Objectives = Vec<f64>;
+
+#[derive(Debug, Clone)]
+pub struct Individual {
+    pub genome: Genome,
+    pub objectives: Objectives,
+    pub rank: usize,
+    pub crowding: f64,
+}
+
+/// `a` Pareto-dominates `b` (all ≤, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort; returns fronts (vectors of indices) and writes
+/// ranks into the individuals.
+pub fn non_dominated_sort(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![vec![]; n]; // i dominates these
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&pop[i].objectives, &pop[j].objectives) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if dominates(&pop[j].objectives, &pop[i].objectives) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = vec![];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    let mut rank = 0;
+    while !current.is_empty() {
+        for &i in &current {
+            pop[i].rank = rank;
+        }
+        let mut next = vec![];
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(current);
+        current = next;
+        rank += 1;
+    }
+    fronts
+}
+
+/// Crowding distance within one front (writes into individuals).
+pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
+    if front.is_empty() {
+        return;
+    }
+    let m = pop[front[0]].objectives.len();
+    for &i in front {
+        pop[i].crowding = 0.0;
+    }
+    for obj in 0..m {
+        let mut idx = front.to_vec();
+        idx.sort_by(|&a, &b| {
+            pop[a].objectives[obj].partial_cmp(&pop[b].objectives[obj]).unwrap()
+        });
+        let lo = pop[idx[0]].objectives[obj];
+        let hi = pop[idx[idx.len() - 1]].objectives[obj];
+        pop[idx[0]].crowding = f64::INFINITY;
+        pop[idx[idx.len() - 1]].crowding = f64::INFINITY;
+        if (hi - lo).abs() < 1e-30 {
+            continue;
+        }
+        for w in 1..idx.len() - 1 {
+            let d = (pop[idx[w + 1]].objectives[obj] - pop[idx[w - 1]].objectives[obj])
+                / (hi - lo);
+            pop[idx[w]].crowding += d;
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_p: f64,
+    pub mutation_p: f64,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 32,
+            generations: 30,
+            crossover_p: 0.9,
+            mutation_p: 0.02,
+            seed: 0xACAC,
+        }
+    }
+}
+
+/// Run NSGA-II over boolean genomes of width `width`; `eval` maps a genome
+/// to its (minimized) objective vector. Returns the final first front,
+/// deduplicated by genome.
+pub fn nsga2(
+    width: usize,
+    cfg: &GaConfig,
+    mut eval: impl FnMut(&Genome) -> Objectives,
+) -> Vec<Individual> {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.population);
+    // seed with all-false (save everything = the baseline), all-true, and
+    // random genomes with varying density
+    for i in 0..cfg.population {
+        let genome: Genome = match i {
+            0 => vec![false; width],
+            1 => vec![true; width],
+            _ => {
+                let p = rng.range_f64(0.05, 0.8);
+                (0..width).map(|_| rng.bool(p)).collect()
+            }
+        };
+        let objectives = eval(&genome);
+        pop.push(Individual { genome, objectives, rank: 0, crowding: 0.0 });
+    }
+
+    for _gen in 0..cfg.generations {
+        let fronts = non_dominated_sort(&mut pop);
+        for f in &fronts {
+            crowding_distance(&mut pop, f);
+        }
+        // binary tournament by (rank, crowding)
+        let better = |a: &Individual, b: &Individual| -> bool {
+            a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding)
+        };
+        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.population);
+        while offspring.len() < cfg.population {
+            let pick = |rng: &mut Rng, pop: &[Individual]| -> Genome {
+                let a = rng.usize(pop.len());
+                let b = rng.usize(pop.len());
+                if better(&pop[a], &pop[b]) { pop[a].genome.clone() } else { pop[b].genome.clone() }
+            };
+            let mut c1 = pick(&mut rng, &pop);
+            let c2 = pick(&mut rng, &pop);
+            if rng.bool(cfg.crossover_p) {
+                for i in 0..width {
+                    if rng.bool(0.5) {
+                        c1[i] = c2[i];
+                    }
+                }
+            }
+            for bit in c1.iter_mut() {
+                if rng.bool(cfg.mutation_p) {
+                    *bit = !*bit;
+                }
+            }
+            let objectives = eval(&c1);
+            offspring.push(Individual { genome: c1, objectives, rank: 0, crowding: 0.0 });
+        }
+        // elitist survival: μ+λ, keep best `population` by (rank, crowding)
+        pop.extend(offspring);
+        let fronts = non_dominated_sort(&mut pop);
+        for f in &fronts {
+            crowding_distance(&mut pop, f);
+        }
+        pop.sort_by(|a, b| {
+            a.rank
+                .cmp(&b.rank)
+                .then(b.crowding.partial_cmp(&a.crowding).unwrap())
+        });
+        pop.truncate(cfg.population);
+    }
+
+    // return the deduplicated first front
+    let fronts = non_dominated_sort(&mut pop);
+    let mut out: Vec<Individual> = vec![];
+    if let Some(first) = fronts.first() {
+        let mut seen = std::collections::HashSet::new();
+        for &i in first {
+            if seen.insert(pop[i].genome.clone()) {
+                out.push(pop[i].clone());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]));
+    }
+
+    fn mk(objs: &[(f64, f64)]) -> Vec<Individual> {
+        objs.iter()
+            .map(|&(a, b)| Individual {
+                genome: vec![],
+                objectives: vec![a, b],
+                rank: 0,
+                crowding: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sorting_produces_correct_fronts() {
+        let mut pop = mk(&[(1.0, 4.0), (2.0, 3.0), (3.0, 2.0), (2.5, 3.5), (4.0, 4.0)]);
+        let fronts = non_dominated_sort(&mut pop);
+        let f0: std::collections::HashSet<_> = fronts[0].iter().copied().collect();
+        assert_eq!(f0, [0usize, 1, 2].into_iter().collect());
+        assert!(fronts[1].contains(&3));
+        assert_eq!(pop[4].rank, 2);
+    }
+
+    #[test]
+    fn crowding_boundary_is_infinite() {
+        let mut pop = mk(&[(1.0, 4.0), (2.0, 3.0), (3.0, 2.0)]);
+        let fronts = non_dominated_sort(&mut pop);
+        crowding_distance(&mut pop, &fronts[0]);
+        assert!(pop[0].crowding.is_infinite());
+        assert!(pop[2].crowding.is_infinite());
+        assert!(pop[1].crowding.is_finite() && pop[1].crowding > 0.0);
+    }
+
+    #[test]
+    fn optimizes_a_known_tradeoff() {
+        // objectives: (#ones, #zeros) — the Pareto front is every mix; the
+        // GA must return a non-dominated, diverse set
+        let width = 24;
+        let front = nsga2(
+            width,
+            &GaConfig { population: 24, generations: 20, ..Default::default() },
+            |g| {
+                let ones = g.iter().filter(|&&b| b).count() as f64;
+                vec![ones, width as f64 - ones]
+            },
+        );
+        assert!(!front.is_empty());
+        // all returned points must be mutually non-dominated
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(&a.objectives, &b.objectives) || a.objectives == b.objectives);
+            }
+        }
+        // diversity: at least 5 distinct trade-off points
+        let distinct: std::collections::HashSet<u64> =
+            front.iter().map(|i| i.objectives[0] as u64).collect();
+        assert!(distinct.len() >= 5, "only {} distinct points", distinct.len());
+    }
+
+    #[test]
+    fn converges_to_single_optimum_when_objectives_align() {
+        // both objectives minimized by the all-false genome
+        let front = nsga2(
+            16,
+            &GaConfig { population: 20, generations: 25, ..Default::default() },
+            |g| {
+                let ones = g.iter().filter(|&&b| b).count() as f64;
+                vec![ones, ones * 2.0]
+            },
+        );
+        assert!(front.iter().any(|i| i.objectives[0] == 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            nsga2(8, &GaConfig::default(), |g| {
+                vec![g.iter().filter(|&&b| b).count() as f64]
+            })
+            .into_iter()
+            .map(|i| i.genome)
+            .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,111 @@
+//! The HDA abstraction (paper §II-B): a set of dataflow cores joined by
+//! buses/point-to-point links, sharing an optional global buffer and an
+//! off-chip memory.
+
+use super::core::Core;
+
+/// Inter-core / core-to-memory communication fabric. We model a shared bus
+/// (the Edge TPU of Fig 4) or an all-to-all fabric with a global buffer
+/// (FuseMax, Fig 7) with aggregate bandwidths; per-pair point-to-point
+/// links can be added on top.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    /// Aggregate core↔core bandwidth (bytes/cycle).
+    pub link_bw: f64,
+    /// Energy per byte moved between cores.
+    pub link_energy_pj: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub name: String,
+    pub cores: Vec<Core>,
+    pub interconnect: Interconnect,
+    /// Shared on-chip global buffer (0 = none).
+    pub global_buffer_bytes: u64,
+    /// Global buffer bandwidth (bytes/cycle).
+    pub global_buffer_bw: f64,
+    /// Off-chip DRAM bandwidth (bytes/cycle).
+    pub offchip_bw: f64,
+    /// Clock, used only to convert cycle counts for human-readable reports.
+    pub clock_ghz: f64,
+}
+
+impl Accelerator {
+    /// Total compute resource U·L·nPEs of the paper's Fig 8 x-axis.
+    pub fn total_macs(&self) -> u64 {
+        self.cores.iter().map(|c| c.peak_macs()).sum()
+    }
+
+    /// Peak MACs of the largest single core.
+    pub fn max_core_macs(&self) -> u64 {
+        self.cores.iter().map(|c| c.peak_macs()).max().unwrap_or(0)
+    }
+
+    /// Cores by dataflow class.
+    pub fn mac_cores(&self) -> Vec<usize> {
+        self.cores
+            .iter()
+            .filter(|c| !matches!(c.dataflow, super::core::Dataflow::Simd { .. }))
+            .map(|c| c.id)
+            .collect()
+    }
+
+    pub fn simd_cores(&self) -> Vec<usize> {
+        self.cores
+            .iter()
+            .filter(|c| matches!(c.dataflow, super::core::Dataflow::Simd { .. }))
+            .map(|c| c.id)
+            .collect()
+    }
+
+    /// Sum of per-core local memories (bytes).
+    pub fn total_local_mem(&self) -> u64 {
+        self.cores.iter().map(|c| c.local_mem_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::core::Dataflow;
+
+    fn accel() -> Accelerator {
+        let mk = |id: usize, df: Dataflow| Core {
+            id,
+            name: format!("c{id}"),
+            dataflow: df,
+            local_mem_bytes: 1 << 20,
+            regfile_bytes: 16 << 10,
+            onchip_bw: 128.0,
+        };
+        Accelerator {
+            name: "test".into(),
+            cores: vec![
+                mk(0, Dataflow::WeightStationary { rows: 16, cols: 16 }),
+                mk(1, Dataflow::WeightStationary { rows: 16, cols: 16 }),
+                mk(2, Dataflow::Simd { lanes: 64 }),
+            ],
+            interconnect: Interconnect { link_bw: 64.0, link_energy_pj: 0.8 },
+            global_buffer_bytes: 0,
+            global_buffer_bw: 0.0,
+            offchip_bw: 32.0,
+            clock_ghz: 1.0,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let a = accel();
+        assert_eq!(a.total_macs(), 2 * 256 + 64);
+        assert_eq!(a.max_core_macs(), 256);
+        assert_eq!(a.total_local_mem(), 3 << 20);
+    }
+
+    #[test]
+    fn core_classes() {
+        let a = accel();
+        assert_eq!(a.mac_cores(), vec![0, 1]);
+        assert_eq!(a.simd_cores(), vec![2]);
+    }
+}

@@ -1,0 +1,215 @@
+//! A single dataflow accelerator core inside an HDA (paper §II-B): a
+//! spatial PE array with a prescribed dataflow plus a private memory
+//! hierarchy (register file + local SRAM).
+
+use crate::workload::op::{LoopDim, OpKind};
+
+/// The spatial dataflow a core implements — which loop dimensions its PE
+/// array binds spatially. This is the key determinant of how well an
+/// operator maps (paper §II-B, Fig 4/7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dataflow {
+    /// Weights resident in the array; binds (K, C·Fx·Fy). TPU-like, great
+    /// for convs/GEMMs with large channel counts (Edge TPU PEs, Fig 4).
+    WeightStationary { rows: usize, cols: usize },
+    /// Outputs resident; binds (M/spatial, N). FuseMax's MAC array (Fig 7).
+    OutputStationary { rows: usize, cols: usize },
+    /// Vector/SIMD core: binds the flattened element dimension. Handles
+    /// elementwise, norm, softmax, optimizer ops.
+    Simd { lanes: usize },
+}
+
+impl Dataflow {
+    /// Peak MACs per cycle.
+    pub fn peak_macs(&self) -> u64 {
+        match self {
+            Dataflow::WeightStationary { rows, cols }
+            | Dataflow::OutputStationary { rows, cols } => (rows * cols) as u64,
+            Dataflow::Simd { lanes } => *lanes as u64,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Core {
+    pub id: usize,
+    pub name: String,
+    pub dataflow: Dataflow,
+    /// Private SRAM (bytes).
+    pub local_mem_bytes: u64,
+    /// Register file (bytes) — bounds the innermost tile.
+    pub regfile_bytes: u64,
+    /// Local SRAM bandwidth (bytes/cycle).
+    pub onchip_bw: f64,
+}
+
+impl Core {
+    pub fn peak_macs(&self) -> u64 {
+        self.dataflow.peak_macs()
+    }
+
+    /// Spatial utilization of `op` on this core in (0, 1]: the fraction of
+    /// the PE array the operator's loop dims can keep busy, including the
+    /// ceiling losses when a dim doesn't divide the array axis.
+    ///
+    /// `tensor_parallel` models the paper's §IV-A strategy of splitting
+    /// output channels across a gang of identical cores: the bound dim is
+    /// divided before mapping.
+    pub fn spatial_utilization(&self, op: &OpKind, tensor_parallel: usize) -> f64 {
+        let dims = op.loop_dims();
+        let get = |d: LoopDim| -> usize {
+            dims.iter().find(|(k, _)| *k == d).map(|(_, s)| *s).unwrap_or(1)
+        };
+        let axis_eff = |dim: usize, axis: usize| -> f64 {
+            if dim == 0 || axis == 0 {
+                return 1.0;
+            }
+            let folds = dim.div_ceil(axis);
+            dim as f64 / (folds * axis) as f64
+        };
+        match self.dataflow {
+            Dataflow::WeightStationary { rows, cols } => {
+                if !(op.is_conv() || op.is_gemm()) {
+                    // non-MAC op on a MAC array: only one row of PEs streams
+                    return (1.0 / rows as f64).min(1.0);
+                }
+                // rows bind output channels K (split across the gang),
+                // cols bind the reduction C·Fx·Fy
+                let k = get(LoopDim::K).div_ceil(tensor_parallel.max(1));
+                let red = get(LoopDim::C) * get(LoopDim::Fx) * get(LoopDim::Fy);
+                axis_eff(k, rows) * axis_eff(red.max(1), cols)
+            }
+            Dataflow::OutputStationary { rows, cols } => {
+                if !(op.is_conv() || op.is_gemm()) {
+                    return (1.0 / rows as f64).min(1.0);
+                }
+                // rows bind spatial/M (Ox·Oy or M·B), cols bind K/N
+                let m = get(LoopDim::Ox) * get(LoopDim::Oy) * get(LoopDim::M)
+                    * get(LoopDim::B);
+                let k = get(LoopDim::K).div_ceil(tensor_parallel.max(1));
+                axis_eff(m.max(1), rows) * axis_eff(k.max(1), cols)
+            }
+            Dataflow::Simd { lanes } => {
+                let e: usize = dims.iter().map(|(_, s)| *s).product();
+                axis_eff(e.max(1), lanes)
+            }
+        }
+    }
+
+    /// Dataflow affinity: how natural this op class is for the core. Used
+    /// by the scheduler's core-selection policy (pipeline parallelism maps
+    /// layers "to the most suitable compute units", paper §IV-A).
+    pub fn affinity(&self, op: &OpKind) -> f64 {
+        let mac_op = op.is_conv() || op.is_gemm();
+        match self.dataflow {
+            Dataflow::WeightStationary { .. } | Dataflow::OutputStationary { .. } => {
+                if mac_op {
+                    1.0
+                } else {
+                    0.05
+                }
+            }
+            Dataflow::Simd { .. } => {
+                if mac_op {
+                    0.1
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::op::{ConvSpec, EltwiseKind, GemmSpec};
+
+    fn ws(rows: usize, cols: usize) -> Core {
+        Core {
+            id: 0,
+            name: "ws".into(),
+            dataflow: Dataflow::WeightStationary { rows, cols },
+            local_mem_bytes: 2 << 20,
+            regfile_bytes: 32 << 10,
+            onchip_bw: 256.0,
+        }
+    }
+
+    fn conv(out_ch: usize, in_ch: usize) -> OpKind {
+        OpKind::Conv(ConvSpec {
+            batch: 1,
+            in_ch,
+            out_ch,
+            in_h: 16,
+            in_w: 16,
+            k_h: 3,
+            k_w: 3,
+            stride: 1,
+            padding: 1,
+            groups: 1,
+        })
+    }
+
+    #[test]
+    fn perfect_fit_is_full_utilization() {
+        let c = ws(64, 144); // K=64, C*9=144 exactly
+        let u = c.spatial_utilization(&conv(64, 16), 1);
+        assert!((u - 1.0).abs() < 1e-12, "u={u}");
+    }
+
+    #[test]
+    fn ceiling_losses_reduce_utilization() {
+        let c = ws(48, 144); // K=64 over 48 rows: 64/(2*48) = 2/3
+        let u = c.spatial_utilization(&conv(64, 16), 1);
+        assert!((u - 64.0 / 96.0).abs() < 1e-12, "u={u}");
+    }
+
+    #[test]
+    fn tensor_parallel_splits_output_channels() {
+        let c = ws(64, 144);
+        let u1 = c.spatial_utilization(&conv(32, 16), 1); // K=32 on 64 rows
+        let u2 = c.spatial_utilization(&conv(32, 16), 2); // K=16 each
+        assert!(u2 <= u1 + 1e-12);
+        assert!((u1 - 0.5).abs() < 1e-12);
+        assert!((u2 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simd_core_prefers_eltwise() {
+        let simd = Core {
+            id: 1,
+            name: "v".into(),
+            dataflow: Dataflow::Simd { lanes: 128 },
+            local_mem_bytes: 1 << 20,
+            regfile_bytes: 8 << 10,
+            onchip_bw: 512.0,
+        };
+        let relu = OpKind::Eltwise { kind: EltwiseKind::Relu, elems: 1 << 16, arity: 1 };
+        assert!(simd.affinity(&relu) > simd.affinity(&conv(64, 16)));
+        let u = simd.spatial_utilization(&relu, 1);
+        assert!((u - 1.0).abs() < 1e-9); // 65536 % 128 == 0
+    }
+
+    #[test]
+    fn gemm_on_output_stationary() {
+        let os = Core {
+            id: 2,
+            name: "os".into(),
+            dataflow: Dataflow::OutputStationary { rows: 128, cols: 128 },
+            local_mem_bytes: 8 << 20,
+            regfile_bytes: 64 << 10,
+            onchip_bw: 1024.0,
+        };
+        let g = OpKind::Gemm(GemmSpec { batch: 1, m: 256, n: 128, k: 64, weight_b: true });
+        let u = os.spatial_utilization(&g, 1);
+        assert!((u - 1.0).abs() < 1e-12, "u={u}"); // 256·1 over 128 rows folds evenly
+    }
+
+    #[test]
+    fn peak_macs() {
+        assert_eq!(ws(64, 144).peak_macs(), 64 * 144);
+        let simd = Dataflow::Simd { lanes: 256 };
+        assert_eq!(simd.peak_macs(), 256);
+    }
+}

@@ -1,0 +1,41 @@
+//! Energy model constants (pJ), loosely calibrated to the 45nm CMOS access
+//! energy table popularised by Horowitz (ISSCC'14) and used by the
+//! Accelergy/ZigZag/Stream lineage the paper builds on. Absolute values are
+//! technology-dependent; the *ratios* (MAC ≪ SRAM ≪ DRAM) are what drive
+//! every qualitative conclusion the paper draws, and those are preserved.
+
+/// Energy of one 8-32 bit MAC operation.
+pub const E_MAC_PJ: f64 = 0.5;
+
+/// Register-file access energy per byte (small SRAM, <64 KiB).
+pub const E_RF_PJ_PER_BYTE: f64 = 0.12;
+
+/// Local (per-core) SRAM access energy per byte (0.5–4 MiB).
+pub const E_LOCAL_PJ_PER_BYTE: f64 = 1.0;
+
+/// Shared on-chip global buffer access energy per byte.
+pub const E_GLOBAL_PJ_PER_BYTE: f64 = 2.0;
+
+/// Off-chip DRAM access energy per byte.
+pub const E_DRAM_PJ_PER_BYTE: f64 = 40.0;
+
+/// Inter-core link transfer energy per byte (NoC/bus hop).
+pub const E_LINK_PJ_PER_BYTE: f64 = 0.8;
+
+/// Static/idle power expressed as pJ per cycle per active core. Kept small:
+/// the paper's metrics are dominated by dynamic energy.
+pub const E_IDLE_PJ_PER_CYCLE: f64 = 0.05;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_ordering_preserved() {
+        // the invariant every conclusion depends on
+        assert!(E_RF_PJ_PER_BYTE < E_LOCAL_PJ_PER_BYTE);
+        assert!(E_LOCAL_PJ_PER_BYTE < E_GLOBAL_PJ_PER_BYTE);
+        assert!(E_GLOBAL_PJ_PER_BYTE < E_DRAM_PJ_PER_BYTE);
+        assert!(E_MAC_PJ < E_DRAM_PJ_PER_BYTE);
+    }
+}

@@ -1,0 +1,12 @@
+//! Hardware model (DESIGN.md S5): heterogeneous dataflow accelerators —
+//! dataflow cores with private memory hierarchies, interconnect, a shared
+//! buffer and off-chip memory. Replaces Stream's hardware description.
+
+pub mod accelerator;
+pub mod core;
+pub mod energy;
+pub mod presets;
+
+pub use accelerator::{Accelerator, Interconnect};
+pub use core::{Core, Dataflow};
+pub use presets::{EdgeTpuParams, FuseMaxParams};

@@ -1,0 +1,299 @@
+//! Accelerator presets and search spaces — Tables II and III of the paper.
+//!
+//! * Edge TPU (Fig 4, Zhou et al. [19]): a grid of weight-stationary PEs
+//!   (each: U SIMD units × L compute lanes, a local memory and a register
+//!   file) on a shared bus to off-chip memory, plus one vector core — the
+//!   heterogeneity the paper exploits with pipeline parallelism (§IV-A).
+//! * FuseMax (Fig 7, Nayak et al. [30]): one large output-stationary MAC
+//!   array + one large vector array, both behind a shared global buffer
+//!   that talks to off-chip memory (§IV-B).
+
+use super::accelerator::{Accelerator, Interconnect};
+use super::core::{Core, Dataflow};
+use super::energy;
+
+// ---------------------------------------------------------------------------
+// Edge TPU (Table II)
+// ---------------------------------------------------------------------------
+
+/// One point in the Edge TPU search space (Table II). Bold baseline:
+/// 4×4 PEs, U=64, L=4, 2 MB local memory, 64 KB register file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeTpuParams {
+    pub x_pes: usize,
+    pub y_pes: usize,
+    /// SIMD units per compute lane
+    pub u: usize,
+    /// Compute lanes per PE
+    pub l: usize,
+    /// Local memory per PE, bytes
+    pub local_mem: u64,
+    /// Register file per lane, bytes
+    pub regfile: u64,
+}
+
+impl EdgeTpuParams {
+    pub fn baseline() -> Self {
+        EdgeTpuParams {
+            x_pes: 4,
+            y_pes: 4,
+            u: 64,
+            l: 4,
+            local_mem: 2 << 20,
+            regfile: 64 << 10,
+        }
+    }
+
+    pub fn n_pes(&self) -> usize {
+        self.x_pes * self.y_pes
+    }
+
+    /// Per-PE compute resource U·L (the Fig 8 colour axis).
+    pub fn per_pe_macs(&self) -> u64 {
+        (self.u * self.l) as u64
+    }
+
+    /// Total compute resource U·L·nPEs (the Fig 8 x-axis).
+    pub fn total_macs(&self) -> u64 {
+        self.per_pe_macs() * self.n_pes() as u64
+    }
+
+    /// The full Table II cartesian space (10 000 configurations).
+    pub fn space() -> Vec<EdgeTpuParams> {
+        let mut out = vec![];
+        for &x_pes in &[1usize, 2, 4, 6, 8] {
+            for &y_pes in &[1usize, 2, 4, 6, 8] {
+                for &u in &[16usize, 32, 64, 128] {
+                    for &l in &[1usize, 2, 4, 8] {
+                        for &mem_half_mb in &[1u64, 2, 4, 6, 8] {
+                            for &rf_kb in &[8u64, 16, 32, 64, 128] {
+                                out.push(EdgeTpuParams {
+                                    x_pes,
+                                    y_pes,
+                                    u,
+                                    l,
+                                    local_mem: mem_half_mb * (1 << 19),
+                                    regfile: rf_kb << 10,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Deterministically subsampled space (every `stride`-th point) for
+    /// sweep budgets; stride 1 = full space.
+    pub fn space_strided(stride: usize) -> Vec<EdgeTpuParams> {
+        Self::space().into_iter().step_by(stride.max(1)).collect()
+    }
+
+    /// Build the HDA: nPEs weight-stationary cores + one vector core.
+    pub fn build(&self) -> Accelerator {
+        let mut cores = Vec::with_capacity(self.n_pes() + 1);
+        for id in 0..self.n_pes() {
+            cores.push(Core {
+                id,
+                name: format!("pe{id}"),
+                // U SIMD units bind output channels, L lanes bind the
+                // reduction — the weight-stationary layout of [19].
+                dataflow: Dataflow::WeightStationary { rows: self.u, cols: self.l },
+                local_mem_bytes: self.local_mem,
+                regfile_bytes: self.regfile,
+                // local SRAM feeds the array; scale with array width
+                onchip_bw: (2 * self.u) as f64,
+            });
+        }
+        let vid = cores.len();
+        cores.push(Core {
+            id: vid,
+            name: "vector".into(),
+            dataflow: Dataflow::Simd { lanes: 256 },
+            local_mem_bytes: 1 << 20,
+            regfile_bytes: 16 << 10,
+            onchip_bw: 512.0,
+        });
+        Accelerator {
+            name: format!(
+                "edgetpu[{}x{} U{} L{} M{}K R{}K]",
+                self.x_pes,
+                self.y_pes,
+                self.u,
+                self.l,
+                self.local_mem >> 10,
+                self.regfile >> 10
+            ),
+            cores,
+            interconnect: Interconnect {
+                link_bw: 256.0,
+                link_energy_pj: energy::E_LINK_PJ_PER_BYTE,
+            },
+            global_buffer_bytes: 0,
+            global_buffer_bw: 0.0,
+            offchip_bw: 128.0,
+            clock_ghz: 0.8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FuseMax (Table III)
+// ---------------------------------------------------------------------------
+
+/// One point in the FuseMax search space (Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuseMaxParams {
+    pub x_pes: usize,
+    pub y_pes: usize,
+    pub vector_pes: usize,
+    /// Global buffer bandwidth, bytes/cycle
+    pub buffer_bw: u64,
+    /// Global buffer size, bytes
+    pub buffer_size: u64,
+    /// Off-chip bandwidth, bytes/cycle
+    pub offchip_bw: u64,
+}
+
+impl FuseMaxParams {
+    /// FuseMax's published configuration: 128×128 MAC array.
+    pub fn baseline() -> Self {
+        FuseMaxParams {
+            x_pes: 128,
+            y_pes: 128,
+            vector_pes: 128,
+            buffer_bw: 8192,
+            buffer_size: 16 << 20,
+            offchip_bw: 2048,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        (self.x_pes * self.y_pes + self.vector_pes) as u64
+    }
+
+    /// The full Table III cartesian space (2 560 configurations).
+    pub fn space() -> Vec<FuseMaxParams> {
+        let mut out = vec![];
+        for &x_pes in &[64usize, 128, 256, 512] {
+            for &y_pes in &[64usize, 128, 256, 512] {
+                for &vector_pes in &[32usize, 64, 128, 256] {
+                    for &buffer_bw in &[8192u64, 16384] {
+                        for &buffer_mb in &[4u64, 8, 16, 32] {
+                            for &offchip_bw in &[512u64, 1024, 2048, 4096, 8192] {
+                                out.push(FuseMaxParams {
+                                    x_pes,
+                                    y_pes,
+                                    vector_pes,
+                                    buffer_bw,
+                                    buffer_size: buffer_mb << 20,
+                                    offchip_bw,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn space_strided(stride: usize) -> Vec<FuseMaxParams> {
+        Self::space().into_iter().step_by(stride.max(1)).collect()
+    }
+
+    /// Build the HDA: one output-stationary MAC array + one vector array
+    /// behind a shared global buffer (Fig 7).
+    pub fn build(&self) -> Accelerator {
+        let cores = vec![
+            Core {
+                id: 0,
+                name: "mac_array".into(),
+                dataflow: Dataflow::OutputStationary { rows: self.x_pes, cols: self.y_pes },
+                // array-adjacent staging memory
+                local_mem_bytes: 2 << 20,
+                regfile_bytes: 128 << 10,
+                onchip_bw: self.buffer_bw as f64 / 2.0,
+            },
+            Core {
+                id: 1,
+                name: "vector_array".into(),
+                dataflow: Dataflow::Simd { lanes: self.vector_pes },
+                local_mem_bytes: 1 << 20,
+                regfile_bytes: 64 << 10,
+                onchip_bw: self.buffer_bw as f64 / 2.0,
+            },
+        ];
+        Accelerator {
+            name: format!(
+                "fusemax[{}x{} V{} BW{} B{}M D{}]",
+                self.x_pes,
+                self.y_pes,
+                self.vector_pes,
+                self.buffer_bw,
+                self.buffer_size >> 20,
+                self.offchip_bw
+            ),
+            cores,
+            interconnect: Interconnect {
+                link_bw: self.buffer_bw as f64,
+                link_energy_pj: energy::E_GLOBAL_PJ_PER_BYTE,
+            },
+            global_buffer_bytes: self.buffer_size,
+            global_buffer_bw: self.buffer_bw as f64,
+            offchip_bw: self.offchip_bw as f64,
+            clock_ghz: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_space_size() {
+        assert_eq!(EdgeTpuParams::space().len(), 5 * 5 * 4 * 4 * 5 * 5);
+    }
+
+    #[test]
+    fn table3_space_size() {
+        assert_eq!(FuseMaxParams::space().len(), 4 * 4 * 4 * 2 * 4 * 5);
+    }
+
+    #[test]
+    fn baseline_edge_tpu_matches_paper() {
+        let p = EdgeTpuParams::baseline();
+        assert_eq!(p.n_pes(), 16);
+        assert_eq!(p.per_pe_macs(), 256);
+        assert!(EdgeTpuParams::space().contains(&p));
+        let a = p.build();
+        assert_eq!(a.cores.len(), 17); // 16 PEs + vector
+        assert_eq!(a.mac_cores().len(), 16);
+        assert_eq!(a.simd_cores().len(), 1);
+    }
+
+    #[test]
+    fn baseline_fusemax_matches_paper() {
+        let p = FuseMaxParams::baseline();
+        assert!(FuseMaxParams::space().contains(&p));
+        let a = p.build();
+        assert_eq!(a.cores.len(), 2);
+        assert_eq!(a.total_macs(), 128 * 128 + 128);
+        assert_eq!(a.global_buffer_bytes, 16 << 20);
+    }
+
+    #[test]
+    fn strided_subsampling() {
+        let full = EdgeTpuParams::space().len();
+        let sub = EdgeTpuParams::space_strided(10).len();
+        assert_eq!(sub, full.div_ceil(10));
+    }
+
+    #[test]
+    fn total_macs_axis() {
+        let p = EdgeTpuParams::baseline();
+        assert_eq!(p.total_macs(), 64 * 4 * 16);
+    }
+}

@@ -1,0 +1,37 @@
+//! # MONET — Modeling and Optimization of neural NEtwork Training
+//!
+//! A from-scratch reproduction of the MONET framework (Morlier et al.,
+//! 2026): modeling and optimization of full neural-network *training*
+//! workloads (forward + backward + optimizer) on heterogeneous dataflow
+//! accelerators (HDAs), with layer-fused scheduling, a constraint-based
+//! fusion solver, and NSGA-II activation-checkpointing optimization.
+//!
+//! Architecture (see DESIGN.md):
+//! * [`workload`] — operator-graph IR + model zoo (ResNet-18/50, GPT-2, MLP)
+//! * [`autodiff`] — training-graph generation + checkpointing transform
+//! * [`hardware`] — HDA model: dataflow cores, memories, interconnect
+//! * [`mapping`] — spatial/temporal mapping + utilization
+//! * [`cost`] — analytical latency/energy/memory cost model
+//! * [`scheduler`] — layer-fused event-driven scheduler
+//! * [`fusion`] — constraint fusion solver (BFS candidates + exact cover)
+//! * [`ga`] — NSGA-II and the checkpointing problem encoding
+//! * [`dse`] — design-space-exploration orchestrator
+//! * [`runtime`] — PJRT client executing AOT-compiled JAX/Pallas artifacts
+//! * [`report`] — CSV / ASCII figure emitters
+//! * [`util`] — small self-contained infrastructure (RNG, JSON, stats)
+
+pub mod autodiff;
+pub mod cost;
+pub mod figures;
+pub mod fusion;
+pub mod dse;
+pub mod ga;
+pub mod hardware;
+pub mod mapping;
+pub mod parallelism;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod workload;
+
+pub mod util;

@@ -1,0 +1,105 @@
+//! Mapping configuration (DESIGN.md S6): how the scheduler exploits the
+//! parallelism dimensions of §II-C1. Spatial utilization itself lives in
+//! `hardware::core` (it is a property of op × dataflow); this module owns
+//! the deployment-level knobs and core-selection policy.
+
+use crate::hardware::accelerator::Accelerator;
+use crate::workload::op::OpKind;
+
+/// Deployment knobs for one scheduling run.
+#[derive(Debug, Clone, Copy)]
+pub struct MappingConfig {
+    /// Gang size for tensor parallelism: MAC-heavy groups are split across
+    /// this many identical MAC cores (output-channel split, paper §IV-A).
+    pub tensor_parallel: usize,
+    /// Intra-core tiling factor applied to fused subgraphs (number of
+    /// output tiles streamed through local memory; bounds the working set
+    /// and is the T_i of the fusion constraint in §V-A).
+    pub intra_core_tiling: usize,
+}
+
+impl Default for MappingConfig {
+    fn default() -> Self {
+        MappingConfig { tensor_parallel: 1, intra_core_tiling: 4 }
+    }
+}
+
+impl MappingConfig {
+    /// The Edge-TPU mapping the paper uses for §IV-A: pipeline parallelism
+    /// across heterogeneous cores + tensor parallelism distributing conv
+    /// output channels over the weight-stationary PEs (the scheduler picks
+    /// the best gang width up to this cap per subgraph).
+    pub fn edge_tpu_default() -> Self {
+        MappingConfig { tensor_parallel: 64, intra_core_tiling: 4 }
+    }
+
+    /// FuseMax (§IV-B): two big cores, pipeline parallelism only.
+    pub fn fusemax_default() -> Self {
+        MappingConfig { tensor_parallel: 1, intra_core_tiling: 8 }
+    }
+}
+
+/// Rank candidate cores for an op class: MAC ops prefer MAC cores, the
+/// rest prefer SIMD cores; ties are broken by the scheduler on earliest
+/// finish time. Returns core ids in preference order.
+pub fn candidate_cores(accel: &Accelerator, dominant: &OpKind) -> Vec<usize> {
+    let mut ids: Vec<usize> = (0..accel.cores.len()).collect();
+    ids.sort_by(|&a, &b| {
+        let fa = accel.cores[a].affinity(dominant);
+        let fb = accel.cores[b].affinity(dominant);
+        fb.partial_cmp(&fa).unwrap()
+    });
+    ids
+}
+
+/// The op that decides a fused group's core affinity: the one with the
+/// most MACs (a conv/GEMM if present, else the largest elementwise op).
+pub fn dominant_op<'a>(kinds: impl Iterator<Item = &'a OpKind>) -> Option<&'a OpKind> {
+    kinds.max_by_key(|k| (k.is_conv() || k.is_gemm(), k.macs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets::EdgeTpuParams;
+    use crate::workload::op::{ConvSpec, EltwiseKind};
+
+    fn conv_kind() -> OpKind {
+        OpKind::Conv(ConvSpec {
+            batch: 1,
+            in_ch: 16,
+            out_ch: 32,
+            in_h: 8,
+            in_w: 8,
+            k_h: 3,
+            k_w: 3,
+            stride: 1,
+            padding: 1,
+            groups: 1,
+        })
+    }
+
+    #[test]
+    fn conv_prefers_mac_cores() {
+        let a = EdgeTpuParams::baseline().build();
+        let pref = candidate_cores(&a, &conv_kind());
+        assert!(a.mac_cores().contains(&pref[0]));
+    }
+
+    #[test]
+    fn relu_prefers_simd_core() {
+        let a = EdgeTpuParams::baseline().build();
+        let relu = OpKind::Eltwise { kind: EltwiseKind::Relu, elems: 4096, arity: 1 };
+        let pref = candidate_cores(&a, &relu);
+        assert!(a.simd_cores().contains(&pref[0]));
+    }
+
+    #[test]
+    fn dominant_op_picks_mac_work() {
+        let conv = conv_kind();
+        let relu = OpKind::Eltwise { kind: EltwiseKind::Relu, elems: 1 << 30, arity: 1 };
+        let kinds = [relu.clone(), conv.clone()];
+        let d = dominant_op(kinds.iter()).unwrap();
+        assert!(d.is_conv());
+    }
+}

@@ -1,0 +1,297 @@
+//! Multi-device parallelism strategies (paper §II-C1, Fig 5): data,
+//! pipeline and tensor parallelism across a cluster of identical HDAs.
+//!
+//! Single-device latency/energy come from the layer-fused scheduler; this
+//! module layers the deployment-level costs on top — gradient all-reduce
+//! for data parallelism, stage transfers + fill/drain for pipelining,
+//! per-layer activation reductions for tensor parallelism — the standard
+//! first-order models (GPipe / Megatron style), expressed in cycles over
+//! the inter-device fabric.
+
+use crate::autodiff::TrainingGraph;
+use crate::fusion::{fuse_greedy, FusionConstraints};
+use crate::hardware::accelerator::Accelerator;
+use crate::mapping::MappingConfig;
+use crate::scheduler::{schedule, ScheduleResult};
+use crate::workload::graph::Graph;
+use crate::workload::op::Phase;
+
+/// The inter-device fabric (NVLink/PCIe/NoC-class, in cycle units of the
+/// device clock).
+#[derive(Debug, Clone, Copy)]
+pub struct Cluster {
+    pub devices: usize,
+    /// Inter-device bandwidth per link, bytes/cycle.
+    pub link_bw: f64,
+    /// Energy per byte moved between devices.
+    pub link_energy_pj: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Fig 5(a): batch split across devices, gradients all-reduced.
+    DataParallel,
+    /// Fig 5(b): model split into contiguous stages, microbatch pipeline.
+    Pipeline { microbatches: usize },
+    /// Fig 5(c): every layer split across devices, activations reduced.
+    TensorParallel,
+}
+
+/// Multi-device estimate for one training iteration.
+#[derive(Debug, Clone)]
+pub struct MultiDeviceResult {
+    pub strategy: Strategy,
+    pub devices: usize,
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    /// Peak per-device memory (params + states + live activations share).
+    pub per_device_mem_bytes: u64,
+    /// Total inter-device traffic per iteration.
+    pub comm_bytes: f64,
+}
+
+fn fused_schedule(g: &Graph, accel: &Accelerator, mapping: &MappingConfig) -> ScheduleResult {
+    let p = fuse_greedy(g, &FusionConstraints::default());
+    schedule(g, &p, accel, mapping)
+}
+
+/// Ring all-reduce cost of `bytes` over `n` devices: 2·(n−1)/n · bytes per
+/// link, overlappable chunks — we charge the non-overlapped wire time.
+fn allreduce_cycles(bytes: f64, cluster: &Cluster) -> f64 {
+    if cluster.devices <= 1 {
+        return 0.0;
+    }
+    let n = cluster.devices as f64;
+    2.0 * (n - 1.0) / n * bytes / cluster.link_bw.max(1.0)
+}
+
+/// Model one training iteration under a parallelism strategy.
+///
+/// `tg_builder(batch)` must return the training graph for a given
+/// per-device batch (data parallelism shrinks it). For Pipeline /
+/// TensorParallel the full-batch graph (`tg_builder(full_batch)`) is used.
+pub fn model_strategy(
+    strategy: Strategy,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    accel: &Accelerator,
+    mapping: &MappingConfig,
+    cluster: &Cluster,
+) -> MultiDeviceResult {
+    let n = cluster.devices.max(1);
+    match strategy {
+        Strategy::DataParallel => {
+            let per_dev_batch = full_batch.div_ceil(n);
+            let tg = tg_builder(per_dev_batch);
+            let r = fused_schedule(&tg.graph, accel, mapping);
+            let grad_bytes = tg.grad_bytes() as f64;
+            let ar = allreduce_cycles(grad_bytes, cluster);
+            let comm = if n > 1 { 2.0 * (n as f64 - 1.0) / n as f64 * grad_bytes * n as f64 } else { 0.0 };
+            MultiDeviceResult {
+                strategy,
+                devices: n,
+                latency_cycles: r.latency_cycles + ar,
+                energy_pj: r.energy_pj * n as f64 + comm * cluster.link_energy_pj,
+                per_device_mem_bytes: tg.param_bytes()
+                    + tg.grad_bytes()
+                    + tg.optimizer_state_bytes()
+                    + tg.saved_activation_bytes(),
+                comm_bytes: comm,
+            }
+        }
+        Strategy::Pipeline { microbatches } => {
+            let m = microbatches.max(1);
+            let tg = tg_builder(full_batch.div_ceil(m).max(1)); // one microbatch graph
+            // contiguous stage split balanced by MACs over topo order
+            let topo = tg.graph.topo_order();
+            let total_macs: u64 = tg.graph.total_macs(None);
+            let mut stages: Vec<Vec<usize>> = vec![vec![]; n];
+            let mut acc = 0u64;
+            for &node in &topo {
+                let s = ((acc as u128 * n as u128) / (total_macs.max(1) as u128)) as usize;
+                stages[s.min(n - 1)].push(node);
+                acc += tg.graph.node(node).kind.macs();
+            }
+            // per-stage time = schedule of the induced subgraph; boundary
+            // tensors transfer between devices
+            let mut stage_time = 0f64;
+            let mut stage_energy_sum = 0f64;
+            let mut boundary_bytes = 0f64;
+            let mut per_dev_mem = 0u64;
+            for stage in stages.iter().filter(|s| !s.is_empty()) {
+                // induced subgraph
+                let mut sub = Graph::with_elem_bytes(tg.graph.elem_bytes);
+                let mut map = std::collections::HashMap::new();
+                for &old in stage {
+                    let node = tg.graph.node(old);
+                    let id = sub.add_node(node.name.clone(), node.kind.clone(), node.phase);
+                    map.insert(old, id);
+                }
+                for e in &tg.graph.edges {
+                    match (map.get(&e.src), map.get(&e.dst)) {
+                        (Some(&a), Some(&b)) => {
+                            sub.add_edge_full(a, b, e.bytes, e.is_activation);
+                        }
+                        (Some(_), None) => boundary_bytes += e.bytes as f64,
+                        _ => {}
+                    }
+                }
+                let r = fused_schedule(&sub, accel, mapping);
+                stage_time = stage_time.max(r.latency_cycles);
+                stage_energy_sum += r.energy_pj;
+                // stage weights/states + in-flight microbatch activations
+                let stage_params: u64 = stage
+                    .iter()
+                    .filter(|&&x| tg.graph.node(x).phase == Phase::Forward)
+                    .map(|&x| tg.graph.node(x).kind.weight_elems() * tg.graph.elem_bytes)
+                    .sum();
+                let stage_acts: u64 = stage
+                    .iter()
+                    .filter(|&&x| {
+                        tg.graph.out_edges(x).any(|e| e.is_activation)
+                    })
+                    .map(|&x| tg.graph.out_bytes(x))
+                    .sum();
+                per_dev_mem = per_dev_mem
+                    .max(stage_params * (1 + tg.optimizer.states_per_param() as u64 + 1)
+                        + stage_acts * (n.min(m) as u64));
+            }
+            // GPipe fill/drain: (m + n − 1) stage slots per iteration
+            let latency = stage_time * (m + n - 1) as f64
+                + boundary_bytes / cluster.link_bw.max(1.0);
+            MultiDeviceResult {
+                strategy,
+                devices: n,
+                latency_cycles: latency,
+                energy_pj: stage_energy_sum * m as f64
+                    + boundary_bytes * m as f64 * cluster.link_energy_pj,
+                per_device_mem_bytes: per_dev_mem,
+                comm_bytes: boundary_bytes * m as f64,
+            }
+        }
+        Strategy::TensorParallel => {
+            let tg = tg_builder(full_batch);
+            let r = fused_schedule(&tg.graph, accel, mapping);
+            // ideal compute split + per-MAC-layer partial-sum reduction of
+            // the output activations (Megatron-style, one reduce per
+            // sharded matmul in fwd and bwd)
+            let mut reduce_bytes = 0f64;
+            for node in &tg.graph.nodes {
+                if node.kind.is_conv() || node.kind.is_gemm() {
+                    reduce_bytes += (node.kind.out_elems() * tg.graph.elem_bytes) as f64;
+                }
+            }
+            let comm = reduce_bytes * 2.0 * (n as f64 - 1.0) / n as f64 * n as f64;
+            let latency = r.latency_cycles / n as f64
+                + allreduce_cycles(reduce_bytes, cluster);
+            MultiDeviceResult {
+                strategy,
+                devices: n,
+                latency_cycles: latency,
+                energy_pj: r.energy_pj + comm * cluster.link_energy_pj,
+                per_device_mem_bytes: (tg.param_bytes()
+                    + tg.grad_bytes()
+                    + tg.optimizer_state_bytes())
+                    / n as u64
+                    + tg.saved_activation_bytes(),
+                comm_bytes: comm,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{build_training_graph, TrainOptions};
+    use crate::hardware::presets::EdgeTpuParams;
+    use crate::workload::models::resnet18;
+    use crate::workload::op::Optimizer;
+
+    fn builder() -> impl Fn(usize) -> TrainingGraph {
+        |batch| {
+            build_training_graph(
+                &resnet18(batch.max(1), 32, 10),
+                TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+            )
+        }
+    }
+
+    fn cluster(n: usize) -> Cluster {
+        Cluster { devices: n, link_bw: 64.0, link_energy_pj: 10.0 }
+    }
+
+    fn run(s: Strategy, n: usize) -> MultiDeviceResult {
+        let accel = EdgeTpuParams::baseline().build();
+        model_strategy(
+            s,
+            8,
+            &builder(),
+            &accel,
+            &MappingConfig::edge_tpu_default(),
+            &cluster(n),
+        )
+    }
+
+    #[test]
+    fn data_parallel_speeds_up_and_keeps_full_model_per_device() {
+        let one = run(Strategy::DataParallel, 1);
+        let four = run(Strategy::DataParallel, 4);
+        assert!(four.latency_cycles < one.latency_cycles);
+        // every device holds the full parameter set (the Fig 5a caveat)
+        let tg = builder()(8);
+        let full_states = tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
+        assert!(four.per_device_mem_bytes >= full_states);
+        assert!(four.comm_bytes > 0.0);
+        assert_eq!(one.comm_bytes, 0.0);
+    }
+
+    #[test]
+    fn pipeline_reduces_per_device_memory() {
+        let one = run(Strategy::Pipeline { microbatches: 4 }, 1);
+        let four = run(Strategy::Pipeline { microbatches: 4 }, 4);
+        assert!(four.per_device_mem_bytes < one.per_device_mem_bytes);
+        assert!(four.comm_bytes > 0.0, "stage boundaries must transfer");
+    }
+
+    #[test]
+    fn more_microbatches_amortise_fill_drain() {
+        let m2 = run(Strategy::Pipeline { microbatches: 2 }, 4);
+        let m8 = run(Strategy::Pipeline { microbatches: 8 }, 4);
+        // per-sample latency improves with more microbatches
+        assert!(m8.latency_cycles / 8.0 < m2.latency_cycles / 2.0);
+    }
+
+    #[test]
+    fn tensor_parallel_trades_comm_for_state_sharding() {
+        let one = run(Strategy::TensorParallel, 1);
+        let four = run(Strategy::TensorParallel, 4);
+        assert!(four.per_device_mem_bytes < one.per_device_mem_bytes);
+        assert!(four.comm_bytes > one.comm_bytes);
+    }
+
+    #[test]
+    fn strategies_disagree_on_the_optimum() {
+        // the §II-C1 point: no strategy dominates universally — at n=4 on a
+        // bandwidth-limited fabric the rankings by latency and by memory
+        // must differ
+        let dp = run(Strategy::DataParallel, 4);
+        let pp = run(Strategy::Pipeline { microbatches: 4 }, 4);
+        let tp = run(Strategy::TensorParallel, 4);
+        let by_lat = {
+            let mut v = [("dp", dp.latency_cycles), ("pp", pp.latency_cycles), ("tp", tp.latency_cycles)];
+            v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            v[0].0
+        };
+        let by_mem = {
+            let mut v = [
+                ("dp", dp.per_device_mem_bytes),
+                ("pp", pp.per_device_mem_bytes),
+                ("tp", tp.per_device_mem_bytes),
+            ];
+            v.sort_by_key(|x| x.1);
+            v[0].0
+        };
+        assert_ne!(by_lat, by_mem, "one strategy dominates both axes — model too simple");
+    }
+}

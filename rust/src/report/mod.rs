@@ -1,0 +1,205 @@
+//! Report emitters (DESIGN.md S15): CSV files under `results/` plus ASCII
+//! scatter/bar renderings so every figure regenerates without matplotlib.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write rows as CSV. `header` is a comma-joined line.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &str,
+    rows: impl IntoIterator<Item = Vec<String>>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// ASCII scatter plot: log-log by default (the paper's figures span
+/// decades). Returns the rendered string.
+pub fn ascii_scatter(
+    title: &str,
+    xs: &[f64],
+    ys: &[f64],
+    marks: &[char],
+    width: usize,
+    height: usize,
+    log: bool,
+) -> String {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), marks.len());
+    let mut out = String::new();
+    writeln!(out, "== {title} ==").unwrap();
+    if xs.is_empty() {
+        writeln!(out, "(no data)").unwrap();
+        return out;
+    }
+    let t = |v: f64| if log { v.max(1e-12).log10() } else { v };
+    let (xmin, xmax) = xs.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &v| {
+        (lo.min(t(v)), hi.max(t(v)))
+    });
+    let (ymin, ymax) = ys.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &v| {
+        (lo.min(t(v)), hi.max(t(v)))
+    });
+    let xr = (xmax - xmin).max(1e-9);
+    let yr = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for ((&x, &y), &m) in xs.iter().zip(ys).zip(marks) {
+        let cx = (((t(x) - xmin) / xr) * (width - 1) as f64).round() as usize;
+        let cy = (((t(y) - ymin) / yr) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - cy;
+        // denser marks win ties visually; simple overwrite is fine
+        grid[row][cx] = m;
+    }
+    for row in grid {
+        writeln!(out, "|{}|", row.iter().collect::<String>()).unwrap();
+    }
+    let fmt = |v: f64| {
+        if log {
+            format!("1e{v:.1}")
+        } else {
+            format!("{v:.3e}")
+        }
+    };
+    writeln!(out, " x: [{} .. {}]  y: [{} .. {}]{}",
+        fmt(xmin), fmt(xmax), fmt(ymin), fmt(ymax),
+        if log { "  (log-log)" } else { "" }).unwrap();
+    out
+}
+
+/// ASCII horizontal bar chart. Values may be negative (drawn left of the
+/// zero column) — Fig 11 plots deltas relative to a baseline.
+pub fn ascii_bars(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let mut out = String::new();
+    writeln!(out, "== {title} ==").unwrap();
+    let maxabs = values.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-12);
+    let lab_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v.abs() / maxabs) * width as f64).round() as usize;
+        let bar: String = std::iter::repeat('#').take(n).collect();
+        if v >= 0.0 {
+            writeln!(out, "{l:>lab_w$} | {bar} {v:.4e}").unwrap();
+        } else {
+            writeln!(out, "{l:>lab_w$} |-{bar} {v:.4e}").unwrap();
+        }
+    }
+    out
+}
+
+/// ASCII Gantt chart of a schedule timeline: one row per core, time
+/// bucketed into `width` columns, cells marked by the training phase of
+/// the occupying group (F/B/U/R) — the paper's "generated execution
+/// schedule" deliverable, rendered.
+pub fn ascii_gantt(
+    title: &str,
+    rows: &[(usize, f64, f64, char)], // (core, start, finish, mark)
+    n_cores: usize,
+    makespan: f64,
+    width: usize,
+) -> String {
+    let mut out = String::new();
+    writeln!(out, "== {title} ==").unwrap();
+    if makespan <= 0.0 || n_cores == 0 {
+        writeln!(out, "(empty schedule)").unwrap();
+        return out;
+    }
+    let mut grid = vec![vec![' '; width]; n_cores];
+    for &(core, start, finish, mark) in rows {
+        if core >= n_cores {
+            continue;
+        }
+        let a = ((start / makespan) * width as f64) as usize;
+        let b = (((finish / makespan) * width as f64).ceil() as usize).min(width);
+        for cell in grid[core][a.min(width - 1)..b.max(a + 1).min(width)].iter_mut() {
+            *cell = mark;
+        }
+    }
+    for (c, row) in grid.iter().enumerate() {
+        writeln!(out, "core {c:>3} |{}|", row.iter().collect::<String>()).unwrap();
+    }
+    writeln!(out, "          0 {:>w$.3e} cycles", makespan, w = width - 2).unwrap();
+    out
+}
+
+/// Human-readable byte formatting for reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip(){
+        let dir = std::env::temp_dir().join("monet_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(&path, "a,b", vec![vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn scatter_renders_all_extremes() {
+        let s = ascii_scatter(
+            "t",
+            &[1.0, 10.0, 100.0],
+            &[100.0, 10.0, 1.0],
+            &['a', 'b', 'c'],
+            20,
+            5,
+            true,
+        );
+        assert!(s.contains('a') && s.contains('b') && s.contains('c'));
+        assert!(s.contains("log-log"));
+    }
+
+    #[test]
+    fn bars_handle_negative() {
+        let s = ascii_bars(
+            "t",
+            &["up".into(), "down".into()],
+            &[0.5, -0.25],
+            10,
+        );
+        assert!(s.contains("|-"));
+    }
+
+    #[test]
+    fn gantt_renders_rows_and_marks() {
+        let rows = vec![(0usize, 0.0, 50.0, 'F'), (1usize, 50.0, 100.0, 'B')];
+        let s = ascii_gantt("t", &rows, 2, 100.0, 20);
+        assert!(s.contains("core   0"));
+        assert!(s.contains('F') && s.contains('B'));
+        // F occupies the first half of core 0's row only
+        let line0 = s.lines().find(|l| l.contains("core   0")).unwrap();
+        assert!(line0.find('F').unwrap() < 12);
+    }
+
+    #[test]
+    fn gantt_empty_schedule() {
+        let s = ascii_gantt("t", &[], 0, 0.0, 10);
+        assert!(s.contains("empty"));
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512.00 B");
+        assert_eq!(fmt_bytes(13 << 20), "13.00 MiB");
+    }
+}

@@ -1,0 +1,109 @@
+//! PJRT client wrapper (DESIGN.md S12): loads AOT HLO-text artifacts
+//! produced by `python/compile/aot.py`, compiles them once, and executes
+//! them from the rust hot path. Python never runs at runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client. Create once per process (client startup is
+/// ~100 ms and owns threadpools).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+/// One compiled HLO module, ready to execute.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load `<artifacts>/<name>.hlo.txt` and compile it.
+    ///
+    /// HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see DESIGN.md / aot.py).
+    pub fn load(&self, name: &str) -> Result<Module> {
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Module { exe, name: name.to_string() })
+    }
+
+    /// Read the artifact metadata (meta.json).
+    pub fn meta(&self) -> Result<crate::util::Json> {
+        let path = self.artifacts_dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        crate::util::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+impl Module {
+    /// Execute with literal inputs. All our AOT graphs are lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// flatten into a `Vec<Literal>`.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run(inputs)
+    }
+
+    /// Zero-copy variant: borrow the inputs (hot-path friendly — parameters
+    /// stay owned by the caller across steps).
+    pub fn execute_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run(inputs)
+    }
+
+    fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("untupling result")
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshaping literal")
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshaping literal")
+}

@@ -1,0 +1,237 @@
+//! The AOT Pallas roofline kernel as seen from rust: the DSE pre-filter's
+//! hot path (DESIGN.md S13). Rust builds (config × layer) descriptor
+//! matrices, pads them to the artifact's fixed shapes, executes the
+//! compiled HLO, and unpacks the per-config scores.
+//!
+//! A bit-exact pure-rust twin (`cost_eval_native`) exists for two reasons:
+//! it lets everything above run without artifacts (tests, cold starts),
+//! and it cross-validates the full python→HLO→PJRT chain in the
+//! integration tests (runtime_roundtrip.rs).
+
+use anyhow::Result;
+
+use super::client::{literal_f32, Module, Runtime};
+
+/// Descriptor layouts — must match python/compile/kernels/ref.py.
+pub const CFG_W: usize = 8;
+pub const LAY_W: usize = 8;
+pub const OUT_W: usize = 4;
+/// Fixed AOT shapes — must match python/compile/model.py.
+pub const N_CFG: usize = 256;
+pub const N_LAYER: usize = 1024;
+
+/// One hardware-config descriptor row.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CfgRow {
+    pub macs: f32,
+    pub onchip_bw: f32,
+    pub offchip_bw: f32,
+    pub local_mem: f32,
+    pub e_mac: f32,
+    pub e_onchip: f32,
+    pub e_offchip: f32,
+}
+
+/// One workload-layer descriptor row.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayRow {
+    pub flops: f32,
+    pub onchip_bytes: f32,
+    pub offchip_bytes: f32,
+    pub parallelism: f32,
+    pub working_set: f32,
+    pub weight_bytes: f32,
+}
+
+/// Per-config roofline scores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostOut {
+    pub cycles: f32,
+    pub energy_pj: f32,
+    pub utilization: f32,
+    pub spill_bytes: f32,
+}
+
+/// The compiled kernel.
+pub struct CostKernel {
+    module: Module,
+}
+
+impl CostKernel {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(CostKernel { module: rt.load("cost_eval")? })
+    }
+
+    /// Load the pure-jnp reference artifact instead (ablation/self-check).
+    pub fn load_ref(rt: &Runtime) -> Result<Self> {
+        Ok(CostKernel { module: rt.load("cost_eval_ref")? })
+    }
+
+    /// Score every config against the layer set. Arbitrary lengths: configs
+    /// are chunked into batches of N_CFG, layers must fit N_LAYER (the
+    /// training graphs here are ≤ ~1.2k nodes; callers aggregate beyond).
+    pub fn eval(&self, configs: &[CfgRow], layers: &[LayRow]) -> Result<Vec<CostOut>> {
+        assert!(
+            layers.len() <= N_LAYER,
+            "layer count {} exceeds artifact capacity {N_LAYER}",
+            layers.len()
+        );
+        let mut lay_flat = vec![0f32; N_LAYER * LAY_W];
+        for (i, l) in layers.iter().enumerate() {
+            let o = i * LAY_W;
+            lay_flat[o] = l.flops;
+            lay_flat[o + 1] = l.onchip_bytes;
+            lay_flat[o + 2] = l.offchip_bytes;
+            lay_flat[o + 3] = l.parallelism;
+            lay_flat[o + 4] = l.working_set;
+            lay_flat[o + 5] = l.weight_bytes;
+        }
+        let lay_lit = literal_f32(&lay_flat, &[N_LAYER as i64, LAY_W as i64])?;
+
+        let mut out = Vec::with_capacity(configs.len());
+        for chunk in configs.chunks(N_CFG) {
+            let mut cfg_flat = vec![0f32; N_CFG * CFG_W];
+            for (i, c) in chunk.iter().enumerate() {
+                let o = i * CFG_W;
+                cfg_flat[o] = c.macs;
+                cfg_flat[o + 1] = c.onchip_bw;
+                cfg_flat[o + 2] = c.offchip_bw;
+                cfg_flat[o + 3] = c.local_mem;
+                cfg_flat[o + 4] = c.e_mac;
+                cfg_flat[o + 5] = c.e_onchip;
+                cfg_flat[o + 6] = c.e_offchip;
+            }
+            let cfg_lit = literal_f32(&cfg_flat, &[N_CFG as i64, CFG_W as i64])?;
+            let res = self.module.execute_refs(&[&cfg_lit, &lay_lit])?;
+            let flat: Vec<f32> = res[0].to_vec()?;
+            for i in 0..chunk.len() {
+                let o = i * OUT_W;
+                out.push(CostOut {
+                    cycles: flat[o],
+                    energy_pj: flat[o + 1],
+                    utilization: flat[o + 2],
+                    spill_bytes: flat[o + 3],
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Bit-exact rust twin of the Pallas kernel / jnp oracle (f32 arithmetic,
+/// same operation order). Keep in lockstep with ref.py.
+pub fn cost_eval_native(configs: &[CfgRow], layers: &[LayRow]) -> Vec<CostOut> {
+    const EPS: f32 = 1e-6;
+    configs
+        .iter()
+        .map(|c| {
+            let mut total_cyc = 0f32;
+            let mut total_energy = 0f32;
+            let mut total_spill = 0f32;
+            let mut total_flops = 0f32;
+            let macs = c.macs.max(EPS);
+            for l in layers {
+                let eff = macs.min(l.parallelism.max(1.0));
+                let compute = l.flops / (2.0 * eff);
+                let spill = 2.0 * (l.working_set - c.local_mem).max(0.0);
+                let offchip = l.offchip_bytes + spill;
+                let mem = (l.onchip_bytes / c.onchip_bw.max(EPS))
+                    .max(offchip / c.offchip_bw.max(EPS));
+                let cycles = compute.max(mem);
+                let energy = 0.5 * l.flops * c.e_mac
+                    + l.onchip_bytes * c.e_onchip
+                    + offchip * c.e_offchip;
+                total_cyc += cycles;
+                total_energy += energy;
+                total_spill += spill;
+                total_flops += l.flops;
+            }
+            let util = ((0.5 * total_flops) / (c.macs.max(EPS) * total_cyc.max(EPS)))
+                .clamp(0.0, 1.0);
+            CostOut {
+                cycles: total_cyc,
+                energy_pj: total_energy,
+                utilization: util,
+                spill_bytes: total_spill,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_inputs() -> (Vec<CfgRow>, Vec<LayRow>) {
+        let configs = vec![
+            CfgRow {
+                macs: 256.0,
+                onchip_bw: 128.0,
+                offchip_bw: 64.0,
+                local_mem: 2e6,
+                e_mac: 0.5,
+                e_onchip: 1.0,
+                e_offchip: 40.0,
+            },
+            CfgRow {
+                macs: 4096.0,
+                onchip_bw: 1024.0,
+                offchip_bw: 512.0,
+                local_mem: 1e7,
+                e_mac: 0.5,
+                e_onchip: 1.0,
+                e_offchip: 40.0,
+            },
+        ];
+        let layers = vec![
+            LayRow {
+                flops: 2e8,
+                onchip_bytes: 1e6,
+                offchip_bytes: 3e5,
+                parallelism: 1e6,
+                working_set: 3e6,
+                weight_bytes: 1e5,
+            },
+            LayRow {
+                flops: 1e6,
+                onchip_bytes: 4e5,
+                offchip_bytes: 4e5,
+                parallelism: 1e6,
+                working_set: 1e5,
+                weight_bytes: 0.0,
+            },
+        ];
+        (configs, layers)
+    }
+
+    #[test]
+    fn native_matches_hand_computation() {
+        let (configs, layers) = sample_inputs();
+        let out = cost_eval_native(&configs, &layers);
+        // config 0, layer 0: compute = 2e8/(2*256) = 390625;
+        // spill = 2*(3e6-2e6)=2e6; offchip=2.3e6; mem=max(1e6/128, 2.3e6/64)
+        // = 35937.5 → compute-bound 390625
+        let l0 = 2e8f32 / 512.0;
+        // layer 1: compute = 1e6/512 = 1953.125; mem = max(3125, 6250) = 6250
+        let l1 = 6250.0f32;
+        assert!((out[0].cycles - (l0 + l1)).abs() / (l0 + l1) < 1e-6);
+        assert!(out[0].spill_bytes > 0.0 && out[1].spill_bytes == 0.0);
+        assert!(out[1].cycles < out[0].cycles);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let (configs, layers) = sample_inputs();
+        for o in cost_eval_native(&configs, &layers) {
+            assert!((0.0..=1.0).contains(&o.utilization));
+        }
+    }
+
+    #[test]
+    fn empty_layers_zero_cost() {
+        let (configs, _) = sample_inputs();
+        let out = cost_eval_native(&configs, &[]);
+        assert_eq!(out[0].cycles, 0.0);
+        assert_eq!(out[0].energy_pj, 0.0);
+    }
+}

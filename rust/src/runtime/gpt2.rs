@@ -1,0 +1,236 @@
+//! The tiny-GPT-2 training runner (DESIGN.md S14 / E2E): drives the AOT
+//! train-step artifact from rust. Parameters and Adam state live as PJRT
+//! literals owned by this struct; each `step` feeds them through the
+//! compiled HLO and swaps in the returned updated state. No python anywhere.
+
+use anyhow::{Context, Result};
+
+use super::client::{literal_f32, literal_i32, Module, Runtime};
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct Gpt2Meta {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub batch: usize,
+    pub num_params: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl Gpt2Meta {
+    pub fn from_json(meta: &Json, key: &str) -> Result<Self> {
+        let g = meta.get(key).with_context(|| format!("meta.json missing {key}"))?;
+        let usz = |k: &str| -> Result<usize> {
+            g.get(k).and_then(Json::as_usize).with_context(|| format!("meta {key}.{k}"))
+        };
+        let param_names = g
+            .get("param_names")
+            .and_then(Json::as_arr)
+            .context("param_names")?
+            .iter()
+            .map(|j| j.as_str().unwrap_or("").to_string())
+            .collect();
+        let param_shapes = g
+            .get("param_shapes")
+            .and_then(Json::as_arr)
+            .context("param_shapes")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect::<Vec<usize>>()
+            })
+            .collect();
+        Ok(Gpt2Meta {
+            vocab: usz("vocab")?,
+            seq: usz("seq")?,
+            d_model: usz("d_model")?,
+            n_layer: usz("n_layer")?,
+            batch: usz("batch")?,
+            num_params: usz("num_params")?,
+            param_names,
+            param_shapes,
+        })
+    }
+}
+
+pub struct Gpt2Runner {
+    train: Module,
+    eval: Module,
+    pub meta: Gpt2Meta,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    pub step_count: u64,
+}
+
+impl Gpt2Runner {
+    /// Load artifacts for config `cfg_name` (e.g. "tiny") and initialise
+    /// parameters from the `gpt2_<cfg>_init.bin` blob.
+    pub fn load(rt: &Runtime, cfg_name: &str) -> Result<Self> {
+        let meta_json = rt.meta()?;
+        let meta = Gpt2Meta::from_json(&meta_json, &format!("gpt2_{cfg_name}"))?;
+        let train = rt.load(&format!("gpt2_{cfg_name}_train"))?;
+        let eval = rt.load(&format!("gpt2_{cfg_name}_eval"))?;
+
+        let init_path = rt
+            .artifacts_dir()
+            .join(format!("gpt2_{cfg_name}_init.bin"));
+        let raw = std::fs::read(&init_path)
+            .with_context(|| format!("reading {}", init_path.display()))?;
+        anyhow::ensure!(
+            raw.len() == meta.num_params * 4,
+            "init blob size {} != {} params × 4",
+            raw.len(),
+            meta.num_params
+        );
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut params = Vec::with_capacity(meta.param_shapes.len());
+        let mut m = Vec::with_capacity(meta.param_shapes.len());
+        let mut v = Vec::with_capacity(meta.param_shapes.len());
+        let mut off = 0usize;
+        for shape in &meta.param_shapes {
+            let n: usize = shape.iter().product();
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            params.push(literal_f32(&floats[off..off + n], &dims)?);
+            m.push(literal_f32(&vec![0f32; n], &dims)?);
+            v.push(literal_f32(&vec![0f32; n], &dims)?);
+            off += n;
+        }
+        Ok(Gpt2Runner { train, eval, meta, params, m, v, step_count: 0 })
+    }
+
+    /// One training step on a [batch, seq+1] token window. Returns the loss.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<f32> {
+        let b = self.meta.batch;
+        let s = self.meta.seq + 1;
+        anyhow::ensure!(tokens.len() == b * s, "expected {}x{} tokens", b, s);
+        self.step_count += 1;
+
+        let n = self.params.len();
+        let tok_lit = literal_i32(tokens, &[b as i64, s as i64])?;
+        let step_lit = xla::Literal::from(self.step_count as f32);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 2);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&tok_lit);
+        inputs.push(&step_lit);
+
+        let mut out = self.train.execute_refs(&inputs)?;
+        anyhow::ensure!(out.len() == 1 + 3 * n, "train step arity {}", out.len());
+        let loss = out[0].get_first_element::<f32>()?;
+        // swap in updated state (drain from the back to avoid shifting)
+        let new_v: Vec<xla::Literal> = out.drain(1 + 2 * n..).collect();
+        let new_m: Vec<xla::Literal> = out.drain(1 + n..).collect();
+        let new_p: Vec<xla::Literal> = out.drain(1..).collect();
+        self.params = new_p;
+        self.m = new_m;
+        self.v = new_v;
+        Ok(loss)
+    }
+
+    /// Loss on a token window without updating parameters.
+    pub fn eval_loss(&self, tokens: &[i32]) -> Result<f32> {
+        let b = self.meta.batch;
+        let s = self.meta.seq + 1;
+        anyhow::ensure!(tokens.len() == b * s, "expected {}x{} tokens", b, s);
+        let tok_lit = literal_i32(tokens, &[b as i64, s as i64])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(&tok_lit);
+        let out = self.eval.execute_refs(&inputs)?;
+        Ok(out[0].get_first_element::<f32>()?)
+    }
+}
+
+/// Synthetic byte corpus: a deterministic, learnable token stream (repeating
+/// structured patterns + mild noise) for the e2e training demo.
+pub struct Corpus {
+    data: Vec<i32>,
+    cursor: usize,
+}
+
+impl Corpus {
+    pub fn synthetic(vocab: usize, len: usize, seed: u64) -> Self {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(len);
+        // repeating arithmetic motifs of varying period — compressible
+        // structure a 2-layer transformer learns quickly
+        let mut t = 0usize;
+        while data.len() < len {
+            let period = 3 + rng.usize(6);
+            let base = rng.usize(vocab.saturating_sub(period).max(1));
+            for _ in 0..(period * (4 + rng.usize(4))) {
+                data.push(((base + t % period) % vocab) as i32);
+                t += 1;
+                if data.len() >= len {
+                    break;
+                }
+            }
+        }
+        Corpus { data, cursor: 0 }
+    }
+
+    /// Next [batch, seq+1] window, wrapping around.
+    pub fn next_batch(&mut self, batch: usize, seq_plus1: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq_plus1);
+        for _ in 0..batch {
+            for i in 0..seq_plus1 {
+                out.push(self.data[(self.cursor + i) % self.data.len()]);
+            }
+            self.cursor = (self.cursor + seq_plus1) % self.data.len();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic_and_in_vocab() {
+        let mut a = Corpus::synthetic(256, 1000, 7);
+        let mut b = Corpus::synthetic(256, 1000, 7);
+        let ba = a.next_batch(2, 65);
+        let bb = b.next_batch(2, 65);
+        assert_eq!(ba, bb);
+        assert_eq!(ba.len(), 130);
+        assert!(ba.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_wraps() {
+        let mut c = Corpus::synthetic(16, 50, 1);
+        for _ in 0..10 {
+            let b = c.next_batch(4, 33);
+            assert_eq!(b.len(), 132);
+        }
+    }
+
+    #[test]
+    fn meta_parses_from_json() {
+        let j = Json::parse(
+            r#"{"gpt2_tiny": {"vocab": 256, "seq": 64, "d_model": 128,
+                "n_head": 4, "n_layer": 2, "mlp_ratio": 4, "batch": 8,
+                "lr": 0.003, "num_params": 437760,
+                "param_names": ["tok_emb"], "param_shapes": [[256, 128]]}}"#,
+        )
+        .unwrap();
+        let m = Gpt2Meta::from_json(&j, "gpt2_tiny").unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.param_shapes[0], vec![256, 128]);
+    }
+}

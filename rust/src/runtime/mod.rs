@@ -1,0 +1,12 @@
+//! PJRT runtime (DESIGN.md S12-S14): the xla-crate wrapper that loads and
+//! executes the AOT artifacts from `make artifacts` — the roofline cost
+//! kernel (DSE pre-filter hot path) and the tiny-GPT-2 training step
+//! (end-to-end stack validation).
+
+pub mod client;
+pub mod cost_kernel;
+pub mod gpt2;
+
+pub use client::{literal_f32, literal_i32, Module, Runtime};
+pub use cost_kernel::{cost_eval_native, CfgRow, CostKernel, CostOut, LayRow};
+pub use gpt2::{Corpus, Gpt2Meta, Gpt2Runner};

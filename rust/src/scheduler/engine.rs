@@ -1,0 +1,558 @@
+//! The layer-fused event-driven scheduler (DESIGN.md S8): executes a
+//! partitioned workload graph on an HDA, producing latency, energy, peak
+//! memory and per-core utilization. This is the MONET equivalent of
+//! Stream's scheduling engine, extended with training-aware memory
+//! lifetimes (saved activations live from forward producer to backward
+//! consumer unless the checkpointing pass rewired them).
+
+use std::collections::HashMap;
+
+use super::partition::Partition;
+use crate::cost::{node_cost, MemEnv, NodeCost, TensorPlacement};
+use crate::hardware::accelerator::Accelerator;
+use crate::hardware::energy;
+use crate::mapping::{candidate_cores, dominant_op, MappingConfig};
+use crate::workload::graph::{Graph, NodeId};
+
+/// One scheduled group, for timelines and debugging.
+#[derive(Debug, Clone)]
+pub struct GroupRecord {
+    pub group: usize,
+    pub core: usize,
+    /// Gang width if tensor-parallel (1 = single core).
+    pub gang: usize,
+    pub start: f64,
+    pub finish: f64,
+    pub energy_pj: f64,
+}
+
+/// Aggregate result of scheduling one graph on one accelerator.
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    /// Makespan in cycles (includes the DRAM-bandwidth serialization bound).
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    /// Peak of dynamically-live DRAM tensor bytes during the run.
+    pub peak_dram_bytes: u64,
+    /// Total off-chip traffic (bytes).
+    pub offchip_bytes: f64,
+    /// Per-core busy cycles.
+    pub core_busy: Vec<f64>,
+    /// Busy cycles by training phase [Forward, Backward, Update, Recompute]
+    /// — a training-aware breakdown inference tools cannot produce.
+    pub phase_busy: [f64; 4],
+    pub n_groups: usize,
+    pub timeline: Vec<GroupRecord>,
+}
+
+/// Index into `ScheduleResult::phase_busy`.
+pub fn phase_index(p: crate::workload::op::Phase) -> usize {
+    match p {
+        crate::workload::op::Phase::Forward => 0,
+        crate::workload::op::Phase::Backward => 1,
+        crate::workload::op::Phase::Update => 2,
+        crate::workload::op::Phase::Recompute => 3,
+    }
+}
+
+impl ScheduleResult {
+    pub fn utilization(&self) -> f64 {
+        if self.latency_cycles <= 0.0 || self.core_busy.is_empty() {
+            return 0.0;
+        }
+        self.core_busy.iter().sum::<f64>()
+            / (self.latency_cycles * self.core_busy.len() as f64)
+    }
+}
+
+/// Identical-core classes (for gang scheduling): cores with equal dataflow
+/// and memory are interchangeable.
+fn core_classes(accel: &Accelerator) -> Vec<Vec<usize>> {
+    let mut classes: Vec<Vec<usize>> = vec![];
+    'outer: for c in &accel.cores {
+        for class in classes.iter_mut() {
+            let rep = &accel.cores[class[0]];
+            if rep.dataflow == c.dataflow
+                && rep.local_mem_bytes == c.local_mem_bytes
+                && rep.onchip_bw == c.onchip_bw
+            {
+                class.push(c.id);
+                continue 'outer;
+            }
+        }
+        classes.push(vec![c.id]);
+    }
+    classes
+}
+
+/// Tensor placements for every node of a group — independent of the core
+/// choice, so the scheduler computes them once per group and reuses them
+/// across every (core class × gang width) candidate (§Perf hoisting).
+fn group_placements(
+    graph: &Graph,
+    group: &[NodeId],
+    gof: &[usize],
+    gid: usize,
+    has_global: bool,
+) -> Vec<TensorPlacement> {
+    group
+        .iter()
+        .map(|&n| {
+            let mut place = TensorPlacement::default();
+            for e in graph.in_edges(n) {
+                if gof[e.src] == gid {
+                    place.in_local += e.bytes;
+                } else if e.is_activation {
+                    // saved activations are long-lived (fwd→bwd): they park
+                    // in DRAM, they cannot squat in a small local SRAM for
+                    // the whole iteration — the training-memory story of
+                    // Fig 3
+                    place.in_offchip += e.bytes;
+                } else if has_global {
+                    place.in_global += e.bytes;
+                } else {
+                    // short-lived producer→consumer tensor: ships over the
+                    // bus into this core's local memory
+                    place.in_link += e.bytes;
+                }
+            }
+            let mut any_out = false;
+            let mut all_internal = true;
+            let mut feeds_backward = false;
+            for e in graph.out_edges(n) {
+                any_out = true;
+                if gof[e.dst] != gid {
+                    all_internal = false;
+                    if e.is_activation {
+                        feeds_backward = true;
+                    }
+                }
+            }
+            let all_internal = any_out && all_internal;
+            place.out_local = all_internal;
+            place.out_global = !all_internal && !feeds_backward && has_global;
+            place.out_link = !all_internal && !feeds_backward && !has_global;
+            // (otherwise the output goes to DRAM: final outputs and tensors
+            // saved for the backward pass)
+            place
+        })
+        .collect()
+}
+
+/// Cost of running a whole fused group sequentially on `core`, honouring
+/// intra-group tensor placements (internal edges stay local — the fusion
+/// payoff) and tensor parallelism.
+fn group_cost(
+    graph: &Graph,
+    group: &[NodeId],
+    places: &[TensorPlacement],
+    core_id: usize,
+    accel: &Accelerator,
+    env: &MemEnv,
+    tp: usize,
+) -> NodeCost {
+    let core = &accel.cores[core_id];
+    let is_mac_core =
+        !matches!(core.dataflow, crate::hardware::core::Dataflow::Simd { .. });
+    let mut total = NodeCost::default();
+    for (&n, place) in group.iter().zip(places) {
+        let kind = &graph.node(n).kind;
+        let mut c = node_cost(kind, core, place, env, tp, graph.elem_bytes);
+        // Fused elementwise riders: inside a multi-node subgraph on a MAC
+        // core, elementwise/norm ops process tiles as they stream out of
+        // the array (the fused-layer pipeline of §II-C2) — they cost local
+        // bandwidth, not a serialised pass over the underutilised array.
+        // Energy is unchanged (the operations still happen).
+        if group.len() > 1 && is_mac_core && !(kind.is_conv() || kind.is_gemm()) {
+            c.cycles = c.onchip_bytes / (tp.max(1) as f64) / core.onchip_bw.max(1.0);
+        }
+        total.accumulate(&c);
+        total.utilization = total.utilization.max(c.utilization);
+    }
+    total
+}
+
+/// Schedule `graph` partitioned by `partition` onto `accel`.
+///
+/// List scheduling over the group DAG: each group is placed on the core (or
+/// tensor-parallel gang of identical MAC cores) minimizing its finish time,
+/// among the two best-affinity core classes. Inter-group tensors pay a
+/// transfer latency over the interconnect (or global buffer) and DRAM
+/// energy when cores differ. The final makespan is additionally lower-
+/// bounded by total-offchip-bytes / DRAM bandwidth (shared-bus contention).
+pub fn schedule(
+    graph: &Graph,
+    partition: &Partition,
+    accel: &Accelerator,
+    cfg: &MappingConfig,
+) -> ScheduleResult {
+    debug_assert!(partition.validate(graph).is_ok());
+    let ng = partition.groups.len();
+    let gof = partition.group_of(graph.len());
+    let env = MemEnv {
+        offchip_bw: accel.offchip_bw,
+        global_bw: accel.global_buffer_bw,
+        global_energy_pj: energy::E_GLOBAL_PJ_PER_BYTE,
+        link_bw: accel.interconnect.link_bw,
+        link_energy_pj: accel.interconnect.link_energy_pj + energy::E_LOCAL_PJ_PER_BYTE,
+    };
+
+    // ---- group DAG ----
+    let mut indeg = vec![0usize; ng];
+    let mut gsucc: Vec<Vec<(usize, u64)>> = vec![vec![]; ng]; // (dst group, bytes)
+    {
+        let mut pair_bytes: HashMap<(usize, usize), u64> = HashMap::new();
+        for e in &graph.edges {
+            let (a, b) = (gof[e.src], gof[e.dst]);
+            if a != b {
+                *pair_bytes.entry((a, b)).or_insert(0) += e.bytes;
+            }
+        }
+        for (&(a, b), &bytes) in &pair_bytes {
+            gsucc[a].push((b, bytes));
+            indeg[b] += 1;
+        }
+    }
+
+    // topological order over groups (deterministic: smallest id first)
+    let mut order: Vec<usize> = vec![];
+    {
+        let mut q: std::collections::BinaryHeap<std::cmp::Reverse<usize>> = (0..ng)
+            .filter(|&i| indeg[i] == 0)
+            .map(std::cmp::Reverse)
+            .collect();
+        let mut indeg = indeg.clone();
+        while let Some(std::cmp::Reverse(x)) = q.pop() {
+            order.push(x);
+            for &(s, _) in &gsucc[x] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    q.push(std::cmp::Reverse(s));
+                }
+            }
+        }
+        assert_eq!(order.len(), ng, "partition group DAG has a cycle");
+    }
+
+    let classes = core_classes(accel);
+    let mut core_free = vec![0.0f64; accel.cores.len()];
+    let mut core_busy = vec![0.0f64; accel.cores.len()];
+    let mut group_finish = vec![0.0f64; ng];
+    let mut group_core = vec![0usize; ng];
+    let mut ready = vec![0.0f64; ng]; // data-ready time incl. transfers
+    let mut energy = 0.0f64;
+    let mut offchip_total = 0.0f64;
+    let mut timeline = Vec::with_capacity(ng);
+    let mut phase_busy = [0f64; 4];
+
+    let transfer_bw = if accel.global_buffer_bw > 0.0 {
+        accel.global_buffer_bw
+    } else {
+        accel.interconnect.link_bw
+    };
+
+    for &gid in &order {
+        let group = &partition.groups[gid];
+        let dom = dominant_op(group.iter().map(|&n| &graph.node(n).kind))
+            .expect("group is non-empty")
+            .clone();
+        let is_mac_group = dom.is_conv() || dom.is_gemm();
+        let prefs = candidate_cores(accel, &dom);
+        let places =
+            group_placements(graph, group, &gof, gid, accel.global_buffer_bytes > 0);
+
+        // candidate placements: for each core class (take the first core of
+        // the class in preference order), single-core and (for MAC groups)
+        // gang placement.
+        let mut best: Option<(f64, f64, usize, usize, NodeCost)> = None; // (finish, start, core, gang, cost)
+        let mut tried_classes = 0;
+        for &cid in &prefs {
+            let class = classes.iter().find(|cl| cl.contains(&cid)).unwrap();
+            if class[0] != cid {
+                continue; // evaluate each class once, via its representative
+            }
+            tried_classes += 1;
+            if tried_classes > 2 {
+                break; // two best-affinity classes suffice
+            }
+            // tensor-parallel gang width: the useful split is bounded by
+            // how many array-widths the bound output-channel dim folds
+            // into — splitting further only idles rows. Evaluate 1, the
+            // analytic preference, and its neighbours (§Perf: replaces the
+            // full power-of-two scan, ~3× fewer group_cost calls).
+            let mut gang_options: Vec<usize> = vec![1];
+            if is_mac_group {
+                let cap = cfg.tensor_parallel.min(class.len());
+                let rows = match accel.cores[cid].dataflow {
+                    crate::hardware::core::Dataflow::WeightStationary { rows, .. } => rows,
+                    crate::hardware::core::Dataflow::OutputStationary { cols, .. } => cols,
+                    crate::hardware::core::Dataflow::Simd { lanes } => lanes,
+                };
+                let k_dim = dom
+                    .loop_dims()
+                    .iter()
+                    .find(|(d, _)| *d == crate::workload::op::LoopDim::K)
+                    .map(|(_, s)| *s)
+                    .unwrap_or(1);
+                let pref = (k_dim / rows.max(1)).next_power_of_two().clamp(1, cap.max(1));
+                for g in [pref / 2, pref, pref * 2, cap] {
+                    if g > 1 && g <= cap && !gang_options.contains(&g) {
+                        gang_options.push(g);
+                    }
+                }
+            }
+            for &gang in &gang_options {
+                let cost = group_cost(graph, group, &places, cid, accel, &env, gang);
+                // pick the `gang` earliest-free cores of this class
+                let mut frees: Vec<(f64, usize)> =
+                    class.iter().map(|&c| (core_free[c], c)).collect();
+                frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let gang_free = frees[gang - 1].0; // all gang members must be free
+                let start = gang_free.max(ready[gid]);
+                let finish = start + cost.cycles;
+                if best.as_ref().map_or(true, |b| finish < b.0) {
+                    best = Some((finish, start, frees[..gang].iter().map(|f| f.1).min().unwrap(), gang, cost));
+                    // store the representative core id; gang members resolved below
+                    let _ = cid;
+                }
+            }
+        }
+        let (finish, start, core0, gang, cost) = best.expect("no core candidates");
+
+        // occupy the gang
+        let class = classes.iter().find(|cl| cl.contains(&core0)).unwrap().clone();
+        let mut frees: Vec<(f64, usize)> =
+            class.iter().map(|&c| (core_free[c], c)).collect();
+        frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, c) in frees.iter().take(gang) {
+            core_free[c] = finish;
+            core_busy[c] += finish - start;
+        }
+
+        group_finish[gid] = finish;
+        group_core[gid] = core0;
+        energy += cost.energy_pj;
+        offchip_total += cost.offchip_bytes;
+
+        // propagate readiness + transfer latency/energy to successors
+        for &(s, bytes) in &gsucc[gid] {
+            let tx_cycles = bytes as f64 / transfer_bw.max(1.0);
+            ready[s] = ready[s].max(finish + tx_cycles);
+            energy += bytes as f64 * accel.interconnect.link_energy_pj;
+        }
+
+        // attribute the group's busy time to the dominant phase of its
+        // members (groups rarely mix phases: fusion follows data flow)
+        {
+            let mut counts = [0usize; 4];
+            for &n in group {
+                counts[phase_index(graph.node(n).phase)] += 1;
+            }
+            let dom_phase =
+                (0..4).max_by_key(|&i| counts[i]).unwrap_or(0);
+            phase_busy[dom_phase] += finish - start;
+        }
+        timeline.push(GroupRecord {
+            group: gid,
+            core: core0,
+            gang,
+            start,
+            finish,
+            energy_pj: cost.energy_pj,
+        });
+    }
+
+    let makespan_cores = group_finish.iter().cloned().fold(0.0, f64::max);
+    // shared DRAM bus bound
+    let makespan = makespan_cores.max(offchip_total / accel.offchip_bw.max(1.0));
+    energy += energy::E_IDLE_PJ_PER_CYCLE * makespan * accel.cores.len() as f64;
+
+    // ---- memory lifetimes (dynamic DRAM-live tensors) ----
+    // A tensor that crosses groups lives in DRAM (or the global buffer,
+    // but that is capacity-limited too) from producer finish to the last
+    // consumer's finish. Saved activations (fwd→bwd edges) are exactly the
+    // long-lived ones — this is where training peaks (Fig 3).
+    let peak_dram_bytes = {
+        let mut events: Vec<(f64, i64)> = vec![]; // (time, +bytes/-bytes)
+        let mut edge_last_use: HashMap<(usize, usize), f64> = HashMap::new();
+        for e in &graph.edges {
+            let (a, b) = (gof[e.src], gof[e.dst]);
+            if a == b {
+                continue;
+            }
+            let t = edge_last_use.entry((a, b)).or_insert(0.0);
+            *t = t.max(group_finish[b]);
+        }
+        for e in &graph.edges {
+            let (a, b) = (gof[e.src], gof[e.dst]);
+            if a == b {
+                continue;
+            }
+            events.push((group_finish[a], e.bytes as i64));
+            events.push((group_finish[b], -(e.bytes as i64)));
+        }
+        events.sort_by(|x, y| {
+            x.0.partial_cmp(&y.0).unwrap().then(x.1.cmp(&y.1)) // frees first at ties
+        });
+        let mut live = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in events {
+            live += d;
+            peak = peak.max(live);
+        }
+        peak.max(0) as u64
+    };
+
+    ScheduleResult {
+        latency_cycles: makespan,
+        energy_pj: energy,
+        peak_dram_bytes,
+        offchip_bytes: offchip_total,
+        core_busy,
+        phase_busy,
+        n_groups: ng,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets::{EdgeTpuParams, FuseMaxParams};
+    use crate::scheduler::partition::Partition;
+    use crate::workload::models::{gpt2, mlp, resnet18, Gpt2Config};
+
+    fn edge() -> Accelerator {
+        EdgeTpuParams::baseline().build()
+    }
+
+    #[test]
+    fn mlp_schedules_and_is_consistent() {
+        let g = mlp(1, 64, 128, 3, 10);
+        let p = Partition::singletons(&g);
+        let r = schedule(&g, &p, &edge(), &MappingConfig::default());
+        assert!(r.latency_cycles > 0.0);
+        assert!(r.energy_pj > 0.0);
+        assert!(r.utilization() > 0.0 && r.utilization() <= 1.0);
+        assert_eq!(r.n_groups, g.len());
+        assert_eq!(r.timeline.len(), g.len());
+    }
+
+    #[test]
+    fn timeline_respects_dependencies() {
+        let g = mlp(1, 64, 128, 2, 10);
+        let p = Partition::singletons(&g);
+        let r = schedule(&g, &p, &edge(), &MappingConfig::default());
+        let finish: HashMap<usize, f64> =
+            r.timeline.iter().map(|t| (t.group, t.finish)).collect();
+        let start: HashMap<usize, f64> =
+            r.timeline.iter().map(|t| (t.group, t.start)).collect();
+        for e in &g.edges {
+            // singleton partition: group id == node id
+            assert!(
+                finish[&e.src] <= start[&e.dst] + 1e-9,
+                "edge {}->{} violated",
+                e.src,
+                e.dst
+            );
+        }
+    }
+
+    #[test]
+    fn fusion_beats_singletons_on_energy() {
+        // fusing a conv-heavy chain must cut DRAM traffic hence energy
+        let g = resnet18(1, 32, 10);
+        let sing = Partition::singletons(&g);
+        let r1 = schedule(&g, &sing, &edge(), &MappingConfig::edge_tpu_default());
+        // greedy pairwise fusion: each node with its sole consumer when valid
+        let mut groups: Vec<Vec<usize>> = vec![];
+        let mut used = vec![false; g.len()];
+        for n in g.topo_order() {
+            if used[n] {
+                continue;
+            }
+            let succs: Vec<_> = g.successors(n).collect();
+            if succs.len() == 1 && !used[succs[0]] && g.in_degree(succs[0]) == 1 {
+                groups.push(vec![n, succs[0]]);
+                used[n] = true;
+                used[succs[0]] = true;
+            } else {
+                groups.push(vec![n]);
+                used[n] = true;
+            }
+        }
+        let fused = Partition::from_groups(groups);
+        fused.validate(&g).unwrap();
+        let r2 = schedule(&g, &fused, &edge(), &MappingConfig::edge_tpu_default());
+        assert!(r2.energy_pj < r1.energy_pj, "{} !< {}", r2.energy_pj, r1.energy_pj);
+        // cross-group traffic rides the bus (not DRAM), so fusion shows up
+        // as strictly lower energy; DRAM bytes must at least not grow
+        assert!(r2.offchip_bytes <= r1.offchip_bytes);
+    }
+
+    #[test]
+    fn bigger_accelerator_is_faster() {
+        let g = resnet18(1, 32, 10);
+        let p = Partition::singletons(&g);
+        let small = EdgeTpuParams { u: 16, l: 1, ..EdgeTpuParams::baseline() }.build();
+        let big = EdgeTpuParams { u: 128, l: 8, ..EdgeTpuParams::baseline() }.build();
+        let cfg = MappingConfig::edge_tpu_default();
+        let rs = schedule(&g, &p, &small, &cfg);
+        let rb = schedule(&g, &p, &big, &cfg);
+        assert!(rb.latency_cycles < rs.latency_cycles);
+    }
+
+    #[test]
+    fn fusemax_runs_gpt2() {
+        let g = gpt2(Gpt2Config::tiny());
+        let p = Partition::singletons(&g);
+        let a = FuseMaxParams::baseline().build();
+        let r = schedule(&g, &p, &a, &MappingConfig::fusemax_default());
+        assert!(r.latency_cycles > 0.0);
+        assert!(r.peak_dram_bytes > 0);
+    }
+
+    #[test]
+    fn tensor_parallel_helps_latency() {
+        let g = resnet18(1, 32, 10);
+        let p = Partition::singletons(&g);
+        let a = edge();
+        let r1 = schedule(&g, &p, &a, &MappingConfig { tensor_parallel: 1, intra_core_tiling: 4 });
+        let r4 = schedule(&g, &p, &a, &MappingConfig { tensor_parallel: 4, intra_core_tiling: 4 });
+        assert!(r4.latency_cycles <= r1.latency_cycles * 1.01);
+    }
+
+    #[test]
+    fn phase_breakdown_sums_to_busy_and_orders_sanely() {
+        use crate::autodiff::{build_training_graph, TrainOptions};
+        let fwd = resnet18(1, 32, 10);
+        let tg = build_training_graph(&fwd, TrainOptions::default());
+        let p = Partition::singletons(&tg.graph);
+        let r = schedule(&tg.graph, &p, &edge(), &MappingConfig::edge_tpu_default());
+        let total: f64 = r.phase_busy.iter().sum();
+        // phase time counts each group once; core_busy counts gang-wide
+        // occupancy, so compare against the timeline durations
+        let busy: f64 = r.timeline.iter().map(|t| t.finish - t.start).sum();
+        assert!((total - busy).abs() / busy < 1e-6);
+        // backward does ~2x the forward work
+        assert!(r.phase_busy[1] > r.phase_busy[0]);
+        // no recompute phase without checkpointing
+        assert_eq!(r.phase_busy[3], 0.0);
+        // inference graph has no backward/update time
+        let ri = schedule(&fwd, &Partition::singletons(&fwd), &edge(), &MappingConfig::default());
+        assert_eq!(ri.phase_busy[1], 0.0);
+        assert_eq!(ri.phase_busy[2], 0.0);
+    }
+
+    #[test]
+    fn peak_memory_positive_for_training_graph() {
+        use crate::autodiff::{build_training_graph, TrainOptions};
+        let fwd = resnet18(1, 32, 10);
+        let tg = build_training_graph(&fwd, TrainOptions::default());
+        let p = Partition::singletons(&tg.graph);
+        let r = schedule(&tg.graph, &p, &edge(), &MappingConfig::edge_tpu_default());
+        // training graph must hold activations live across fwd→bwd
+        let rf = schedule(&fwd, &Partition::singletons(&fwd), &edge(), &MappingConfig::edge_tpu_default());
+        assert!(r.peak_dram_bytes > rf.peak_dram_bytes);
+    }
+}

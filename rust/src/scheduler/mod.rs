@@ -1,0 +1,8 @@
+//! Layer-fused scheduling (DESIGN.md S8): graph partitions + the
+//! event-driven list scheduler over HDA cores and links.
+
+pub mod engine;
+pub mod partition;
+
+pub use engine::{phase_index, schedule, GroupRecord, ScheduleResult};
+pub use partition::Partition;

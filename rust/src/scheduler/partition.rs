@@ -1,0 +1,143 @@
+//! Graph partitions: the fused-subgraph structure the scheduler executes.
+//! A partition is an exact cover of the node set; each group is one fused
+//! subgraph that runs as a unit on one core (or one tensor-parallel gang).
+
+use std::collections::HashMap;
+
+use crate::workload::graph::{Graph, NodeId};
+
+#[derive(Debug, Clone, Default)]
+pub struct Partition {
+    pub groups: Vec<Vec<NodeId>>,
+}
+
+impl Partition {
+    /// Layer-by-layer baseline: every node its own group.
+    pub fn singletons(g: &Graph) -> Self {
+        Partition { groups: (0..g.len()).map(|n| vec![n]).collect() }
+    }
+
+    pub fn from_groups(groups: Vec<Vec<NodeId>>) -> Self {
+        Partition { groups }
+    }
+
+    /// node → group index lookup.
+    pub fn group_of(&self, n_nodes: usize) -> Vec<usize> {
+        let mut map = vec![usize::MAX; n_nodes];
+        for (gi, grp) in self.groups.iter().enumerate() {
+            for &n in grp {
+                map[n] = gi;
+            }
+        }
+        map
+    }
+
+    /// Exact-cover validation: every node in exactly one group, groups
+    /// non-empty, and the induced group DAG acyclic (groups must be convex
+    /// enough to schedule as units).
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        let mut seen = vec![false; g.len()];
+        for (gi, grp) in self.groups.iter().enumerate() {
+            if grp.is_empty() {
+                return Err(format!("group {gi} is empty"));
+            }
+            for &n in grp {
+                if n >= g.len() {
+                    return Err(format!("group {gi} references unknown node {n}"));
+                }
+                if seen[n] {
+                    return Err(format!("node {n} covered twice"));
+                }
+                seen[n] = true;
+            }
+        }
+        if let Some(n) = seen.iter().position(|&s| !s) {
+            return Err(format!("node {n} not covered"));
+        }
+        // group-DAG acyclicity via Kahn
+        let gof = self.group_of(g.len());
+        let ng = self.groups.len();
+        let mut indeg = vec![0usize; ng];
+        let mut adj: HashMap<(usize, usize), ()> = HashMap::new();
+        for e in &g.edges {
+            let (a, b) = (gof[e.src], gof[e.dst]);
+            if a != b && adj.insert((a, b), ()).is_none() {
+                indeg[b] += 1;
+            }
+        }
+        let mut queue: Vec<usize> = (0..ng).filter(|&i| indeg[i] == 0).collect();
+        let mut seen_g = 0;
+        let mut succ: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &(a, b) in adj.keys() {
+            succ.entry(a).or_default().push(b);
+        }
+        while let Some(x) = queue.pop() {
+            seen_g += 1;
+            if let Some(ss) = succ.get(&x) {
+                for &s in ss {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 {
+                        queue.push(s);
+                    }
+                }
+            }
+        }
+        if seen_g != ng {
+            return Err("group DAG has a cycle (non-convex partition)".into());
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::mlp;
+
+    #[test]
+    fn singletons_validate() {
+        let g = mlp(1, 8, 8, 2, 4);
+        let p = Partition::singletons(&g);
+        assert_eq!(p.len(), g.len());
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn missing_node_rejected() {
+        let g = mlp(1, 8, 8, 2, 4);
+        let mut p = Partition::singletons(&g);
+        p.groups.pop();
+        assert!(p.validate(&g).is_err());
+    }
+
+    #[test]
+    fn double_cover_rejected() {
+        let g = mlp(1, 8, 8, 2, 4);
+        let mut p = Partition::singletons(&g);
+        p.groups.push(vec![0]);
+        assert!(p.validate(&g).is_err());
+    }
+
+    #[test]
+    fn non_convex_partition_rejected() {
+        // chain a->b->c with {a,c} fused but b outside creates a 2-cycle in
+        // the group DAG
+        let g = mlp(1, 8, 8, 1, 4); // input,fc,relu,fc,loss = 5 nodes chain
+        let p = Partition::from_groups(vec![vec![0, 2], vec![1], vec![3], vec![4]]);
+        assert!(p.validate(&g).is_err());
+    }
+
+    #[test]
+    fn contiguous_fusion_validates() {
+        let g = mlp(1, 8, 8, 1, 4);
+        let p = Partition::from_groups(vec![vec![0], vec![1, 2], vec![3, 4]]);
+        p.validate(&g).unwrap();
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained infrastructure: PRNG, JSON, statistics, property-test
+//! helper. These replace non-vendored crates (rand, serde_json, proptest)
+//! in this offline build environment — see DESIGN.md §Substitutions.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,138 @@
+//! Micro property-testing harness (proptest is not vendored offline).
+//!
+//! `check(seed_count, gen, prop)` draws `seed_count` random cases from
+//! `gen`, asserts `prop` on each, and on failure performs greedy input
+//! shrinking via the generator's `shrink` hook before panicking with the
+//! minimal counterexample. Deterministic: case i uses seed i.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator of random test cases with an optional shrinker.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller inputs (tried in order during shrinking).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        vec![]
+    }
+}
+
+/// Run a property over `cases` random inputs.
+pub fn check<G: Gen>(cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    for seed in 0..cases as u64 {
+        let mut rng = Rng::seed_from_u64(0xC0FFEE ^ seed);
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // shrink greedily
+            let mut cur = v;
+            'outer: loop {
+                for cand in gen.shrink(&cur) {
+                    if !prop(&cand) {
+                        cur = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!("property failed (seed {seed}), minimal counterexample: {cur:?}");
+        }
+    }
+}
+
+/// Generator: usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.usize(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = vec![];
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: vector of f64 in [lo, hi) with length in [min_len, max_len].
+pub struct VecF64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+impl Gen for VecF64 {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.min_len + rng.usize(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.range_f64(self.lo, self.hi)).collect()
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = vec![];
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            let mut shorter = v.clone();
+            shorter.pop();
+            out.push(shorter);
+        }
+        out
+    }
+}
+
+/// Generator: random bitmask of fixed width with given set-bit probability.
+pub struct BitMask {
+    pub width: usize,
+    pub p: f64,
+}
+impl Gen for BitMask {
+    type Value = Vec<bool>;
+    fn generate(&self, rng: &mut Rng) -> Vec<bool> {
+        (0..self.width).map(|_| rng.bool(self.p)).collect()
+    }
+    fn shrink(&self, v: &Vec<bool>) -> Vec<Vec<bool>> {
+        // clearing bits shrinks towards the all-false mask
+        let mut out = vec![];
+        for i in 0..v.len() {
+            if v[i] {
+                let mut c = v.clone();
+                c[i] = false;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, &UsizeIn(1, 100), |&n| n >= 1 && n <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        // fails for n >= 10; shrinker should find something small
+        check(50, &UsizeIn(1, 100), |&n| n < 10);
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check(30, &VecF64 { min_len: 1, max_len: 8, lo: -1.0, hi: 1.0 }, |v| {
+            (1..=8).contains(&v.len()) && v.iter().all(|x| (-1.0..1.0).contains(x))
+        });
+    }
+
+    #[test]
+    fn bitmask_width() {
+        check(30, &BitMask { width: 16, p: 0.3 }, |m| m.len() == 16);
+    }
+}

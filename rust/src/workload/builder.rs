@@ -1,0 +1,330 @@
+//! Ergonomic graph construction: tensor handles + layer helpers.
+//!
+//! The model zoo (`workload::models`) uses this builder the way the paper's
+//! toolchain uses PyTorch: describe the network once, get the operator graph
+//! out. All byte/FLOP accounting flows from `OpKind`, so models stay terse.
+
+use super::graph::{Graph, NodeId};
+use super::op::{
+    ConvSpec, EltwiseKind, GemmSpec, NormKind, OpKind, Phase, PoolSpec, ReduceKind,
+};
+
+/// A tensor handle: the node that produced it plus its logical geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct T {
+    pub node: NodeId,
+    /// Channels (feature maps) or model dim
+    pub ch: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Batch (or batch·heads for attention internals)
+    pub batch: usize,
+}
+
+impl T {
+    pub fn elems(&self) -> u64 {
+        (self.batch * self.ch * self.h * self.w) as u64
+    }
+}
+
+pub struct GraphBuilder {
+    pub g: Graph,
+    next_id: usize,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { g: Graph::new(), next_id: 0 }
+    }
+
+    pub fn with_elem_bytes(elem_bytes: u64) -> Self {
+        GraphBuilder { g: Graph::with_elem_bytes(elem_bytes), next_id: 0 }
+    }
+
+    fn name(&mut self, base: &str) -> String {
+        let id = self.next_id;
+        self.next_id += 1;
+        format!("{base}_{id}")
+    }
+
+    fn bytes_of(&self, t: &T) -> u64 {
+        t.elems() * self.g.elem_bytes
+    }
+
+    /// Network input placeholder (modelled as an Identity elementwise op so
+    /// it exists as a node the scheduler can source tensors from).
+    pub fn input(&mut self, batch: usize, ch: usize, h: usize, w: usize) -> T {
+        let elems = (batch * ch * h * w) as u64;
+        let name = self.name("input");
+        let node = self.g.add_node(
+            name,
+            OpKind::Eltwise { kind: EltwiseKind::Identity, elems, arity: 1 },
+            Phase::Forward,
+        );
+        T { node, ch, h, w, batch }
+    }
+
+    pub fn conv(&mut self, x: T, out_ch: usize, k: usize, stride: usize, padding: usize) -> T {
+        self.conv_grouped(x, out_ch, k, stride, padding, 1)
+    }
+
+    pub fn conv_grouped(
+        &mut self,
+        x: T,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+    ) -> T {
+        let spec = ConvSpec {
+            batch: x.batch,
+            in_ch: x.ch,
+            out_ch,
+            in_h: x.h,
+            in_w: x.w,
+            k_h: k,
+            k_w: k,
+            stride,
+            padding,
+            groups,
+        };
+        let name = self.name("conv");
+        let node = self.g.add_node(name, OpKind::Conv(spec), Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: out_ch, h: spec.out_h(), w: spec.out_w(), batch: x.batch }
+    }
+
+    pub fn batch_norm(&mut self, x: T) -> T {
+        let kind = OpKind::Norm { kind: NormKind::BatchNorm, elems: x.elems(), channels: x.ch };
+        let name = self.name("bn");
+        let node = self.g.add_node(name, kind, Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ..x }
+    }
+
+    pub fn layer_norm(&mut self, x: T) -> T {
+        let kind = OpKind::Norm { kind: NormKind::LayerNorm, elems: x.elems(), channels: x.ch };
+        let name = self.name("ln");
+        let node = self.g.add_node(name, kind, Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ..x }
+    }
+
+    pub fn eltwise1(&mut self, x: T, kind: EltwiseKind, base: &str) -> T {
+        let op = OpKind::Eltwise { kind, elems: x.elems(), arity: 1 };
+        let name = self.name(base);
+        let node = self.g.add_node(name, op, Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ..x }
+    }
+
+    pub fn relu(&mut self, x: T) -> T {
+        self.eltwise1(x, EltwiseKind::Relu, "relu")
+    }
+    pub fn gelu(&mut self, x: T) -> T {
+        self.eltwise1(x, EltwiseKind::Gelu, "gelu")
+    }
+
+    pub fn add(&mut self, a: T, b: T) -> T {
+        assert_eq!(a.elems(), b.elems(), "residual add requires matching sizes");
+        let op = OpKind::Eltwise { kind: EltwiseKind::Add, elems: a.elems(), arity: 2 };
+        let name = self.name("add");
+        let node = self.g.add_node(name, op, Phase::Forward);
+        let (ab, bb) = (self.bytes_of(&a), self.bytes_of(&b));
+        self.g.add_edge(a.node, node, ab);
+        self.g.add_edge(b.node, node, bb);
+        T { node, ..a }
+    }
+
+    pub fn mul(&mut self, a: T, b: T) -> T {
+        assert_eq!(a.elems(), b.elems());
+        let op = OpKind::Eltwise { kind: EltwiseKind::Mul, elems: a.elems(), arity: 2 };
+        let name = self.name("mul");
+        let node = self.g.add_node(name, op, Phase::Forward);
+        let (ab, bb) = (self.bytes_of(&a), self.bytes_of(&b));
+        self.g.add_edge(a.node, node, ab);
+        self.g.add_edge(b.node, node, bb);
+        T { node, ..a }
+    }
+
+    pub fn max_pool(&mut self, x: T, k: usize, stride: usize) -> T {
+        let spec = PoolSpec {
+            batch: x.batch,
+            channels: x.ch,
+            in_h: x.h,
+            in_w: x.w,
+            k,
+            stride,
+            global: false,
+        };
+        let name = self.name("maxpool");
+        let node = self.g.add_node(name, OpKind::Pool(spec), Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: x.ch, h: spec.out_h(), w: spec.out_w(), batch: x.batch }
+    }
+
+    pub fn global_avg_pool(&mut self, x: T) -> T {
+        let spec = PoolSpec {
+            batch: x.batch,
+            channels: x.ch,
+            in_h: x.h,
+            in_w: x.w,
+            k: x.h,
+            stride: x.h,
+            global: true,
+        };
+        let name = self.name("gap");
+        let node = self.g.add_node(name, OpKind::Pool(spec), Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: x.ch, h: 1, w: 1, batch: x.batch }
+    }
+
+    /// Fully-connected / linear layer over the flattened tensor:
+    /// treats x as [batch·h·w rows? no — batch rows, ch·h·w features].
+    pub fn linear(&mut self, x: T, out_features: usize) -> T {
+        let in_features = x.ch * x.h * x.w;
+        let spec = GemmSpec {
+            batch: 1,
+            m: x.batch,
+            n: out_features,
+            k: in_features,
+            weight_b: true,
+        };
+        let name = self.name("fc");
+        let node = self.g.add_node(name, OpKind::Gemm(spec), Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: out_features, h: 1, w: 1, batch: x.batch }
+    }
+
+    /// Sequence-model linear: x is [batch, rows=h, features=ch]; weight is
+    /// [ch, out]. Keeps h as the sequence dimension.
+    pub fn seq_linear(&mut self, x: T, out: usize) -> T {
+        let spec = GemmSpec { batch: x.batch, m: x.h, n: out, k: x.ch, weight_b: true };
+        let name = self.name("proj");
+        let node = self.g.add_node(name, OpKind::Gemm(spec), Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: out, h: x.h, w: 1, batch: x.batch }
+    }
+
+    /// Activation·activation batched matmul (e.g. attention QKᵀ / PV):
+    /// a: [batch, m, k], b interpreted as [batch, k, n].
+    pub fn matmul(&mut self, a: T, b: T, m: usize, n: usize, k: usize) -> T {
+        assert_eq!(a.batch, b.batch, "batched matmul batch mismatch");
+        let spec = GemmSpec { batch: a.batch, m, n, k, weight_b: false };
+        let name = self.name("matmul");
+        let node = self.g.add_node(name, OpKind::Gemm(spec), Phase::Forward);
+        let (ab, bb) = (self.bytes_of(&a), self.bytes_of(&b));
+        self.g.add_edge(a.node, node, ab);
+        self.g.add_edge(b.node, node, bb);
+        T { node, ch: n, h: m, w: 1, batch: a.batch }
+    }
+
+    pub fn softmax(&mut self, x: T) -> T {
+        let rows = x.batch * x.h;
+        let op = OpKind::Softmax { rows, cols: x.ch };
+        let name = self.name("softmax");
+        let node = self.g.add_node(name, op, Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ..x }
+    }
+
+    pub fn embed(&mut self, batch: usize, seq: usize, vocab: usize, dim: usize) -> T {
+        let op = OpKind::Embed { rows: vocab, dim, lookups: (batch * seq) as u64 };
+        let name = self.name("embed");
+        let node = self.g.add_node(name, op, Phase::Forward);
+        T { node, ch: dim, h: seq, w: 1, batch }
+    }
+
+    pub fn reduce(&mut self, x: T, kind: ReduceKind, out_elems: u64) -> T {
+        let op = OpKind::Reduce { kind, in_elems: x.elems(), out_elems };
+        let name = self.name("reduce");
+        let node = self.g.add_node(name, op, Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: 1, h: 1, w: 1, batch: out_elems as usize }
+    }
+
+    /// Cross-entropy loss head over [rows, classes].
+    pub fn loss(&mut self, x: T) -> T {
+        let rows = x.batch * x.h * x.w;
+        let op = OpKind::Loss { rows, classes: x.ch };
+        let name = self.name("loss");
+        let node = self.g.add_node(name, op, Phase::Forward);
+        let bytes = self.bytes_of(&x);
+        self.g.add_edge(x.node, node, bytes);
+        T { node, ch: 1, h: 1, w: 1, batch: 1 }
+    }
+
+    pub fn finish(self) -> Graph {
+        self.g
+    }
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_relu_chain_shapes() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(1, 3, 32, 32);
+        let c = b.conv(x, 16, 3, 1, 1);
+        assert_eq!((c.ch, c.h, c.w), (16, 32, 32));
+        let r = b.relu(c);
+        let p = b.max_pool(r, 2, 2);
+        assert_eq!((p.h, p.w), (16, 16));
+        let g = b.finish();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.edges.len(), 3);
+        assert!(g.is_dag());
+    }
+
+    #[test]
+    fn residual_add_connects_both() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(1, 8, 8, 8);
+        let c1 = b.conv(x, 8, 3, 1, 1);
+        let s = b.add(c1, x);
+        let g = b.finish();
+        assert_eq!(g.in_degree(s.node), 2);
+    }
+
+    #[test]
+    fn linear_flattens() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(4, 64, 2, 2);
+        let f = b.linear(x, 10);
+        assert_eq!(f.elems(), 40);
+        let g = b.finish();
+        // fc weight = 256*10
+        assert_eq!(g.node(f.node).kind.weight_elems(), 2560);
+    }
+
+    #[test]
+    fn attention_matmul_geometry() {
+        let mut b = GraphBuilder::new();
+        // q, k as [batch*heads=8, seq=16, dh=4]
+        let q = b.input(8, 4, 16, 1);
+        let k = b.input(8, 4, 16, 1);
+        let s = b.matmul(q, k, 16, 16, 4);
+        assert_eq!(s.elems(), 8 * 16 * 16);
+        let sm = b.softmax(s);
+        assert_eq!(sm.elems(), s.elems());
+    }
+}

@@ -1,0 +1,365 @@
+//! The workload graph: G = (V, E) with V = operators, E = tensors.
+//!
+//! This is the IR everything else consumes: the autodiff pass rewrites it
+//! into a training graph, the fusion solver partitions it, the scheduler
+//! walks it, and the checkpointing pass clones subgraphs of it. It replaces
+//! the ONNX graph of the paper's toolchain.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::op::{OpKind, Phase};
+
+pub type NodeId = usize;
+pub type EdgeId = usize;
+
+/// Bytes per element (the paper evaluates FP16 activations for the GA
+/// memory metric and FP32 elsewhere; we keep it per-graph).
+pub const BYTES_F32: u64 = 4;
+pub const BYTES_F16: u64 = 2;
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub phase: Phase,
+    /// Forward node this gradient/recompute node derives from (if any).
+    pub origin: Option<NodeId>,
+}
+
+/// A tensor flowing between two operators.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub id: EdgeId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+    /// True when this edge carries a *saved activation* from the forward
+    /// pass into the backward pass — the checkpointing candidate set 𝒜.
+    pub is_activation: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    succ: Vec<Vec<EdgeId>>,
+    pred: Vec<Vec<EdgeId>>,
+    /// Bytes per element for activation tensors in this graph.
+    pub elem_bytes: u64,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph { nodes: vec![], edges: vec![], succ: vec![], pred: vec![], elem_bytes: BYTES_F32 }
+    }
+
+    pub fn with_elem_bytes(elem_bytes: u64) -> Self {
+        Graph { elem_bytes, ..Self::new() }
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>, kind: OpKind, phase: Phase) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.into(), kind, phase, origin: None });
+        self.succ.push(vec![]);
+        self.pred.push(vec![]);
+        id
+    }
+
+    pub fn add_node_with_origin(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        phase: Phase,
+        origin: NodeId,
+    ) -> NodeId {
+        let id = self.add_node(name, kind, phase);
+        self.nodes[id].origin = Some(origin);
+        id
+    }
+
+    /// Connect `src -> dst` carrying `bytes`.
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, bytes: u64) -> EdgeId {
+        self.add_edge_full(src, dst, bytes, false)
+    }
+
+    /// Connect a saved-activation edge (forward → backward).
+    pub fn add_activation_edge(&mut self, src: NodeId, dst: NodeId, bytes: u64) -> EdgeId {
+        self.add_edge_full(src, dst, bytes, true)
+    }
+
+    pub fn add_edge_full(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        is_activation: bool,
+    ) -> EdgeId {
+        assert!(src < self.nodes.len() && dst < self.nodes.len(), "edge endpoints must exist");
+        assert_ne!(src, dst, "self-loops are not allowed");
+        let id = self.edges.len();
+        self.edges.push(Edge { id, src, dst, bytes, is_activation });
+        self.succ[src].push(id);
+        self.pred[dst].push(id);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id]
+    }
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn successors(&self, id: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.succ[id].iter().map(move |&e| self.edges[e].dst)
+    }
+    pub fn predecessors(&self, id: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.pred[id].iter().map(move |&e| self.edges[e].src)
+    }
+    pub fn out_edges(&self, id: NodeId) -> impl Iterator<Item = &Edge> + '_ {
+        self.succ[id].iter().map(move |&e| &self.edges[e])
+    }
+    pub fn in_edges(&self, id: NodeId) -> impl Iterator<Item = &Edge> + '_ {
+        self.pred[id].iter().map(move |&e| &self.edges[e])
+    }
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.succ[id].len()
+    }
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.pred[id].len()
+    }
+
+    /// Output tensor bytes of a node (element count × element width).
+    pub fn out_bytes(&self, id: NodeId) -> u64 {
+        self.nodes[id].kind.out_elems() * self.elem_bytes
+    }
+
+    /// Kahn topological order. Panics if the graph has a cycle (the IR is a
+    /// DAG by construction; a cycle is a builder/transform bug).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg: Vec<usize> = (0..self.len()).map(|i| self.in_degree(i)).collect();
+        let mut queue: VecDeque<NodeId> =
+            (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(n) = queue.pop_front() {
+            order.push(n);
+            for s in self.succ[n].iter().map(|&e| self.edges[e].dst) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "workload graph contains a cycle");
+        order
+    }
+
+    /// True iff the graph is acyclic (non-panicking check for tests).
+    pub fn is_dag(&self) -> bool {
+        let mut indeg: Vec<usize> = (0..self.len()).map(|i| self.in_degree(i)).collect();
+        let mut queue: VecDeque<NodeId> =
+            (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(n) = queue.pop_front() {
+            seen += 1;
+            for s in self.succ[n].iter().map(|&e| self.edges[e].dst) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        seen == self.len()
+    }
+
+    /// All nodes reachable from `start` walking *backwards* (ancestors),
+    /// excluding `start` itself.
+    pub fn ancestors(&self, start: NodeId) -> HashSet<NodeId> {
+        let mut seen = HashSet::new();
+        let mut stack: Vec<NodeId> = self.predecessors(start).collect();
+        while let Some(n) = stack.pop() {
+            if seen.insert(n) {
+                stack.extend(self.predecessors(n));
+            }
+        }
+        seen
+    }
+
+    /// Saved-activation edges — the checkpointing candidate set 𝒜.
+    pub fn activation_edges(&self) -> Vec<EdgeId> {
+        self.edges
+            .iter()
+            .filter(|e| e.is_activation)
+            .map(|e| e.id)
+            .collect()
+    }
+
+    /// Total MACs of the graph (optionally restricted to a phase).
+    pub fn total_macs(&self, phase: Option<Phase>) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| phase.map_or(true, |p| n.phase == p))
+            .map(|n| n.kind.macs())
+            .sum()
+    }
+
+    /// Total trained-parameter bytes (each parameter counted once, at its
+    /// forward consumer).
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.phase == Phase::Forward)
+            .map(|n| n.kind.weight_elems() * self.elem_bytes)
+            .sum()
+    }
+
+    /// Per-phase node counts (reporting).
+    pub fn phase_counts(&self) -> HashMap<Phase, usize> {
+        let mut m = HashMap::new();
+        for n in &self.nodes {
+            *m.entry(n.phase).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Deep-copy a set of nodes (with induced edges) into `self`, returning
+    /// the old→new id mapping. Used by the checkpointing pass to insert
+    /// recompute subgraphs.
+    pub fn clone_subgraph(
+        &mut self,
+        source: &Graph,
+        nodes: &[NodeId],
+        phase: Phase,
+    ) -> HashMap<NodeId, NodeId> {
+        let set: HashSet<NodeId> = nodes.iter().copied().collect();
+        let mut map = HashMap::new();
+        // insert in source topo order so edges can be added directly
+        for &n in source.topo_order().iter().filter(|n| set.contains(n)) {
+            let node = &source.nodes[n];
+            let new = self.add_node(
+                format!("{}@rc", node.name),
+                node.kind.clone(),
+                phase,
+            );
+            self.nodes[new].origin = Some(node.origin.unwrap_or(n));
+            map.insert(n, new);
+        }
+        for e in &source.edges {
+            if let (Some(&ns), Some(&nd)) = (map.get(&e.src), map.get(&e.dst)) {
+                self.add_edge(ns, nd, e.bytes);
+            }
+        }
+        map
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        let gmacs = self.total_macs(None) as f64 / 1e9;
+        format!(
+            "{} nodes, {} edges, {:.3} GMACs, {} activation edges",
+            self.len(),
+            self.edges.len(),
+            gmacs,
+            self.activation_edges().len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::op::{EltwiseKind, OpKind};
+
+    fn elt(elems: u64) -> OpKind {
+        OpKind::Eltwise { kind: EltwiseKind::Relu, elems, arity: 1 }
+    }
+
+    fn chain(n: usize) -> Graph {
+        let mut g = Graph::new();
+        let ids: Vec<_> =
+            (0..n).map(|i| g.add_node(format!("n{i}"), elt(10), Phase::Forward)).collect();
+        for w in ids.windows(2) {
+            g.add_edge(w[0], w[1], 40);
+        }
+        g
+    }
+
+    #[test]
+    fn build_and_query() {
+        let g = chain(4);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.edges.len(), 3);
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.successors(1).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(g.predecessors(1).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let mut g = chain(5);
+        g.add_edge(0, 4, 8); // skip connection
+        let order = g.topo_order();
+        let pos: HashMap<_, _> = order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for e in &g.edges {
+            assert!(pos[&e.src] < pos[&e.dst]);
+        }
+    }
+
+    #[test]
+    fn dag_check() {
+        let g = chain(3);
+        assert!(g.is_dag());
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn rejects_self_loop() {
+        let mut g = chain(2);
+        g.add_edge(1, 1, 4);
+    }
+
+    #[test]
+    fn ancestors_of_chain_tail() {
+        let g = chain(4);
+        let a = g.ancestors(3);
+        assert_eq!(a, [0, 1, 2].into_iter().collect());
+        assert!(g.ancestors(0).is_empty());
+    }
+
+    #[test]
+    fn activation_edges_tracked() {
+        let mut g = chain(3);
+        g.add_activation_edge(0, 2, 100);
+        assert_eq!(g.activation_edges().len(), 1);
+        assert!(g.edge(g.activation_edges()[0]).is_activation);
+    }
+
+    #[test]
+    fn clone_subgraph_preserves_structure() {
+        let src = chain(4);
+        let mut dst = Graph::new();
+        let root = dst.add_node("root", elt(1), Phase::Backward);
+        let map = dst.clone_subgraph(&src, &[1, 2], Phase::Recompute);
+        assert_eq!(map.len(), 2);
+        assert_eq!(dst.len(), 3);
+        // edge 1->2 is induced; edges 0->1 and 2->3 are not
+        assert_eq!(dst.edges.len(), 1);
+        assert_eq!(dst.nodes[map[&1]].origin, Some(1));
+        let _ = root;
+    }
+
+    #[test]
+    fn out_bytes_uses_elem_width() {
+        let mut g = Graph::with_elem_bytes(BYTES_F16);
+        let n = g.add_node("x", elt(100), Phase::Forward);
+        assert_eq!(g.out_bytes(n), 200);
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload IR: operator graphs (nodes = ops, edges = tensors), the model
+//! zoo that builds them, and the builder DSL. This layer replaces ONNX in
+//! the paper's pipeline (DESIGN.md S1/S2).
+
+pub mod builder;
+pub mod graph;
+pub mod models;
+pub mod op;
+
+pub use builder::{GraphBuilder, T};
+pub use graph::{Edge, EdgeId, Graph, Node, NodeId};
+pub use op::{
+    ConvSpec, EltwiseKind, GemmSpec, LoopDim, NormKind, OpKind, Optimizer, Phase,
+    PoolSpec, ReduceKind,
+};

@@ -1,0 +1,169 @@
+//! GPT-2-style decoder-only transformer — the paper's §IV-B workload
+//! ("small GPT-2" on the FuseMax accelerator).
+//!
+//! Attention is decomposed into explicit operator nodes (QKV projection,
+//! QKᵀ matmul, softmax, PV matmul, output projection) so the fusion solver
+//! can discover FlashAttention-style fusions (paper §II-C2) instead of
+//! treating attention as a monolith.
+
+use crate::workload::builder::GraphBuilder;
+use crate::workload::graph::Graph;
+use crate::workload::op::ReduceKind;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Gpt2Config {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub mlp_ratio: usize,
+    pub batch: usize,
+}
+
+impl Gpt2Config {
+    /// The "small GPT-2" of the paper's §IV-B, scaled to stay tractable for
+    /// per-configuration scheduling during sweeps.
+    pub fn small() -> Self {
+        Gpt2Config {
+            vocab: 50257,
+            seq: 256,
+            d_model: 768,
+            n_head: 12,
+            n_layer: 12,
+            mlp_ratio: 4,
+            batch: 1,
+        }
+    }
+
+    /// Reduced variant used by unit tests and quick examples.
+    pub fn tiny() -> Self {
+        Gpt2Config {
+            vocab: 256,
+            seq: 64,
+            d_model: 128,
+            n_head: 4,
+            n_layer: 2,
+            mlp_ratio: 4,
+            batch: 1,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dm = (self.mlp_ratio * self.d_model) as u64;
+        let per_block = 3 * d * d + d * d + d * dm + dm * d + 4 * d;
+        (self.vocab as u64) * d + (self.seq as u64) * d + self.n_layer as u64 * per_block + 2 * d
+    }
+}
+
+/// Forward graph of the decoder-only transformer with causal attention.
+pub fn gpt2(cfg: Gpt2Config) -> Graph {
+    assert_eq!(cfg.d_model % cfg.n_head, 0);
+    let mut b = GraphBuilder::new();
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+
+    // token+position embedding: [batch, seq, d]
+    let mut x = b.embed(cfg.batch, cfg.seq, cfg.vocab, d);
+
+    for _ in 0..cfg.n_layer {
+        // --- attention ---
+        let ln1 = b.layer_norm(x);
+        let qkv = b.seq_linear(ln1, 3 * d); // [batch, seq, 3d]
+        // head-split views: [batch*heads, seq, dh]; the split itself is a
+        // reshape (free) so we just reinterpret the handle geometry.
+        let mut q = qkv;
+        q.batch = cfg.batch * cfg.n_head;
+        q.ch = dh;
+        q.h = cfg.seq;
+        q.w = 1;
+        let k = q;
+        let v = q;
+        // scores = Q Kᵀ : [b·h, seq, seq]
+        let scores = b.matmul(q, k, cfg.seq, cfg.seq, dh);
+        let probs = b.softmax(scores);
+        // ctx = P V : [b·h, seq, dh]
+        let ctx = b.matmul(probs, v, cfg.seq, dh, cfg.seq);
+        // merge heads back: [batch, seq, d]
+        let mut merged = ctx;
+        merged.batch = cfg.batch;
+        merged.ch = d;
+        merged.h = cfg.seq;
+        let proj = b.seq_linear(merged, d);
+        x = b.add(x, proj);
+
+        // --- mlp ---
+        let ln2 = b.layer_norm(x);
+        let up = b.seq_linear(ln2, cfg.mlp_ratio * d);
+        let act = b.gelu(up);
+        let down = b.seq_linear(act, d);
+        x = b.add(x, down);
+    }
+
+    let lnf = b.layer_norm(x);
+    let logits = b.seq_linear(lnf, cfg.vocab);
+    b.loss(logits);
+    let _ = ReduceKind::Sum; // (reduce helper reserved for variants)
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::op::OpKind;
+
+    #[test]
+    fn tiny_structure() {
+        let g = gpt2(Gpt2Config::tiny());
+        assert!(g.is_dag());
+        let gemms = g.nodes.iter().filter(|n| n.kind.is_gemm()).count();
+        // per block: qkv, qk, pv, proj, up, down = 6; plus final logits
+        assert_eq!(gemms, 6 * 2 + 1);
+        let softmaxes = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Softmax { .. }))
+            .count();
+        assert_eq!(softmaxes, 2);
+    }
+
+    #[test]
+    fn small_macs_scale() {
+        let cfg = Gpt2Config::small();
+        let g = gpt2(cfg);
+        let gmacs = g.total_macs(None) as f64 / 1e9;
+        // ~124M params → fwd ≈ seq·params ≈ 0.256k·0.124G ≈ 32 GMAC + attn
+        assert!(gmacs > 15.0 && gmacs < 80.0, "gmacs={gmacs}");
+    }
+
+    #[test]
+    fn param_count_sanity() {
+        // canonical GPT-2 small: ~124M params (incl. embeddings)
+        let p = Gpt2Config::small().param_count() as f64 / 1e6;
+        assert!(p > 110.0 && p < 140.0, "params={p}M");
+    }
+
+    #[test]
+    fn attention_matmuls_are_not_weight_gemms() {
+        let g = gpt2(Gpt2Config::tiny());
+        let act_mm = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Gemm(s) if !s.weight_b))
+            .count();
+        assert_eq!(act_mm, 2 * 2); // qk + pv per block
+    }
+
+    #[test]
+    fn batch_scaling() {
+        let g1 = gpt2(Gpt2Config::tiny());
+        let cfg4 = Gpt2Config { batch: 4, ..Gpt2Config::tiny() };
+        let g4 = gpt2(cfg4);
+        assert_eq!(g4.total_macs(None), 4 * g1.total_macs(None));
+    }
+}

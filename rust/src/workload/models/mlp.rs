@@ -1,0 +1,39 @@
+//! Small MLP — the minimal workload for unit tests, quickstart, and
+//! scheduler/fusion edge-case validation.
+
+use crate::workload::builder::GraphBuilder;
+use crate::workload::graph::Graph;
+
+/// `layers` hidden linear+ReLU layers over a flat feature vector.
+pub fn mlp(batch: usize, in_features: usize, hidden: usize, layers: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut x = b.input(batch, in_features, 1, 1);
+    for _ in 0..layers {
+        let l = b.linear(x, hidden);
+        x = b.relu(l);
+    }
+    let out = b.linear(x, classes);
+    b.loss(out);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let g = mlp(4, 784, 256, 3, 10);
+        assert!(g.is_dag());
+        // input + 3*(fc+relu) + fc + loss
+        assert_eq!(g.len(), 1 + 6 + 1 + 1);
+        let gemm_macs: u64 = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind.is_gemm())
+            .map(|n| n.kind.macs())
+            .sum();
+        let want = 4 * (784 * 256 + 256 * 256 * 2 + 256 * 10) as u64;
+        assert_eq!(gemm_macs, want);
+    }
+}

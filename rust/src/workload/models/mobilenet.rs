@@ -1,0 +1,121 @@
+//! MobileNetV2 (Sandler et al. 2018) — the edge-training workload class the
+//! paper motivates via MCUNetv3 (§IV-A): inverted residual bottlenecks with
+//! depthwise convolutions, exercising the `groups` dimension of the conv
+//! cost model and much lower arithmetic intensity than ResNet.
+
+use crate::workload::builder::{GraphBuilder, T};
+use crate::workload::graph::Graph;
+
+/// Inverted residual block: 1×1 expand → 3×3 depthwise → 1×1 project.
+fn inverted_residual(b: &mut GraphBuilder, x: T, out_ch: usize, stride: usize, expand: usize) -> T {
+    let mid = x.ch * expand;
+    let mut h = x;
+    if expand != 1 {
+        let e = b.conv(h, mid, 1, 1, 0);
+        let n = b.batch_norm(e);
+        h = b.relu(n); // relu6 modelled as relu
+    }
+    // depthwise: groups == channels
+    let dw = b.conv_grouped(h, mid, 3, stride, 1, mid);
+    let n = b.batch_norm(dw);
+    let r = b.relu(n);
+    let p = b.conv(r, out_ch, 1, 1, 0);
+    let pn = b.batch_norm(p);
+    if stride == 1 && x.ch == out_ch {
+        b.add(pn, x)
+    } else {
+        pn
+    }
+}
+
+/// MobileNetV2 forward graph. `width` is the channel multiplier ×100
+/// (100 = 1.0×).
+pub fn mobilenet_v2(batch: usize, hw: usize, classes: usize, width: usize) -> Graph {
+    let w = |c: usize| ((c * width) / 100).max(8);
+    let mut b = GraphBuilder::new();
+    let x = b.input(batch, 3, hw, hw);
+    let stride0 = if hw > 64 { 2 } else { 1 };
+    let c = b.conv(x, w(32), 3, stride0, 1);
+    let n = b.batch_norm(c);
+    let mut h = b.relu(n);
+
+    // (expand, out_ch, repeats, stride) — the canonical V2 schedule
+    let blocks: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for &(expand, out_ch, repeats, stride) in &blocks {
+        for i in 0..repeats {
+            let s = if i == 0 { stride.min(h.h) } else { 1 };
+            h = inverted_residual(&mut b, h, w(out_ch), s, expand);
+        }
+    }
+    let c = b.conv(h, w(1280), 1, 1, 0);
+    let n = b.batch_norm(c);
+    let r = b.relu(n);
+    let p = b.global_avg_pool(r);
+    let fc = b.linear(p, classes);
+    b.loss(fc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{build_training_graph, TrainOptions};
+    use crate::workload::models::resnet18;
+    use crate::workload::op::OpKind;
+
+    #[test]
+    fn structure_and_macs() {
+        let g = mobilenet_v2(1, 224, 1000, 100);
+        assert!(g.is_dag());
+        let gmacs = g.total_macs(None) as f64 / 1e9;
+        // published: ~0.30 GMACs at 1.0x / 224
+        assert!(gmacs > 0.15 && gmacs < 0.6, "gmacs={gmacs}");
+    }
+
+    #[test]
+    fn depthwise_convs_present() {
+        let g = mobilenet_v2(1, 224, 1000, 100);
+        let dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(&n.kind, OpKind::Conv(s) if s.groups > 1))
+            .count();
+        assert_eq!(dw, 17); // one per inverted residual
+    }
+
+    #[test]
+    fn lower_arithmetic_intensity_than_resnet() {
+        // MACs per activation byte: mobilenet ≪ resnet (the edge story)
+        let mn = mobilenet_v2(1, 224, 1000, 100);
+        let rn = resnet18(1, 224, 1000);
+        let intensity = |g: &Graph| {
+            let bytes: u64 = (0..g.len()).map(|n| g.out_bytes(n)).sum();
+            g.total_macs(None) as f64 / bytes as f64
+        };
+        assert!(intensity(&mn) < intensity(&rn) / 2.0);
+    }
+
+    #[test]
+    fn trains_end_to_end() {
+        let g = mobilenet_v2(1, 32, 10, 50);
+        let tg = build_training_graph(&g, TrainOptions::default());
+        assert!(tg.graph.is_dag());
+        assert!(!tg.saved_activation_sources().is_empty());
+    }
+
+    #[test]
+    fn width_multiplier_scales_macs() {
+        let full = mobilenet_v2(1, 64, 10, 100);
+        let half = mobilenet_v2(1, 64, 10, 50);
+        let (f, h) = (full.total_macs(None), half.total_macs(None));
+        assert!(h < f / 2, "half-width {h} !< full/2 {f}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Model zoo: forward graphs of the paper's workloads, built from scratch
+//! (replacing the PyTorch→ONNX export of the original toolchain).
+
+pub mod gpt2;
+pub mod mobilenet;
+pub mod mlp;
+pub mod resnet;
+
+pub use gpt2::{gpt2, Gpt2Config};
+pub use mlp::mlp;
+pub use mobilenet::mobilenet_v2;
+pub use resnet::{resnet18, resnet50};

@@ -1,0 +1,157 @@
+//! ResNet family (He et al. 2016) — the paper's §IV-A / Fig 3 workloads.
+//!
+//! `resnet18` with 32×32 inputs matches the paper's CIFAR-10 Edge-TPU case
+//! study; `resnet50` at 224×224 feeds the Fig 3 memory breakdown.
+
+use crate::workload::builder::{GraphBuilder, T};
+use crate::workload::graph::Graph;
+
+/// Basic residual block (two 3×3 convs), ResNet-18/34 style.
+fn basic_block(b: &mut GraphBuilder, x: T, out_ch: usize, stride: usize) -> T {
+    let c1 = b.conv(x, out_ch, 3, stride, 1);
+    let n1 = b.batch_norm(c1);
+    let r1 = b.relu(n1);
+    let c2 = b.conv(r1, out_ch, 3, 1, 1);
+    let n2 = b.batch_norm(c2);
+    let shortcut = if stride != 1 || x.ch != out_ch {
+        let sc = b.conv(x, out_ch, 1, stride, 0);
+        b.batch_norm(sc)
+    } else {
+        x
+    };
+    let s = b.add(n2, shortcut);
+    b.relu(s)
+}
+
+/// Bottleneck block (1×1 → 3×3 → 1×1, expansion 4), ResNet-50 style.
+fn bottleneck(b: &mut GraphBuilder, x: T, mid_ch: usize, stride: usize) -> T {
+    let out_ch = mid_ch * 4;
+    let c1 = b.conv(x, mid_ch, 1, 1, 0);
+    let n1 = b.batch_norm(c1);
+    let r1 = b.relu(n1);
+    let c2 = b.conv(r1, mid_ch, 3, stride, 1);
+    let n2 = b.batch_norm(c2);
+    let r2 = b.relu(n2);
+    let c3 = b.conv(r2, out_ch, 1, 1, 0);
+    let n3 = b.batch_norm(c3);
+    let shortcut = if stride != 1 || x.ch != out_ch {
+        let sc = b.conv(x, out_ch, 1, stride, 0);
+        b.batch_norm(sc)
+    } else {
+        x
+    };
+    let s = b.add(n3, shortcut);
+    b.relu(s)
+}
+
+/// Shared stem: 7×7/2 + maxpool for ImageNet-scale inputs, 3×3/1 for
+/// CIFAR-scale (≤64 px) inputs — the paper models CIFAR-10 (3,32,32).
+fn stem(b: &mut GraphBuilder, batch: usize, hw: usize) -> T {
+    let x = b.input(batch, 3, hw, hw);
+    if hw > 64 {
+        let c = b.conv(x, 64, 7, 2, 3);
+        let n = b.batch_norm(c);
+        let r = b.relu(n);
+        b.max_pool(r, 2, 2)
+    } else {
+        let c = b.conv(x, 64, 3, 1, 1);
+        let n = b.batch_norm(c);
+        b.relu(n)
+    }
+}
+
+/// ResNet-18 forward graph.
+pub fn resnet18(batch: usize, hw: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut x = stem(&mut b, batch, hw);
+    for (stage, &ch) in [64usize, 128, 256, 512].iter().enumerate() {
+        for block in 0..2 {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            x = basic_block(&mut b, x, ch, stride);
+        }
+    }
+    let p = b.global_avg_pool(x);
+    let fc = b.linear(p, classes);
+    b.loss(fc);
+    b.finish()
+}
+
+/// ResNet-50 forward graph.
+pub fn resnet50(batch: usize, hw: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut x = stem(&mut b, batch, hw);
+    let stages: [(usize, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
+    for (stage, &(mid, blocks)) in stages.iter().enumerate() {
+        for block in 0..blocks {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            x = bottleneck(&mut b, x, mid, stride);
+        }
+    }
+    let p = b.global_avg_pool(x);
+    let fc = b.linear(p, classes);
+    b.loss(fc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::op::OpKind;
+
+    #[test]
+    fn resnet18_cifar_structure() {
+        let g = resnet18(1, 32, 10);
+        assert!(g.is_dag());
+        let convs = g.nodes.iter().filter(|n| n.kind.is_conv()).count();
+        // 1 stem + 16 block convs + 3 downsample 1x1 = 20
+        assert_eq!(convs, 20);
+        // ~0.55 GMACs for CIFAR resnet18 batch 1 (well-known ballpark)
+        let gmacs = g.total_macs(None) as f64 / 1e9;
+        assert!(gmacs > 0.3 && gmacs < 0.8, "gmacs={gmacs}");
+    }
+
+    #[test]
+    fn resnet18_imagenet_macs() {
+        let g = resnet18(1, 224, 1000);
+        let gmacs = g.total_macs(None) as f64 / 1e9;
+        // published: ~1.8 GMACs
+        assert!(gmacs > 1.4 && gmacs < 2.2, "gmacs={gmacs}");
+    }
+
+    #[test]
+    fn resnet50_imagenet_macs_and_params() {
+        let g = resnet50(1, 224, 1000);
+        let gmacs = g.total_macs(None) as f64 / 1e9;
+        // published: ~4.1 GMACs
+        assert!(gmacs > 3.4 && gmacs < 4.8, "gmacs={gmacs}");
+        let wparams: u64 = g
+            .nodes
+            .iter()
+            .map(|n| match &n.kind {
+                OpKind::Conv(s) => s.weight_elems(),
+                OpKind::Gemm(s) if s.weight_b => (s.k * s.n) as u64,
+                _ => 0,
+            })
+            .sum();
+        // ~25.5 M params (convs+fc; BN affine excluded here)
+        let m = wparams as f64 / 1e6;
+        assert!(m > 22.0 && m < 28.0, "params={m}M");
+    }
+
+    #[test]
+    fn batch_scales_activations_not_weights() {
+        let g1 = resnet50(1, 224, 1000);
+        let g8 = resnet50(8, 224, 1000);
+        assert_eq!(g1.total_weight_bytes(), g8.total_weight_bytes());
+        assert_eq!(g8.total_macs(None), 8 * g1.total_macs(None));
+    }
+
+    #[test]
+    fn single_loss_sink() {
+        let g = resnet18(1, 32, 10);
+        let sinks: Vec<_> =
+            (0..g.len()).filter(|&n| g.out_degree(n) == 0).collect();
+        assert_eq!(sinks.len(), 1);
+        assert!(matches!(g.node(sinks[0]).kind, OpKind::Loss { .. }));
+    }
+}

@@ -1,0 +1,541 @@
+//! Operator definitions for the workload IR.
+//!
+//! A node in the workload graph is an *operator* (the paper's §II-A
+//! formalism: nodes = operators, edges = tensors). Each operator carries
+//! enough loop-dimension structure for the mapping engine to reason about
+//! spatial parallelism, and enough byte/FLOP accounting for the cost model.
+//!
+//! Training introduces operators absent from inference (the paper §III):
+//! gradient primitives decomposed per output (input-grad / weight-grad /
+//! bias-grad), explicit transposes and reductions, and optimizer steps.
+//! They are first-class `OpKind`s here rather than opaque composites so the
+//! fusion solver and scheduler can treat them uniformly.
+
+use std::fmt;
+
+/// Classes of loop dimensions an operator iterates over. Used by the
+/// spatial-mapping model to decide how many MACs a dataflow can engage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopDim {
+    /// Batch
+    B,
+    /// Output channels (K in conv nomenclature) / GEMM N
+    K,
+    /// Input channels / GEMM reduction dim
+    C,
+    /// Output spatial X
+    Ox,
+    /// Output spatial Y
+    Oy,
+    /// Filter X
+    Fx,
+    /// Filter Y
+    Fy,
+    /// GEMM M (rows of A / output rows); also sequence length
+    M,
+    /// Flattened element count for elementwise/reduction ops
+    E,
+}
+
+/// 2-D convolution geometry (shared by Conv and its gradient primitives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub batch: usize,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub groups: usize,
+}
+
+impl ConvSpec {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.padding - self.k_h) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.padding - self.k_w) / self.stride + 1
+    }
+    /// Multiply-accumulate count of the forward conv.
+    pub fn macs(&self) -> u64 {
+        (self.batch * self.out_ch * self.out_h() * self.out_w()) as u64
+            * (self.in_ch / self.groups * self.k_h * self.k_w) as u64
+    }
+    pub fn weight_elems(&self) -> u64 {
+        (self.out_ch * (self.in_ch / self.groups) * self.k_h * self.k_w) as u64
+    }
+    pub fn out_elems(&self) -> u64 {
+        (self.batch * self.out_ch * self.out_h() * self.out_w()) as u64
+    }
+    pub fn in_elems(&self) -> u64 {
+        (self.batch * self.in_ch * self.in_h * self.in_w) as u64
+    }
+}
+
+/// GEMM geometry: C[M,N] = A[M,K] · B[K,N]. Batched via `batch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmSpec {
+    pub batch: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// True when B is a trained parameter (weight); false for
+    /// activation-activation matmuls (e.g. attention QK^T, PV).
+    pub weight_b: bool,
+}
+
+impl GemmSpec {
+    pub fn macs(&self) -> u64 {
+        (self.batch * self.m) as u64 * self.n as u64 * self.k as u64
+    }
+    pub fn out_elems(&self) -> u64 {
+        (self.batch * self.m * self.n) as u64
+    }
+}
+
+/// Pooling geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub batch: usize,
+    pub channels: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub global: bool,
+}
+
+impl PoolSpec {
+    pub fn out_h(&self) -> usize {
+        if self.global {
+            1
+        } else {
+            (self.in_h - self.k) / self.stride + 1
+        }
+    }
+    pub fn out_w(&self) -> usize {
+        if self.global {
+            1
+        } else {
+            (self.in_w - self.k) / self.stride + 1
+        }
+    }
+    pub fn out_elems(&self) -> u64 {
+        (self.batch * self.channels * self.out_h() * self.out_w()) as u64
+    }
+}
+
+/// Elementwise operator flavours. The backward of most of these is itself
+/// elementwise (possibly consuming the saved forward activation — exactly
+/// the tensors activation checkpointing trades off, paper §II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EltwiseKind {
+    Relu,
+    Gelu,
+    Tanh,
+    Sigmoid,
+    Add,
+    Mul,
+    /// Affine scale+shift (BatchNorm inference form, LayerNorm apply)
+    Affine,
+    /// Generic copy/cast
+    Identity,
+}
+
+/// Normalisation flavours (modelled with explicit reduce + affine cost).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NormKind {
+    BatchNorm,
+    LayerNorm,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Mean,
+}
+
+/// Optimizer families (paper §II-A, eqs. 4–5 and Adam). Each optimizer step
+/// is elementwise over one parameter tensor; `state_per_param` drives the
+/// optimizer-state memory accounting of Fig 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Optimizer {
+    Sgd,
+    SgdMomentum,
+    Adam,
+    /// GaLore-style (paper §II-A, [17]): Adam applied to a rank-reduced
+    /// projection of the gradient — optimizer states shrink by the
+    /// compression factor at the cost of projection GEMM work per step.
+    Galore,
+}
+
+/// GaLore state-compression factor (rank ≈ d / 8 projections).
+pub const GALORE_COMPRESSION: u64 = 8;
+
+impl Optimizer {
+    /// Number of persistent state tensors per parameter tensor (Galore's
+    /// fractional states are handled by `state_bytes`).
+    pub fn states_per_param(&self) -> usize {
+        match self {
+            Optimizer::Sgd => 0,
+            Optimizer::SgdMomentum => 1,
+            Optimizer::Adam => 2,
+            Optimizer::Galore => 2, // held in the compressed domain
+        }
+    }
+
+    /// Persistent optimizer-state bytes for `param_bytes` of parameters —
+    /// the Fig 3 "optimizer states" bar.
+    pub fn state_bytes(&self, param_bytes: u64) -> u64 {
+        match self {
+            Optimizer::Galore => 2 * param_bytes / GALORE_COMPRESSION,
+            _ => self.states_per_param() as u64 * param_bytes,
+        }
+    }
+
+    /// Elementwise operations applied per parameter element per step
+    /// (used for FLOP accounting of the update).
+    pub fn flops_per_elem(&self) -> u64 {
+        match self {
+            Optimizer::Sgd => 2,
+            Optimizer::SgdMomentum => 4,
+            Optimizer::Adam => 10,
+            // Adam in the low-rank domain + up/down projection matmuls
+            Optimizer::Galore => 10 / GALORE_COMPRESSION + 2 * 2 * GALORE_COMPRESSION,
+        }
+    }
+}
+
+/// The operator taxonomy. Gradient primitives are separate kinds (not a
+/// `grad: bool` flag) because their dataflow affinities differ: e.g.
+/// `ConvInputGrad` is a transposed conv (input-stationary friendly) while
+/// `ConvWeightGrad` reduces over batch+space (output-stationary friendly).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    Conv(ConvSpec),
+    /// dL/dInput of a conv — a transposed convolution.
+    ConvInputGrad(ConvSpec),
+    /// dL/dWeight of a conv — correlation of input with output grad.
+    ConvWeightGrad(ConvSpec),
+    Gemm(GemmSpec),
+    /// dL/dA = dC · Bᵀ
+    GemmInputGrad(GemmSpec),
+    /// dL/dB = Aᵀ · dC
+    GemmWeightGrad(GemmSpec),
+    Pool(PoolSpec),
+    PoolGrad(PoolSpec),
+    Eltwise { kind: EltwiseKind, elems: u64, arity: usize },
+    /// Backward of an elementwise op; consumes the upstream grad plus
+    /// (for non-linearities) the saved forward activation.
+    EltwiseGrad { kind: EltwiseKind, elems: u64 },
+    Norm { kind: NormKind, elems: u64, channels: usize },
+    NormGrad { kind: NormKind, elems: u64, channels: usize },
+    Softmax { rows: usize, cols: usize },
+    SoftmaxGrad { rows: usize, cols: usize },
+    Reduce { kind: ReduceKind, in_elems: u64, out_elems: u64 },
+    Transpose { elems: u64 },
+    Reshape { elems: u64 },
+    /// Embedding gather (tokens -> vectors).
+    Embed { rows: usize, dim: usize, lookups: u64 },
+    /// Embedding scatter-add backward.
+    EmbedGrad { rows: usize, dim: usize, lookups: u64 },
+    /// Cross-entropy loss head (softmax + NLL fused).
+    Loss { rows: usize, classes: usize },
+    /// Optimizer update for one parameter tensor.
+    OptimizerStep { opt: Optimizer, elems: u64 },
+}
+
+impl OpKind {
+    /// Multiply-accumulate count (FLOPs = 2·macs for MAC-dominated ops; for
+    /// pure elementwise ops we count one "mac-equivalent" per op).
+    pub fn macs(&self) -> u64 {
+        match self {
+            OpKind::Conv(s) => s.macs(),
+            // dX convolves dY (out_ch maps) with flipped weights back to
+            // input geometry: same MAC count as forward.
+            OpKind::ConvInputGrad(s) => s.macs(),
+            OpKind::ConvWeightGrad(s) => s.macs(),
+            OpKind::Gemm(s) | OpKind::GemmInputGrad(s) | OpKind::GemmWeightGrad(s) => {
+                s.macs()
+            }
+            OpKind::Pool(s) => s.out_elems() * (s.k * s.k).max(1) as u64 / 2,
+            OpKind::PoolGrad(s) => s.out_elems() * (s.k * s.k).max(1) as u64 / 2,
+            OpKind::Eltwise { elems, arity, .. } => elems * (*arity as u64).max(1) / 2,
+            OpKind::EltwiseGrad { elems, .. } => *elems,
+            OpKind::Norm { elems, .. } => 2 * elems,
+            OpKind::NormGrad { elems, .. } => 4 * elems,
+            OpKind::Softmax { rows, cols } => 3 * (*rows as u64) * (*cols as u64),
+            OpKind::SoftmaxGrad { rows, cols } => 3 * (*rows as u64) * (*cols as u64),
+            OpKind::Reduce { in_elems, .. } => in_elems / 2,
+            OpKind::Transpose { .. } | OpKind::Reshape { .. } => 0,
+            OpKind::Embed { lookups, dim, .. } => lookups * (*dim as u64) / 4,
+            OpKind::EmbedGrad { lookups, dim, .. } => lookups * (*dim as u64) / 2,
+            OpKind::Loss { rows, classes } => 3 * (*rows as u64) * (*classes as u64),
+            OpKind::OptimizerStep { opt, elems } => elems * opt.flops_per_elem() / 2,
+        }
+    }
+
+    /// Output element count of the operator.
+    pub fn out_elems(&self) -> u64 {
+        match self {
+            OpKind::Conv(s) => s.out_elems(),
+            OpKind::ConvInputGrad(s) => s.in_elems(),
+            OpKind::ConvWeightGrad(s) => s.weight_elems(),
+            OpKind::Gemm(s) => s.out_elems(),
+            OpKind::GemmInputGrad(s) => (s.batch * s.m * s.k) as u64,
+            OpKind::GemmWeightGrad(s) => (s.k * s.n) as u64,
+            OpKind::Pool(s) => s.out_elems(),
+            OpKind::PoolGrad(s) => (s.batch * s.channels * s.in_h * s.in_w) as u64,
+            OpKind::Eltwise { elems, .. } | OpKind::EltwiseGrad { elems, .. } => *elems,
+            OpKind::Norm { elems, .. } | OpKind::NormGrad { elems, .. } => *elems,
+            OpKind::Softmax { rows, cols } | OpKind::SoftmaxGrad { rows, cols } => {
+                (*rows as u64) * (*cols as u64)
+            }
+            OpKind::Reduce { out_elems, .. } => *out_elems,
+            OpKind::Transpose { elems } | OpKind::Reshape { elems } => *elems,
+            OpKind::Embed { lookups, dim, .. } => lookups * (*dim as u64),
+            OpKind::EmbedGrad { rows, dim, .. } => (*rows as u64) * (*dim as u64),
+            OpKind::Loss { rows, .. } => *rows as u64,
+            OpKind::OptimizerStep { elems, .. } => *elems,
+        }
+    }
+
+    /// Trained-parameter element count read by this op (weights).
+    pub fn weight_elems(&self) -> u64 {
+        match self {
+            OpKind::Conv(s) | OpKind::ConvInputGrad(s) => s.weight_elems(),
+            OpKind::ConvWeightGrad(_) => 0, // produces, not consumes, weights
+            OpKind::Gemm(s) | OpKind::GemmInputGrad(s) if s.weight_b => {
+                (s.k * s.n) as u64
+            }
+            OpKind::Embed { rows, dim, .. } => (*rows as u64) * (*dim as u64),
+            _ => 0,
+        }
+    }
+
+    /// Loop-dimension signature used by the spatial-mapping model.
+    pub fn loop_dims(&self) -> Vec<(LoopDim, usize)> {
+        match self {
+            OpKind::Conv(s) | OpKind::ConvWeightGrad(s) => vec![
+                (LoopDim::B, s.batch),
+                (LoopDim::K, s.out_ch),
+                (LoopDim::C, s.in_ch / s.groups),
+                (LoopDim::Ox, s.out_w()),
+                (LoopDim::Oy, s.out_h()),
+                (LoopDim::Fx, s.k_w),
+                (LoopDim::Fy, s.k_h),
+            ],
+            OpKind::ConvInputGrad(s) => vec![
+                (LoopDim::B, s.batch),
+                // roles of K and C swap in the transposed conv
+                (LoopDim::K, s.in_ch / s.groups),
+                (LoopDim::C, s.out_ch),
+                (LoopDim::Ox, s.in_w),
+                (LoopDim::Oy, s.in_h),
+                (LoopDim::Fx, s.k_w),
+                (LoopDim::Fy, s.k_h),
+            ],
+            OpKind::Gemm(s) => vec![
+                (LoopDim::B, s.batch),
+                (LoopDim::M, s.m),
+                (LoopDim::K, s.n),
+                (LoopDim::C, s.k),
+            ],
+            OpKind::GemmInputGrad(s) => vec![
+                (LoopDim::B, s.batch),
+                (LoopDim::M, s.m),
+                (LoopDim::K, s.k),
+                (LoopDim::C, s.n),
+            ],
+            OpKind::GemmWeightGrad(s) => vec![
+                (LoopDim::B, s.batch),
+                (LoopDim::M, s.k),
+                (LoopDim::K, s.n),
+                (LoopDim::C, s.m),
+            ],
+            OpKind::Pool(s) | OpKind::PoolGrad(s) => vec![
+                (LoopDim::B, s.batch),
+                (LoopDim::K, s.channels),
+                (LoopDim::Ox, s.out_w()),
+                (LoopDim::Oy, s.out_h()),
+            ],
+            other => vec![(LoopDim::E, other.out_elems() as usize)],
+        }
+    }
+
+    /// True for MAC-array-friendly ops (convs and GEMMs). The fusion
+    /// solver's operator-type constraint counts these (paper §V-A).
+    pub fn is_conv(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv(_) | OpKind::ConvInputGrad(_) | OpKind::ConvWeightGrad(_)
+        )
+    }
+    pub fn is_gemm(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Gemm(_) | OpKind::GemmInputGrad(_) | OpKind::GemmWeightGrad(_)
+        )
+    }
+    /// Elementwise-ish ops: cheap to recompute, profitable to fuse
+    /// (Inductor's observation, paper §II-A).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Eltwise { .. }
+                | OpKind::EltwiseGrad { .. }
+                | OpKind::Norm { .. }
+                | OpKind::Reshape { .. }
+                | OpKind::Transpose { .. }
+                | OpKind::OptimizerStep { .. }
+        )
+    }
+
+    /// Short mnemonic for reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Conv(_) => "Conv",
+            OpKind::ConvInputGrad(_) => "ConvGradX",
+            OpKind::ConvWeightGrad(_) => "ConvGradW",
+            OpKind::Gemm(_) => "Gemm",
+            OpKind::GemmInputGrad(_) => "GemmGradX",
+            OpKind::GemmWeightGrad(_) => "GemmGradW",
+            OpKind::Pool(_) => "Pool",
+            OpKind::PoolGrad(_) => "PoolGrad",
+            OpKind::Eltwise { .. } => "Eltwise",
+            OpKind::EltwiseGrad { .. } => "EltwiseGrad",
+            OpKind::Norm { .. } => "Norm",
+            OpKind::NormGrad { .. } => "NormGrad",
+            OpKind::Softmax { .. } => "Softmax",
+            OpKind::SoftmaxGrad { .. } => "SoftmaxGrad",
+            OpKind::Reduce { .. } => "Reduce",
+            OpKind::Transpose { .. } => "Transpose",
+            OpKind::Reshape { .. } => "Reshape",
+            OpKind::Embed { .. } => "Embed",
+            OpKind::EmbedGrad { .. } => "EmbedGrad",
+            OpKind::Loss { .. } => "Loss",
+            OpKind::OptimizerStep { .. } => "OptStep",
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.mnemonic())
+    }
+}
+
+/// Which phase of the training iteration a node belongs to. Drives the
+/// inference-vs-training splits of Figs 1/8/9 and activation lifetimes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Forward,
+    Backward,
+    /// Optimizer update
+    Update,
+    /// Recompute clone inserted by the checkpointing pass
+    Recompute,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv3x3() -> ConvSpec {
+        ConvSpec {
+            batch: 1,
+            in_ch: 16,
+            out_ch: 32,
+            in_h: 32,
+            in_w: 32,
+            k_h: 3,
+            k_w: 3,
+            stride: 1,
+            padding: 1,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn conv_geometry() {
+        let s = conv3x3();
+        assert_eq!(s.out_h(), 32);
+        assert_eq!(s.out_w(), 32);
+        assert_eq!(s.macs(), 32 * 32 * 32 * 16 * 9);
+        assert_eq!(s.weight_elems(), 32 * 16 * 9);
+    }
+
+    #[test]
+    fn strided_conv_geometry() {
+        let s = ConvSpec { stride: 2, ..conv3x3() };
+        assert_eq!(s.out_h(), 16);
+        assert_eq!(s.out_w(), 16);
+    }
+
+    #[test]
+    fn conv_grads_preserve_mac_count() {
+        let s = conv3x3();
+        assert_eq!(OpKind::ConvInputGrad(s).macs(), OpKind::Conv(s).macs());
+        assert_eq!(OpKind::ConvWeightGrad(s).macs(), OpKind::Conv(s).macs());
+    }
+
+    #[test]
+    fn conv_grad_output_shapes() {
+        let s = conv3x3();
+        assert_eq!(OpKind::ConvInputGrad(s).out_elems(), s.in_elems());
+        assert_eq!(OpKind::ConvWeightGrad(s).out_elems(), s.weight_elems());
+    }
+
+    #[test]
+    fn gemm_macs_and_grads() {
+        let g = GemmSpec { batch: 2, m: 8, n: 16, k: 32, weight_b: true };
+        assert_eq!(g.macs(), 2 * 8 * 16 * 32);
+        assert_eq!(OpKind::GemmInputGrad(g).out_elems(), 2 * 8 * 32);
+        assert_eq!(OpKind::GemmWeightGrad(g).out_elems(), 16 * 32);
+        assert_eq!(OpKind::Gemm(g).weight_elems(), 16 * 32);
+        let act = GemmSpec { weight_b: false, ..g };
+        assert_eq!(OpKind::Gemm(act).weight_elems(), 0);
+    }
+
+    #[test]
+    fn optimizer_states() {
+        assert_eq!(Optimizer::Sgd.states_per_param(), 0);
+        assert_eq!(Optimizer::SgdMomentum.states_per_param(), 1);
+        assert_eq!(Optimizer::Adam.states_per_param(), 2);
+    }
+
+    #[test]
+    fn pool_geometry() {
+        let p = PoolSpec {
+            batch: 1,
+            channels: 64,
+            in_h: 8,
+            in_w: 8,
+            k: 8,
+            stride: 8,
+            global: true,
+        };
+        assert_eq!(p.out_h(), 1);
+        assert_eq!(p.out_elems(), 64);
+    }
+
+    #[test]
+    fn elementwise_classification() {
+        let e = OpKind::Eltwise { kind: EltwiseKind::Relu, elems: 100, arity: 1 };
+        assert!(e.is_elementwise());
+        assert!(!e.is_conv() && !e.is_gemm());
+        assert!(OpKind::Conv(conv3x3()).is_conv());
+    }
+
+    #[test]
+    fn loop_dims_cover_conv_axes() {
+        let dims = OpKind::Conv(conv3x3()).loop_dims();
+        let total: usize = dims.iter().map(|(_, s)| *s).product();
+        // B*K*C*OX*OY*FX*FY = macs
+        assert_eq!(total as u64, OpKind::Conv(conv3x3()).macs());
+    }
+}

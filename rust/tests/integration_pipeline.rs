@@ -1,0 +1,213 @@
+//! Integration tests: full MONET pipelines (workload → autodiff →
+//! checkpoint → fusion → schedule) at reduced sizes, asserting the paper's
+//! qualitative claims end to end.
+
+use monet::autodiff::{
+    apply_checkpointing, build_training_graph, checkpoint_candidates, CheckpointPlan,
+    TrainOptions,
+};
+use monet::dse::{run_sweep, DesignPoint, Mode, SweepConfig};
+use monet::figures;
+use monet::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
+use monet::ga::GaConfig;
+use monet::hardware::presets::{EdgeTpuParams, FuseMaxParams};
+use monet::mapping::MappingConfig;
+use monet::scheduler::{schedule, Partition};
+use monet::workload::models::{gpt2, mlp, resnet18, resnet50, Gpt2Config};
+use monet::workload::op::{Optimizer, Phase};
+
+#[test]
+fn full_pipeline_resnet18_training() {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let p = fuse(&tg.graph, &FusionConstraints::default());
+    let r = schedule(&tg.graph, &p, &accel, &mapping);
+    assert!(r.latency_cycles > 0.0 && r.energy_pj > 0.0);
+    assert!(r.utilization() > 0.0 && r.utilization() <= 1.0);
+    // conservation: every group scheduled exactly once
+    assert_eq!(r.timeline.len(), p.len());
+}
+
+#[test]
+fn training_strictly_dominates_inference_cost() {
+    // on every accelerator in a strided space, training > inference in both
+    // latency and energy (it does ~3x the MACs and holds activations)
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(&fwd, TrainOptions::default());
+    let rows = run_sweep(
+        &DesignPoint::edge_space(997),
+        &fwd,
+        &tg.graph,
+        &SweepConfig::default(),
+        |_, _| {},
+    );
+    for pair in rows.chunks(2) {
+        assert_eq!(pair[0].mode, Mode::Inference);
+        assert!(pair[1].latency_cycles > pair[0].latency_cycles);
+        assert!(pair[1].energy_pj > pair[0].energy_pj);
+        assert!(pair[1].peak_dram_bytes >= pair[0].peak_dram_bytes);
+    }
+}
+
+#[test]
+fn fig10_pipeline_solver_beats_manual_mostly() {
+    let rows = figures::fig10_fusion_strategies(None);
+    let manual = rows.iter().find(|r| r.strategy == "Manual").unwrap();
+    let base = rows.iter().find(|r| r.strategy == "Base").unwrap();
+    // manual fusion already beats base (sanity of the baseline itself)
+    assert!(manual.energy_pj < base.energy_pj);
+    // at least one solver limit beats manual on both metrics ("most of the
+    // time" in the paper; the best limit must win here)
+    let wins = rows
+        .iter()
+        .filter(|r| r.strategy.starts_with("Limit"))
+        .filter(|r| r.latency_cycles <= manual.latency_cycles && r.energy_pj <= manual.energy_pj)
+        .count();
+    assert!(wins >= 1, "no solver limit beats manual fusion");
+}
+
+#[test]
+fn checkpointing_pipeline_memory_latency_tradeoff() {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let fc = FusionConstraints::default();
+    let cands = checkpoint_candidates(&tg);
+
+    let eval = |plan: &CheckpointPlan| {
+        let g = apply_checkpointing(&tg, plan);
+        let p = fuse_greedy(&g, &fc);
+        let r = schedule(&g, &p, &accel, &mapping);
+        (r.latency_cycles, r.energy_pj)
+    };
+    let (lat0, _) = eval(&CheckpointPlan::save_all());
+    let all = CheckpointPlan::recompute_set(cands.iter().copied());
+    let (lat1, _) = eval(&all);
+    // recompute-everything must add recompute work (more MACs → more time)
+    assert!(lat1 > lat0, "recompute-all should cost latency: {lat1} !> {lat0}");
+}
+
+#[test]
+fn ga_front_contains_low_overhead_high_saving_point() {
+    // miniature Fig 12 on the CIFAR graph (fast): the GA must find a point
+    // with >30% activation-memory saving at <10% latency overhead
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let problem = monet::ga::CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::edge_tpu_default(),
+        FusionConstraints::default(),
+    );
+    let (base_lat, _, _) = problem.evaluate(&CheckpointPlan::save_all());
+    let front = problem.optimize(&GaConfig { population: 16, generations: 8, ..Default::default() });
+    assert!(!front.is_empty());
+    let ok = front
+        .iter()
+        .any(|s| s.memory_saving > 0.3 && s.latency_cycles < base_lat * 1.10);
+    assert!(ok, "no >30% saving at <10% latency overhead found");
+}
+
+#[test]
+fn gpt2_fusemax_pipeline() {
+    let cfg = Gpt2Config::tiny();
+    let fwd = gpt2(cfg);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = FuseMaxParams::baseline().build();
+    let mapping = MappingConfig::fusemax_default();
+    let p = fuse_greedy(&tg.graph, &FusionConstraints::default());
+    let r = schedule(&tg.graph, &p, &accel, &mapping);
+    assert!(r.latency_cycles > 0.0);
+    // both cores of the 2-core HDA must be used (pipeline parallelism)
+    let busy_cores = r.core_busy.iter().filter(|&&b| b > 0.0).count();
+    assert_eq!(busy_cores, 2, "pipeline parallelism unused");
+}
+
+#[test]
+fn fig9_distribution_more_concentrated_than_fig1() {
+    // paper §IV-B: regular workload × regular hardware → tighter spread.
+    // Prime strides so the subsample doesn't alias with the cartesian axis
+    // periods (stride 400 would fix U/L/mem/RF and only vary PE count).
+    let edge = figures::fig1_fig8_edge_sweep(397, None, |_, _| {});
+    let fmx = figures::fig9_fusemax_sweep(97, None, |_, _| {});
+    // The concentration shows on the energy axis: FuseMax energy is nearly
+    // invariant across configs (regular workload, all traffic through the
+    // shared buffer), while Edge-TPU energy spans decades. Latency on
+    // FuseMax still spreads along the off-chip-bandwidth axis — which is
+    // exactly the sensitivity Fig 9's colour coding highlights.
+    let spread = |rows: &[monet::dse::SweepRow]| {
+        let en: Vec<f64> = rows.iter().map(|r| r.energy_pj.log10()).collect();
+        monet::util::stats::stddev(&en)
+    };
+    let (einf, _) = figures::split_modes(&edge.rows);
+    let (finf, _) = figures::split_modes(&fmx.rows);
+    assert!(
+        spread(&finf) < spread(&einf) / 2.0,
+        "fusemax energy spread {} not ≪ edge energy spread {}",
+        spread(&finf),
+        spread(&einf)
+    );
+}
+
+#[test]
+fn resnet50_memory_matches_published_scale() {
+    // well-known numbers: ResNet-50 FP32 params ≈ 100 MB; batch-8 224²
+    // activations are GB-scale (the Fig 3 story)
+    let bd = figures::fig3_memory_breakdown(None);
+    let b8 = &bd[1];
+    // PyTorch's measured bars (Fig 3) include cuDNN workspace and allocator
+    // fragmentation on top of the analytic tensor bytes we model, so our
+    // bound is the analytic floor of the same story: batch-8 activations in
+    // the high hundreds of MiB, dominating the breakdown.
+    assert!(
+        b8.activation_bytes > 500 << 20,
+        "batch-8 activations should exceed 500 MiB"
+    );
+    assert!(b8.total() < 20 * (1 << 30) as u64, "total should stay below 20 GiB");
+}
+
+#[test]
+fn recompute_phase_nodes_only_from_checkpointing() {
+    let fwd = mlp(1, 16, 32, 2, 8);
+    let tg = build_training_graph(&fwd, TrainOptions::default());
+    assert!(tg.graph.nodes.iter().all(|n| n.phase != Phase::Recompute));
+    let cands = checkpoint_candidates(&tg);
+    let g = apply_checkpointing(&tg, &CheckpointPlan::recompute_set([cands[0]]));
+    assert!(g.nodes.iter().any(|n| n.phase == Phase::Recompute));
+}
+
+#[test]
+fn manual_fusion_matches_known_group_structure() {
+    let g = resnet18(1, 32, 10);
+    let p = fuse_manual_conv_bn_relu(&g);
+    // 20 convs each lead a group; stem group has conv+bn+relu
+    let conv_led = p
+        .groups
+        .iter()
+        .filter(|grp| g.node(grp[0]).kind.is_conv())
+        .count();
+    assert_eq!(conv_led, 20);
+}
+
+#[test]
+fn resnet50_batch_sweep_scales_linearly_in_macs() {
+    let g1 = resnet50(1, 224, 1000);
+    let g4 = resnet50(4, 224, 1000);
+    assert_eq!(g4.total_macs(None), 4 * g1.total_macs(None));
+}

@@ -1,0 +1,260 @@
+//! Property-based tests over coordinator invariants, using the in-repo
+//! mini-proptest (util::proptest; the proptest crate is not vendored in
+//! this offline environment — see DESIGN.md §Substitutions). Each property
+//! runs across dozens of seeded random cases with shrinking on failure.
+
+use std::collections::HashSet;
+
+use monet::autodiff::{
+    apply_checkpointing, build_training_graph, checkpoint_candidates,
+    stored_activation_bytes, CheckpointPlan, TrainOptions,
+};
+use monet::dse::{run_sweep, DesignPoint, SweepConfig};
+use monet::fusion::{enumerate_candidates, fuse_greedy, solve_exact_cover, FusionConstraints};
+use monet::ga::{dominates, nsga2, GaConfig};
+use monet::hardware::presets::EdgeTpuParams;
+use monet::mapping::MappingConfig;
+use monet::scheduler::{schedule, Partition};
+use monet::util::proptest::{check, BitMask, Gen, UsizeIn};
+use monet::util::rng::Rng;
+use monet::workload::graph::Graph;
+use monet::workload::models::{mlp, resnet18};
+use monet::workload::op::Optimizer;
+
+/// Generator: random MLP-family workloads.
+struct RandomMlp;
+impl Gen for RandomMlp {
+    type Value = (usize, usize, usize, usize);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (
+            1 + rng.usize(4),       // batch
+            8 << rng.usize(4),      // in features
+            8 << rng.usize(5),      // hidden
+            1 + rng.usize(4),       // layers
+        )
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = vec![];
+        if v.3 > 1 {
+            out.push((v.0, v.1, v.2, v.3 - 1));
+        }
+        if v.0 > 1 {
+            out.push((1, v.1, v.2, v.3));
+        }
+        out
+    }
+}
+
+fn graph_of((b, f, h, l): (usize, usize, usize, usize)) -> Graph {
+    mlp(b, f, h, l, 10)
+}
+
+#[test]
+fn prop_training_graphs_are_dags_with_backward_activation_edges() {
+    check(25, &RandomMlp, |&dims| {
+        let g = graph_of(dims);
+        let tg = build_training_graph(
+            &g,
+            TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+        );
+        tg.graph.is_dag()
+            && tg
+                .graph
+                .edges
+                .iter()
+                .filter(|e| e.is_activation)
+                .all(|e| e.src < tg.fwd_len && e.dst >= tg.fwd_len)
+    });
+}
+
+#[test]
+fn prop_fusion_partitions_are_exact_covers() {
+    check(20, &RandomMlp, |&dims| {
+        let g = graph_of(dims);
+        let p = fuse_greedy(&g, &FusionConstraints::default());
+        p.validate(&g).is_ok()
+    });
+}
+
+#[test]
+fn prop_exact_cover_solutions_cover_exactly_once() {
+    // random candidate pools over small universes
+    struct Inst;
+    impl Gen for Inst {
+        type Value = (usize, Vec<Vec<usize>>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let n = 4 + rng.usize(12);
+            let mut cands: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+            for _ in 0..rng.usize(12) {
+                let len = 2 + rng.usize(3);
+                let start = rng.usize(n.saturating_sub(len) + 1);
+                cands.push((start..(start + len).min(n)).collect());
+            }
+            (n, cands)
+        }
+    }
+    check(40, &Inst, |(n, cands)| {
+        let sol = solve_exact_cover(*n, cands, 50_000);
+        let mut cnt = vec![0usize; *n];
+        for &ci in &sol {
+            for &x in &cands[ci] {
+                cnt[x] += 1;
+            }
+        }
+        cnt.iter().all(|&c| c == 1)
+    });
+}
+
+#[test]
+fn prop_checkpoint_transform_preserves_backward_reachability() {
+    // every backward consumer of a dropped activation must still have a
+    // producer (recompute clone) among its predecessors, and the graph
+    // stays a DAG, for random recompute masks
+    let g = resnet18(1, 32, 10);
+    let tg = build_training_graph(&g, TrainOptions::default());
+    let cands = checkpoint_candidates(&tg);
+    check(25, &BitMask { width: cands.len(), p: 0.35 }, |mask| {
+        let plan = CheckpointPlan {
+            recompute: cands
+                .iter()
+                .zip(mask)
+                .filter(|(_, &b)| b)
+                .map(|(&n, _)| n)
+                .collect(),
+        };
+        let out = apply_checkpointing(&tg, &plan);
+        if !out.is_dag() {
+            return false;
+        }
+        // in-degree preservation: every node that had inputs still has them
+        for n in 0..tg.graph.len() {
+            if tg.graph.in_degree(n) > 0 && out.in_degree(n) == 0 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_checkpoint_memory_is_monotone_in_mask() {
+    let g = mlp(1, 32, 64, 3, 10);
+    let tg = build_training_graph(&g, TrainOptions::default());
+    let cands = checkpoint_candidates(&tg);
+    check(25, &BitMask { width: cands.len(), p: 0.4 }, |mask| {
+        let plan = CheckpointPlan {
+            recompute: cands
+                .iter()
+                .zip(mask)
+                .filter(|(_, &b)| b)
+                .map(|(&n, _)| n)
+                .collect(),
+        };
+        // flipping any additional bit on can only reduce stored bytes
+        let base = stored_activation_bytes(&tg, &plan);
+        for (i, &bit) in mask.iter().enumerate() {
+            if !bit {
+                let mut bigger = plan.clone();
+                bigger.recompute.insert(cands[i]);
+                if stored_activation_bytes(&tg, &bigger) > base {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_schedule_never_violates_group_dependencies() {
+    // random contiguous-chain partitions of an MLP: start/finish ordering
+    // must respect every cross-group edge
+    let g = mlp(2, 32, 64, 4, 10);
+    check(25, &UsizeIn(1, 4), |&chunk| {
+        // build a partition of consecutive topo nodes in chunks
+        let topo = g.topo_order();
+        let groups: Vec<Vec<usize>> =
+            topo.chunks(chunk).map(|c| c.to_vec()).collect();
+        let p = Partition::from_groups(groups);
+        if p.validate(&g).is_err() {
+            return true; // non-convex chunking is rejected, fine
+        }
+        let accel = EdgeTpuParams::baseline().build();
+        let r = schedule(&g, &p, &accel, &MappingConfig::default());
+        let gof = p.group_of(g.len());
+        let start: Vec<f64> = {
+            let mut s = vec![0.0; p.len()];
+            for t in &r.timeline {
+                s[t.group] = t.start;
+            }
+            s
+        };
+        let finish: Vec<f64> = {
+            let mut f = vec![0.0; p.len()];
+            for t in &r.timeline {
+                f[t.group] = t.finish;
+            }
+            f
+        };
+        g.edges.iter().all(|e| {
+            let (a, b) = (gof[e.src], gof[e.dst]);
+            a == b || finish[a] <= start[b] + 1e-9
+        })
+    });
+}
+
+#[test]
+fn prop_nsga2_fronts_are_mutually_nondominated() {
+    struct Width;
+    impl Gen for Width {
+        type Value = usize;
+        fn generate(&self, rng: &mut Rng) -> usize {
+            4 + rng.usize(20)
+        }
+    }
+    check(10, &Width, |&w| {
+        let front = nsga2(
+            w,
+            &GaConfig { population: 16, generations: 6, seed: w as u64, ..Default::default() },
+            |g| {
+                let ones = g.iter().filter(|&&b| b).count() as f64;
+                let runs = g.windows(2).filter(|p| p[0] != p[1]).count() as f64;
+                vec![ones, runs]
+            },
+        );
+        front.iter().all(|a| {
+            front
+                .iter()
+                .all(|b| !dominates(&b.objectives, &a.objectives))
+        })
+    });
+}
+
+#[test]
+fn prop_sweep_processes_every_job_exactly_once_under_random_workers() {
+    let fwd = mlp(1, 16, 32, 2, 8);
+    let tg = build_training_graph(&fwd, TrainOptions::default());
+    check(8, &UsizeIn(1, 8), |&workers| {
+        let points = DesignPoint::edge_space(1500);
+        let rows = run_sweep(
+            &points,
+            &fwd,
+            &tg.graph,
+            &SweepConfig { workers, ..Default::default() },
+            |_, _| {},
+        );
+        let idx: HashSet<usize> = rows.iter().map(|r| r.index).collect();
+        rows.len() == points.len() * 2 && idx.len() == points.len()
+    });
+}
+
+#[test]
+fn prop_candidate_subgraphs_respect_all_constraints() {
+    check(12, &RandomMlp, |&dims| {
+        let g = graph_of(dims);
+        let c = FusionConstraints::default();
+        enumerate_candidates(&g, &c)
+            .iter()
+            .all(|cand| monet::fusion::candidates::satisfies(&g, cand, &c))
+    });
+}

@@ -1,0 +1,109 @@
+//! Runtime round-trip tests: python-AOT HLO artifacts executed through the
+//! rust PJRT client, cross-validated against the native rust cost model
+//! and against known training behaviour. These tests need `make artifacts`
+//! to have run; they are skipped (with a note) when artifacts are missing
+//! so `cargo test` stays green on a fresh checkout.
+
+use monet::dse::{accel_to_cfg, graph_to_layers};
+use monet::hardware::presets::EdgeTpuParams;
+use monet::runtime::{cost_eval_native, Corpus, CostKernel, Gpt2Runner, Runtime};
+use monet::workload::models::resnet18;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping runtime test");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("PJRT client"))
+}
+
+#[test]
+fn cost_kernel_hlo_matches_native_model() {
+    let Some(rt) = runtime() else { return };
+    let kernel = CostKernel::load(&rt).expect("load cost_eval artifact");
+    let g = resnet18(1, 32, 10);
+    let layers = graph_to_layers(&g);
+    let cfgs: Vec<_> = EdgeTpuParams::space_strided(61)
+        .into_iter()
+        .map(|p| accel_to_cfg(&p.build()))
+        .collect();
+    let hlo = kernel.eval(&cfgs, &layers).expect("kernel exec");
+    let native = cost_eval_native(&cfgs, &layers);
+    assert_eq!(hlo.len(), native.len());
+    for (a, b) in hlo.iter().zip(&native) {
+        let rel = (a.cycles - b.cycles).abs() / b.cycles.max(1.0);
+        assert!(rel < 1e-4, "cycles diverge: {} vs {}", a.cycles, b.cycles);
+        let rel_e = (a.energy_pj - b.energy_pj).abs() / b.energy_pj.max(1.0);
+        assert!(rel_e < 1e-3, "energy diverges: {} vs {}", a.energy_pj, b.energy_pj);
+        assert!((a.utilization - b.utilization).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn pallas_and_ref_cost_artifacts_agree() {
+    // the interpret-mode Pallas lowering and the pure-jnp lowering of the
+    // same math must agree when run through PJRT
+    let Some(rt) = runtime() else { return };
+    let pallas = CostKernel::load(&rt).unwrap();
+    let refk = CostKernel::load_ref(&rt).unwrap();
+    let g = resnet18(1, 32, 10);
+    let layers = graph_to_layers(&g);
+    let cfgs: Vec<_> = EdgeTpuParams::space_strided(977)
+        .into_iter()
+        .map(|p| accel_to_cfg(&p.build()))
+        .collect();
+    let a = pallas.eval(&cfgs, &layers).unwrap();
+    let b = refk.eval(&cfgs, &layers).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!(((x.cycles - y.cycles) / y.cycles.max(1.0)).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn gpt2_first_loss_is_near_uniform() {
+    // fresh model ≈ uniform predictor → loss ≈ ln(vocab) = ln(256) ≈ 5.55
+    let Some(rt) = runtime() else { return };
+    let runner = Gpt2Runner::load(&rt, "tiny").expect("load gpt2 artifacts");
+    let m = runner.meta.clone();
+    let mut corpus = Corpus::synthetic(m.vocab, 8192, 3);
+    let tokens = corpus.next_batch(m.batch, m.seq + 1);
+    let loss = runner.eval_loss(&tokens).expect("eval");
+    let expect = (m.vocab as f32).ln();
+    assert!(
+        (loss - expect).abs() < 0.6,
+        "initial loss {loss} far from ln(vocab)={expect}"
+    );
+}
+
+#[test]
+fn gpt2_training_reduces_loss_through_aot_stack() {
+    let Some(rt) = runtime() else { return };
+    let mut runner = Gpt2Runner::load(&rt, "tiny").unwrap();
+    let m = runner.meta.clone();
+    let mut corpus = Corpus::synthetic(m.vocab, 16384, 9);
+    let mut first = None;
+    let mut last = 0f32;
+    for _ in 0..25 {
+        let tokens = corpus.next_batch(m.batch, m.seq + 1);
+        last = runner.step(&tokens).unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.85,
+        "25 steps should cut loss ≥15%: {first} → {last}"
+    );
+    assert_eq!(runner.step_count, 25);
+}
+
+#[test]
+fn gpt2_eval_is_side_effect_free() {
+    let Some(rt) = runtime() else { return };
+    let runner = Gpt2Runner::load(&rt, "tiny").unwrap();
+    let m = runner.meta.clone();
+    let mut corpus = Corpus::synthetic(m.vocab, 8192, 5);
+    let tokens = corpus.next_batch(m.batch, m.seq + 1);
+    let a = runner.eval_loss(&tokens).unwrap();
+    let b = runner.eval_loss(&tokens).unwrap();
+    assert_eq!(a, b, "eval must not mutate parameters");
+}
