@@ -5,10 +5,12 @@
 
 use std::time::Instant;
 
-use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::autodiff::{
+    apply_checkpointing, build_training_graph, stored_activation_bytes, TrainOptions,
+};
 use monet::dse::{evaluate_point, DesignPoint, SweepConfig};
 use monet::fusion::{enumerate_candidates, fuse, fuse_greedy, FusionConstraints};
-use monet::ga::{CheckpointProblem, GaConfig};
+use monet::ga::{nsga2, CheckpointProblem, GaConfig, Genome, Objectives};
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
 use monet::scheduler::{schedule, Partition};
@@ -116,6 +118,97 @@ fn main() {
             ..Default::default()
         });
     });
+
+    // ---- GA evaluation throughput: uncached-serial vs memoized/parallel
+    // (the headline number of the memoized-evaluation PR; trajectory
+    // tracked across PRs via BENCH_eval.json) ----
+    println!();
+    let ga_pop = 32usize;
+    let ga_gens = 20usize;
+    let evals = (ga_pop * (ga_gens + 1)) as f64;
+    // fresh problem so the cold run starts with genuinely empty caches
+    // (the micro-benches above already warmed `problem`'s)
+    let ga_problem =
+        CheckpointProblem::new(&tg, &accel, MappingConfig::edge_tpu_default(), FusionConstraints::default());
+    let width = ga_problem.candidates.len();
+
+    // serial baseline: full checkpoint→fuse→schedule per genome with no
+    // cost cache and no transform cache, one worker. (nsga2's built-in
+    // genome memo still dedupes exact-duplicate genomes — it cannot be
+    // disabled — so this baseline is *faster* than the true pre-memoization
+    // pipeline and the speedups below are conservative.)
+    let eval_uncached = |genome: &Genome| -> Objectives {
+        let plan = ga_problem.genome_to_plan(genome);
+        let g = apply_checkpointing(&tg, &plan);
+        let part = fuse_greedy(&g, &FusionConstraints::default());
+        let r = schedule(&g, &part, &accel, &mapping);
+        let stored = stored_activation_bytes(&tg, &plan) / 2;
+        vec![r.latency_cycles, r.energy_pj, stored as f64]
+    };
+    // memoized path: the CheckpointProblem transform + cost caches
+    let eval_cached = |genome: &Genome| -> Objectives {
+        let plan = ga_problem.genome_to_plan(genome);
+        let (lat, en, mem) = ga_problem.evaluate(&plan);
+        vec![lat, en, mem as f64]
+    };
+    let serial_cfg =
+        GaConfig { population: ga_pop, generations: ga_gens, workers: 1, ..Default::default() };
+    let par_cfg = GaConfig { population: ga_pop, generations: ga_gens, ..Default::default() };
+
+    let t0 = Instant::now();
+    let base_front = nsga2(width, &serial_cfg, &eval_uncached);
+    let base_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let cold_front = nsga2(width, &par_cfg, &eval_cached);
+    let cold_secs = t1.elapsed().as_secs_f64();
+
+    // warm: caches primed by the cold run, same seed → same genome stream
+    let t2 = Instant::now();
+    let warm_front = nsga2(width, &par_cfg, &eval_cached);
+    let warm_secs = t2.elapsed().as_secs_f64();
+
+    let key = |f: &[monet::ga::Individual]| -> Vec<(Genome, Vec<u64>)> {
+        f.iter()
+            .map(|i| {
+                (i.genome.clone(), i.objectives.iter().map(|o| o.to_bits()).collect())
+            })
+            .collect()
+    };
+    let fronts_identical = key(&base_front) == key(&cold_front) && key(&base_front) == key(&warm_front);
+    assert!(fronts_identical, "memoized GA diverged from the serial uncached-pipeline baseline");
+
+    let stats = ga_problem.cache_stats();
+    for (name, secs) in [
+        ("ga-eval: pop32x20gens serial, pipeline uncached", base_secs),
+        ("ga-eval: pop32x20gens cold caches, parallel", cold_secs),
+        ("ga-eval: pop32x20gens warm caches, parallel", warm_secs),
+    ] {
+        println!("{name:<52} {:>9.2} ms   ({:.0} genomes/s)", secs * 1e3, evals / secs);
+    }
+    println!(
+        "    -> speedup vs baseline: cold {:.1}x, warm {:.1}x; cache {} hits / {} misses; fronts identical: {}",
+        base_secs / cold_secs,
+        base_secs / warm_secs,
+        stats.hits,
+        stats.misses,
+        fronts_identical
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"ga_eval_throughput\",\n  \"workload\": \"resnet18(1,32,10) training, Adam, EdgeTPU baseline\",\n  \"baseline\": \"serial, pipeline uncached (nsga2 genome memo active -> speedups are conservative)\",\n  \"population\": {ga_pop},\n  \"generations\": {ga_gens},\n  \"evaluations\": {},\n  \"genomes_per_sec_baseline\": {:.2},\n  \"genomes_per_sec_cold_cache\": {:.2},\n  \"genomes_per_sec_warm_cache\": {:.2},\n  \"speedup_cold\": {:.3},\n  \"speedup_warm\": {:.3},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"fronts_identical\": {}\n}}\n",
+        evals as u64,
+        evals / base_secs,
+        evals / cold_secs,
+        evals / warm_secs,
+        base_secs / cold_secs,
+        base_secs / warm_secs,
+        stats.hits,
+        stats.misses,
+        fronts_identical
+    );
+    std::fs::write("BENCH_eval.json", &json).expect("writing BENCH_eval.json");
+    println!("    -> BENCH_eval.json written");
 
     println!("\nbench_scheduler done");
 }

@@ -113,8 +113,14 @@ pub fn apply_checkpointing(tg: &TrainingGraph, plan: &CheckpointPlan) -> Graph {
         g.nodes[c].origin = Some(node.origin.unwrap_or(n));
         clone_map.insert(n, c);
     }
-    // internal + boundary edges of the closure
-    for &n in closure.iter() {
+    // internal + boundary edges of the closure, in deterministic node
+    // order: HashSet iteration order varies per instance, and edge
+    // insertion order is observable downstream (fuse_greedy scans
+    // predecessors in edge order) — identical plans must yield identical
+    // graphs for the memoized evaluation engine to be reproducible
+    let mut closure_sorted: Vec<NodeId> = closure.iter().copied().collect();
+    closure_sorted.sort_unstable();
+    for &n in &closure_sorted {
         for e in src.in_edges(n) {
             if e.is_activation {
                 continue; // fwd→bwd edges don't drive recompute

@@ -12,7 +12,7 @@ use crate::workload::op::OpKind;
 /// fused subgraph stay in local memory (the entire point of fusion,
 /// paper §II-C2); everything else streams through DRAM or the global
 /// buffer.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub struct TensorPlacement {
     /// Input bytes arriving from local memory (fused predecessor).
     pub in_local: u64,

@@ -10,6 +10,7 @@ pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_surv
 pub use search::{front_recall, search, SearchOutcome};
 pub use space::DesignPoint;
 pub use sweep::{
-    evaluate_point_prepared, SweepPartitions,
-    evaluate_point, pareto_front, run_sweep, FusionStrategy, Mode, SweepConfig, SweepRow,
+    evaluate_point_cached, evaluate_point_prepared, SweepPartitions,
+    evaluate_point, pareto_front, run_sweep, run_sweep_stats, FusionStrategy, Mode,
+    SweepConfig, SweepRow,
 };

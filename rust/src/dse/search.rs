@@ -17,8 +17,9 @@ use std::time::Instant;
 use super::prefilter::{accel_to_cfg, graph_to_layers, select_survivors};
 use super::space::DesignPoint;
 use super::sweep::{
-    evaluate_point_prepared, pareto_front, Mode, SweepConfig, SweepPartitions, SweepRow,
+    evaluate_point_cached, pareto_front, Mode, SweepConfig, SweepPartitions, SweepRow,
 };
+use crate::eval::{CacheStats, CostCache};
 use crate::runtime::cost_kernel::{cost_eval_native, CostKernel};
 use crate::workload::graph::Graph;
 
@@ -32,6 +33,9 @@ pub struct SearchOutcome {
     pub n_survivors: usize,
     pub prefilter_secs: f64,
     pub detail_secs: f64,
+    /// Group-cost cache counters of the detailed stage (zeros with
+    /// `cfg.use_cache` off).
+    pub cache: CacheStats,
 }
 
 /// Search `points` for the best training configurations of (`fwd`,`train`).
@@ -57,15 +61,17 @@ pub fn search(
     let survivors = select_survivors(&scores, keep_frac, 8);
     let prefilter_secs = t0.elapsed().as_secs_f64();
 
-    // stage 2: detailed layer-fused scheduling on the survivors
+    // stage 2: detailed layer-fused scheduling on the survivors, sharing
+    // one group-cost memo across every survivor evaluation
     let t1 = Instant::now();
     let mut cfg = cfg.clone();
     cfg.modes = vec![Mode::Training];
     let parts = SweepPartitions::prepare(fwd, train, &cfg);
+    let cache = if cfg.use_cache { Some(CostCache::new()) } else { None };
     let mut rows: Vec<SweepRow> = survivors
         .iter()
         .flat_map(|&i| {
-            evaluate_point_prepared(i, &points[i], fwd, train, &parts, &cfg)
+            evaluate_point_cached(i, &points[i], fwd, train, &parts, &cfg, cache.as_ref())
         })
         .collect();
     rows.sort_by(|a, b| a.latency_cycles.partial_cmp(&b.latency_cycles).unwrap());
@@ -79,6 +85,7 @@ pub fn search(
         front,
         prefilter_secs,
         detail_secs,
+        cache: cache.map(|c| c.stats()).unwrap_or_default(),
     }
 }
 
@@ -135,6 +142,28 @@ mod tests {
         );
         let recall = front_recall(&pruned, &full);
         assert!(recall >= 0.5, "front recall {recall} too low");
+    }
+
+    #[test]
+    fn cache_does_not_change_search_results() {
+        let (fwd, train, points) = setup();
+        let cached = search(&points, &fwd, &train, &SweepConfig::default(), None, 0.5);
+        let plain = search(
+            &points,
+            &fwd,
+            &train,
+            &SweepConfig { use_cache: false, ..Default::default() },
+            None,
+            0.5,
+        );
+        assert!(cached.cache.hits > 0);
+        assert_eq!(plain.cache.hits, 0);
+        assert_eq!(cached.front, plain.front);
+        for (a, b) in cached.rows.iter().zip(&plain.rows) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        }
     }
 
     #[test]

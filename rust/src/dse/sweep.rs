@@ -13,9 +13,10 @@ use std::sync::mpsc;
 use std::sync::Arc;
 
 use super::space::DesignPoint;
+use crate::eval::{CacheStats, CostCache};
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::mapping::MappingConfig;
-use crate::scheduler::{schedule, Partition};
+use crate::scheduler::{schedule_with_cache, Partition};
 use crate::workload::graph::Graph;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,6 +64,10 @@ pub struct SweepConfig {
     pub fusion_constraints: FusionConstraints,
     pub modes: Vec<Mode>,
     pub workers: usize,
+    /// Share one `eval::CostCache` across the sweep's worker pool (§Perf).
+    /// `false` (the `--no-cache` escape hatch) recomputes every group cost
+    /// — results are bit-identical either way; this exists for A/B timing.
+    pub use_cache: bool,
 }
 
 impl Default for SweepConfig {
@@ -73,6 +78,7 @@ impl Default for SweepConfig {
             fusion_constraints: FusionConstraints::default(),
             modes: vec![Mode::Inference, Mode::Training],
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            use_cache: true,
         }
     }
 }
@@ -119,6 +125,22 @@ pub fn evaluate_point_prepared(
     parts: &SweepPartitions,
     cfg: &SweepConfig,
 ) -> Vec<SweepRow> {
+    evaluate_point_cached(index, point, fwd, train, parts, cfg, None)
+}
+
+/// Hottest-path variant: precomputed partitions plus a shared group-cost
+/// memo. `run_sweep`/`search` pass one `CostCache` for the whole batch, so
+/// design points sharing core classes (and the many repeated layer shapes
+/// inside one graph) compute each unique group cost once.
+pub fn evaluate_point_cached(
+    index: usize,
+    point: &DesignPoint,
+    fwd: &Graph,
+    train: &Graph,
+    parts: &SweepPartitions,
+    cfg: &SweepConfig,
+    cache: Option<&CostCache>,
+) -> Vec<SweepRow> {
     let accel = point.build();
     cfg.modes
         .iter()
@@ -127,7 +149,7 @@ pub fn evaluate_point_prepared(
                 Mode::Inference => (fwd, &parts.fwd),
                 Mode::Training => (train, &parts.train),
             };
-            let r = schedule(g, partition, &accel, &cfg.mapping);
+            let r = schedule_with_cache(g, partition, &accel, &cfg.mapping, cache);
             SweepRow {
                 index,
                 label: point.label(),
@@ -150,17 +172,33 @@ pub fn run_sweep(
     fwd: &Graph,
     train: &Graph,
     cfg: &SweepConfig,
-    mut progress: impl FnMut(usize, usize),
+    progress: impl FnMut(usize, usize),
 ) -> Vec<SweepRow> {
+    run_sweep_stats(points, fwd, train, cfg, progress).0
+}
+
+/// [`run_sweep`] plus the sweep-level cache counters (hits/misses/entries
+/// of the one `CostCache` shared across the worker pool; zeros when
+/// `cfg.use_cache` is off).
+pub fn run_sweep_stats(
+    points: &[DesignPoint],
+    fwd: &Graph,
+    train: &Graph,
+    cfg: &SweepConfig,
+    mut progress: impl FnMut(usize, usize),
+) -> (Vec<SweepRow>, CacheStats) {
     let n = points.len();
     let next = Arc::new(AtomicUsize::new(0));
     let (tx, rx) = mpsc::channel::<Vec<SweepRow>>();
-    // fusion is accelerator-independent: solve once, share across workers
+    // fusion is accelerator-independent: solve once, share across workers;
+    // likewise one group-cost memo serves the whole pool
     let parts = SweepPartitions::prepare(fwd, train, cfg);
     let parts = &parts;
+    let cache = if cfg.use_cache { Some(CostCache::new()) } else { None };
+    let cache_ref = cache.as_ref();
 
     let workers = cfg.workers.max(1).min(n.max(1));
-    std::thread::scope(|scope| {
+    let rows = std::thread::scope(|scope| {
         for _ in 0..workers {
             let next = Arc::clone(&next);
             let tx = tx.clone();
@@ -170,8 +208,9 @@ pub fn run_sweep(
                 if i >= n {
                     break;
                 }
-                let rows =
-                    evaluate_point_prepared(i, &points[i], fwd, train, parts, &cfg);
+                let rows = evaluate_point_cached(
+                    i, &points[i], fwd, train, parts, &cfg, cache_ref,
+                );
                 if tx.send(rows).is_err() {
                     break;
                 }
@@ -188,24 +227,55 @@ pub fn run_sweep(
         }
         all.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
         all
-    })
+    });
+    let stats = cache.map(|c| c.stats()).unwrap_or_default();
+    (rows, stats)
 }
 
-/// Pareto front over (latency, energy): indices of non-dominated rows.
+/// Pareto front over (latency, energy): indices of non-dominated rows, in
+/// ascending index order.
+///
+/// Sort-then-scan, O(n log n) (§Perf — the previous all-pairs check was
+/// O(n²) and ran on every sweep's output and every GA front). Semantics
+/// are unchanged: a row survives iff no other row is ≤ in both objectives
+/// and < in at least one; exact duplicates of a surviving point all
+/// survive (neither dominates the other).
 pub fn pareto_front(rows: &[SweepRow]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..rows.len()).collect();
+    idx.sort_by(|&a, &b| {
+        rows[a]
+            .latency_cycles
+            .partial_cmp(&rows[b].latency_cycles)
+            .unwrap()
+            .then(rows[a].energy_pj.partial_cmp(&rows[b].energy_pj).unwrap())
+    });
     let mut front = vec![];
-    'outer: for (i, r) in rows.iter().enumerate() {
-        for (j, o) in rows.iter().enumerate() {
-            if i != j
-                && o.latency_cycles <= r.latency_cycles
-                && o.energy_pj <= r.energy_pj
-                && (o.latency_cycles < r.latency_cycles || o.energy_pj < r.energy_pj)
-            {
-                continue 'outer;
+    // min energy among rows with strictly smaller latency
+    let mut best_en = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        // latency-tie group [i, j), sorted by energy within it
+        let mut j = i + 1;
+        while j < idx.len()
+            && rows[idx[j]].latency_cycles == rows[idx[i]].latency_cycles
+        {
+            j += 1;
+        }
+        let group_min = rows[idx[i]].energy_pj;
+        if group_min < best_en {
+            // survivors: the group's energy minimizers (duplicates included)
+            for &k in &idx[i..j] {
+                if rows[k].energy_pj == group_min {
+                    front.push(k);
+                } else {
+                    break;
+                }
             }
         }
-        front.push(i);
+        best_en = best_en.min(group_min);
+        i = j;
     }
+    front.sort_unstable();
     front
 }
 
@@ -272,6 +342,95 @@ mod tests {
             assert_eq!(a.label, b.label);
             assert_eq!(a.latency_cycles, b.latency_cycles);
             assert_eq!(a.energy_pj, b.energy_pj);
+        }
+    }
+
+    /// The retired O(n²) implementation, kept as the semantic oracle.
+    fn pareto_front_all_pairs(rows: &[SweepRow]) -> Vec<usize> {
+        let mut front = vec![];
+        'outer: for (i, r) in rows.iter().enumerate() {
+            for (j, o) in rows.iter().enumerate() {
+                if i != j
+                    && o.latency_cycles <= r.latency_cycles
+                    && o.energy_pj <= r.energy_pj
+                    && (o.latency_cycles < r.latency_cycles || o.energy_pj < r.energy_pj)
+                {
+                    continue 'outer;
+                }
+            }
+            front.push(i);
+        }
+        front
+    }
+
+    fn synth_row(latency_cycles: f64, energy_pj: f64) -> SweepRow {
+        SweepRow {
+            index: 0,
+            label: String::new(),
+            mode: Mode::Inference,
+            total_macs: 0,
+            color_axis: 0.0,
+            latency_cycles,
+            energy_pj,
+            peak_dram_bytes: 0,
+            utilization: 0.0,
+        }
+    }
+
+    #[test]
+    fn pareto_front_matches_all_pairs_oracle() {
+        // crafted ties, duplicates, and a dominated diagonal
+        let crafted: Vec<SweepRow> = [
+            (1.0, 9.0),
+            (2.0, 7.0),
+            (2.0, 7.0), // duplicate of a front point: both survive
+            (2.0, 8.0), // same latency, worse energy
+            (3.0, 7.0), // dominated by (2.0, 7.0)
+            (4.0, 4.0),
+            (4.0, 9.0),
+            (5.0, 4.0), // dominated (ties energy, worse latency)
+            (6.0, 1.0),
+        ]
+        .iter()
+        .map(|&(l, e)| synth_row(l, e))
+        .collect();
+        assert_eq!(pareto_front(&crafted), pareto_front_all_pairs(&crafted));
+        assert_eq!(pareto_front(&crafted), vec![0, 1, 2, 5, 8]);
+        assert!(pareto_front(&[]).is_empty());
+
+        // and on real sweep output
+        let (fwd, train) = graphs();
+        let points = DesignPoint::edge_space(800);
+        let rows = run_sweep(&points, &fwd, &train, &SweepConfig::default(), |_, _| {});
+        assert_eq!(pareto_front(&rows), pareto_front_all_pairs(&rows));
+    }
+
+    #[test]
+    fn cached_and_uncached_sweeps_agree_bitwise() {
+        let (fwd, train) = graphs();
+        let points = DesignPoint::edge_space(1200);
+        let (cached, stats) = run_sweep_stats(
+            &points,
+            &fwd,
+            &train,
+            &SweepConfig { workers: 4, use_cache: true, ..Default::default() },
+            |_, _| {},
+        );
+        let (plain, no_stats) = run_sweep_stats(
+            &points,
+            &fwd,
+            &train,
+            &SweepConfig { workers: 4, use_cache: false, ..Default::default() },
+            |_, _| {},
+        );
+        assert!(stats.hits > 0, "shared cache never hit");
+        assert_eq!(no_stats, CacheStats::default());
+        assert_eq!(cached.len(), plain.len());
+        for (a, b) in cached.iter().zip(&plain) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.peak_dram_bytes, b.peak_dram_bytes);
         }
     }
 

@@ -1,0 +1,253 @@
+//! The shared group-cost cache: a sharded, thread-safe map from the
+//! 128-bit structural key of a `group_cost` invocation to its `NodeCost`.
+//!
+//! ## Key soundness
+//!
+//! A cache entry may be reused wherever a fresh `group_cost` call would
+//! return the same value, so the key must cover *every* input the
+//! computation reads — and `group_cost`/`node_cost` are deliberately kept
+//! pure over exactly these (see `eval` module docs for what they may NOT
+//! read):
+//!
+//! * per node of the group: the op's structural identity
+//!   ([`crate::workload::op::OpKind::structural_hash`]) and its
+//!   [`crate::cost::TensorPlacement`] (operand byte counts + output
+//!   placement flags, which also encode whether the HDA has a global
+//!   buffer);
+//! * the executing core's cost-relevant fields: dataflow geometry, local
+//!   memory size, on-chip bandwidth (name/id are cosmetic; the register
+//!   file is not read by the cost model) — i.e. the core-*class*
+//!   representative, the same equivalence `core_classes` uses;
+//! * the gang width (tensor parallelism);
+//! * the schedule-wide [`crate::cost::MemEnv`] bandwidths/energies and the
+//!   graph's element width.
+//!
+//! Keys are 128-bit structural hashes (two independently-seeded SipHash
+//! streams); at the ~1e6-entry scale of a full Table II sweep the
+//! collision probability is ~1e-26, far below any bit-level concern.
+//!
+//! ## Concurrency
+//!
+//! The map is sharded 16 ways under `std::sync::RwLock` (std-only — no
+//! external concurrent-map dependency). Readers proceed in parallel;
+//! a miss computes outside any lock and races at worst duplicate the
+//! (pure) computation, never corrupt it.
+
+use std::collections::HashMap;
+use std::hash::Hasher;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::cost::NodeCost;
+use crate::util::rng::splitmix64 as mix64;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Two differently-seeded, differently-mixed hash streams receiving
+/// identical input, yielding a 128-bit structural key (self-contained —
+/// std's `DefaultHasher` is both slower and process-seeded). The byte loop
+/// is FNV-1a; `finish128` applies a splitmix64 finalizer per stream for
+/// avalanche. `Clone` lets callers checkpoint a key prefix (the
+/// schedule-wide environment, then per-group content) and fork it cheaply
+/// for each (core class × gang width) candidate.
+#[derive(Clone)]
+pub struct StructuralHasher {
+    lo: u64,
+    hi: u64,
+}
+
+impl StructuralHasher {
+    pub fn new() -> Self {
+        // distinct stream seeds — everything written afterwards is shared
+        StructuralHasher { lo: FNV_OFFSET, hi: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    /// The 128-bit key accumulated so far (does not consume the hasher).
+    pub fn finish128(&self) -> u128 {
+        ((mix64(self.hi) as u128) << 64) | mix64(self.lo) as u128
+    }
+}
+
+impl Default for StructuralHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher for StructuralHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.lo = (self.lo ^ b as u64).wrapping_mul(FNV_PRIME);
+            // second stream: same input, different seed AND a per-byte
+            // rotation, so the two 64-bit digests fail independently
+            self.hi = ((self.hi ^ b as u64).wrapping_mul(FNV_PRIME)).rotate_left(29);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        mix64(self.lo)
+    }
+}
+
+const N_SHARDS: usize = 16;
+
+/// Aggregate counters, readable at any time (e.g. after a sweep).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Sharded memo table for group costs. One instance is shared across a
+/// whole sweep / GA run; dropping it discards the memory.
+pub struct CostCache {
+    shards: [RwLock<HashMap<u128, NodeCost>>; N_SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        CostCache {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u128) -> &RwLock<HashMap<u128, NodeCost>> {
+        // low bits feed the in-shard HashMap; take shard bits from the top
+        &self.shards[(key >> 124) as usize % N_SHARDS]
+    }
+
+    /// Return the memoized cost for `key`, computing (and storing) it via
+    /// `compute` on a miss. `compute` must be a pure function of the data
+    /// hashed into `key` — see the module docs.
+    pub fn get_or_compute(&self, key: u128, compute: impl FnOnce() -> NodeCost) -> NodeCost {
+        let shard = self.shard(key);
+        if let Some(c) = shard.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *c;
+        }
+        // compute outside the lock: concurrent misses on one key duplicate
+        // a pure computation instead of serializing every worker
+        let cost = compute();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard.write().unwrap().insert(key, cost);
+        cost
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.read().unwrap().len()).sum(),
+        }
+    }
+
+    /// Reset counters (entries stay). Benches use this to separate the
+    /// cold-fill phase from warm-path measurement.
+    pub fn reset_counters(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::Hash;
+
+    #[test]
+    fn hasher_prefix_forking_is_consistent() {
+        let mut base = StructuralHasher::new();
+        42u64.hash(&mut base);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        7u64.hash(&mut a);
+        7u64.hash(&mut b);
+        assert_eq!(a.finish128(), b.finish128());
+        let mut c = base.clone();
+        8u64.hash(&mut c);
+        assert_ne!(a.finish128(), c.finish128());
+    }
+
+    #[test]
+    fn lo_and_hi_streams_differ() {
+        let mut h = StructuralHasher::new();
+        1234u64.hash(&mut h);
+        let k = h.finish128();
+        assert_ne!((k >> 64) as u64, k as u64);
+    }
+
+    #[test]
+    fn cache_hits_after_first_compute() {
+        let cache = CostCache::new();
+        let mut calls = 0;
+        for _ in 0..3 {
+            let c = cache.get_or_compute(99, || {
+                calls += 1;
+                NodeCost { cycles: 5.0, ..Default::default() }
+            });
+            assert_eq!(c.cycles, 5.0);
+        }
+        assert_eq!(calls, 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_entries() {
+        let cache = CostCache::new();
+        for k in 0..100u128 {
+            // spread keys across shards, including the top bits
+            cache.get_or_compute(k << 120 | k, || NodeCost {
+                cycles: k as f64,
+                ..Default::default()
+            });
+        }
+        assert_eq!(cache.stats().entries, 100);
+        let c = cache.get_or_compute(5u128 << 120 | 5, || unreachable!());
+        assert_eq!(c.cycles, 5.0);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe_and_consistent() {
+        let cache = CostCache::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for k in 0..256u128 {
+                        let c = cache.get_or_compute(k, || NodeCost {
+                            cycles: k as f64,
+                            ..Default::default()
+                        });
+                        assert_eq!(c.cycles, k as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.stats().entries, 256);
+    }
+}

@@ -1,0 +1,139 @@
+//! Memoized, parallel evaluation engine (DESIGN.md §Perf): the shared
+//! fast path under every high-volume caller of `schedule()` — DSE sweeps
+//! (`dse::sweep`), the staged search (`dse::search`) and the NSGA-II
+//! checkpointing GA (`ga::checkpoint_opt`).
+//!
+//! The observation (TRIM, arXiv 2105.08239; TBD, arXiv 1803.06905): these
+//! workloads evaluate thousands of design points / genomes, but training
+//! graphs are dominated by a small set of repeated layer shapes and the
+//! searched spaces share core classes — so the expensive inner quantity,
+//! the cost of one fused group on one core class at one gang width, is
+//! recomputed orders of magnitude more often than it changes. This module
+//! memoizes it.
+//!
+//! ## The soundness contract
+//!
+//! Caching `group_cost` is sound because `group_cost`/`node_cost` are pure
+//! functions of: the group's op structures + tensor placements, the
+//! core-class representative's cost-relevant fields, the gang width, and
+//! the schedule-wide memory environment (all hashed into the key — see
+//! [`cost_cache`] for the exact list).
+//!
+//! What `group_cost` may **NOT** read (and anyone extending the cost model
+//! must keep it that way, or widen the key in `scheduler::engine`):
+//!
+//! * schedule-time mutable state: core free times, group ready times,
+//!   accumulated energy/traffic, the event timeline;
+//! * identity rather than structure: node ids, group ids, node names,
+//!   core ids/names, partition layout beyond the group's own placements;
+//! * graph topology beyond what `group_placements` already folded into
+//!   the per-node `TensorPlacement`s;
+//! * training phase (`Phase` drives reporting attribution in the
+//!   scheduler, never cost);
+//! * global mutable configuration of any kind.
+//!
+//! Violating the contract shows up as cached-vs-uncached divergence; the
+//! `eval_cache` integration tests pin bit-identity across ResNet-18 and
+//! GPT-2 training graphs to catch exactly that.
+
+pub mod cost_cache;
+
+pub use cost_cache::{CacheStats, CostCache, StructuralHasher};
+
+use std::hash::Hash;
+
+use crate::cost::{MemEnv, TensorPlacement};
+use crate::hardware::core::Core;
+use crate::workload::op::OpKind;
+
+/// Hash the schedule-wide environment: every `MemEnv` field plus the
+/// graph's element width. Computed once per `schedule()` call.
+pub fn hash_env(h: &mut StructuralHasher, env: &MemEnv, elem_bytes: u64) {
+    env.offchip_bw.to_bits().hash(h);
+    env.global_bw.to_bits().hash(h);
+    env.global_energy_pj.to_bits().hash(h);
+    env.link_bw.to_bits().hash(h);
+    env.link_energy_pj.to_bits().hash(h);
+    elem_bytes.hash(h);
+}
+
+/// Hash one group member: op structure + operand placement.
+pub fn hash_group_node(h: &mut StructuralHasher, kind: &OpKind, place: &TensorPlacement) {
+    kind.structural_hash(h);
+    place.hash(h);
+}
+
+/// Hash the cost-relevant fields of a core-class representative. Name and
+/// id are cosmetic; `regfile_bytes` is not read by the cost model. This is
+/// deliberately the same field set `core_classes` keys interchangeability
+/// on, so two identical PEs share cache entries.
+pub fn hash_core_class(h: &mut StructuralHasher, core: &Core) {
+    core.dataflow.hash(h);
+    core.local_mem_bytes.hash(h);
+    core.onchip_bw.to_bits().hash(h);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::core::Dataflow;
+    use crate::workload::op::{EltwiseKind, GemmSpec};
+
+    fn env() -> MemEnv {
+        MemEnv {
+            offchip_bw: 64.0,
+            global_bw: 0.0,
+            global_energy_pj: 2.0,
+            link_bw: 256.0,
+            link_energy_pj: 1.8,
+        }
+    }
+
+    fn key_of(f: impl FnOnce(&mut StructuralHasher)) -> u128 {
+        let mut h = StructuralHasher::new();
+        f(&mut h);
+        h.finish128()
+    }
+
+    #[test]
+    fn env_hash_separates_bandwidths() {
+        let a = key_of(|h| hash_env(h, &env(), 4));
+        let b = key_of(|h| hash_env(h, &MemEnv { offchip_bw: 65.0, ..env() }, 4));
+        let c = key_of(|h| hash_env(h, &env(), 2));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, key_of(|h| hash_env(h, &env(), 4)));
+    }
+
+    #[test]
+    fn node_hash_separates_structure_and_placement() {
+        let g1 = OpKind::Gemm(GemmSpec { batch: 1, m: 8, n: 16, k: 32, weight_b: true });
+        let g2 = OpKind::Gemm(GemmSpec { batch: 1, m: 8, n: 16, k: 64, weight_b: true });
+        let e = OpKind::Eltwise { kind: EltwiseKind::Relu, elems: 128, arity: 1 };
+        let p0 = TensorPlacement::default();
+        let p1 = TensorPlacement { in_offchip: 64, ..Default::default() };
+        let k = |op: &OpKind, p: &TensorPlacement| key_of(|h| hash_group_node(h, op, p));
+        assert_ne!(k(&g1, &p0), k(&g2, &p0));
+        assert_ne!(k(&g1, &p0), k(&g1, &p1));
+        assert_ne!(k(&g1, &p0), k(&e, &p0));
+        assert_eq!(k(&g1, &p1), k(&g1, &p1.clone()));
+    }
+
+    #[test]
+    fn core_class_hash_ignores_identity_fields() {
+        let mk = |id: usize, name: &str, regfile: u64| Core {
+            id,
+            name: name.into(),
+            dataflow: Dataflow::WeightStationary { rows: 64, cols: 4 },
+            local_mem_bytes: 2 << 20,
+            regfile_bytes: regfile,
+            onchip_bw: 128.0,
+        };
+        let a = key_of(|h| hash_core_class(h, &mk(0, "pe0", 32 << 10)));
+        let b = key_of(|h| hash_core_class(h, &mk(7, "pe7", 64 << 10)));
+        assert_eq!(a, b, "identity/regfile fields must not affect the key");
+        let mut c = mk(0, "pe0", 32 << 10);
+        c.dataflow = Dataflow::Simd { lanes: 256 };
+        assert_ne!(a, key_of(|h| hash_core_class(h, &c)));
+    }
+}

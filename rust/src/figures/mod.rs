@@ -9,7 +9,8 @@ use crate::autodiff::{
     apply_checkpointing, build_training_graph, checkpoint_candidates,
     stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
 };
-use crate::dse::{pareto_front, run_sweep, DesignPoint, Mode, SweepConfig, SweepRow};
+use crate::dse::{pareto_front, run_sweep_stats, DesignPoint, Mode, SweepConfig, SweepRow};
+use crate::eval::CacheStats;
 use crate::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
 use crate::ga::{CheckpointProblem, GaConfig};
 use crate::hardware::presets::EdgeTpuParams;
@@ -45,6 +46,9 @@ fn csv_of_sweep(path: &Path, rows: &[SweepRow]) -> std::io::Result<()> {
 
 pub struct EdgeSweep {
     pub rows: Vec<SweepRow>,
+    /// Counters of the group-cost cache shared across the sweep's worker
+    /// pool (zeros when the sweep ran with `--no-cache`).
+    pub cache: CacheStats,
 }
 
 /// Sweep the Table II space (strided) with ResNet-18 fwd + training graphs
@@ -52,6 +56,16 @@ pub struct EdgeSweep {
 /// latency) and Fig 8 (energy/latency vs total compute resource).
 pub fn fig1_fig8_edge_sweep(
     stride: usize,
+    out_dir: Option<&Path>,
+    progress: impl FnMut(usize, usize),
+) -> EdgeSweep {
+    fig1_fig8_edge_sweep_cfg(stride, true, out_dir, progress)
+}
+
+/// [`fig1_fig8_edge_sweep`] with the cache escape hatch (`--no-cache`).
+pub fn fig1_fig8_edge_sweep_cfg(
+    stride: usize,
+    use_cache: bool,
     out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
@@ -63,13 +77,15 @@ pub fn fig1_fig8_edge_sweep(
     let points = DesignPoint::edge_space(stride);
     let cfg = SweepConfig {
         mapping: MappingConfig::edge_tpu_default(),
+        use_cache,
         ..Default::default()
     };
-    let rows = run_sweep(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
+    let (rows, cache) =
+        run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
     if let Some(dir) = out_dir {
         csv_of_sweep(&dir.join("fig1_fig8_edge_sweep.csv"), &rows).unwrap();
     }
-    EdgeSweep { rows }
+    EdgeSweep { rows, cache }
 }
 
 // ---------------------------------------------------------------------------
@@ -143,6 +159,16 @@ pub fn fig9_gpt2_config() -> Gpt2Config {
 pub fn fig9_fusemax_sweep(
     stride: usize,
     out_dir: Option<&Path>,
+    progress: impl FnMut(usize, usize),
+) -> EdgeSweep {
+    fig9_fusemax_sweep_cfg(stride, true, out_dir, progress)
+}
+
+/// [`fig9_fusemax_sweep`] with the cache escape hatch (`--no-cache`).
+pub fn fig9_fusemax_sweep_cfg(
+    stride: usize,
+    use_cache: bool,
+    out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
     let fwd = gpt2(fig9_gpt2_config());
@@ -153,13 +179,15 @@ pub fn fig9_fusemax_sweep(
     let points = DesignPoint::fusemax_space(stride);
     let cfg = SweepConfig {
         mapping: MappingConfig::fusemax_default(),
+        use_cache,
         ..Default::default()
     };
-    let rows = run_sweep(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
+    let (rows, cache) =
+        run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
     if let Some(dir) = out_dir {
         csv_of_sweep(&dir.join("fig9_fusemax_sweep.csv"), &rows).unwrap();
     }
-    EdgeSweep { rows }
+    EdgeSweep { rows, cache }
 }
 
 // ---------------------------------------------------------------------------

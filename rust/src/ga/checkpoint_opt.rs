@@ -4,16 +4,21 @@
 //! layer-fused scheduling pipeline — the non-linear evaluation the MILP
 //! formulation cannot capture (§V-B1).
 
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, RwLock};
+
 use crate::autodiff::{
     apply_checkpointing, checkpoint_candidates, stored_activation_bytes, CheckpointPlan,
     TrainingGraph,
 };
+use crate::eval::{CacheStats, CostCache, StructuralHasher};
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::ga::nsga2::{nsga2, GaConfig, Genome};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
-use crate::scheduler::schedule;
-use crate::workload::graph::NodeId;
+use crate::scheduler::{schedule_with_cache, Partition};
+use crate::workload::graph::{Graph, NodeId};
 
 /// One point on the checkpointing Pareto front (Fig 12).
 #[derive(Debug, Clone)]
@@ -27,13 +32,25 @@ pub struct CheckpointSolution {
     pub memory_saving: f64,
 }
 
-/// Problem instance.
+/// Problem instance. Carries two memo layers shared by every evaluation
+/// (§Perf — NSGA-II revisits near-identical plans constantly):
+///
+/// * a *transform cache*: recompute-set hash → the checkpointed graph +
+///   greedy-fused partition, skipping `apply_checkpointing`/`fuse_greedy`
+///   for plans seen in earlier generations;
+/// * a shared `eval::CostCache` threaded through `schedule_with_cache`, so
+///   fused groups untouched by a plan (the vast majority — a plan rewires
+///   a handful of activations) hit costs computed by previous plans.
+///
+/// Both are behind locks: `nsga2` fans evaluations over worker threads.
 pub struct CheckpointProblem<'a> {
     pub tg: &'a TrainingGraph,
     pub accel: &'a Accelerator,
     pub mapping: MappingConfig,
     pub fusion: FusionConstraints,
     pub candidates: Vec<NodeId>,
+    cost_cache: CostCache,
+    transform_cache: RwLock<HashMap<u128, Arc<(Graph, Partition)>>>,
 }
 
 impl<'a> CheckpointProblem<'a> {
@@ -44,7 +61,57 @@ impl<'a> CheckpointProblem<'a> {
         fusion: FusionConstraints,
     ) -> Self {
         let candidates = checkpoint_candidates(tg);
-        CheckpointProblem { tg, accel, mapping, fusion, candidates }
+        CheckpointProblem {
+            tg,
+            accel,
+            mapping,
+            fusion,
+            candidates,
+            cost_cache: CostCache::new(),
+            transform_cache: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Group-cost cache counters (hit rate of the shared `CostCache`).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cost_cache.stats()
+    }
+
+    /// Structural key of a plan: the sorted recompute set. Plans with equal
+    /// keys produce identical transformed graphs (`apply_checkpointing` is
+    /// deterministic in its inputs).
+    fn plan_key(plan: &CheckpointPlan) -> u128 {
+        let mut nodes: Vec<NodeId> = plan.recompute.iter().copied().collect();
+        nodes.sort_unstable();
+        let mut h = StructuralHasher::new();
+        nodes.hash(&mut h);
+        h.finish128()
+    }
+
+    /// Upper bound on retained transforms. Unlike `CostCache` (small,
+    /// fixed-size `NodeCost` entries), each entry here is a whole cloned
+    /// graph + partition, so an unbounded map could reach GBs on a
+    /// long-running GA over a large model. When full, the map is cleared
+    /// and refilled — recent (converged, frequently-revisited) plans
+    /// re-enter immediately; results are unaffected either way.
+    const TRANSFORM_CACHE_CAP: usize = 1024;
+
+    /// Checkpoint-transform + greedy fusion for `plan`, memoized.
+    fn transformed(&self, plan: &CheckpointPlan) -> Arc<(Graph, Partition)> {
+        let key = Self::plan_key(plan);
+        if let Some(gp) = self.transform_cache.read().unwrap().get(&key) {
+            return Arc::clone(gp);
+        }
+        // compute outside the write lock; a racing duplicate is identical
+        // (the transform is deterministic) and first-insert wins
+        let g = apply_checkpointing(self.tg, plan);
+        let partition = fuse_greedy(&g, &self.fusion);
+        let gp = Arc::new((g, partition));
+        let mut cache = self.transform_cache.write().unwrap();
+        if cache.len() >= Self::TRANSFORM_CACHE_CAP {
+            cache.clear();
+        }
+        Arc::clone(cache.entry(key).or_insert(gp))
     }
 
     pub fn genome_to_plan(&self, genome: &Genome) -> CheckpointPlan {
@@ -60,12 +127,13 @@ impl<'a> CheckpointProblem<'a> {
     }
 
     /// Evaluate one plan through the full pipeline: checkpoint transform →
-    /// (greedy) fusion → layer-fused schedule. Returns (latency, energy,
-    /// stored FP16 bytes).
+    /// (greedy) fusion → layer-fused schedule, with both memo layers
+    /// engaged. Returns (latency, energy, stored FP16 bytes) — bit-exactly
+    /// what the uncached pipeline returns.
     pub fn evaluate(&self, plan: &CheckpointPlan) -> (f64, f64, u64) {
-        let g = apply_checkpointing(self.tg, plan);
-        let partition = fuse_greedy(&g, &self.fusion);
-        let r = schedule(&g, &partition, self.accel, &self.mapping);
+        let gp = self.transformed(plan);
+        let (g, partition) = (&gp.0, &gp.1);
+        let r = schedule_with_cache(g, partition, self.accel, &self.mapping, Some(&self.cost_cache));
         // paper §V-B2: memory metric assumes FP16 storage (half of our
         // FP32 graph bytes)
         let stored = stored_activation_bytes(self.tg, plan) / 2;
@@ -147,6 +215,27 @@ mod tests {
         let all_true = p.evaluate(&p.genome_to_plan(&vec![true; p.candidates.len()]));
         assert!(all_true.2 < all_false.2, "memory must drop");
         assert!(all_true.0 >= all_false.0 * 0.99, "latency should not improve much");
+    }
+
+    #[test]
+    fn evaluation_is_memoized_and_stable() {
+        let (tg, accel) = problem_parts();
+        let p = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let genome: Vec<bool> = (0..p.candidates.len()).map(|i| i % 2 == 0).collect();
+        let plan = p.genome_to_plan(&genome);
+        let a = p.evaluate(&plan);
+        let b = p.evaluate(&plan);
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+        assert_eq!(a.2, b.2);
+        let s = p.cache_stats();
+        // the second evaluation reuses the transform and every group cost
+        assert!(s.hits > 0, "cost cache never hit: {s:?}");
     }
 
     #[test]

@@ -3,6 +3,18 @@
 //! non-dominated sorting, diversity via crowding distance, binary
 //! tournament selection, uniform crossover and bit-flip mutation over
 //! boolean genomes. All objectives are minimized.
+//!
+//! §Perf (the memoized-evaluation PR): objective evaluation is the GA's
+//! entire cost — each call runs the full checkpoint→fuse→schedule pipeline
+//! — so (a) each generation's genomes are generated first and evaluated as
+//! a batch fanned out over `cfg.workers` scoped threads, and (b) a
+//! genome→objectives memo skips re-evaluating duplicate genomes, which
+//! dominate once the population converges. Both are invisible in the
+//! results: `eval` must be pure (`Fn + Sync`), genomes are produced by the
+//! same RNG stream as the serial implementation, and results are assigned
+//! by index — the outcome is bit-identical for any worker count.
+
+use std::collections::{HashMap, HashSet};
 
 use crate::util::rng::Rng;
 
@@ -107,6 +119,9 @@ pub struct GaConfig {
     pub crossover_p: f64,
     pub mutation_p: f64,
     pub seed: u64,
+    /// Threads for objective evaluation (1 = serial). The returned front is
+    /// identical for every value — parallelism only changes wall-clock.
+    pub workers: usize,
 }
 
 impl Default for GaConfig {
@@ -117,34 +132,85 @@ impl Default for GaConfig {
             crossover_p: 0.9,
             mutation_p: 0.02,
             seed: 0xACAC,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         }
     }
 }
 
+/// Turn a batch of genomes into ranked-zero individuals, evaluating only
+/// genomes absent from `memo` (first occurrence wins within the batch) and
+/// fanning fresh evaluations over `workers` scoped threads. Order of the
+/// returned individuals matches `genomes`; the memo makes duplicate
+/// genomes — common once the population converges — cost one lookup.
+fn evaluate_batch(
+    genomes: Vec<Genome>,
+    eval: &(impl Fn(&Genome) -> Objectives + Sync),
+    memo: &mut HashMap<Genome, Objectives>,
+    workers: usize,
+) -> Vec<Individual> {
+    let mut need: Vec<Genome> = vec![];
+    {
+        let mut pending: HashSet<&Genome> = HashSet::new();
+        for g in &genomes {
+            if !memo.contains_key(g) && pending.insert(g) {
+                need.push(g.clone());
+            }
+        }
+    }
+
+    let fresh: Vec<Objectives> = if workers <= 1 || need.len() <= 1 {
+        need.iter().map(eval).collect()
+    } else {
+        let chunk = need.len().div_ceil(workers.min(need.len()));
+        let mut out: Vec<Objectives> = Vec::with_capacity(need.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = need
+                .chunks(chunk)
+                .map(|gs| scope.spawn(move || gs.iter().map(eval).collect::<Vec<_>>()))
+                .collect();
+            for h in handles {
+                out.extend(h.join().expect("nsga2 evaluation worker panicked"));
+            }
+        });
+        out
+    };
+    for (g, o) in need.into_iter().zip(fresh) {
+        memo.insert(g, o);
+    }
+
+    genomes
+        .into_iter()
+        .map(|genome| {
+            let objectives = memo[&genome].clone();
+            Individual { genome, objectives, rank: 0, crowding: 0.0 }
+        })
+        .collect()
+}
+
 /// Run NSGA-II over boolean genomes of width `width`; `eval` maps a genome
-/// to its (minimized) objective vector. Returns the final first front,
-/// deduplicated by genome.
+/// to its (minimized) objective vector and must be a *pure* function of the
+/// genome (it is memoized and may run on worker threads). Returns the final
+/// first front, deduplicated by genome.
 pub fn nsga2(
     width: usize,
     cfg: &GaConfig,
-    mut eval: impl FnMut(&Genome) -> Objectives,
+    eval: impl Fn(&Genome) -> Objectives + Sync,
 ) -> Vec<Individual> {
     let mut rng = Rng::seed_from_u64(cfg.seed);
-    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.population);
+    let mut memo: HashMap<Genome, Objectives> = HashMap::new();
     // seed with all-false (save everything = the baseline), all-true, and
     // random genomes with varying density
-    for i in 0..cfg.population {
-        let genome: Genome = match i {
+    let seeds: Vec<Genome> = (0..cfg.population)
+        .map(|i| match i {
             0 => vec![false; width],
             1 => vec![true; width],
             _ => {
                 let p = rng.range_f64(0.05, 0.8);
                 (0..width).map(|_| rng.bool(p)).collect()
             }
-        };
-        let objectives = eval(&genome);
-        pop.push(Individual { genome, objectives, rank: 0, crowding: 0.0 });
-    }
+        })
+        .collect();
+    let mut pop = evaluate_batch(seeds, &eval, &mut memo, cfg.workers);
 
     for _gen in 0..cfg.generations {
         let fronts = non_dominated_sort(&mut pop);
@@ -155,8 +221,11 @@ pub fn nsga2(
         let better = |a: &Individual, b: &Individual| -> bool {
             a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding)
         };
-        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.population);
-        while offspring.len() < cfg.population {
+        // generate the whole brood first (same RNG stream as the serial
+        // implementation — eval never touched the RNG), then evaluate it
+        // as one memoized, parallel batch
+        let mut brood: Vec<Genome> = Vec::with_capacity(cfg.population);
+        while brood.len() < cfg.population {
             let pick = |rng: &mut Rng, pop: &[Individual]| -> Genome {
                 let a = rng.usize(pop.len());
                 let b = rng.usize(pop.len());
@@ -176,9 +245,9 @@ pub fn nsga2(
                     *bit = !*bit;
                 }
             }
-            let objectives = eval(&c1);
-            offspring.push(Individual { genome: c1, objectives, rank: 0, crowding: 0.0 });
+            brood.push(c1);
         }
+        let offspring = evaluate_batch(brood, &eval, &mut memo, cfg.workers);
         // elitist survival: μ+λ, keep best `population` by (rank, crowding)
         pop.extend(offspring);
         let fronts = non_dominated_sort(&mut pop);
@@ -288,6 +357,45 @@ mod tests {
             },
         );
         assert!(front.iter().any(|i| i.objectives[0] == 0.0));
+    }
+
+    #[test]
+    fn identical_results_across_worker_counts() {
+        let run = |workers: usize| {
+            nsga2(
+                12,
+                &GaConfig { population: 16, generations: 8, workers, ..Default::default() },
+                |g| {
+                    let ones = g.iter().filter(|&&b| b).count() as f64;
+                    let runs = g.windows(2).filter(|p| p[0] != p[1]).count() as f64;
+                    vec![ones, runs]
+                },
+            )
+            .into_iter()
+            .map(|i| (i.genome, i.objectives))
+            .collect::<Vec<_>>()
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(4));
+        assert_eq!(serial, run(8));
+    }
+
+    #[test]
+    fn memo_skips_duplicate_genomes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let front = nsga2(
+            6,
+            &GaConfig { population: 16, generations: 10, workers: 1, ..Default::default() },
+            |g| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                vec![g.iter().filter(|&&b| b).count() as f64]
+            },
+        );
+        assert!(!front.is_empty());
+        // only 2^6 distinct genomes exist; without the memo the GA would
+        // issue population × (generations + 1) = 176 evaluations
+        assert!(calls.load(Ordering::Relaxed) <= 64, "memo failed: {} calls", calls.load(Ordering::Relaxed));
     }
 
     #[test]

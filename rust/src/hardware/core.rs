@@ -7,7 +7,7 @@ use crate::workload::op::{LoopDim, OpKind};
 /// The spatial dataflow a core implements — which loop dimensions its PE
 /// array binds spatially. This is the key determinant of how well an
 /// operator maps (paper §II-B, Fig 4/7).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
     /// Weights resident in the array; binds (K, C·Fx·Fy). TPU-like, great
     /// for convs/GEMMs with large channel counts (Edge TPU PEs, Fig 4).

@@ -13,6 +13,7 @@
 //! * [`mapping`] — spatial/temporal mapping + utilization
 //! * [`cost`] — analytical latency/energy/memory cost model
 //! * [`scheduler`] — layer-fused event-driven scheduler
+//! * [`eval`] — memoized, parallel evaluation engine (group-cost cache)
 //! * [`fusion`] — constraint fusion solver (BFS candidates + exact cover)
 //! * [`ga`] — NSGA-II and the checkpointing problem encoding
 //! * [`dse`] — design-space-exploration orchestrator
@@ -22,6 +23,7 @@
 
 pub mod autodiff;
 pub mod cost;
+pub mod eval;
 pub mod figures;
 pub mod fusion;
 pub mod dse;

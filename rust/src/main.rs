@@ -5,8 +5,9 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use monet::bail;
 use monet::figures;
+use monet::util::error::{Context, Result};
 use monet::ga::GaConfig;
 use monet::report::{ascii_bars, ascii_scatter, fmt_bytes};
 use monet::runtime::{Corpus, CostKernel, Gpt2Runner, Runtime};
@@ -39,7 +40,10 @@ OPTIONS
   --steps N       training steps (train; default 300)
   --config NAME   gpt2 config (train; default tiny)
   --artifacts DIR artifacts directory (default artifacts)
-  --out DIR       results directory (default results)"
+  --out DIR       results directory (default results)
+  --no-cache      disable the shared group-cost memo for the sweep commands
+                  (fig1/fig9/search/all) — A/B timing; results are
+                  bit-identical with or without it"
     );
     std::process::exit(2);
 }
@@ -53,6 +57,7 @@ struct Args {
     config: String,
     artifacts: PathBuf,
     out: PathBuf,
+    no_cache: bool,
 }
 
 fn parse_args() -> Args {
@@ -65,6 +70,7 @@ fn parse_args() -> Args {
         config: "tiny".into(),
         artifacts: "artifacts".into(),
         out: "results".into(),
+        no_cache: false,
     };
     let mut it = std::env::args().skip(1);
     match it.next() {
@@ -81,6 +87,7 @@ fn parse_args() -> Args {
             "--config" => args.config = val(),
             "--artifacts" => args.artifacts = val().into(),
             "--out" => args.out = val().into(),
+            "--no-cache" => args.no_cache = true,
             _ => usage(),
         }
     }
@@ -127,10 +134,28 @@ fn render_sweep(title: &str, rows: &[monet::dse::SweepRow]) {
     }
 }
 
+fn print_cache_stats(what: &str, s: &monet::eval::CacheStats) {
+    if s.hits + s.misses > 0 {
+        eprintln!(
+            "  {what} group-cost cache: {} hits / {} misses ({:.1}% hit rate, {} entries)",
+            s.hits,
+            s.misses,
+            s.hit_rate() * 100.0,
+            s.entries
+        );
+    }
+}
+
 fn cmd_fig1(args: &Args) -> Result<()> {
     eprintln!("Edge-TPU sweep (Table II, stride {})...", args.stride);
-    let sweep = figures::fig1_fig8_edge_sweep(args.stride, Some(&args.out), progress);
+    let sweep = figures::fig1_fig8_edge_sweep_cfg(
+        args.stride,
+        !args.no_cache,
+        Some(&args.out),
+        progress,
+    );
     render_sweep("Fig 1/8: ResNet-18 on Edge TPU", &sweep.rows);
+    print_cache_stats("sweep", &sweep.cache);
     println!("rows: {} → {}/fig1_fig8_edge_sweep.csv", sweep.rows.len(), args.out.display());
     Ok(())
 }
@@ -164,8 +189,14 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 
 fn cmd_fig9(args: &Args) -> Result<()> {
     eprintln!("FuseMax sweep (Table III, stride {})...", args.stride);
-    let sweep = figures::fig9_fusemax_sweep(args.stride, Some(&args.out), progress);
+    let sweep = figures::fig9_fusemax_sweep_cfg(
+        args.stride,
+        !args.no_cache,
+        Some(&args.out),
+        progress,
+    );
     render_sweep("Fig 9: GPT-2 on FuseMax", &sweep.rows);
+    print_cache_stats("sweep", &sweep.cache);
     println!("rows: {} → {}/fig9_fusemax_sweep.csv", sweep.rows.len(), args.out.display());
     Ok(())
 }
@@ -299,6 +330,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     let points = DesignPoint::edge_space(args.stride);
     let cfg = SweepConfig {
         mapping: MappingConfig::edge_tpu_default(),
+        use_cache: !args.no_cache,
         ..Default::default()
     };
     // the AOT Pallas kernel if artifacts exist, native twin otherwise
@@ -314,6 +346,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         "prefilter: {} → {} survivors in {:.2}s; detailed scheduling in {:.2}s",
         out.n_points, out.n_survivors, out.prefilter_secs, out.detail_secs
     );
+    print_cache_stats("search", &out.cache);
     println!("\ntop configurations (training latency):");
     println!("{:<44} {:>13} {:>13} {:>7}", "config", "latency (cyc)", "energy (pJ)", "util");
     for r in out.rows.iter().take(10) {

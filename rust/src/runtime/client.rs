@@ -4,7 +4,11 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
+
+/// Re-exported so the rest of the runtime layer names one `Literal` type
+/// whether the real client or the no-pjrt stub is compiled.
+pub use xla::Literal;
 
 /// Shared PJRT CPU client. Create once per process (client startup is
 /// ~100 ms and owns threadpools).
@@ -57,7 +61,7 @@ impl Runtime {
         let path = self.artifacts_dir.join("meta.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        crate::util::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
+        crate::util::Json::parse(&text).map_err(|e| crate::anyhow!("{e}"))
     }
 }
 

@@ -8,7 +8,7 @@
 //! and it cross-validates the full python→HLO→PJRT chain in the
 //! integration tests (runtime_roundtrip.rs).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::client::{literal_f32, Module, Runtime};
 

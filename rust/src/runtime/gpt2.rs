@@ -3,9 +3,9 @@
 //! literals owned by this struct; each `step` feeds them through the
 //! compiled HLO and swaps in the returned updated state. No python anywhere.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
-use super::client::{literal_f32, literal_i32, Module, Runtime};
+use super::client::{literal_f32, literal_i32, Literal, Module, Runtime};
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
@@ -63,9 +63,9 @@ pub struct Gpt2Runner {
     train: Module,
     eval: Module,
     pub meta: Gpt2Meta,
-    params: Vec<xla::Literal>,
-    m: Vec<xla::Literal>,
-    v: Vec<xla::Literal>,
+    params: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
     pub step_count: u64,
 }
 
@@ -83,7 +83,7 @@ impl Gpt2Runner {
             .join(format!("gpt2_{cfg_name}_init.bin"));
         let raw = std::fs::read(&init_path)
             .with_context(|| format!("reading {}", init_path.display()))?;
-        anyhow::ensure!(
+        crate::ensure!(
             raw.len() == meta.num_params * 4,
             "init blob size {} != {} params × 4",
             raw.len(),
@@ -113,13 +113,13 @@ impl Gpt2Runner {
     pub fn step(&mut self, tokens: &[i32]) -> Result<f32> {
         let b = self.meta.batch;
         let s = self.meta.seq + 1;
-        anyhow::ensure!(tokens.len() == b * s, "expected {}x{} tokens", b, s);
+        crate::ensure!(tokens.len() == b * s, "expected {}x{} tokens", b, s);
         self.step_count += 1;
 
         let n = self.params.len();
         let tok_lit = literal_i32(tokens, &[b as i64, s as i64])?;
-        let step_lit = xla::Literal::from(self.step_count as f32);
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 2);
+        let step_lit = Literal::from(self.step_count as f32);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n + 2);
         inputs.extend(self.params.iter());
         inputs.extend(self.m.iter());
         inputs.extend(self.v.iter());
@@ -127,12 +127,12 @@ impl Gpt2Runner {
         inputs.push(&step_lit);
 
         let mut out = self.train.execute_refs(&inputs)?;
-        anyhow::ensure!(out.len() == 1 + 3 * n, "train step arity {}", out.len());
+        crate::ensure!(out.len() == 1 + 3 * n, "train step arity {}", out.len());
         let loss = out[0].get_first_element::<f32>()?;
         // swap in updated state (drain from the back to avoid shifting)
-        let new_v: Vec<xla::Literal> = out.drain(1 + 2 * n..).collect();
-        let new_m: Vec<xla::Literal> = out.drain(1 + n..).collect();
-        let new_p: Vec<xla::Literal> = out.drain(1..).collect();
+        let new_v: Vec<Literal> = out.drain(1 + 2 * n..).collect();
+        let new_m: Vec<Literal> = out.drain(1 + n..).collect();
+        let new_p: Vec<Literal> = out.drain(1..).collect();
         self.params = new_p;
         self.m = new_m;
         self.v = new_v;
@@ -143,9 +143,9 @@ impl Gpt2Runner {
     pub fn eval_loss(&self, tokens: &[i32]) -> Result<f32> {
         let b = self.meta.batch;
         let s = self.meta.seq + 1;
-        anyhow::ensure!(tokens.len() == b * s, "expected {}x{} tokens", b, s);
+        crate::ensure!(tokens.len() == b * s, "expected {}x{} tokens", b, s);
         let tok_lit = literal_i32(tokens, &[b as i64, s as i64])?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.params.len() + 1);
         inputs.extend(self.params.iter());
         inputs.push(&tok_lit);
         let out = self.eval.execute_refs(&inputs)?;

@@ -3,10 +3,16 @@
 //! kernel (DSE pre-filter hot path) and the tiny-GPT-2 training step
 //! (end-to-end stack validation).
 
+#[cfg(feature = "pjrt")]
+pub mod client;
+/// Without the `pjrt` feature the client module is an API-compatible stub
+/// whose `Runtime::new` fails, routing all callers to the native twin.
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
 pub mod client;
 pub mod cost_kernel;
 pub mod gpt2;
 
-pub use client::{literal_f32, literal_i32, Module, Runtime};
+pub use client::{literal_f32, literal_i32, Literal, Module, Runtime};
 pub use cost_kernel::{cost_eval_native, CfgRow, CostKernel, CostOut, LayRow};
 pub use gpt2::{Corpus, Gpt2Meta, Gpt2Runner};

@@ -6,9 +6,11 @@
 //! consumer unless the checkpointing pass rewired them).
 
 use std::collections::HashMap;
+use std::hash::Hash;
 
 use super::partition::Partition;
 use crate::cost::{node_cost, MemEnv, NodeCost, TensorPlacement};
+use crate::eval::{hash_core_class, hash_env, hash_group_node, CostCache, StructuralHasher};
 use crate::hardware::accelerator::Accelerator;
 use crate::hardware::energy;
 use crate::mapping::{candidate_cores, dominant_op, MappingConfig};
@@ -186,6 +188,24 @@ pub fn schedule(
     accel: &Accelerator,
     cfg: &MappingConfig,
 ) -> ScheduleResult {
+    schedule_with_cache(graph, partition, accel, cfg, None)
+}
+
+/// [`schedule`] with an optional shared group-cost memo (`eval::CostCache`).
+///
+/// With `Some(cache)`, every `group_cost` evaluation is keyed on its full
+/// structural input (see `eval` module docs for the soundness contract) and
+/// looked up before being computed, so sweeps/GAs sharing one cache compute
+/// each unique (group, core class, gang, env) cost once. Results are
+/// bit-identical to the uncached path: the cache stores the exact
+/// `NodeCost` the pure computation produced.
+pub fn schedule_with_cache(
+    graph: &Graph,
+    partition: &Partition,
+    accel: &Accelerator,
+    cfg: &MappingConfig,
+    cache: Option<&CostCache>,
+) -> ScheduleResult {
     debug_assert!(partition.validate(graph).is_ok());
     let ng = partition.groups.len();
     let gof = partition.group_of(graph.len());
@@ -196,6 +216,12 @@ pub fn schedule(
         link_bw: accel.interconnect.link_bw,
         link_energy_pj: accel.interconnect.link_energy_pj + energy::E_LOCAL_PJ_PER_BYTE,
     };
+    // schedule-wide prefix of the memo key: environment + element width
+    let base_hash = cache.map(|_| {
+        let mut h = StructuralHasher::new();
+        hash_env(&mut h, &env, graph.elem_bytes);
+        h
+    });
 
     // ---- group DAG ----
     let mut indeg = vec![0usize; ng];
@@ -208,7 +234,13 @@ pub fn schedule(
                 *pair_bytes.entry((a, b)).or_insert(0) += e.bytes;
             }
         }
-        for (&(a, b), &bytes) in &pair_bytes {
+        // deterministic successor order (HashMap iteration order varies
+        // per instance, and the f64 transfer-energy accumulation below is
+        // order-sensitive at the bit level)
+        let mut pairs: Vec<((usize, usize), u64)> =
+            pair_bytes.into_iter().collect();
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        for ((a, b), bytes) in pairs {
             gsucc[a].push((b, bytes));
             indeg[b] += 1;
         }
@@ -221,7 +253,7 @@ pub fn schedule(
             .filter(|&i| indeg[i] == 0)
             .map(std::cmp::Reverse)
             .collect();
-        let mut indeg = indeg.clone();
+        // consume `indeg` in place — it has no readers after this walk
         while let Some(std::cmp::Reverse(x)) = q.pop() {
             order.push(x);
             for &(s, _) in &gsucc[x] {
@@ -235,6 +267,14 @@ pub fn schedule(
     }
 
     let classes = core_classes(accel);
+    // core id → class index, computed once per schedule (replaces the
+    // per-group `classes.iter().find(...)` linear scans)
+    let mut class_of = vec![0usize; accel.cores.len()];
+    for (ci, cl) in classes.iter().enumerate() {
+        for &c in cl {
+            class_of[c] = ci;
+        }
+    }
     let mut core_free = vec![0.0f64; accel.cores.len()];
     let mut core_busy = vec![0.0f64; accel.cores.len()];
     let mut group_finish = vec![0.0f64; ng];
@@ -260,6 +300,15 @@ pub fn schedule(
         let prefs = candidate_cores(accel, &dom);
         let places =
             group_placements(graph, group, &gof, gid, accel.global_buffer_bytes > 0);
+        // memo-key prefix for this group: ops + placements (independent of
+        // the core class / gang width candidates tried below)
+        let group_hash = base_hash.as_ref().map(|base| {
+            let mut h = base.clone();
+            for (&n, place) in group.iter().zip(&places) {
+                hash_group_node(&mut h, &graph.node(n).kind, place);
+            }
+            h
+        });
 
         // candidate placements: for each core class (take the first core of
         // the class in preference order), single-core and (for MAC groups)
@@ -267,7 +316,7 @@ pub fn schedule(
         let mut best: Option<(f64, f64, usize, usize, NodeCost)> = None; // (finish, start, core, gang, cost)
         let mut tried_classes = 0;
         for &cid in &prefs {
-            let class = classes.iter().find(|cl| cl.contains(&cid)).unwrap();
+            let class = &classes[class_of[cid]];
             if class[0] != cid {
                 continue; // evaluate each class once, via its representative
             }
@@ -302,7 +351,17 @@ pub fn schedule(
                 }
             }
             for &gang in &gang_options {
-                let cost = group_cost(graph, group, &places, cid, accel, &env, gang);
+                let cost = match (cache, &group_hash) {
+                    (Some(cache), Some(gh)) => {
+                        let mut h = gh.clone();
+                        hash_core_class(&mut h, &accel.cores[cid]);
+                        gang.hash(&mut h);
+                        cache.get_or_compute(h.finish128(), || {
+                            group_cost(graph, group, &places, cid, accel, &env, gang)
+                        })
+                    }
+                    _ => group_cost(graph, group, &places, cid, accel, &env, gang),
+                };
                 // pick the `gang` earliest-free cores of this class
                 let mut frees: Vec<(f64, usize)> =
                     class.iter().map(|&c| (core_free[c], c)).collect();
@@ -320,7 +379,7 @@ pub fn schedule(
         let (finish, start, core0, gang, cost) = best.expect("no core candidates");
 
         // occupy the gang
-        let class = classes.iter().find(|cl| cl.contains(&core0)).unwrap().clone();
+        let class = &classes[class_of[core0]];
         let mut frees: Vec<(f64, usize)> =
             class.iter().map(|&c| (core_free[c], c)).collect();
         frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -542,6 +601,29 @@ mod tests {
         let ri = schedule(&fwd, &Partition::singletons(&fwd), &edge(), &MappingConfig::default());
         assert_eq!(ri.phase_busy[1], 0.0);
         assert_eq!(ri.phase_busy[2], 0.0);
+    }
+
+    #[test]
+    fn cached_schedule_bit_identical_and_warm_hits() {
+        let g = resnet18(1, 32, 10);
+        let p = Partition::singletons(&g);
+        let a = edge();
+        let cfg = MappingConfig::edge_tpu_default();
+        let cache = crate::eval::CostCache::new();
+        let plain = schedule(&g, &p, &a, &cfg);
+        let cold = schedule_with_cache(&g, &p, &a, &cfg, Some(&cache));
+        let warm = schedule_with_cache(&g, &p, &a, &cfg, Some(&cache));
+        for r in [&cold, &warm] {
+            assert_eq!(plain.latency_cycles.to_bits(), r.latency_cycles.to_bits());
+            assert_eq!(plain.energy_pj.to_bits(), r.energy_pj.to_bits());
+            assert_eq!(plain.peak_dram_bytes, r.peak_dram_bytes);
+            assert_eq!(plain.offchip_bytes.to_bits(), r.offchip_bytes.to_bits());
+        }
+        let s = cache.stats();
+        // repeated layer shapes hit even within the cold run; the warm run
+        // must be all hits (no new unique group costs)
+        assert!(s.hits > s.misses, "hits {} misses {}", s.hits, s.misses);
+        assert_eq!(s.entries as u64, s.misses);
     }
 
     #[test]

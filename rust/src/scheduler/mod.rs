@@ -4,5 +4,5 @@
 pub mod engine;
 pub mod partition;
 
-pub use engine::{phase_index, schedule, GroupRecord, ScheduleResult};
+pub use engine::{phase_index, schedule, schedule_with_cache, GroupRecord, ScheduleResult};
 pub use partition::Partition;

@@ -1,0 +1,141 @@
+//! Minimal `anyhow`-compatible error type. The `anyhow` crate is not
+//! vendored in this offline environment (DESIGN.md §Substitutions); the
+//! runtime layer and the CLI only need string-context errors, `?` on any
+//! `Display`-able error, and the `bail!`/`ensure!`/`anyhow!` macros — about
+//! sixty lines, carried here.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From<E: Display>` impl
+//! coherent (an `Error` can absorb any displayable error via `?`).
+
+use std::fmt;
+
+/// A string-rendered error with accumulated context lines.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string() }
+    }
+
+    fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.msg = format!("{ctx}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: the blanket conversion is bounded by `std::error::Error`
+// (not `Display`) and `Error` itself stays outside that trait, so this
+// does not overlap the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` twin: attach context to `Result` errors and `None`s.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<u32> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_absorbs_std_errors() {
+        fn inner() -> Result<u32> {
+            let v = io_fail()?;
+            Ok(v)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_fail().context("reading meta").unwrap_err();
+        assert_eq!(e.to_string(), "reading meta: gone");
+        let e2 = None::<u32>.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e2.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                crate::bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+    }
+}

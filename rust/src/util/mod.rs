@@ -2,6 +2,7 @@
 //! helper. These replace non-vendored crates (rand, serde_json, proptest)
 //! in this offline build environment — see DESIGN.md §Substitutions.
 
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -3,6 +3,16 @@
 //! vendored in this offline environment, so we carry our own — ~60 lines,
 //! same algorithm family rand's SmallRng uses.
 
+/// splitmix64 finalizer: full-avalanche 64-bit mixer. Used for xoshiro
+/// seed expansion here and for structural-hash finalization in
+/// `eval::cost_cache`.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
@@ -14,10 +24,7 @@ impl Rng {
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
         let mut next = || {
             x = x.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = x;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
+            splitmix64(x)
         };
         Rng { s: [next(), next(), next(), next()] }
     }

@@ -38,7 +38,7 @@ pub enum LoopDim {
 }
 
 /// 2-D convolution geometry (shared by Conv and its gradient primitives).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvSpec {
     pub batch: usize,
     pub in_ch: usize,
@@ -76,7 +76,7 @@ impl ConvSpec {
 }
 
 /// GEMM geometry: C[M,N] = A[M,K] · B[K,N]. Batched via `batch`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GemmSpec {
     pub batch: usize,
     pub m: usize,
@@ -97,7 +97,7 @@ impl GemmSpec {
 }
 
 /// Pooling geometry.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PoolSpec {
     pub batch: usize,
     pub channels: usize,
@@ -214,7 +214,7 @@ impl Optimizer {
 /// `grad: bool` flag) because their dataflow affinities differ: e.g.
 /// `ConvInputGrad` is a transposed conv (input-stationary friendly) while
 /// `ConvWeightGrad` reduces over batch+space (output-stationary friendly).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum OpKind {
     Conv(ConvSpec),
     /// dL/dInput of a conv — a transposed convolution.
@@ -393,6 +393,19 @@ impl OpKind {
                 | OpKind::Transpose { .. }
                 | OpKind::OptimizerStep { .. }
         )
+    }
+
+    /// Feed this operator's full *structural identity* into a hasher: the
+    /// kind discriminant plus every geometry/byte-accounting field of its
+    /// spec. Two ops with equal structural hash input are interchangeable
+    /// for any cost computation: `macs()`, `out_elems()`, `weight_elems()`
+    /// and `loop_dims()` are all pure functions of exactly these fields
+    /// (which is why the derived `Hash` suffices — `loop_dims` needs no
+    /// separate hashing). This is the op half of the memoized-evaluation
+    /// cache key (see `eval::cost_cache`).
+    pub fn structural_hash<H: std::hash::Hasher>(&self, h: &mut H) {
+        use std::hash::Hash;
+        self.hash(h);
     }
 
     /// Short mnemonic for reports.

@@ -1,0 +1,158 @@
+//! Integration tests for the memoized, parallel evaluation engine
+//! (`eval::CostCache` + parallel NSGA-II): cached and uncached pipelines
+//! must be *bit-identical* on real training graphs, and GA results must be
+//! independent of the worker count. These pin the `eval` module's
+//! cache-key soundness contract (see `src/eval/mod.rs`).
+
+use monet::autodiff::{
+    apply_checkpointing, build_training_graph, checkpoint_candidates, CheckpointPlan,
+    TrainOptions,
+};
+use monet::eval::CostCache;
+use monet::fusion::{fuse_greedy, FusionConstraints};
+use monet::ga::{CheckpointProblem, GaConfig};
+use monet::hardware::presets::{EdgeTpuParams, FuseMaxParams};
+use monet::mapping::MappingConfig;
+use monet::scheduler::{schedule, schedule_with_cache, Partition, ScheduleResult};
+use monet::util::proptest::{check, BitMask, UsizeIn};
+use monet::workload::models::{gpt2, mlp, resnet18, Gpt2Config};
+use monet::workload::op::Optimizer;
+
+/// Bit-level equality of everything a `ScheduleResult` reports.
+fn bit_identical(a: &ScheduleResult, b: &ScheduleResult) -> bool {
+    a.latency_cycles.to_bits() == b.latency_cycles.to_bits()
+        && a.energy_pj.to_bits() == b.energy_pj.to_bits()
+        && a.peak_dram_bytes == b.peak_dram_bytes
+        && a.offchip_bytes.to_bits() == b.offchip_bytes.to_bits()
+        && a.n_groups == b.n_groups
+        && a.core_busy.len() == b.core_busy.len()
+        && a
+            .core_busy
+            .iter()
+            .zip(&b.core_busy)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a
+            .phase_busy
+            .iter()
+            .zip(&b.phase_busy)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_cached_schedule_bit_identical_resnet18_training() {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let cands = checkpoint_candidates(&tg);
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    // one cache across every case: entries written by one plan's schedule
+    // must stay valid for structurally-equal groups of every other plan
+    let cache = CostCache::new();
+    check(6, &BitMask { width: cands.len(), p: 0.3 }, |mask| {
+        let plan = CheckpointPlan::recompute_set(
+            cands.iter().zip(mask).filter(|(_, &bit)| bit).map(|(&n, _)| n),
+        );
+        let g = apply_checkpointing(&tg, &plan);
+        let p = fuse_greedy(&g, &FusionConstraints::default());
+        let plain = schedule(&g, &p, &accel, &mapping);
+        let cached = schedule_with_cache(&g, &p, &accel, &mapping, Some(&cache));
+        bit_identical(&plain, &cached)
+    });
+    let s = cache.stats();
+    assert!(s.hits > 0, "cross-plan cache sharing never hit: {s:?}");
+}
+
+#[test]
+fn prop_cached_schedule_bit_identical_gpt2_training_across_accelerators() {
+    let fwd = gpt2(Gpt2Config::tiny());
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let greedy = fuse_greedy(&tg.graph, &FusionConstraints::default());
+    let singles = Partition::singletons(&tg.graph);
+    let space = FuseMaxParams::space_strided(97);
+    let mapping = MappingConfig::fusemax_default();
+    let cache = CostCache::new();
+    check(6, &UsizeIn(0, space.len() - 1), |&i| {
+        let accel = space[i].build();
+        [&greedy, &singles].iter().all(|&p| {
+            let plain = schedule(&tg.graph, p, &accel, &mapping);
+            let cached = schedule_with_cache(&tg.graph, p, &accel, &mapping, Some(&cache));
+            bit_identical(&plain, &cached)
+        })
+    });
+    assert!(cache.stats().hits > 0);
+}
+
+#[test]
+fn checkpoint_ga_identical_across_1_4_8_workers() {
+    let fwd = mlp(1, 32, 64, 3, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let run = |workers: usize| {
+        let problem = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let ga = GaConfig { population: 12, generations: 6, workers, ..Default::default() };
+        problem
+            .optimize(&ga)
+            .into_iter()
+            .map(|s| {
+                (
+                    s.plan,
+                    s.latency_cycles.to_bits(),
+                    s.energy_pj.to_bits(),
+                    s.stored_bytes_fp16,
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    assert!(!serial.is_empty());
+    assert_eq!(serial, run(4), "4-worker GA diverged from serial");
+    assert_eq!(serial, run(8), "8-worker GA diverged from serial");
+}
+
+#[test]
+fn warm_problem_reevaluates_known_plans_from_cache() {
+    // an NSGA-II run followed by re-evaluation of its own front: every
+    // transform is memoized, so the second pass adds no misses beyond the
+    // schedule-level lookups (which all hit)
+    let fwd = mlp(1, 32, 64, 3, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let problem = CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::default(),
+        FusionConstraints::default(),
+    );
+    let ga = GaConfig { population: 10, generations: 4, workers: 2, ..Default::default() };
+    let front = problem.optimize(&ga);
+    let warm_before = problem.cache_stats();
+    for sol in &front {
+        let (lat, en, mem) = problem.evaluate(&sol.plan);
+        assert_eq!(lat.to_bits(), sol.latency_cycles.to_bits());
+        assert_eq!(en.to_bits(), sol.energy_pj.to_bits());
+        assert_eq!(mem, sol.stored_bytes_fp16);
+    }
+    let warm_after = problem.cache_stats();
+    assert_eq!(
+        warm_before.misses, warm_after.misses,
+        "re-evaluating known plans must not recompute any group cost"
+    );
+    assert!(warm_after.hits > warm_before.hits);
+}

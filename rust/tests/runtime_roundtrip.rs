@@ -14,7 +14,21 @@ fn runtime() -> Option<Runtime> {
         eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping runtime test");
         return None;
     }
-    Some(Runtime::new("artifacts").expect("PJRT client"))
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        // default (no-`pjrt`) builds compile the stub client whose
+        // constructor always fails — artifacts present or not, there is
+        // nothing to round-trip against, so skip rather than panic
+        #[cfg(not(feature = "pjrt"))]
+        Err(e) => {
+            eprintln!("NOTE: PJRT runtime unavailable ({e}); skipping runtime test");
+            None
+        }
+        // a real pjrt build with artifacts present must fail loudly: an
+        // init error here is a regression, not a missing-artifact skip
+        #[cfg(feature = "pjrt")]
+        Err(e) => panic!("PJRT client init failed with artifacts present: {e}"),
+    }
 }
 
 #[test]
