@@ -71,12 +71,14 @@ pub fn prefilter_scores(
 /// (ties broken by energy). Never returns fewer than `min_keep`.
 pub fn select_survivors(scores: &[CostOut], keep_frac: f64, min_keep: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // total_cmp: one NaN roofline score from a degenerate config must not
+    // abort the whole search in stage 1 (NaNs sort last, i.e. pruned
+    // first)
     idx.sort_by(|&a, &b| {
         scores[a]
             .cycles
-            .partial_cmp(&scores[b].cycles)
-            .unwrap()
-            .then(scores[a].energy_pj.partial_cmp(&scores[b].energy_pj).unwrap())
+            .total_cmp(&scores[b].cycles)
+            .then(scores[a].energy_pj.total_cmp(&scores[b].energy_pj))
     });
     let keep = ((scores.len() as f64 * keep_frac).ceil() as usize)
         .max(min_keep)

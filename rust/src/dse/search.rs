@@ -19,7 +19,7 @@ use super::space::DesignPoint;
 use super::sweep::{
     evaluate_point_cached, pareto_front, Mode, SweepConfig, SweepPartitions, SweepRow,
 };
-use crate::eval::{CacheStats, CostCache};
+use crate::eval::{persist, CacheStats};
 use crate::runtime::cost_kernel::{cost_eval_native, CostKernel};
 use crate::workload::graph::Graph;
 
@@ -67,16 +67,28 @@ pub fn search(
     let mut cfg = cfg.clone();
     cfg.modes = vec![Mode::Training];
     let parts = SweepPartitions::prepare(fwd, train, &cfg);
-    let cache = if cfg.use_cache { Some(CostCache::new()) } else { None };
+    // same cache lifecycle as `run_sweep_stats`: warm-load a persisted
+    // snapshot when `cfg.cache_dir` is set, persist it back afterwards
+    // (`--no-cache` wins and skips both)
+    let cache = if cfg.use_cache {
+        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
+    } else {
+        None
+    };
     let mut rows: Vec<SweepRow> = survivors
         .iter()
         .flat_map(|&i| {
             evaluate_point_cached(i, &points[i], fwd, train, &parts, &cfg, cache.as_ref())
         })
         .collect();
-    rows.sort_by(|a, b| a.latency_cycles.partial_cmp(&b.latency_cycles).unwrap());
+    // total_cmp: a degenerate survivor must not abort the whole search
+    rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
     let detail_secs = t1.elapsed().as_secs_f64();
 
+    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+    if let Some(c) = &cache {
+        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
+    }
     let front = pareto_front(&rows);
     SearchOutcome {
         n_points: points.len(),
@@ -85,7 +97,7 @@ pub fn search(
         front,
         prefilter_secs,
         detail_secs,
-        cache: cache.map(|c| c.stats()).unwrap_or_default(),
+        cache: stats,
     }
 }
 

@@ -8,12 +8,13 @@
 //! shared job queue, and results are streamed back over a channel so the
 //! caller can report progress (backpressure = bounded queue).
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use super::space::DesignPoint;
-use crate::eval::{CacheStats, CostCache};
+use crate::eval::{persist, CacheStats, CostCache};
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::mapping::MappingConfig;
 use crate::scheduler::{schedule_with_cache, Partition};
@@ -67,7 +68,18 @@ pub struct SweepConfig {
     /// Share one `eval::CostCache` across the sweep's worker pool (§Perf).
     /// `false` (the `--no-cache` escape hatch) recomputes every group cost
     /// — results are bit-identical either way; this exists for A/B timing.
+    /// When off, it also wins over `cache_dir`: nothing is loaded or
+    /// saved.
     pub use_cache: bool,
+    /// Persist the cost cache across process runs (`--cache-dir`): warm-
+    /// load the snapshot in this directory before the sweep, write it back
+    /// after. `None` (the default) keeps the cache in-memory only.
+    /// Results are bit-identical either way — a stale or incompatible
+    /// snapshot is rejected wholesale (see `eval::persist`).
+    pub cache_dir: Option<PathBuf>,
+    /// Bound the cache to ~this many entries with the sharded CLOCK policy
+    /// (`--cache-cap`); 0 (the default) = unbounded.
+    pub cache_cap: usize,
 }
 
 impl Default for SweepConfig {
@@ -79,6 +91,8 @@ impl Default for SweepConfig {
             modes: vec![Mode::Inference, Mode::Training],
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             use_cache: true,
+            cache_dir: None,
+            cache_cap: 0,
         }
     }
 }
@@ -194,7 +208,14 @@ pub fn run_sweep_stats(
     // likewise one group-cost memo serves the whole pool
     let parts = SweepPartitions::prepare(fwd, train, cfg);
     let parts = &parts;
-    let cache = if cfg.use_cache { Some(CostCache::new()) } else { None };
+    // cache lifecycle: warm-load a persisted snapshot when `cache_dir` is
+    // set (a rejected snapshot just starts cold), bounded by `cache_cap`;
+    // `--no-cache` still wins and skips both load and save
+    let cache = if cfg.use_cache {
+        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
+    } else {
+        None
+    };
     let cache_ref = cache.as_ref();
 
     let workers = cfg.workers.max(1).min(n.max(1));
@@ -228,7 +249,10 @@ pub fn run_sweep_stats(
         all.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
         all
     });
-    let stats = cache.map(|c| c.stats()).unwrap_or_default();
+    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+    if let Some(c) = &cache {
+        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
+    }
     (rows, stats)
 }
 
@@ -242,18 +266,27 @@ pub fn run_sweep_stats(
 /// survive (neither dominates the other).
 pub fn pareto_front(rows: &[SweepRow]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..rows.len()).collect();
+    // total_cmp, not partial_cmp().unwrap(): one NaN objective from a
+    // degenerate design point must not abort a multi-hour sweep. NaNs
+    // order after +inf, so NaN rows sort last and never displace a real
+    // front point.
     idx.sort_by(|&a, &b| {
         rows[a]
             .latency_cycles
-            .partial_cmp(&rows[b].latency_cycles)
-            .unwrap()
-            .then(rows[a].energy_pj.partial_cmp(&rows[b].energy_pj).unwrap())
+            .total_cmp(&rows[b].latency_cycles)
+            .then(rows[a].energy_pj.total_cmp(&rows[b].energy_pj))
     });
     let mut front = vec![];
     // min energy among rows with strictly smaller latency
     let mut best_en = f64::INFINITY;
     let mut i = 0;
     while i < idx.len() {
+        if rows[idx[i]].latency_cycles.is_nan() {
+            // NaN latencies sort after every finite value: nothing from
+            // here on can be Pareto-optimal (a NaN-latency row must never
+            // enter the front on the strength of a low energy alone)
+            break;
+        }
         // latency-tie group [i, j), sorted by energy within it
         let mut j = i + 1;
         while j < idx.len()
@@ -403,6 +436,57 @@ mod tests {
         let points = DesignPoint::edge_space(800);
         let rows = run_sweep(&points, &fwd, &train, &SweepConfig::default(), |_, _| {});
         assert_eq!(pareto_front(&rows), pareto_front_all_pairs(&rows));
+    }
+
+    #[test]
+    fn pareto_front_survives_nan_objectives() {
+        // degenerate rows on every axis: pre-fix, the partial_cmp unwrap
+        // in the sort aborted the whole sweep's post-processing, and a
+        // NaN-latency row with the globally lowest energy entered the
+        // front
+        let rows: Vec<SweepRow> = [
+            (1.0, 1.0),
+            (f64::NAN, 0.5),
+            (2.0, f64::NAN),
+            (2.0, 0.5),
+            (f64::NAN, f64::NAN),
+            (f64::NAN, 0.1), // lowest energy of all — still not a front point
+        ]
+        .iter()
+        .map(|&(l, e)| synth_row(l, e))
+        .collect();
+        let front = pareto_front(&rows);
+        assert_eq!(front, vec![0, 3], "finite front points survive, NaN rows drop");
+    }
+
+    #[test]
+    fn persisted_sweep_is_bit_identical_and_warmer_on_the_second_run() {
+        let (fwd, train) = graphs();
+        let points = DesignPoint::edge_space(2500);
+        let dir = std::env::temp_dir()
+            .join(format!("monet_sweep_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = SweepConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let (r1, s1) = run_sweep_stats(&points, &fwd, &train, &cfg, |_, _| {});
+        let (r2, s2) = run_sweep_stats(&points, &fwd, &train, &cfg, |_, _| {});
+        // the warm-loaded second run recomputes nothing and hits strictly
+        // more often than the cold run
+        assert_eq!(s2.misses, 0, "warm run recomputed group costs: {s2:?}");
+        assert!(s2.hit_rate() > s1.hit_rate(), "warm {s2:?} !> cold {s1:?}");
+        assert_eq!(s1.entries, s2.entries);
+        // and rows are bit-identical across the restart
+        assert_eq!(r1.len(), r2.len());
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.peak_dram_bytes, b.peak_dram_bytes);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

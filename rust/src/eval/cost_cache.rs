@@ -32,12 +32,26 @@
 //! external concurrent-map dependency). Readers proceed in parallel;
 //! a miss computes outside any lock and races at worst duplicate the
 //! (pure) computation, never corrupt it.
+//!
+//! ## Lifecycle
+//!
+//! Two orthogonal extensions keep the cache usable at multi-million-point
+//! sweep scale (see the sibling modules):
+//!
+//! * **bounded capacity** ([`CostCache::with_capacity`]): each shard runs
+//!   a second-chance/CLOCK ring ([`super::evict::ClockShard`]) so the memo
+//!   tops out at a configured entry count, with evictions counted in
+//!   [`CacheStats::evictions`];
+//! * **persistence** ([`super::persist`]): the whole cache serializes to a
+//!   versioned binary snapshot and reloads across process runs, rejected
+//!   wholesale when the header (format / hashing scheme / soundness
+//!   contract) no longer matches.
 
-use std::collections::HashMap;
 use std::hash::Hasher;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
+use super::evict::ClockShard;
 use crate::cost::NodeCost;
 use crate::util::rng::splitmix64 as mix64;
 
@@ -98,6 +112,9 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Entries displaced by the CLOCK policy to admit new ones (always 0
+    /// for an unbounded cache).
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -112,24 +129,44 @@ impl CacheStats {
 }
 
 /// Sharded memo table for group costs. One instance is shared across a
-/// whole sweep / GA run; dropping it discards the memory.
+/// whole sweep / GA run; dropping it discards the memory (or persist it
+/// first via [`super::persist::save_cost_cache`]).
 pub struct CostCache {
-    shards: [RwLock<HashMap<u128, NodeCost>>; N_SHARDS],
+    shards: [RwLock<ClockShard>; N_SHARDS],
+    capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl CostCache {
+    /// Unbounded cache (the PR-1 behaviour): never evicts.
     pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Cache bounded to ~`capacity` entries total (0 = unbounded). The
+    /// bound is enforced per shard (`capacity / 16`, rounded up), so the
+    /// live entry count never exceeds `capacity` rounded up to a multiple
+    /// of the shard count.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let per_shard = if capacity == 0 { 0 } else { capacity.div_ceil(N_SHARDS).max(1) };
         CostCache {
-            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            shards: std::array::from_fn(|_| RwLock::new(ClockShard::new(per_shard))),
+            capacity,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
+    /// Configured total capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     #[inline]
-    fn shard(&self, key: u128) -> &RwLock<HashMap<u128, NodeCost>> {
+    fn shard(&self, key: u128) -> &RwLock<ClockShard> {
         // low bits feed the in-shard HashMap; take shard bits from the top
         &self.shards[(key >> 124) as usize % N_SHARDS]
     }
@@ -139,16 +176,41 @@ impl CostCache {
     /// hashed into `key` — see the module docs.
     pub fn get_or_compute(&self, key: u128, compute: impl FnOnce() -> NodeCost) -> NodeCost {
         let shard = self.shard(key);
-        if let Some(c) = shard.read().unwrap().get(&key) {
+        if let Some(c) = shard.read().unwrap().get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return *c;
+            return c;
         }
         // compute outside the lock: concurrent misses on one key duplicate
         // a pure computation instead of serializing every worker
         let cost = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        shard.write().unwrap().insert(key, cost);
+        let evicted = shard.write().unwrap().insert(key, cost);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
         cost
+    }
+
+    /// Admit an entry restored from a snapshot: counts neither as a hit
+    /// nor a miss (it was computed in a previous process), but bounded
+    /// caches may evict to make room.
+    pub fn insert_loaded(&self, key: u128, cost: NodeCost) {
+        let evicted = self.shard(key).write().unwrap().insert(key, cost);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of every live entry, sorted by key — the deterministic
+    /// order the persistence codec writes.
+    pub fn export_entries(&self) -> Vec<(u128, NodeCost)> {
+        let mut out: Vec<(u128, NodeCost)> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().iter().collect::<Vec<_>>())
+            .collect();
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -156,6 +218,7 @@ impl CostCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.shards.iter().map(|s| s.read().unwrap().len()).sum(),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
@@ -164,6 +227,7 @@ impl CostCache {
     pub fn reset_counters(&self) {
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
     }
 }
 
@@ -230,6 +294,24 @@ mod tests {
         assert_eq!(cache.stats().entries, 100);
         let c = cache.get_or_compute(5u128 << 120 | 5, || unreachable!());
         assert_eq!(c.cycles, 5.0);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_and_recomputes_identically() {
+        let cache = CostCache::with_capacity(32); // 2 per shard
+        let make = |k: u128| NodeCost { cycles: k as f64, ..Default::default() };
+        for k in 0..500u128 {
+            // spread across shards via the top bits
+            let key = (k % 16) << 124 | k;
+            assert_eq!(cache.get_or_compute(key, || make(k)).cycles, k as f64);
+        }
+        let s = cache.stats();
+        assert!(s.entries <= 32, "capacity exceeded: {s:?}");
+        assert!(s.evictions > 0, "bounded cache never evicted: {s:?}");
+        assert_eq!(s.misses - s.evictions, s.entries as u64);
+        // a re-miss after eviction recomputes the same pure value
+        let key = 0u128; // shard 0, first inserted, certainly evicted
+        assert_eq!(cache.get_or_compute(key, || make(0)).cycles, 0.0);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Bounded-capacity admission/eviction for the group-cost cache: a
+//! second-chance/CLOCK ring per shard (Corbató 1968 — the classic
+//! one-bit LRU approximation), sized so a multi-million-point sweep
+//! cannot grow the memo without bound.
+//!
+//! ## Why CLOCK, and why per shard
+//!
+//! The cache's hot path is a read-locked lookup fanned over a worker
+//! pool; a true LRU would need to reorder a recency list on every hit,
+//! which either takes the write lock (serializing all readers) or a
+//! global lock-free deque (not std). CLOCK needs only a *reference bit*
+//! per entry, and a bit can be an `AtomicBool` flipped through the shard's
+//! read guard — hits stay read-locked and contention-free. Each of the 16
+//! shards runs its own hand over its own ring, so eviction work never
+//! crosses a shard boundary and there is no global LRU lock anywhere.
+//!
+//! ## Soundness under eviction
+//!
+//! Evicting an entry can never change a result, only its cost: the cache
+//! stores pure-function outputs keyed by their full input (see the `eval`
+//! module docs), so a re-miss recomputes bit-identical bytes. The
+//! `eval_cache` integration tests pin exactly this: a capacity so small it
+//! evicts constantly must still reproduce the uncached schedule bit for
+//! bit.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::cost::NodeCost;
+
+/// One ring slot: a cached group cost plus its second-chance bit.
+struct Slot {
+    key: u128,
+    cost: NodeCost,
+    referenced: AtomicBool,
+}
+
+/// One shard of the cost cache: a key→slot index plus the CLOCK ring.
+/// Readers call [`ClockShard::get`] under a shared lock; inserts and
+/// evictions happen under the exclusive lock.
+pub struct ClockShard {
+    index: HashMap<u128, usize>,
+    slots: Vec<Slot>,
+    hand: usize,
+    /// Maximum slots in this shard; 0 = unbounded (never evicts).
+    cap: usize,
+}
+
+impl ClockShard {
+    pub fn new(cap: usize) -> Self {
+        ClockShard { index: HashMap::new(), slots: Vec::new(), hand: 0, cap }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Per-shard capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lookup under the shard's *read* lock. A hit marks the slot
+    /// recently-used via its atomic reference bit — no write lock on the
+    /// hot path.
+    pub fn get(&self, key: u128) -> Option<NodeCost> {
+        let &i = self.index.get(&key)?;
+        let slot = &self.slots[i];
+        slot.referenced.store(true, Ordering::Relaxed);
+        Some(slot.cost)
+    }
+
+    /// Insert under the shard's write lock; returns the number of entries
+    /// evicted to admit this one (0 or 1). A key already present is a
+    /// racing duplicate of a pure computation and is left untouched.
+    pub fn insert(&mut self, key: u128, cost: NodeCost) -> u64 {
+        if self.index.contains_key(&key) {
+            return 0;
+        }
+        if self.cap == 0 || self.slots.len() < self.cap {
+            self.index.insert(key, self.slots.len());
+            self.slots.push(Slot { key, cost, referenced: AtomicBool::new(false) });
+            return 0;
+        }
+        // CLOCK sweep: referenced slots get their second chance (bit
+        // cleared, hand moves on); the first un-referenced slot is the
+        // victim. Terminates within two laps — the first lap clears
+        // every bit it passes.
+        let n = self.slots.len();
+        loop {
+            if self.slots[self.hand].referenced.swap(false, Ordering::Relaxed) {
+                self.hand = (self.hand + 1) % n;
+                continue;
+            }
+            let victim = self.hand;
+            let old_key = self.slots[victim].key;
+            self.index.remove(&old_key);
+            self.index.insert(key, victim);
+            self.slots[victim] = Slot { key, cost, referenced: AtomicBool::new(false) };
+            self.hand = (victim + 1) % n;
+            return 1;
+        }
+    }
+
+    /// Iterate the shard's entries in slot order (insertion order between
+    /// evictions).
+    pub fn iter(&self) -> impl Iterator<Item = (u128, NodeCost)> + '_ {
+        self.slots.iter().map(|s| (s.key, s.cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(cycles: f64) -> NodeCost {
+        NodeCost { cycles, ..Default::default() }
+    }
+
+    #[test]
+    fn unbounded_shard_never_evicts() {
+        let mut s = ClockShard::new(0);
+        for k in 0..1000u128 {
+            assert_eq!(s.insert(k, cost(k as f64)), 0);
+        }
+        assert_eq!(s.len(), 1000);
+        assert_eq!(s.get(999).unwrap().cycles, 999.0);
+    }
+
+    #[test]
+    fn bounded_shard_respects_capacity_and_counts_evictions() {
+        let mut s = ClockShard::new(4);
+        let mut evicted = 0;
+        for k in 0..10u128 {
+            evicted += s.insert(k, cost(k as f64));
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(evicted, 6);
+    }
+
+    #[test]
+    fn referenced_entries_survive_one_sweep() {
+        let mut s = ClockShard::new(4);
+        for k in 0..4u128 {
+            s.insert(k, cost(k as f64));
+        }
+        // touch key 2: its reference bit protects it from the next victim
+        // selection (keys 0 and 1 go first — hand order with second
+        // chances)
+        s.get(2).unwrap();
+        s.insert(100, cost(100.0));
+        s.insert(101, cost(101.0));
+        assert!(s.get(2).is_some(), "recently-used entry was evicted");
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn duplicate_insert_is_a_noop() {
+        let mut s = ClockShard::new(2);
+        s.insert(7, cost(7.0));
+        assert_eq!(s.insert(7, cost(999.0)), 0);
+        assert_eq!(s.get(7).unwrap().cycles, 7.0, "first insert wins");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn iter_reports_live_entries() {
+        let mut s = ClockShard::new(3);
+        for k in [10u128, 20, 30] {
+            s.insert(k, cost(k as f64));
+        }
+        let mut got: Vec<u128> = s.iter().map(|(k, _)| k).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![10, 20, 30]);
+    }
+}

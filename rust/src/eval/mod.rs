@@ -35,10 +35,56 @@
 //! Violating the contract shows up as cached-vs-uncached divergence; the
 //! `eval_cache` integration tests pin bit-identity across ResNet-18 and
 //! GPT-2 training graphs to catch exactly that.
+//!
+//! ## Lifecycle: bounded capacity and persistence
+//!
+//! The cache is no longer tied to one process: [`persist`] serializes it
+//! to a versioned binary snapshot (`--cache-dir`) and [`evict`] bounds it
+//! to a configured entry count (`--cache-cap`) with a sharded
+//! second-chance/CLOCK policy. Neither affects results — eviction only
+//! re-misses a pure computation, and a warm-loaded snapshot replays the
+//! exact bits a cold run would compute.
+//!
+//! **The snapshot-header rule:** every snapshot carries (format version,
+//! structural fingerprint of the hashing scheme, soundness-contract
+//! version) and is rejected wholesale on any mismatch. The fingerprint
+//! updates itself (it is a digest of a probe through
+//! [`StructuralHasher`]); [`CACHE_CONTRACT_VERSION`] must be bumped **by
+//! hand** whenever the key is widened or its meaning changes — the same
+//! events that require widening the key in `scheduler::engine` — so
+//! snapshots written under the old contract self-invalidate instead of
+//! serving stale costs.
 
 pub mod cost_cache;
+pub mod evict;
+pub mod persist;
 
 pub use cost_cache::{CacheStats, CostCache, StructuralHasher};
+pub use persist::{load_cost_cache, open_cost_cache, persist_cost_cache, save_cost_cache};
+
+/// Version of the cache-key soundness contract (see module docs and
+/// [`persist`]). Bump on **any** change that alters what a persisted
+/// entry means:
+///
+/// * key-widening — a new input hashed into the group-cost key, or a
+///   changed field set in [`hash_env`], [`hash_group_node`] or
+///   [`hash_core_class`];
+/// * **value changes** — any edit to the `group_cost`/`node_cost`
+///   formulas (`cost/mod.rs`, the fused-rider rule in
+///   `scheduler::engine::group_cost`, energy constants). The in-process
+///   bit-identity tests compare warm-vs-cold *within one build* and
+///   cannot catch a snapshot carrying the previous build's numbers —
+///   only this version bump invalidates it;
+/// * **scheduler-behavior changes** — anything that alters `schedule()`
+///   outputs at all (list-scheduler tie-breaks, transfer latency/energy
+///   rules, memory-lifetime accounting). The cost-cache keys don't read
+///   these, but the persisted GA warm-start memo stores whole-schedule
+///   objective values (latency/energy), so its entries go stale under any
+///   such change even though every key still matches.
+///
+/// Stale snapshots written under an older contract are rejected at load
+/// time.
+pub const CACHE_CONTRACT_VERSION: u32 = 1;
 
 use std::hash::Hash;
 

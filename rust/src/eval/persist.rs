@@ -1,0 +1,491 @@
+//! Cross-run persistence for the evaluation memos: a std-only binary
+//! snapshot codec (no serde in this offline build) for (a) the group-cost
+//! cache and (b) the NSGA-II warm-start state (previous Pareto-front
+//! genomes + the genome→objectives memo).
+//!
+//! ## The snapshot-header rule
+//!
+//! A snapshot is only as sound as the key scheme that produced it, so
+//! every file opens with a header of three independent guards and is
+//! rejected *wholesale* when any of them mismatches:
+//!
+//! 1. **format version** ([`SNAPSHOT_FORMAT_VERSION`]) — the byte layout
+//!    of this codec;
+//! 2. **hasher fingerprint** ([`hasher_fingerprint`]) — the digest of a
+//!    fixed probe sequence pushed through [`StructuralHasher`]; any change
+//!    to the hash streams (seeds, mixing, finalizer) silently remaps every
+//!    key, and this catches it structurally rather than by convention;
+//! 3. **soundness-contract version** ([`super::CACHE_CONTRACT_VERSION`])
+//!    — bumped by hand whenever the *meaning* of an entry changes: a key
+//!    widening (a new input hashed into the group-cost key, a widened
+//!    field set in `hash_env`/`hash_group_node`/`hash_core_class`), **a
+//!    cost-formula change** (`node_cost`/`group_cost` math, energy
+//!    constants) that alters the values a key maps to, or **any
+//!    scheduler-behavior change** that alters `schedule()` outputs — the
+//!    GA warm-start memo below stores whole-schedule objectives, whose
+//!    dependencies are strictly wider than the cost-cache keys. In every
+//!    case, snapshots written under the old contract self-invalidate
+//!    instead of serving stale numbers.
+//!
+//! A checksum trailer (FNV-1a over the whole file body) additionally
+//! rejects truncated or bit-rotted files. Rejection is always total: a
+//! loader returns `None` and the caller starts cold — a half-loaded
+//! snapshot could violate the bit-identity contract the `eval_cache`
+//! tests pin.
+//!
+//! Writes go to a temp file in the target directory and are `rename`d
+//! into place, so a crashed run never leaves a torn snapshot behind.
+
+use std::collections::HashMap;
+use std::fs;
+use std::hash::Hash;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::cost_cache::{CostCache, StructuralHasher};
+use crate::cost::NodeCost;
+
+/// Byte-layout version of this codec.
+pub const SNAPSHOT_FORMAT_VERSION: u32 = 1;
+
+/// File name of the cost-cache snapshot inside a `--cache-dir`.
+pub const COST_SNAPSHOT_FILE: &str = "cost_cache.bin";
+
+/// File name of the GA warm-start snapshot inside a `--cache-dir`.
+pub const GA_WARMSTART_FILE: &str = "ga_warmstart.bin";
+
+const COST_MAGIC: &[u8; 8] = b"MONETCC\0";
+const GA_MAGIC: &[u8; 8] = b"MONETGA\0";
+
+/// Digest of a fixed probe sequence through [`StructuralHasher`]: 256
+/// single bytes, a multi-byte write, and a `u64` via `Hash`. Equal across
+/// processes iff the hashing scheme (both stream seeds, the per-byte
+/// mixing, the splitmix64 finalizer) is unchanged — the self-describing
+/// half of the snapshot-header rule.
+pub fn hasher_fingerprint() -> u128 {
+    use std::hash::Hasher as _;
+    let mut h = StructuralHasher::new();
+    for b in 0u8..=255 {
+        h.write(&[b]);
+    }
+    h.write(b"monet-cache-snapshot-probe");
+    0x00C0_FFEE_D15C_0B1Au64.hash(&mut h);
+    h.finish128()
+}
+
+// ---------------------------------------------------------------------------
+// codec primitives
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u128(buf: &mut Vec<u8>, v: u128) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// FNV-1a over the file body — corruption detection only (the structural
+/// guards live in the header).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(out)
+    }
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+    fn u128(&mut self) -> Option<u128> {
+        Some(u128::from_le_bytes(self.take(16)?.try_into().ok()?))
+    }
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+    fn exhausted(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Header written after the magic; identical for both snapshot kinds.
+fn put_header(buf: &mut Vec<u8>, magic: &[u8; 8]) {
+    buf.extend_from_slice(magic);
+    put_u32(buf, SNAPSHOT_FORMAT_VERSION);
+    put_u32(buf, super::CACHE_CONTRACT_VERSION);
+    put_u128(buf, hasher_fingerprint());
+}
+
+/// Verify checksum + magic + header guards; returns a reader positioned
+/// at the first payload byte, or `None` for any stale/incompatible/corrupt
+/// snapshot.
+fn verified_reader<'a>(buf: &'a [u8], magic: &[u8; 8]) -> Option<Reader<'a>> {
+    // magic(8) + format(4) + contract(4) + fingerprint(16) + checksum(8)
+    if buf.len() < 40 {
+        return None;
+    }
+    let (body, sum_bytes) = buf.split_at(buf.len() - 8);
+    if fnv64(body) != u64::from_le_bytes(sum_bytes.try_into().ok()?) {
+        return None;
+    }
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.take(8)? != magic {
+        return None;
+    }
+    if r.u32()? != SNAPSHOT_FORMAT_VERSION {
+        return None;
+    }
+    if r.u32()? != super::CACHE_CONTRACT_VERSION {
+        return None;
+    }
+    if r.u128()? != hasher_fingerprint() {
+        return None;
+    }
+    Some(r)
+}
+
+/// Checksum, then write-to-temp + rename (atomic on POSIX within one
+/// filesystem).
+fn write_snapshot(dir: &Path, file: &str, mut buf: Vec<u8>) -> io::Result<PathBuf> {
+    fs::create_dir_all(dir)?;
+    let sum = fnv64(&buf);
+    put_u64(&mut buf, sum);
+    let path = dir.join(file);
+    let tmp = dir.join(format!("{file}.tmp.{}", std::process::id()));
+    fs::write(&tmp, &buf)?;
+    fs::rename(&tmp, &path)?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// cost-cache snapshots
+// ---------------------------------------------------------------------------
+
+/// Serialize every live entry of `cache` to `dir/cost_cache.bin`. Entries
+/// are written sorted by key, so equal caches produce byte-equal files.
+pub fn save_cost_cache(cache: &CostCache, dir: &Path) -> io::Result<PathBuf> {
+    let entries = cache.export_entries();
+    let mut buf = Vec::with_capacity(40 + entries.len() * 64);
+    put_header(&mut buf, COST_MAGIC);
+    put_u64(&mut buf, entries.len() as u64);
+    for (key, c) in &entries {
+        put_u128(&mut buf, *key);
+        for v in [c.cycles, c.energy_pj, c.offchip_bytes, c.global_bytes, c.onchip_bytes, c.utilization] {
+            put_f64(&mut buf, v);
+        }
+    }
+    write_snapshot(dir, COST_SNAPSHOT_FILE, buf)
+}
+
+/// Load `dir/cost_cache.bin` into a fresh cache of the given `capacity`
+/// (0 = unbounded). Returns `None` — load nothing, start cold — when the
+/// file is absent, truncated, corrupt, or written under a different
+/// format/hasher/contract. If the snapshot holds more entries than
+/// `capacity`, admission happens in key order and the CLOCK policy keeps
+/// the bound.
+pub fn load_cost_cache(dir: &Path, capacity: usize) -> Option<CostCache> {
+    let buf = fs::read(dir.join(COST_SNAPSHOT_FILE)).ok()?;
+    let mut r = verified_reader(&buf, COST_MAGIC)?;
+    let n = r.u64()?;
+    let cache = CostCache::with_capacity(capacity);
+    for _ in 0..n {
+        let key = r.u128()?;
+        let cost = NodeCost {
+            cycles: r.f64()?,
+            energy_pj: r.f64()?,
+            offchip_bytes: r.f64()?,
+            global_bytes: r.f64()?,
+            onchip_bytes: r.f64()?,
+            utilization: r.f64()?,
+        };
+        cache.insert_loaded(key, cost);
+    }
+    if !r.exhausted() {
+        return None; // trailing garbage — reject rather than guess
+    }
+    Some(cache)
+}
+
+/// Load-or-new: warm-load the snapshot under `dir` when one is present
+/// and valid, else start a fresh cache of `capacity` entries.
+pub fn open_cost_cache(dir: Option<&Path>, capacity: usize) -> CostCache {
+    if let Some(d) = dir {
+        if let Some(cache) = load_cost_cache(d, capacity) {
+            return cache;
+        }
+    }
+    CostCache::with_capacity(capacity)
+}
+
+/// Best-effort save for end-of-run hooks: a persistence failure must not
+/// fail the sweep that produced the results, so it only warns.
+pub fn persist_cost_cache(cache: &CostCache, dir: Option<&Path>) {
+    if let Some(d) = dir {
+        if let Err(e) = save_cost_cache(cache, d) {
+            eprintln!("warning: failed to persist cost cache to {}: {e}", d.display());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GA warm-start snapshots
+// ---------------------------------------------------------------------------
+
+/// Cross-restart NSGA-II state: the previous run's front genomes (injected
+/// as seeds) and its genome→objectives memo.
+pub struct GaWarmStart {
+    pub seeds: Vec<Vec<bool>>,
+    pub memo: HashMap<Vec<bool>, Vec<f64>>,
+}
+
+fn put_genome(buf: &mut Vec<u8>, genome: &[bool], width: usize) {
+    debug_assert_eq!(genome.len(), width);
+    buf.extend(genome.iter().map(|&b| b as u8));
+}
+
+fn read_genome(r: &mut Reader, width: usize) -> Option<Vec<bool>> {
+    Some(r.take(width)?.iter().map(|&b| b != 0).collect())
+}
+
+/// Cap on persisted memo entries: without one, every restart reloads the
+/// previous union and rewrites a strictly larger file, growing without
+/// bound over a long-lived `--cache-dir`. Seed (front) genomes are always
+/// kept; the remainder is a deterministic (genome-sorted) prefix. A
+/// dropped entry only costs one re-evaluation, exactly like cost-cache
+/// eviction.
+pub const GA_MEMO_CAP: usize = 100_000;
+
+/// Serialize GA warm-start state to `dir/ga_warmstart.bin`. `problem_key`
+/// must capture every input the objective function reads beyond the
+/// genome (workload, accelerator, mapping, fusion constraints) — a memo
+/// is only reusable against the identical problem.
+pub fn save_ga_warmstart(
+    dir: &Path,
+    problem_key: u128,
+    width: usize,
+    seeds: &[Vec<bool>],
+    memo: &HashMap<Vec<bool>, Vec<f64>>,
+) -> io::Result<PathBuf> {
+    let mut buf = Vec::new();
+    put_header(&mut buf, GA_MAGIC);
+    put_u128(&mut buf, problem_key);
+    put_u32(&mut buf, width as u32);
+    put_u32(&mut buf, seeds.len() as u32);
+    for g in seeds {
+        put_genome(&mut buf, g, width);
+    }
+    // deterministic memo order: sort by genome
+    let mut entries: Vec<(&Vec<bool>, &Vec<f64>)> = memo.iter().collect();
+    entries.sort_unstable_by(|a, b| a.0.cmp(b.0));
+    if entries.len() > GA_MEMO_CAP {
+        // keep every seed genome's entry, then a deterministic prefix
+        let seed_set: std::collections::HashSet<&Vec<bool>> = seeds.iter().collect();
+        entries.sort_by(|a, b| {
+            seed_set
+                .contains(b.0)
+                .cmp(&seed_set.contains(a.0))
+                .then(a.0.cmp(b.0))
+        });
+        entries.truncate(GA_MEMO_CAP);
+        entries.sort_unstable_by(|a, b| a.0.cmp(b.0));
+    }
+    put_u64(&mut buf, entries.len() as u64);
+    for (g, objs) in entries {
+        put_genome(&mut buf, g, width);
+        put_u32(&mut buf, objs.len() as u32);
+        for &o in objs {
+            put_f64(&mut buf, o);
+        }
+    }
+    write_snapshot(dir, GA_WARMSTART_FILE, buf)
+}
+
+/// Load `dir/ga_warmstart.bin`; `None` when absent/corrupt/stale or when
+/// `problem_key`/`width` do not match the file (a different problem's
+/// memo must never be injected).
+pub fn load_ga_warmstart(dir: &Path, problem_key: u128, width: usize) -> Option<GaWarmStart> {
+    let buf = fs::read(dir.join(GA_WARMSTART_FILE)).ok()?;
+    let mut r = verified_reader(&buf, GA_MAGIC)?;
+    if r.u128()? != problem_key {
+        return None;
+    }
+    if r.u32()? as usize != width {
+        return None;
+    }
+    let n_seeds = r.u32()?;
+    let mut seeds = Vec::with_capacity(n_seeds as usize);
+    for _ in 0..n_seeds {
+        seeds.push(read_genome(&mut r, width)?);
+    }
+    let n_memo = r.u64()?;
+    let mut memo = HashMap::with_capacity(n_memo as usize);
+    for _ in 0..n_memo {
+        let g = read_genome(&mut r, width)?;
+        let n_obj = r.u32()?;
+        let mut objs = Vec::with_capacity(n_obj as usize);
+        for _ in 0..n_obj {
+            objs.push(r.f64()?);
+        }
+        memo.insert(g, objs);
+    }
+    if !r.exhausted() {
+        return None;
+    }
+    Some(GaWarmStart { seeds, memo })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("monet_persist_{tag}_{}", std::process::id()));
+        fs::remove_dir_all(&d).ok(); // leftovers from a crashed prior run
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cost(seed: u64) -> NodeCost {
+        NodeCost {
+            cycles: seed as f64 * 1.5,
+            energy_pj: seed as f64 * 2.5,
+            offchip_bytes: seed as f64,
+            global_bytes: 0.25,
+            onchip_bytes: seed as f64 * 3.0,
+            utilization: 0.5,
+        }
+    }
+
+    #[test]
+    fn cost_cache_round_trip_preserves_every_bit() {
+        let dir = tmp_dir("roundtrip");
+        let cache = CostCache::new();
+        for k in 0..200u128 {
+            cache.insert_loaded(k << 100 | k, cost(k as u64));
+        }
+        save_cost_cache(&cache, &dir).unwrap();
+        let loaded = load_cost_cache(&dir, 0).expect("valid snapshot");
+        let a = cache.export_entries();
+        let b = loaded.export_entries();
+        assert_eq!(a.len(), b.len());
+        for ((ka, ca), (kb, cb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            assert_eq!(ca.cycles.to_bits(), cb.cycles.to_bits());
+            assert_eq!(ca.energy_pj.to_bits(), cb.energy_pj.to_bits());
+            assert_eq!(ca.utilization.to_bits(), cb.utilization.to_bits());
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_corrupt_and_stale_snapshots_are_rejected() {
+        let dir = tmp_dir("reject");
+        assert!(load_cost_cache(&dir, 0).is_none(), "missing file");
+
+        let cache = CostCache::new();
+        cache.insert_loaded(42, cost(7));
+        let path = save_cost_cache(&cache, &dir).unwrap();
+
+        // bit-rot: flip one payload byte → checksum rejects
+        let orig = fs::read(&path).unwrap();
+        let mut bad = orig.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        fs::write(&path, &bad).unwrap();
+        assert!(load_cost_cache(&dir, 0).is_none(), "corrupt payload");
+
+        // truncation
+        fs::write(&path, &orig[..orig.len() - 3]).unwrap();
+        assert!(load_cost_cache(&dir, 0).is_none(), "truncated file");
+
+        // stale contract version: byte 8..12 is the format version,
+        // 12..16 the contract version — bump it and re-checksum so only
+        // the header guard (not the checksum) can reject
+        let mut stale = orig.clone();
+        stale.truncate(stale.len() - 8);
+        let v = u32::from_le_bytes(stale[12..16].try_into().unwrap()) + 1;
+        stale[12..16].copy_from_slice(&v.to_le_bytes());
+        let sum = fnv64(&stale);
+        stale.extend_from_slice(&sum.to_le_bytes());
+        fs::write(&path, &stale).unwrap();
+        assert!(load_cost_cache(&dir, 0).is_none(), "stale contract version");
+
+        // intact file loads again
+        fs::write(&path, &orig).unwrap();
+        assert!(load_cost_cache(&dir, 0).is_some());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bounded_load_respects_capacity() {
+        let dir = tmp_dir("bounded");
+        let cache = CostCache::new();
+        for k in 0..500u128 {
+            cache.insert_loaded((k % 16) << 124 | k, cost(k as u64));
+        }
+        save_cost_cache(&cache, &dir).unwrap();
+        let loaded = load_cost_cache(&dir, 64).unwrap();
+        assert!(loaded.stats().entries <= 64);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ga_warmstart_round_trip_and_key_guards() {
+        let dir = tmp_dir("ga");
+        let width = 9usize;
+        let seeds = vec![vec![true; width], vec![false; width]];
+        let mut memo = HashMap::new();
+        memo.insert(
+            (0..width).map(|i| i % 2 == 0).collect::<Vec<bool>>(),
+            vec![1.0, 2.0, f64::from_bits(0x400921FB54442D18)],
+        );
+        memo.insert(vec![true; width], vec![0.5, 0.25, 0.125]);
+        save_ga_warmstart(&dir, 0xABCD, width, &seeds, &memo).unwrap();
+
+        let w = load_ga_warmstart(&dir, 0xABCD, width).expect("valid warm start");
+        assert_eq!(w.seeds, seeds);
+        assert_eq!(w.memo.len(), memo.len());
+        for (g, objs) in &memo {
+            let got = &w.memo[g];
+            assert_eq!(objs.len(), got.len());
+            for (a, b) in objs.iter().zip(got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // a different problem or width must never warm-start from this file
+        assert!(load_ga_warmstart(&dir, 0xABCE, width).is_none());
+        assert!(load_ga_warmstart(&dir, 0xABCD, width + 1).is_none());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_is_stable_within_a_build() {
+        assert_eq!(hasher_fingerprint(), hasher_fingerprint());
+        assert_ne!(hasher_fingerprint(), 0);
+    }
+}

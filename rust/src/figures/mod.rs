@@ -10,7 +10,7 @@ use crate::autodiff::{
     stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
 };
 use crate::dse::{pareto_front, run_sweep_stats, DesignPoint, Mode, SweepConfig, SweepRow};
-use crate::eval::CacheStats;
+use crate::eval::{persist, CacheStats};
 use crate::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
 use crate::ga::{CheckpointProblem, GaConfig};
 use crate::hardware::presets::EdgeTpuParams;
@@ -59,13 +59,18 @@ pub fn fig1_fig8_edge_sweep(
     out_dir: Option<&Path>,
     progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
-    fig1_fig8_edge_sweep_cfg(stride, true, out_dir, progress)
+    fig1_fig8_edge_sweep_cfg(stride, true, None, 0, out_dir, progress)
 }
 
-/// [`fig1_fig8_edge_sweep`] with the cache escape hatch (`--no-cache`).
+/// [`fig1_fig8_edge_sweep`] with the cache lifecycle knobs: `use_cache`
+/// (`--no-cache` escape hatch, wins over everything), `cache_dir`
+/// (`--cache-dir` persistence) and `cache_cap` (`--cache-cap` bound,
+/// 0 = unbounded).
 pub fn fig1_fig8_edge_sweep_cfg(
     stride: usize,
     use_cache: bool,
+    cache_dir: Option<&Path>,
+    cache_cap: usize,
     out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
@@ -78,6 +83,8 @@ pub fn fig1_fig8_edge_sweep_cfg(
     let cfg = SweepConfig {
         mapping: MappingConfig::edge_tpu_default(),
         use_cache,
+        cache_dir: cache_dir.map(|p| p.to_path_buf()),
+        cache_cap,
         ..Default::default()
     };
     let (rows, cache) =
@@ -161,13 +168,16 @@ pub fn fig9_fusemax_sweep(
     out_dir: Option<&Path>,
     progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
-    fig9_fusemax_sweep_cfg(stride, true, out_dir, progress)
+    fig9_fusemax_sweep_cfg(stride, true, None, 0, out_dir, progress)
 }
 
-/// [`fig9_fusemax_sweep`] with the cache escape hatch (`--no-cache`).
+/// [`fig9_fusemax_sweep`] with the cache lifecycle knobs (see
+/// [`fig1_fig8_edge_sweep_cfg`]).
 pub fn fig9_fusemax_sweep_cfg(
     stride: usize,
     use_cache: bool,
+    cache_dir: Option<&Path>,
+    cache_cap: usize,
     out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
@@ -180,6 +190,8 @@ pub fn fig9_fusemax_sweep_cfg(
     let cfg = SweepConfig {
         mapping: MappingConfig::fusemax_default(),
         use_cache,
+        cache_dir: cache_dir.map(|p| p.to_path_buf()),
+        cache_cap,
         ..Default::default()
     };
     let (rows, cache) =
@@ -379,20 +391,40 @@ pub fn fig12_checkpoint_ga(
     ga: &GaConfig,
     out_dir: Option<&Path>,
 ) -> (Vec<GaFrontRow>, TrainingGraph) {
+    fig12_checkpoint_ga_cached(ga, None, 0, out_dir)
+}
+
+/// [`fig12_checkpoint_ga`] with the cross-restart cache lifecycle: with a
+/// `cache_dir`, the group-cost cache is warm-loaded/persisted and the GA
+/// warm-starts from the previous run's front + genome memo
+/// (`CheckpointProblem::optimize_persistent`), so a restarted run resumes
+/// from the previous Pareto front. `cache_cap` bounds the cost cache
+/// (0 = unbounded).
+pub fn fig12_checkpoint_ga_cached(
+    ga: &GaConfig,
+    cache_dir: Option<&Path>,
+    cache_cap: usize,
+    out_dir: Option<&Path>,
+) -> (Vec<GaFrontRow>, TrainingGraph) {
     let fwd = resnet18(1, 224, 1000);
     let tg = build_training_graph(
         &fwd,
         TrainOptions { optimizer: Optimizer::Adam, include_update: true },
     );
     let accel = EdgeTpuParams::baseline().build();
-    let problem = CheckpointProblem::new(
+    let problem = CheckpointProblem::new_with_cache(
         &tg,
         &accel,
         MappingConfig::edge_tpu_default(),
         FusionConstraints::default(),
+        persist::open_cost_cache(cache_dir, cache_cap),
     );
     let (base_lat, base_en, _) = problem.evaluate(&CheckpointPlan::save_all());
-    let front = problem.optimize(ga);
+    let front = match cache_dir {
+        Some(dir) => problem.optimize_persistent(ga, dir),
+        None => problem.optimize(ga),
+    };
+    persist::persist_cost_cache(problem.cost_cache(), cache_dir);
     let rows: Vec<GaFrontRow> = front
         .iter()
         .map(|s| GaFrontRow {

@@ -6,15 +6,16 @@
 
 use std::collections::HashMap;
 use std::hash::Hash;
+use std::path::Path;
 use std::sync::{Arc, RwLock};
 
 use crate::autodiff::{
     apply_checkpointing, checkpoint_candidates, stored_activation_bytes, CheckpointPlan,
     TrainingGraph,
 };
-use crate::eval::{CacheStats, CostCache, StructuralHasher};
+use crate::eval::{persist, CacheStats, CostCache, StructuralHasher};
 use crate::fusion::{fuse_greedy, FusionConstraints};
-use crate::ga::nsga2::{nsga2, GaConfig, Genome};
+use crate::ga::nsga2::{nsga2_with_memo, GaConfig, Genome, Individual, Objectives};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
 use crate::scheduler::{schedule_with_cache, Partition};
@@ -60,6 +61,21 @@ impl<'a> CheckpointProblem<'a> {
         mapping: MappingConfig,
         fusion: FusionConstraints,
     ) -> Self {
+        Self::new_with_cache(tg, accel, mapping, fusion, CostCache::new())
+    }
+
+    /// [`CheckpointProblem::new`] with a caller-provided group-cost cache —
+    /// the cross-restart lifecycle hook: pass a warm-loaded
+    /// ([`persist::open_cost_cache`]) and/or bounded
+    /// ([`CostCache::with_capacity`]) cache instead of a fresh unbounded
+    /// one.
+    pub fn new_with_cache(
+        tg: &'a TrainingGraph,
+        accel: &'a Accelerator,
+        mapping: MappingConfig,
+        fusion: FusionConstraints,
+        cost_cache: CostCache,
+    ) -> Self {
         let candidates = checkpoint_candidates(tg);
         CheckpointProblem {
             tg,
@@ -67,14 +83,65 @@ impl<'a> CheckpointProblem<'a> {
             mapping,
             fusion,
             candidates,
-            cost_cache: CostCache::new(),
+            cost_cache,
             transform_cache: RwLock::new(HashMap::new()),
         }
+    }
+
+    /// The shared group-cost cache (for persisting after a run).
+    pub fn cost_cache(&self) -> &CostCache {
+        &self.cost_cache
     }
 
     /// Group-cost cache counters (hit rate of the shared `CostCache`).
     pub fn cache_stats(&self) -> CacheStats {
         self.cost_cache.stats()
+    }
+
+    /// Structural identity of this problem instance: everything the
+    /// objective function reads beyond the genome (workload shape,
+    /// candidate set, accelerator, mapping, fusion constraints). A
+    /// persisted genome→objectives memo is only reusable when this key
+    /// matches — a memo carries *final* objective values, so replaying it
+    /// against a different problem would corrupt results silently.
+    pub fn warm_key(&self) -> u128 {
+        let mut h = StructuralHasher::new();
+        self.tg.graph.len().hash(&mut h);
+        self.tg.graph.edges.len().hash(&mut h);
+        self.tg.graph.elem_bytes.hash(&mut h);
+        // full graph structure, not just counts: two workloads with equal
+        // topology but different layer shapes (e.g. the same model at two
+        // resolutions) must never share a memo of final objective values
+        for n in &self.tg.graph.nodes {
+            n.kind.structural_hash(&mut h);
+            crate::scheduler::phase_index(n.phase).hash(&mut h);
+        }
+        for e in &self.tg.graph.edges {
+            e.src.hash(&mut h);
+            e.dst.hash(&mut h);
+            e.bytes.hash(&mut h);
+            e.is_activation.hash(&mut h);
+        }
+        self.candidates.hash(&mut h);
+        self.accel.cores.len().hash(&mut h);
+        for c in &self.accel.cores {
+            crate::eval::hash_core_class(&mut h, c);
+        }
+        self.accel.offchip_bw.to_bits().hash(&mut h);
+        self.accel.global_buffer_bytes.hash(&mut h);
+        self.accel.global_buffer_bw.to_bits().hash(&mut h);
+        self.accel.interconnect.link_bw.to_bits().hash(&mut h);
+        self.accel.interconnect.link_energy_pj.to_bits().hash(&mut h);
+        self.mapping.tensor_parallel.hash(&mut h);
+        self.mapping.intra_core_tiling.hash(&mut h);
+        self.fusion.max_len.hash(&mut h);
+        self.fusion.mem_budget.hash(&mut h);
+        self.fusion.tiling.hash(&mut h);
+        self.fusion.max_convs.hash(&mut h);
+        self.fusion.max_gemms.hash(&mut h);
+        self.fusion.op_type_constraint.hash(&mut h);
+        self.fusion.per_seed_cap.hash(&mut h);
+        h.finish128()
     }
 
     /// Structural key of a plan: the sorted recompute set. Plans with equal
@@ -126,6 +193,12 @@ impl<'a> CheckpointProblem<'a> {
         }
     }
 
+    /// Inverse of [`CheckpointProblem::genome_to_plan`] (used to persist a
+    /// front as warm-start seeds).
+    pub fn plan_to_genome(&self, plan: &CheckpointPlan) -> Genome {
+        self.candidates.iter().map(|n| plan.recompute.contains(n)).collect()
+    }
+
     /// Evaluate one plan through the full pipeline: checkpoint transform →
     /// (greedy) fusion → layer-fused schedule, with both memo layers
     /// engaged. Returns (latency, energy, stored FP16 bytes) — bit-exactly
@@ -142,13 +215,64 @@ impl<'a> CheckpointProblem<'a> {
 
     /// Run the GA; returns the Pareto front sorted by memory saving.
     pub fn optimize(&self, ga: &GaConfig) -> Vec<CheckpointSolution> {
+        self.optimize_with_memo(ga, &mut HashMap::new())
+    }
+
+    /// [`CheckpointProblem::optimize`] with a caller-owned
+    /// genome→objectives memo (see [`nsga2_with_memo`]): pre-loaded
+    /// entries skip the full checkpoint→fuse→schedule pipeline, and the
+    /// map holds every evaluation on return, ready to persist.
+    pub fn optimize_with_memo(
+        &self,
+        ga: &GaConfig,
+        memo: &mut HashMap<Genome, Objectives>,
+    ) -> Vec<CheckpointSolution> {
         let width = self.candidates.len();
+        let front = nsga2_with_memo(
+            width,
+            ga,
+            |genome| {
+                let plan = self.genome_to_plan(genome);
+                let (lat, en, mem) = self.evaluate(&plan);
+                vec![lat, en, mem as f64]
+            },
+            memo,
+        );
+        self.solutions_from(front)
+    }
+
+    /// The full cross-restart lifecycle: warm-start from `dir` when a
+    /// matching snapshot exists (previous front injected as population
+    /// seeds, genome memo reloaded), run the GA, and persist the new
+    /// front + memo back — so a restarted checkpointing run resumes from
+    /// the previous Pareto front instead of a random population. The
+    /// group-cost cache is persisted separately (see
+    /// [`persist::persist_cost_cache`]); callers owning a `--cache-dir`
+    /// typically do both.
+    pub fn optimize_persistent(&self, ga: &GaConfig, dir: &Path) -> Vec<CheckpointSolution> {
+        let key = self.warm_key();
+        let width = self.candidates.len();
+        let mut cfg = ga.clone();
+        let mut memo: HashMap<Genome, Objectives> = HashMap::new();
+        if let Some(warm) = persist::load_ga_warmstart(dir, key, width) {
+            if cfg.seeds.is_empty() {
+                cfg.seeds = warm.seeds;
+            }
+            memo = warm.memo;
+        }
+        let front = self.optimize_with_memo(&cfg, &mut memo);
+        let seeds: Vec<Genome> = front.iter().map(|s| self.plan_to_genome(&s.plan)).collect();
+        if let Err(e) = persist::save_ga_warmstart(dir, key, width, &seeds, &memo) {
+            eprintln!(
+                "warning: failed to persist GA warm-start to {}: {e}",
+                dir.display()
+            );
+        }
+        front
+    }
+
+    fn solutions_from(&self, front: Vec<Individual>) -> Vec<CheckpointSolution> {
         let baseline = stored_activation_bytes(self.tg, &CheckpointPlan::save_all()) / 2;
-        let front = nsga2(width, ga, |genome| {
-            let plan = self.genome_to_plan(genome);
-            let (lat, en, mem) = self.evaluate(&plan);
-            vec![lat, en, mem as f64]
-        });
         let mut out: Vec<CheckpointSolution> = front
             .into_iter()
             .map(|ind| {
@@ -167,7 +291,10 @@ impl<'a> CheckpointProblem<'a> {
                 }
             })
             .collect();
-        out.sort_by(|a, b| a.memory_saving.partial_cmp(&b.memory_saving).unwrap());
+        // total_cmp: a NaN objective must not abort the whole run here
+        // either (the saving is derived from integer byte counts, but the
+        // sort should never be the thing that panics)
+        out.sort_by(|a, b| a.memory_saving.total_cmp(&b.memory_saving));
         out
     }
 }

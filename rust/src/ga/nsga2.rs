@@ -94,8 +94,12 @@ pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
     }
     for obj in 0..m {
         let mut idx = front.to_vec();
+        // total_cmp, not partial_cmp().unwrap(): one NaN objective from a
+        // degenerate evaluation must not abort a multi-hour GA run (NaNs
+        // order after +inf and the individual simply scores no diversity
+        // bonus)
         idx.sort_by(|&a, &b| {
-            pop[a].objectives[obj].partial_cmp(&pop[b].objectives[obj]).unwrap()
+            pop[a].objectives[obj].total_cmp(&pop[b].objectives[obj])
         });
         let lo = pop[idx[0]].objectives[obj];
         let hi = pop[idx[idx.len() - 1]].objectives[obj];
@@ -112,7 +116,7 @@ pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
     }
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct GaConfig {
     pub population: usize,
     pub generations: usize,
@@ -122,6 +126,12 @@ pub struct GaConfig {
     /// Threads for objective evaluation (1 = serial). The returned front is
     /// identical for every value — parallelism only changes wall-clock.
     pub workers: usize,
+    /// Genomes injected into the initial population — cross-restart
+    /// warm-starts pass the previous run's Pareto front here. Each is
+    /// clipped/padded to the problem width; at most `population - 2` are
+    /// used (slots 0/1 keep the all-false/all-true anchors). Empty (the
+    /// default) reproduces the unseeded population exactly.
+    pub seeds: Vec<Genome>,
 }
 
 impl Default for GaConfig {
@@ -133,6 +143,7 @@ impl Default for GaConfig {
             mutation_p: 0.02,
             seed: 0xACAC,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            seeds: vec![],
         }
     }
 }
@@ -196,21 +207,47 @@ pub fn nsga2(
     cfg: &GaConfig,
     eval: impl Fn(&Genome) -> Objectives + Sync,
 ) -> Vec<Individual> {
+    nsga2_with_memo(width, cfg, eval, &mut HashMap::new())
+}
+
+/// [`nsga2`] with a caller-owned genome→objectives memo: entries present
+/// on entry are trusted (they must come from the *same* pure objective
+/// function — cross-restart warm-starts persist and reload them), and the
+/// map holds every evaluation made when the call returns, ready to be
+/// persisted for the next restart.
+pub fn nsga2_with_memo(
+    width: usize,
+    cfg: &GaConfig,
+    eval: impl Fn(&Genome) -> Objectives + Sync,
+    memo: &mut HashMap<Genome, Objectives>,
+) -> Vec<Individual> {
     let mut rng = Rng::seed_from_u64(cfg.seed);
-    let mut memo: HashMap<Genome, Objectives> = HashMap::new();
-    // seed with all-false (save everything = the baseline), all-true, and
-    // random genomes with varying density
+    // initial population: all-false (save everything = the baseline),
+    // all-true, any injected warm-start genomes (previous front), then
+    // random genomes with varying density. Injected genomes consume no
+    // RNG, so an empty `cfg.seeds` reproduces the unseeded stream.
+    let injected: Vec<Genome> = cfg
+        .seeds
+        .iter()
+        .take(cfg.population.saturating_sub(2))
+        .map(|s| {
+            let mut g = s.clone();
+            g.resize(width, false);
+            g
+        })
+        .collect();
     let seeds: Vec<Genome> = (0..cfg.population)
         .map(|i| match i {
             0 => vec![false; width],
             1 => vec![true; width],
+            i if i >= 2 && i - 2 < injected.len() => injected[i - 2].clone(),
             _ => {
                 let p = rng.range_f64(0.05, 0.8);
                 (0..width).map(|_| rng.bool(p)).collect()
             }
         })
         .collect();
-    let mut pop = evaluate_batch(seeds, &eval, &mut memo, cfg.workers);
+    let mut pop = evaluate_batch(seeds, &eval, memo, cfg.workers);
 
     for _gen in 0..cfg.generations {
         let fronts = non_dominated_sort(&mut pop);
@@ -247,17 +284,19 @@ pub fn nsga2(
             }
             brood.push(c1);
         }
-        let offspring = evaluate_batch(brood, &eval, &mut memo, cfg.workers);
+        let offspring = evaluate_batch(brood, &eval, memo, cfg.workers);
         // elitist survival: μ+λ, keep best `population` by (rank, crowding)
         pop.extend(offspring);
         let fronts = non_dominated_sort(&mut pop);
         for f in &fronts {
             crowding_distance(&mut pop, f);
         }
+        // total_cmp: crowding can be NaN when an objective is NaN, and a
+        // panicking sort here would abort the whole run
         pop.sort_by(|a, b| {
             a.rank
                 .cmp(&b.rank)
-                .then(b.crowding.partial_cmp(&a.crowding).unwrap())
+                .then(b.crowding.total_cmp(&a.crowding))
         });
         pop.truncate(cfg.population);
     }
@@ -396,6 +435,93 @@ mod tests {
         // only 2^6 distinct genomes exist; without the memo the GA would
         // issue population × (generations + 1) = 176 evaluations
         assert!(calls.load(Ordering::Relaxed) <= 64, "memo failed: {} calls", calls.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn nan_objectives_do_not_panic_the_ga() {
+        // one genome family poisons an objective with NaN: the sorts must
+        // survive (total_cmp) and the GA must still return a front
+        let front = nsga2(
+            10,
+            &GaConfig { population: 14, generations: 8, workers: 1, ..Default::default() },
+            |g| {
+                let ones = g.iter().filter(|&&b| b).count() as f64;
+                let poisoned = if g[0] { f64::NAN } else { 10.0 - ones };
+                vec![ones, poisoned]
+            },
+        );
+        assert!(!front.is_empty());
+        // the run completed: every survivor is a well-formed individual
+        // (pre-fix, the crowding/elitist sorts panicked on the first NaN)
+        for i in &front {
+            assert_eq!(i.genome.len(), 10);
+            assert_eq!(i.objectives.len(), 2);
+        }
+    }
+
+    #[test]
+    fn injected_seeds_enter_the_initial_population() {
+        // a seeded optimum the random initializer is unlikely to produce:
+        // minimize hamming distance to a fixed pattern
+        let width = 16;
+        let target: Genome = (0..width).map(|i| i % 3 == 0).collect();
+        let t = target.clone();
+        let eval = move |g: &Genome| -> Objectives {
+            let d = g.iter().zip(&t).filter(|(a, b)| a != b).count() as f64;
+            vec![d]
+        };
+        let cfg = GaConfig {
+            population: 8,
+            generations: 0, // initial population only: no search at all
+            workers: 1,
+            seeds: vec![target.clone()],
+            ..Default::default()
+        };
+        let front = nsga2(width, &cfg, &eval);
+        assert!(
+            front.iter().any(|i| i.genome == target && i.objectives[0] == 0.0),
+            "seeded genome missing from the zero-generation front"
+        );
+        // short/long seeds are padded/clipped to the problem width
+        let cfg2 = GaConfig {
+            seeds: vec![vec![true; 4], vec![false; 64]],
+            population: 8,
+            generations: 0,
+            workers: 1,
+            ..Default::default()
+        };
+        for i in nsga2(width, &cfg2, &eval) {
+            assert_eq!(i.genome.len(), width);
+        }
+    }
+
+    #[test]
+    fn warm_memo_skips_known_genomes_and_is_returned() {
+        use std::collections::HashMap;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cfg = GaConfig { population: 12, generations: 4, workers: 1, ..Default::default() };
+        let calls_cold = AtomicUsize::new(0);
+        let mut memo: HashMap<Genome, Objectives> = HashMap::new();
+        let cold = nsga2_with_memo(8, &cfg, |g| {
+            calls_cold.fetch_add(1, Ordering::Relaxed);
+            vec![g.iter().filter(|&&b| b).count() as f64]
+        }, &mut memo);
+        assert!(!cold.is_empty());
+        assert_eq!(memo.len(), calls_cold.load(Ordering::Relaxed), "memo must hold every evaluation");
+
+        // same config + warm memo: the identical genome stream re-runs
+        // with zero fresh evaluations and an identical front
+        let calls_warm = AtomicUsize::new(0);
+        let mut warm_memo = memo.clone();
+        let warm = nsga2_with_memo(8, &cfg, |g| {
+            calls_warm.fetch_add(1, Ordering::Relaxed);
+            vec![g.iter().filter(|&&b| b).count() as f64]
+        }, &mut warm_memo);
+        assert_eq!(calls_warm.load(Ordering::Relaxed), 0, "warm memo re-evaluated genomes");
+        let key = |v: &[Individual]| {
+            v.iter().map(|i| (i.genome.clone(), i.objectives.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&cold), key(&warm));
     }
 
     #[test]

@@ -43,7 +43,17 @@ OPTIONS
   --out DIR       results directory (default results)
   --no-cache      disable the shared group-cost memo for the sweep commands
                   (fig1/fig9/search/all) — A/B timing; results are
-                  bit-identical with or without it"
+                  bit-identical with or without it
+  --cache-dir DIR persist the group-cost cache across runs: warm-load the
+                  snapshot in DIR before a sweep/search/GA, write it back
+                  after (fig1/fig9/search/all/fig12). Stale/incompatible
+                  snapshots are rejected wholesale. Sweep/search rows stay
+                  bit-identical to a cold run; fig12 additionally
+                  warm-starts the GA from the previous run's Pareto front,
+                  which deliberately resumes (and so changes) the search.
+                  --no-cache wins over this.
+  --cache-cap N   bound the group-cost cache to ~N entries (second-chance/
+                  CLOCK eviction; default 0 = unbounded)"
     );
     std::process::exit(2);
 }
@@ -58,6 +68,8 @@ struct Args {
     artifacts: PathBuf,
     out: PathBuf,
     no_cache: bool,
+    cache_dir: Option<PathBuf>,
+    cache_cap: usize,
 }
 
 fn parse_args() -> Args {
@@ -71,6 +83,8 @@ fn parse_args() -> Args {
         artifacts: "artifacts".into(),
         out: "results".into(),
         no_cache: false,
+        cache_dir: None,
+        cache_cap: 0,
     };
     let mut it = std::env::args().skip(1);
     match it.next() {
@@ -88,6 +102,8 @@ fn parse_args() -> Args {
             "--artifacts" => args.artifacts = val().into(),
             "--out" => args.out = val().into(),
             "--no-cache" => args.no_cache = true,
+            "--cache-dir" => args.cache_dir = Some(val().into()),
+            "--cache-cap" => args.cache_cap = val().parse().unwrap_or_else(|_| usage()),
             _ => usage(),
         }
     }
@@ -137,11 +153,12 @@ fn render_sweep(title: &str, rows: &[monet::dse::SweepRow]) {
 fn print_cache_stats(what: &str, s: &monet::eval::CacheStats) {
     if s.hits + s.misses > 0 {
         eprintln!(
-            "  {what} group-cost cache: {} hits / {} misses ({:.1}% hit rate, {} entries)",
+            "  {what} group-cost cache: {} hits / {} misses ({:.1}% hit rate, {} entries, {} evictions)",
             s.hits,
             s.misses,
             s.hit_rate() * 100.0,
-            s.entries
+            s.entries,
+            s.evictions
         );
     }
 }
@@ -151,6 +168,8 @@ fn cmd_fig1(args: &Args) -> Result<()> {
     let sweep = figures::fig1_fig8_edge_sweep_cfg(
         args.stride,
         !args.no_cache,
+        args.cache_dir.as_deref(),
+        args.cache_cap,
         Some(&args.out),
         progress,
     );
@@ -192,6 +211,8 @@ fn cmd_fig9(args: &Args) -> Result<()> {
     let sweep = figures::fig9_fusemax_sweep_cfg(
         args.stride,
         !args.no_cache,
+        args.cache_dir.as_deref(),
+        args.cache_cap,
         Some(&args.out),
         progress,
     );
@@ -231,7 +252,12 @@ fn cmd_fig11(args: &Args) -> Result<()> {
 fn cmd_fig12(args: &Args) -> Result<()> {
     eprintln!("NSGA-II checkpointing (pop {}, gens {})...", args.pop, args.gens);
     let ga = GaConfig { population: args.pop, generations: args.gens, ..Default::default() };
-    let (rows, _tg) = figures::fig12_checkpoint_ga(&ga, Some(&args.out));
+    let cache_dir = if args.no_cache { None } else { args.cache_dir.as_deref() };
+    if cache_dir.is_some() {
+        eprintln!("  (cache lifecycle on: cost cache + GA warm-start persisted)");
+    }
+    let (rows, _tg) =
+        figures::fig12_checkpoint_ga_cached(&ga, cache_dir, args.cache_cap, Some(&args.out));
     println!("Fig 12: Pareto front (ResNet-18 training, Adam, batch 1, 224²)");
     println!("{:>10} {:>14} {:>12} {:>12}", "mem saved", "stored (MiB16)", "Δlatency", "Δenergy");
     for r in &rows {
@@ -331,6 +357,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     let cfg = SweepConfig {
         mapping: MappingConfig::edge_tpu_default(),
         use_cache: !args.no_cache,
+        cache_dir: args.cache_dir.clone(),
+        cache_cap: args.cache_cap,
         ..Default::default()
     };
     // the AOT Pallas kernel if artifacts exist, native twin otherwise

@@ -8,7 +8,7 @@ use monet::autodiff::{
     apply_checkpointing, build_training_graph, checkpoint_candidates, CheckpointPlan,
     TrainOptions,
 };
-use monet::eval::CostCache;
+use monet::eval::{persist, CostCache};
 use monet::fusion::{fuse_greedy, FusionConstraints};
 use monet::ga::{CheckpointProblem, GaConfig};
 use monet::hardware::presets::{EdgeTpuParams, FuseMaxParams};
@@ -121,6 +121,148 @@ fn checkpoint_ga_identical_across_1_4_8_workers() {
     assert!(!serial.is_empty());
     assert_eq!(serial, run(4), "4-worker GA diverged from serial");
     assert_eq!(serial, run(8), "8-worker GA diverged from serial");
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("monet_eval_cache_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn evicting_cache_is_bit_identical_and_bounded() {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let p = fuse_greedy(&tg.graph, &FusionConstraints::default());
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let plain = schedule(&tg.graph, &p, &accel, &mapping);
+    // a capacity this small evicts constantly on a training graph — the
+    // CLOCK policy may only ever cost re-computation, never correctness
+    let cache = CostCache::with_capacity(32);
+    let first = schedule_with_cache(&tg.graph, &p, &accel, &mapping, Some(&cache));
+    let second = schedule_with_cache(&tg.graph, &p, &accel, &mapping, Some(&cache));
+    assert!(bit_identical(&plain, &first), "evicting cache diverged (first run)");
+    assert!(bit_identical(&plain, &second), "evicting cache diverged (second run)");
+    let s = cache.stats();
+    assert!(s.evictions > 0, "capacity 32 never evicted on a training graph: {s:?}");
+    assert!(s.entries <= 32, "CLOCK exceeded its bound: {s:?}");
+}
+
+#[test]
+fn persisted_cache_round_trip_is_bit_identical_and_all_hits() {
+    let dir = tmp_dir("roundtrip");
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let p = fuse_greedy(&tg.graph, &FusionConstraints::default());
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+
+    // cold process: open (no snapshot yet), fill, persist
+    let cold_cache = persist::open_cost_cache(Some(&dir), 0);
+    assert_eq!(cold_cache.stats().entries, 0);
+    let cold = schedule_with_cache(&tg.graph, &p, &accel, &mapping, Some(&cold_cache));
+    persist::save_cost_cache(&cold_cache, &dir).unwrap();
+
+    // "restarted" process: warm-load and re-run — bit-identical, zero
+    // recomputation
+    let warm_cache = persist::load_cost_cache(&dir, 0).expect("snapshot must load");
+    assert_eq!(warm_cache.stats().entries, cold_cache.stats().entries);
+    let warm = schedule_with_cache(&tg.graph, &p, &accel, &mapping, Some(&warm_cache));
+    assert!(bit_identical(&cold, &warm), "warm-loaded cache diverged from cold run");
+    let ws = warm_cache.stats();
+    assert_eq!(ws.misses, 0, "warm-loaded cache recomputed group costs: {ws:?}");
+    assert!(ws.hits > 0);
+
+    // a warm load into a *bounded* cache still reproduces the run exactly
+    let bounded = persist::load_cost_cache(&dir, 32).expect("bounded load");
+    assert!(bounded.stats().entries <= 32);
+    let br = schedule_with_cache(&tg.graph, &p, &accel, &mapping, Some(&bounded));
+    assert!(bit_identical(&cold, &br), "bounded warm cache diverged");
+
+    // corruption is rejected wholesale, never half-loaded
+    let path = dir.join(persist::COST_SNAPSHOT_FILE);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(persist::load_cost_cache(&dir, 0).is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ga_warm_start_round_trips_and_resumes() {
+    let dir = tmp_dir("ga_warm");
+    let fwd = mlp(1, 32, 64, 3, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel = EdgeTpuParams::baseline().build();
+    let ga = GaConfig { population: 10, generations: 3, workers: 2, ..Default::default() };
+
+    let problem = CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::default(),
+        FusionConstraints::default(),
+    );
+    let front = problem.optimize_persistent(&ga, &dir);
+    assert!(!front.is_empty());
+
+    // the persisted warm-start holds exactly the front as seeds, plus a
+    // non-empty memo, under this problem's structural key
+    let key = problem.warm_key();
+    let width = problem.candidates.len();
+    let warm = persist::load_ga_warmstart(&dir, key, width).expect("warm-start file");
+    assert_eq!(warm.seeds.len(), front.len());
+    assert!(!warm.memo.is_empty());
+    for (sol, seed) in front.iter().zip(&warm.seeds) {
+        assert_eq!(&problem.plan_to_genome(&sol.plan), seed);
+    }
+    // a different problem key or width must never warm-start from it
+    assert!(persist::load_ga_warmstart(&dir, key ^ 1, width).is_none());
+    assert!(persist::load_ga_warmstart(&dir, key, width + 1).is_none());
+
+    // the key must separate same-topology, different-shape workloads:
+    // this mlp has identical node/edge/candidate counts but a wider
+    // hidden layer — replaying the memo's objective values against it
+    // would silently corrupt the front
+    let fwd_wide = mlp(1, 32, 128, 3, 10);
+    let tg_wide = build_training_graph(
+        &fwd_wide,
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let problem_wide = CheckpointProblem::new(
+        &tg_wide,
+        &accel,
+        MappingConfig::default(),
+        FusionConstraints::default(),
+    );
+    assert_eq!(problem_wide.candidates.len(), width, "test premise: same genome width");
+    assert_ne!(problem_wide.warm_key(), key, "layer shapes must be part of the warm key");
+
+    // a restarted run resumes: every previous front point is already in
+    // its memo, so re-optimizing returns a front at least as good on the
+    // anchor plan, and completes without recomputing the seeds
+    let problem2 = CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::default(),
+        FusionConstraints::default(),
+    );
+    assert_eq!(problem2.warm_key(), key, "warm key must be stable across instances");
+    let front2 = problem2.optimize_persistent(&ga, &dir);
+    assert!(!front2.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
