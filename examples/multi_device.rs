@@ -30,11 +30,21 @@ fn main() {
     );
     let mut csv_rows = vec![];
     for n in [1usize, 2, 4, 8] {
-        let cluster = Cluster { devices: n, link_bw: 64.0, link_energy_pj: 10.0 };
+        let cluster =
+            Cluster { devices: n, link_bw: 64.0, link_energy_pj: 10.0, hop_cycles: 0.0 };
         for (name, s) in [
             ("data-parallel", Strategy::DataParallel),
             ("pipeline (m=8)", Strategy::Pipeline { microbatches: 8 }),
             ("tensor-parallel", Strategy::TensorParallel),
+            (
+                "hybrid (dp2,pp=n/2,m=8)",
+                Strategy::Hybrid {
+                    dp: 2.min(n),
+                    pp_stages: (n / 2).max(1),
+                    microbatches: 8,
+                    tp: 1,
+                },
+            ),
         ] {
             let r = model_strategy(s, full_batch, &builder, &accel, &mapping, &cluster);
             println!(

@@ -7,10 +7,13 @@ pub mod space;
 pub mod sweep;
 
 pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};
-pub use search::{front_recall, search, SearchOutcome};
-pub use space::DesignPoint;
+pub use search::{
+    best_latency_factorization, cluster_search, front_factorizations, front_recall, search,
+    ClusterSearchOutcome, SearchOutcome,
+};
+pub use space::{ClusterPoint, ClusterSpace, DesignPoint};
 pub use sweep::{
     evaluate_point_cached, evaluate_point_prepared, SweepPartitions,
-    evaluate_point, pareto_front, run_sweep, run_sweep_stats, FusionStrategy, Mode,
-    SweepConfig, SweepRow,
+    evaluate_point, pareto_front, run_cluster_sweep, run_sweep, run_sweep_stats, ClusterRow,
+    FusionStrategy, Mode, SweepConfig, SweepRow,
 };

@@ -1,8 +1,12 @@
 //! The design-space axes swept in the paper's §IV: Edge TPU (Table II) and
-//! FuseMax (Table III) points, unified behind one `DesignPoint` type.
+//! FuseMax (Table III) points, unified behind one `DesignPoint` type —
+//! plus the cluster-scale deployment space ([`ClusterSpace`]): device
+//! counts × link tiers × DP/PP/TP factorizations, the searchable
+//! dimension behind the Fig 5 edge→datacenter Pareto front.
 
 use crate::hardware::accelerator::Accelerator;
 use crate::hardware::presets::{EdgeTpuParams, FuseMaxParams};
+use crate::parallelism::{Cluster, LinkTier, Strategy};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum DesignPoint {
@@ -63,6 +67,122 @@ impl DesignPoint {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Cluster-scale deployment space (paper §II-C1 / Fig 5 made searchable)
+// ---------------------------------------------------------------------------
+
+/// One deployment point: a device count on a fabric tier running one
+/// hybrid DP/PP/TP factorization (`dp · pp · tp == devices`). The pure
+/// strategies are the degenerate factorizations — `(n,1,1)` is data
+/// parallelism, `(1,n,1)` pipeline, `(1,1,n)` tensor parallelism — so
+/// enumerating hybrids covers everything (see the `parallelism`
+/// degeneracy contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ClusterPoint {
+    pub devices: usize,
+    pub tier: LinkTier,
+    pub dp: usize,
+    pub pp: usize,
+    /// Pipeline microbatches (1 whenever `pp == 1`).
+    pub microbatches: usize,
+    pub tp: usize,
+}
+
+impl ClusterPoint {
+    pub fn strategy(&self) -> Strategy {
+        Strategy::Hybrid {
+            dp: self.dp,
+            pp_stages: self.pp,
+            microbatches: self.microbatches,
+            tp: self.tp,
+        }
+    }
+
+    pub fn cluster(&self) -> Cluster {
+        self.tier.cluster(self.devices)
+    }
+
+    /// Stable row label, e.g. `edge,n4,dp2,pp2,m4,tp1`.
+    pub fn label(&self) -> String {
+        format!(
+            "{},n{},dp{},pp{},m{},tp{}",
+            self.tier.as_str(),
+            self.devices,
+            self.dp,
+            self.pp,
+            self.microbatches,
+            self.tp
+        )
+    }
+}
+
+/// The enumerable cluster space: device counts × link tiers ×
+/// factorizations (× microbatch options for pipelined points).
+#[derive(Debug, Clone)]
+pub struct ClusterSpace {
+    pub device_counts: Vec<usize>,
+    pub tiers: Vec<LinkTier>,
+    /// Microbatch counts tried for every factorization with `pp > 1`.
+    pub microbatches: Vec<usize>,
+}
+
+impl ClusterSpace {
+    /// Powers of two from 1 to `max_devices`, all three link tiers,
+    /// microbatch options {4, 8}.
+    pub fn default_space(max_devices: usize) -> Self {
+        let mut device_counts = vec![];
+        let mut d = 1usize;
+        while d <= max_devices.max(1) {
+            device_counts.push(d);
+            d *= 2;
+        }
+        ClusterSpace {
+            device_counts,
+            tiers: LinkTier::all().to_vec(),
+            microbatches: vec![4, 8],
+        }
+    }
+
+    /// All ordered triples `(dp, pp, tp)` with `dp·pp·tp == n`.
+    pub fn factorizations(n: usize) -> Vec<(usize, usize, usize)> {
+        let n = n.max(1);
+        let mut out = vec![];
+        for dp in 1..=n {
+            if n % dp != 0 {
+                continue;
+            }
+            let rest = n / dp;
+            for pp in 1..=rest {
+                if rest % pp != 0 {
+                    continue;
+                }
+                out.push((dp, pp, rest / pp));
+            }
+        }
+        out
+    }
+
+    /// Enumerate every deployment point of the space, deterministically
+    /// ordered (devices, tier order, factorization, microbatches).
+    pub fn enumerate(&self) -> Vec<ClusterPoint> {
+        let mut out = vec![];
+        for &devices in &self.device_counts {
+            for &tier in &self.tiers {
+                for (dp, pp, tp) in Self::factorizations(devices) {
+                    if pp > 1 {
+                        for &m in &self.microbatches {
+                            out.push(ClusterPoint { devices, tier, dp, pp, microbatches: m, tp });
+                        }
+                    } else {
+                        out.push(ClusterPoint { devices, tier, dp, pp, microbatches: 1, tp });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +207,46 @@ mod tests {
         let labels: std::collections::HashSet<String> =
             pts.iter().map(|p| p.label()).collect();
         assert_eq!(labels.len(), pts.len());
+    }
+
+    #[test]
+    fn factorizations_cover_and_multiply_back() {
+        for n in [1usize, 2, 4, 6, 8, 16] {
+            let fs = ClusterSpace::factorizations(n);
+            assert!(!fs.is_empty());
+            for &(dp, pp, tp) in &fs {
+                assert_eq!(dp * pp * tp, n);
+            }
+            // the three pure strategies are always present
+            assert!(fs.contains(&(n, 1, 1)));
+            assert!(fs.contains(&(1, n, 1)));
+            assert!(fs.contains(&(1, 1, n)));
+            // no duplicates
+            let set: std::collections::HashSet<_> = fs.iter().collect();
+            assert_eq!(set.len(), fs.len());
+        }
+        assert_eq!(ClusterSpace::factorizations(4).len(), 6);
+    }
+
+    #[test]
+    fn cluster_space_enumerates_unique_labelled_points() {
+        let space = ClusterSpace::default_space(8);
+        assert_eq!(space.device_counts, vec![1, 2, 4, 8]);
+        let pts = space.enumerate();
+        assert!(!pts.is_empty());
+        let labels: std::collections::HashSet<String> =
+            pts.iter().map(|p| p.label()).collect();
+        assert_eq!(labels.len(), pts.len(), "labels must be unique");
+        for p in &pts {
+            assert_eq!(p.dp * p.pp * p.tp, p.devices);
+            assert!(p.pp > 1 || p.microbatches == 1);
+            assert_eq!(p.cluster().devices, p.devices);
+        }
+        // every tier appears at every device count
+        for &d in &space.device_counts {
+            for &t in &space.tiers {
+                assert!(pts.iter().any(|p| p.devices == d && p.tier == t));
+            }
+        }
     }
 }

@@ -8,15 +8,20 @@
 //! shared job queue, and results are streamed back over a channel so the
 //! caller can report progress (backpressure = bounded queue).
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use super::space::DesignPoint;
+use super::space::{ClusterPoint, DesignPoint};
+use crate::autodiff::TrainingGraph;
 use crate::eval::{persist, CacheStats, CostCache};
 use crate::fusion::{fuse_greedy, FusionConstraints};
+use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
+use crate::parallelism::{model_strategy_cached, LinkTier};
 use crate::scheduler::{schedule_with_cache, Partition};
 use crate::workload::graph::Graph;
 
@@ -247,6 +252,145 @@ pub fn run_sweep_stats(
             progress(done, n);
         }
         all.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
+        all
+    });
+    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+    if let Some(c) = &cache {
+        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
+    }
+    (rows, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Cluster-scale sweep: deployment points instead of accelerator points
+// ---------------------------------------------------------------------------
+
+/// One evaluated deployment point (a row of the Fig 5 data): a DP/PP/TP
+/// factorization on a device count and link tier, with the four cluster
+/// objectives (iteration latency, energy, per-device memory, cluster
+/// size).
+#[derive(Debug, Clone)]
+pub struct ClusterRow {
+    pub index: usize,
+    pub label: String,
+    pub devices: usize,
+    pub tier: LinkTier,
+    pub dp: usize,
+    pub pp: usize,
+    pub microbatches: usize,
+    pub tp: usize,
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    pub per_device_mem_bytes: u64,
+    pub comm_bytes: f64,
+}
+
+impl ClusterRow {
+    /// The four minimized NSGA-II objectives of the cluster DSE.
+    pub fn objectives(&self) -> Vec<f64> {
+        vec![
+            self.latency_cycles,
+            self.energy_pj,
+            self.per_device_mem_bytes as f64,
+            self.devices as f64,
+        ]
+    }
+
+    /// `(dp, pp, tp)` — the strategy factorization, microbatches aside.
+    pub fn factorization(&self) -> (usize, usize, usize) {
+        (self.dp, self.pp, self.tp)
+    }
+}
+
+/// Evaluate every [`ClusterPoint`] over the worker pool, sharing one
+/// group-cost cache: the per-device stage schedules are pure functions of
+/// the stage structure, so factorizations yielding the same stage shape
+/// (and the same point on every link tier) hit the same entries. The
+/// cache lifecycle (`use_cache`/`cache_dir`/`cache_cap`) and determinism
+/// guarantees match [`run_sweep_stats`]; `cfg.mapping` supplies the
+/// single-device mapping. `builder(batch)` must be a pure function of the
+/// batch size — each worker memoizes it per batch.
+pub fn run_cluster_sweep(
+    points: &[ClusterPoint],
+    full_batch: usize,
+    builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
+    accel: &Accelerator,
+    cfg: &SweepConfig,
+    mut progress: impl FnMut(usize, usize),
+) -> (Vec<ClusterRow>, CacheStats) {
+    let n = points.len();
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<ClusterRow>();
+    let cache = if cfg.use_cache {
+        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
+    } else {
+        None
+    };
+    let cache_ref = cache.as_ref();
+
+    let workers = cfg.workers.max(1).min(n.max(1));
+    let rows = std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let mapping = cfg.mapping;
+            scope.spawn(move || {
+                // per-worker training-graph memo: distinct factorizations
+                // mostly share their (replica batch / microbatch) sizes
+                let memo: RefCell<HashMap<usize, TrainingGraph>> = RefCell::new(HashMap::new());
+                let local_builder = |batch: usize| -> TrainingGraph {
+                    if let Some(tg) = memo.borrow().get(&batch) {
+                        return tg.clone();
+                    }
+                    let tg = builder(batch);
+                    memo.borrow_mut().insert(batch, tg.clone());
+                    tg
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let p = &points[i];
+                    let r = model_strategy_cached(
+                        p.strategy(),
+                        full_batch,
+                        &local_builder,
+                        accel,
+                        &mapping,
+                        &p.cluster(),
+                        cache_ref,
+                    );
+                    let row = ClusterRow {
+                        index: i,
+                        label: p.label(),
+                        devices: r.devices,
+                        tier: p.tier,
+                        dp: p.dp,
+                        pp: p.pp,
+                        microbatches: p.microbatches,
+                        tp: p.tp,
+                        latency_cycles: r.latency_cycles,
+                        energy_pj: r.energy_pj,
+                        per_device_mem_bytes: r.per_device_mem_bytes,
+                        comm_bytes: r.comm_bytes,
+                    };
+                    if tx.send(row).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut all: Vec<ClusterRow> = Vec::with_capacity(n);
+        let mut done = 0usize;
+        while let Ok(row) = rx.recv() {
+            all.push(row);
+            done += 1;
+            progress(done, n);
+        }
+        all.sort_by_key(|r| r.index);
         all
     });
     let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
@@ -515,6 +659,54 @@ mod tests {
             assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
             assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
             assert_eq!(a.peak_dram_bytes, b.peak_dram_bytes);
+        }
+    }
+
+    #[test]
+    fn cluster_sweep_is_deterministic_and_complete_across_worker_counts() {
+        use crate::hardware::presets::EdgeTpuParams;
+        use crate::parallelism::LinkTier;
+
+        let space = super::super::space::ClusterSpace {
+            device_counts: vec![1, 2],
+            tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+            microbatches: vec![2],
+        };
+        let points = space.enumerate();
+        assert!(points.len() >= 6);
+        let accel = EdgeTpuParams::baseline().build();
+        let cfg = MappingConfig::edge_tpu_default();
+        let run = |workers: usize| {
+            let mut calls = 0usize;
+            let (rows, stats) = run_cluster_sweep(
+                &points,
+                8,
+                &crate::figures::cluster_resnet18_builder,
+                &accel,
+                &SweepConfig { workers, mapping: cfg, ..Default::default() },
+                |_, _| calls += 1,
+            );
+            assert_eq!(calls, points.len());
+            (rows, stats)
+        };
+        let (one, s1) = run(1);
+        let (four, _) = run(4);
+        assert_eq!(one.len(), points.len());
+        assert!(s1.hits > 0, "tier-repeated stage schedules must share costs");
+        for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+            assert_eq!(a.index, i);
+            assert_eq!(a.label, points[i].label());
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes);
+            assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
+        }
+        // the row geometry matches the point geometry
+        for (p, r) in points.iter().zip(&one) {
+            assert_eq!(r.devices, p.devices);
+            assert_eq!(r.factorization(), (p.dp, p.pp, p.tp));
+            assert_eq!(r.objectives().len(), 4);
         }
     }
 

@@ -84,7 +84,17 @@ pub use persist::{load_cost_cache, open_cost_cache, persist_cost_cache, save_cos
 ///
 /// Stale snapshots written under an older contract are rejected at load
 /// time.
-pub const CACHE_CONTRACT_VERSION: u32 = 1;
+///
+/// History:
+/// * **2** — the cluster-scale parallelism DSE (PR 3): persisted snapshot
+///   directories are now shared by single-device sweeps *and* cluster
+///   sweeps whose entries come from pipeline-stage subgraph schedules;
+///   the version line guarantees no pre-cluster snapshot (written before
+///   stage-subgraph keys and their cross-factorization sharing existed)
+///   is ever replayed into the widened workload mix. Conservative by
+///   design: the cost of a false bump is one cold run.
+/// * **1** — initial persisted-snapshot contract (PR 2).
+pub const CACHE_CONTRACT_VERSION: u32 = 2;
 
 use std::hash::Hash;
 

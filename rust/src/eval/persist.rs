@@ -442,6 +442,42 @@ mod tests {
     }
 
     #[test]
+    fn snapshots_from_every_older_contract_are_rejected_wholesale() {
+        // a snapshot whose header carries any *previous* contract version
+        // (e.g. one written by a pre-cluster-DSE build) must be refused in
+        // full — nothing loaded, loader falls back to cold — even though
+        // its checksum and payload are perfectly intact
+        let dir = tmp_dir("old_contract");
+        let cache = CostCache::new();
+        for k in 0..10u128 {
+            cache.insert_loaded(k, cost(k as u64));
+        }
+        let path = save_cost_cache(&cache, &dir).unwrap();
+        let orig = fs::read(&path).unwrap();
+        // CACHE_CONTRACT_VERSION is ≥2 since the cluster-DSE bump, so this
+        // loop always exercises at least versions 0 and 1
+        for old in 0..super::super::CACHE_CONTRACT_VERSION {
+            // bytes 12..16 hold the contract version; rewrite it to the
+            // old value and re-checksum so only the header guard decides
+            let mut stale = orig.clone();
+            stale.truncate(stale.len() - 8);
+            stale[12..16].copy_from_slice(&old.to_le_bytes());
+            let sum = fnv64(&stale);
+            stale.extend_from_slice(&sum.to_le_bytes());
+            fs::write(&path, &stale).unwrap();
+            assert!(
+                load_cost_cache(&dir, 0).is_none(),
+                "contract-v{old} snapshot must be rejected wholesale"
+            );
+        }
+        // unmodified current-version snapshot still loads completely
+        fs::write(&path, &orig).unwrap();
+        let loaded = load_cost_cache(&dir, 0).expect("current snapshot loads");
+        assert_eq!(loaded.stats().entries, cache.stats().entries);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn bounded_load_respects_capacity() {
         let dir = tmp_dir("bounded");
         let cache = CostCache::new();

@@ -9,7 +9,10 @@ use crate::autodiff::{
     apply_checkpointing, build_training_graph, checkpoint_candidates,
     stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
 };
-use crate::dse::{pareto_front, run_sweep_stats, DesignPoint, Mode, SweepConfig, SweepRow};
+use crate::dse::{
+    cluster_search, pareto_front, run_sweep_stats, ClusterSearchOutcome, ClusterSpace,
+    DesignPoint, Mode, SweepConfig, SweepRow,
+};
 use crate::eval::{persist, CacheStats};
 use crate::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
 use crate::ga::{CheckpointProblem, GaConfig};
@@ -135,7 +138,7 @@ pub fn fig3_memory_breakdown(out_dir: Option<&Path>) -> Vec<MemoryBreakdown> {
     }
     if let Some(dir) = out_dir {
         write_csv(
-            &dir.join("fig3_memory_breakdown.csv"),
+            dir.join("fig3_memory_breakdown.csv"),
             "batch,params_bytes,grads_bytes,optstate_bytes,activation_bytes,total_bytes",
             out.iter().map(|m| {
                 vec![
@@ -151,6 +154,120 @@ pub fn fig3_memory_breakdown(out_dir: Option<&Path>) -> Vec<MemoryBreakdown> {
         .unwrap();
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — cluster-scale parallelism Pareto front (edge → datacenter)
+// ---------------------------------------------------------------------------
+
+/// One workload's slice of the Fig 5 data.
+pub struct ClusterFigure {
+    pub workload: String,
+    pub outcome: ClusterSearchOutcome,
+}
+
+/// Shared `cluster`-command / `fig5` evaluation setup: the enumerated
+/// deployment space for `max_devices` plus the baseline Edge-TPU
+/// accelerator and mapping every cluster row is modeled on — one
+/// definition so the CLI, the figure, and the tests cannot drift apart.
+pub fn cluster_setup(
+    max_devices: usize,
+) -> (ClusterSpace, crate::hardware::accelerator::Accelerator, MappingConfig) {
+    (
+        ClusterSpace::default_space(max_devices),
+        EdgeTpuParams::baseline().build(),
+        MappingConfig::edge_tpu_default(),
+    )
+}
+
+/// Canonical Fig 5 / `cluster`-command ResNet-18 training workload (Adam,
+/// CIFAR-sized inputs) for a given per-device batch. One definition so
+/// the figure, the CLI, and the tests all model the same graphs.
+pub fn cluster_resnet18_builder(batch: usize) -> TrainingGraph {
+    build_training_graph(
+        &resnet18(batch.max(1), 32, 10),
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    )
+}
+
+/// Canonical Fig 5 / `cluster`-command GPT-2 training workload: the
+/// reduced `tiny` config (kept sweep-tractable for the same reason Fig 9
+/// reduces its workload), Adam, at a given per-device batch.
+pub fn cluster_gpt2_builder(batch: usize) -> TrainingGraph {
+    build_training_graph(
+        &gpt2(Gpt2Config { batch: batch.max(1), ..Gpt2Config::tiny() }),
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    )
+}
+
+/// Fig 5 made quantitative: enumerate the cluster deployment space
+/// (device counts × link tiers × DP/PP/TP factorizations) for ResNet-18
+/// and GPT-2 training on clusters of baseline Edge TPUs, rank it with the
+/// four-objective NSGA-II set (iteration latency, energy, per-device
+/// memory, cluster size) and emit every row plus its front membership.
+/// The GPT-2 workload is the reduced `tiny` config for the same
+/// tractability reason Fig 9 reduces its sweep workload.
+pub fn fig5_cluster_pareto(
+    max_devices: usize,
+    full_batch: usize,
+    use_cache: bool,
+    cache_dir: Option<&Path>,
+    cache_cap: usize,
+    out_dir: Option<&Path>,
+    mut progress: impl FnMut(usize, usize),
+) -> Vec<ClusterFigure> {
+    let (space, accel, mapping) = cluster_setup(max_devices);
+    let cfg = SweepConfig {
+        mapping,
+        use_cache,
+        cache_dir: cache_dir.map(|p| p.to_path_buf()),
+        cache_cap,
+        ..Default::default()
+    };
+    let resnet_outcome = cluster_search(
+        &space,
+        full_batch,
+        &cluster_resnet18_builder,
+        &accel,
+        &cfg,
+        &mut progress,
+    );
+    let gpt2_outcome =
+        cluster_search(&space, full_batch, &cluster_gpt2_builder, &accel, &cfg, &mut progress);
+    let figures = vec![
+        ClusterFigure { workload: "resnet18".into(), outcome: resnet_outcome },
+        ClusterFigure { workload: "gpt2".into(), outcome: gpt2_outcome },
+    ];
+    if let Some(dir) = out_dir {
+        write_csv(
+            dir.join("fig5_cluster_pareto.csv"),
+            "workload,index,label,tier,devices,dp,pp,microbatches,tp,latency_cycles,energy_pj,per_device_mem_bytes,comm_bytes,on_front",
+            figures.iter().flat_map(|f| {
+                let front: std::collections::HashSet<usize> =
+                    f.outcome.front.iter().copied().collect();
+                f.outcome.rows.iter().map(move |r| {
+                    vec![
+                        f.workload.clone(),
+                        r.index.to_string(),
+                        format!("\"{}\"", r.label),
+                        r.tier.as_str().to_string(),
+                        r.devices.to_string(),
+                        r.dp.to_string(),
+                        r.pp.to_string(),
+                        r.microbatches.to_string(),
+                        r.tp.to_string(),
+                        format!("{:.6e}", r.latency_cycles),
+                        format!("{:.6e}", r.energy_pj),
+                        r.per_device_mem_bytes.to_string(),
+                        format!("{:.6e}", r.comm_bytes),
+                        front.contains(&r.index).to_string(),
+                    ]
+                })
+            }),
+        )
+        .unwrap();
+    }
+    figures
 }
 
 // ---------------------------------------------------------------------------
@@ -245,7 +362,7 @@ pub fn fig10_fusion_strategies(out_dir: Option<&Path>) -> Vec<FusionStrategyRow>
     }
     if let Some(dir) = out_dir {
         write_csv(
-            &dir.join("fig10_fusion_strategies.csv"),
+            dir.join("fig10_fusion_strategies.csv"),
             "strategy,n_groups,latency_cycles,energy_pj",
             rows.iter().map(|r| {
                 vec![
@@ -345,7 +462,7 @@ pub fn fig11_checkpoint_linearity(out_dir: Option<&Path>) -> Vec<LinearityRow> {
         .collect();
     if let Some(dir) = out_dir {
         write_csv(
-            &dir.join("fig11_checkpoint_linearity.csv"),
+            dir.join("fig11_checkpoint_linearity.csv"),
             "scenario,latency_delta_cycles,energy_delta_pj",
             rows.iter().map(|r| {
                 vec![
@@ -436,7 +553,7 @@ pub fn fig12_checkpoint_ga_cached(
         .collect();
     if let Some(dir) = out_dir {
         write_csv(
-            &dir.join("fig12_checkpoint_ga.csv"),
+            dir.join("fig12_checkpoint_ga.csv"),
             "memory_saving,stored_mb_fp16,latency_overhead,energy_overhead",
             rows.iter().map(|r| {
                 vec![
@@ -511,7 +628,7 @@ pub fn milp_vs_ga_ablation(
     }
     if let Some(dir) = out_dir {
         write_csv(
-            &dir.join("ablation_milp_vs_ga.csv"),
+            dir.join("ablation_milp_vs_ga.csv"),
             "source,memory_saving,latency_overhead,energy_overhead",
             rows.iter().map(|r| {
                 vec![
@@ -611,6 +728,25 @@ mod tests {
             lat_gap > 0.01 || en_gap > 0.01,
             "deltas additive: lat_gap={lat_gap}, en_gap={en_gap}"
         );
+    }
+
+    #[test]
+    fn fig5_covers_both_workloads_with_nonempty_fronts() {
+        let figs = fig5_cluster_pareto(2, 4, true, None, 0, None, |_, _| {});
+        assert_eq!(figs.len(), 2);
+        assert_eq!(figs[0].workload, "resnet18");
+        assert_eq!(figs[1].workload, "gpt2");
+        for f in &figs {
+            assert_eq!(f.outcome.rows.len(), f.outcome.n_points);
+            assert!(!f.outcome.front.is_empty(), "{}: empty front", f.workload);
+            for &i in &f.outcome.front {
+                assert!(i < f.outcome.rows.len());
+            }
+            // the single-device point exists and is on ≤2 devices like all
+            // rows of this reduced space
+            assert!(f.outcome.rows.iter().all(|r| r.devices <= 2));
+            assert!(f.outcome.rows.iter().any(|r| r.devices == 1));
+        }
     }
 
     #[test]

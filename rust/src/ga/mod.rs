@@ -6,4 +6,6 @@ pub mod milp;
 pub mod nsga2;
 
 pub use checkpoint_opt::{CheckpointProblem, CheckpointSolution};
-pub use nsga2::{dominates, nsga2, nsga2_with_memo, GaConfig, Genome, Individual, Objectives};
+pub use nsga2::{
+    dominates, nsga2, nsga2_with_memo, pareto_rank0, GaConfig, Genome, Individual, Objectives,
+};

@@ -116,6 +116,36 @@ pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
     }
 }
 
+/// Rank-0 (non-dominated) indices of a raw objective list — the NSGA-II
+/// front machinery exposed for callers that *enumerate* rather than
+/// evolve, like the cluster DSE's four-objective set (iteration latency,
+/// energy, per-device memory, cluster size). All objectives are
+/// minimized; rows with a NaN objective are excluded up front (a NaN can
+/// neither dominate nor be dominated, which would smuggle every
+/// degenerate row into the front — the same policy as
+/// `dse::sweep::pareto_front`). Returned indices ascend.
+pub fn pareto_rank0(objectives: &[Objectives]) -> Vec<usize> {
+    let valid: Vec<usize> = (0..objectives.len())
+        .filter(|&i| objectives[i].iter().all(|v| !v.is_nan()))
+        .collect();
+    let mut pop: Vec<Individual> = valid
+        .iter()
+        .map(|&i| Individual {
+            genome: vec![],
+            objectives: objectives[i].clone(),
+            rank: 0,
+            crowding: 0.0,
+        })
+        .collect();
+    let fronts = non_dominated_sort(&mut pop);
+    let mut out: Vec<usize> = fronts
+        .first()
+        .map(|f| f.iter().map(|&j| valid[j]).collect())
+        .unwrap_or_default();
+    out.sort_unstable();
+    out
+}
+
 #[derive(Debug, Clone)]
 pub struct GaConfig {
     pub population: usize,
@@ -346,6 +376,21 @@ mod tests {
         assert_eq!(f0, [0usize, 1, 2].into_iter().collect());
         assert!(fronts[1].contains(&3));
         assert_eq!(pop[4].rank, 2);
+    }
+
+    #[test]
+    fn pareto_rank0_matches_dominance_and_drops_nans() {
+        let objs: Vec<Objectives> = vec![
+            vec![1.0, 4.0, 1.0, 2.0],
+            vec![2.0, 3.0, 1.0, 2.0],
+            vec![2.0, 4.0, 1.0, 2.0],      // dominated by index 1
+            vec![f64::NAN, 0.0, 0.0, 0.0], // NaN row never enters
+            vec![1.0, 4.0, 1.0, 2.0],      // duplicate of 0: both survive
+        ];
+        assert_eq!(pareto_rank0(&objs), vec![0, 1, 4]);
+        assert!(pareto_rank0(&[]).is_empty());
+        // single valid row is trivially the whole front
+        assert_eq!(pareto_rank0(&[vec![5.0]]), vec![0]);
     }
 
     #[test]

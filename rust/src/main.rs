@@ -21,6 +21,8 @@ USAGE: monet <command> [options]
 COMMANDS
   fig1            ResNet-18 Edge-TPU sweep, energy-vs-latency (also fig8 data)
   fig3            ResNet-50 peak-memory breakdown (batch 1 & 8)
+  fig5            cluster-parallelism Pareto front, edge→datacenter
+                  (ResNet-18 + GPT-2 training; CSV with front membership)
   fig9            GPT-2 FuseMax sweep
   fig10           layer-fusion strategies comparison
   fig11           activation-checkpointing non-linearity
@@ -28,6 +30,12 @@ COMMANDS
   all             regenerate every figure
   schedule        generate + render the fused training schedule (Gantt + CSV)
   search          find the best training configs: AOT-Pallas prefilter + detailed schedule
+  cluster         cluster-scale parallelism DSE: enumerate DP/PP/TP hybrid
+                  factorizations across device counts and link tiers
+                  (edge/server/datacenter) and rank them with the
+                  4-objective NSGA-II set (iteration latency, energy,
+                  per-device memory, cluster size); prints the front and
+                  the per-tier latency optimum
   ablation        MILP (eq. 6) vs NSGA-II checkpointing under the true pipeline
   train           end-to-end: train tiny GPT-2 via the AOT HLO artifacts
   validate        cross-check the AOT cost kernel against the native model
@@ -37,16 +45,26 @@ OPTIONS
   --stride N      design-space subsampling stride (fig1/fig9/all; default 20)
   --pop N         GA population (fig12; default 32)
   --gens N        GA generations (fig12; default 30)
+  --devices N     max cluster size (cluster/fig5; device counts are the
+                  powers of two ≤ N; default 8)
+  --batch N       global training batch split across the cluster
+                  (cluster/fig5; default 4)
+  --workload W    cluster workload: resnet18 | gpt2 | both (cluster;
+                  default both — gpt2 is the reduced tiny config, like the
+                  fig9 sweep workload)
   --steps N       training steps (train; default 300)
   --config NAME   gpt2 config (train; default tiny)
   --artifacts DIR artifacts directory (default artifacts)
   --out DIR       results directory (default results)
   --no-cache      disable the shared group-cost memo for the sweep commands
-                  (fig1/fig9/search/all) — A/B timing; results are
-                  bit-identical with or without it
+                  (fig1/fig5/fig9/search/cluster/all) — A/B timing; results
+                  are bit-identical with or without it
   --cache-dir DIR persist the group-cost cache across runs: warm-load the
                   snapshot in DIR before a sweep/search/GA, write it back
-                  after (fig1/fig9/search/all/fig12). Stale/incompatible
+                  after (fig1/fig5/fig9/search/cluster/all/fig12; the
+                  cluster commands share entries across factorizations and
+                  link tiers — the stage-schedule memoization win).
+                  Stale/incompatible
                   snapshots are rejected wholesale. Sweep/search rows stay
                   bit-identical to a cold run; fig12 additionally
                   warm-starts the GA from the previous run's Pareto front,
@@ -63,6 +81,9 @@ struct Args {
     stride: usize,
     pop: usize,
     gens: usize,
+    devices: usize,
+    batch: usize,
+    workload: String,
     steps: usize,
     config: String,
     artifacts: PathBuf,
@@ -78,6 +99,9 @@ fn parse_args() -> Args {
         stride: 20,
         pop: 32,
         gens: 30,
+        devices: 8,
+        batch: 4,
+        workload: "both".into(),
         steps: 300,
         config: "tiny".into(),
         artifacts: "artifacts".into(),
@@ -97,6 +121,9 @@ fn parse_args() -> Args {
             "--stride" => args.stride = val().parse().unwrap_or_else(|_| usage()),
             "--pop" => args.pop = val().parse().unwrap_or_else(|_| usage()),
             "--gens" => args.gens = val().parse().unwrap_or_else(|_| usage()),
+            "--devices" => args.devices = val().parse().unwrap_or_else(|_| usage()),
+            "--batch" => args.batch = val().parse().unwrap_or_else(|_| usage()),
+            "--workload" => args.workload = val(),
             "--steps" => args.steps = val().parse().unwrap_or_else(|_| usage()),
             "--config" => args.config = val(),
             "--artifacts" => args.artifacts = val().into(),
@@ -203,6 +230,121 @@ fn cmd_fig3(args: &Args) -> Result<()> {
         );
         println!("  total: {}", fmt_bytes(m.total()));
     }
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    use monet::dse::front_factorizations;
+    eprintln!(
+        "cluster-parallelism space (≤{} devices, batch {}, edge→datacenter)...",
+        args.devices, args.batch
+    );
+    let figs = figures::fig5_cluster_pareto(
+        args.devices,
+        args.batch,
+        !args.no_cache,
+        args.cache_dir.as_deref(),
+        args.cache_cap,
+        Some(&args.out),
+        progress,
+    );
+    for f in &figs {
+        let facts = front_factorizations(&f.outcome);
+        println!(
+            "Fig 5 [{}]: {} deployment points, {} on the 4-objective front, {} distinct dp/pp/tp factorizations",
+            f.workload,
+            f.outcome.rows.len(),
+            f.outcome.front.len(),
+            facts.len()
+        );
+        print_cache_stats("cluster", &f.outcome.cache);
+    }
+    println!("rows → {}/fig5_cluster_pareto.csv", args.out.display());
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use monet::dse::{
+        best_latency_factorization, cluster_search, front_factorizations, ClusterRow,
+        ClusterSearchOutcome, SweepConfig,
+    };
+    use monet::figures::{cluster_gpt2_builder, cluster_resnet18_builder, cluster_setup};
+    use monet::parallelism::LinkTier;
+    use monet::report::fmt_bytes;
+
+    let wanted: Vec<&str> = match args.workload.as_str() {
+        "both" => vec!["resnet18", "gpt2"],
+        "resnet18" => vec!["resnet18"],
+        "gpt2" => vec!["gpt2"],
+        _ => usage(),
+    };
+    // shared with figures::fig5_cluster_pareto so the command and the
+    // figure always model the same space on the same hardware
+    let (space, accel, mapping) = cluster_setup(args.devices);
+    let top_devices = *space.device_counts.last().unwrap_or(&1);
+    let cfg = SweepConfig {
+        mapping,
+        use_cache: !args.no_cache,
+        cache_dir: args.cache_dir.clone(),
+        cache_cap: args.cache_cap,
+        ..Default::default()
+    };
+    for name in wanted {
+        eprintln!(
+            "cluster DSE: {name} training, batch {}, device counts {:?}, tiers {:?}...",
+            args.batch,
+            space.device_counts,
+            space.tiers.iter().map(|t| t.as_str()).collect::<Vec<_>>()
+        );
+        // the canonical fig5 workload builders, so `cluster` and `fig5`
+        // can never drift apart on what they model
+        let out: ClusterSearchOutcome = if name == "resnet18" {
+            cluster_search(&space, args.batch, &cluster_resnet18_builder, &accel, &cfg, progress)
+        } else {
+            cluster_search(&space, args.batch, &cluster_gpt2_builder, &accel, &cfg, progress)
+        };
+        println!(
+            "\n[{name}] {} deployment points evaluated in {:.2}s",
+            out.rows.len(),
+            out.secs
+        );
+        print_cache_stats("cluster", &out.cache);
+        let facts = front_factorizations(&out);
+        println!(
+            "4-objective Pareto front (latency, energy, mem/device, devices): {} points, {} distinct dp/pp/tp factorizations",
+            out.front.len(),
+            facts.len()
+        );
+        let mut front_rows: Vec<&ClusterRow> =
+            out.front.iter().map(|&i| &out.rows[i]).collect();
+        front_rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
+        println!(
+            "{:<34} {:>13} {:>13} {:>11} {:>12}",
+            "deployment", "latency (cyc)", "energy (pJ)", "mem/device", "comm (B)"
+        );
+        for r in front_rows.iter().take(16) {
+            println!(
+                "{:<34} {:>13.3e} {:>13.3e} {:>11} {:>12.3e}",
+                r.label,
+                r.latency_cycles,
+                r.energy_pj,
+                fmt_bytes(r.per_device_mem_bytes),
+                r.comm_bytes
+            );
+        }
+        if front_rows.len() > 16 {
+            println!("  ... {} more front points", front_rows.len() - 16);
+        }
+        println!("latency optimum at {top_devices} devices, per link tier:");
+        for tier in LinkTier::all() {
+            if let Some((dp, pp, tp)) =
+                best_latency_factorization(&out.rows, tier, top_devices)
+            {
+                println!("  {:<10} dp{dp} pp{pp} tp{tp}", tier.as_str());
+            }
+        }
+    }
+    println!("\n(fig5 writes the full row set + front membership as CSV)");
     Ok(())
 }
 
@@ -322,7 +464,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         r.utilization() * 100.0
     );
     monet::report::write_csv(
-        &args.out.join("schedule_timeline.csv"),
+        args.out.join("schedule_timeline.csv"),
         "group,core,gang,start_cycles,finish_cycles,energy_pj,phase",
         r.timeline.iter().map(|t| {
             vec![
@@ -448,7 +590,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         final_loss
     );
     monet::report::write_csv(
-        &args.out.join("e2e_train_loss.csv"),
+        args.out.join("e2e_train_loss.csv"),
         "step,loss",
         losses.iter().enumerate().map(|(i, l)| vec![(i + 1).to_string(), format!("{l:.5}")]),
     )?;
@@ -518,6 +660,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "fig1" | "fig8" => cmd_fig1(&args),
         "fig3" => cmd_fig3(&args),
+        "fig5" => cmd_fig5(&args),
         "fig9" => cmd_fig9(&args),
         "fig10" => cmd_fig10(&args),
         "fig11" => cmd_fig11(&args),
@@ -525,6 +668,7 @@ fn main() -> Result<()> {
         "all" => {
             cmd_fig1(&args)?;
             cmd_fig3(&args)?;
+            cmd_fig5(&args)?;
             cmd_fig9(&args)?;
             cmd_fig10(&args)?;
             cmd_fig11(&args)?;
@@ -532,6 +676,7 @@ fn main() -> Result<()> {
         }
         "schedule" => cmd_schedule(&args),
         "search" => cmd_search(&args),
+        "cluster" => cmd_cluster(&args),
         "ablation" => cmd_ablation(&args),
         "train" => cmd_train(&args),
         "validate" => cmd_validate(&args),

@@ -1,18 +1,43 @@
 //! Multi-device parallelism strategies (paper §II-C1, Fig 5): data,
-//! pipeline and tensor parallelism across a cluster of identical HDAs.
+//! pipeline and tensor parallelism across a cluster of identical HDAs —
+//! plus their GPipe/Megatron-style 3D composition ([`Strategy::Hybrid`]),
+//! which is what the cluster-scale DSE actually searches over.
 //!
 //! Single-device latency/energy come from the layer-fused scheduler; this
 //! module layers the deployment-level costs on top — gradient all-reduce
 //! for data parallelism, stage transfers + fill/drain for pipelining,
 //! per-layer activation reductions for tensor parallelism — the standard
 //! first-order models (GPipe / Megatron style), expressed in cycles over
-//! the inter-device fabric.
+//! the inter-device fabric. Every collective additionally pays the
+//! fabric's per-message launch latency ([`Cluster::hop_cycles`]): on an
+//! edge-class fabric (software collectives over a board-level link) this
+//! fixed cost dominates and punishes communication-chatty strategies, on
+//! a datacenter fabric (switched high-bandwidth links with hardware
+//! collectives) it almost vanishes — the mechanism behind the Fig 5
+//! edge→datacenter strategy flip.
+//!
+//! ## Degeneracy contract
+//!
+//! `Hybrid { dp, pp_stages, microbatches, tp }` composes the three pure
+//! models: TP splits layers inside a stage, stages are pipelined, and
+//! `dp` replicas all-reduce gradients. The arithmetic is arranged so the
+//! degenerate corners are **bit-identical** to the pure strategies (and,
+//! at `{1,1,1,1}`, to the single-device fused `schedule()`):
+//!
+//! * `Hybrid{dp,1,1,1}` ≡ `DataParallel` on `dp` devices
+//! * `Hybrid{1,pp,m,1}` ≡ `Pipeline{m}` on `pp` devices
+//! * `Hybrid{1,1,1,tp}` ≡ `TensorParallel` on `tp` devices
+//!
+//! The `parallelism` unit tests pin all four identities at the bit level;
+//! they are what lets the cluster DSE enumerate only `Hybrid` points
+//! without losing the pure strategies as special cases.
 
 use crate::autodiff::TrainingGraph;
+use crate::eval::CostCache;
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
-use crate::scheduler::{schedule, ScheduleResult};
+use crate::scheduler::{schedule_with_cache, ScheduleResult};
 use crate::workload::graph::Graph;
 use crate::workload::op::Phase;
 
@@ -25,9 +50,65 @@ pub struct Cluster {
     pub link_bw: f64,
     /// Energy per byte moved between devices.
     pub link_energy_pj: f64,
+    /// Fixed launch latency per collective / per pipeline-stage boundary
+    /// (cycles): software allreduce setup on an edge fabric, switch
+    /// traversal on a datacenter one. 0 models an ideal fabric.
+    pub hop_cycles: f64,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Named fabric classes for the edge→datacenter sweep (Fig 5). Bandwidth
+/// rises and per-message latency falls from edge to datacenter — the two
+/// knobs that reorder the parallelism strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkTier {
+    /// Board-level serial link, software collectives (~8 B/cycle).
+    Edge,
+    /// Server-chassis interconnect, PCIe-class (~64 B/cycle).
+    Server,
+    /// Switched datacenter fabric, NVLink/NVSwitch-class with in-network
+    /// collectives (~2 KiB/cycle).
+    Datacenter,
+}
+
+impl LinkTier {
+    pub fn all() -> [LinkTier; 3] {
+        [LinkTier::Edge, LinkTier::Server, LinkTier::Datacenter]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LinkTier::Edge => "edge",
+            LinkTier::Server => "server",
+            LinkTier::Datacenter => "datacenter",
+        }
+    }
+
+    /// The fabric parameters of this tier for an `devices`-wide cluster.
+    pub fn cluster(&self, devices: usize) -> Cluster {
+        match self {
+            LinkTier::Edge => Cluster {
+                devices,
+                link_bw: 8.0,
+                link_energy_pj: 40.0,
+                hop_cycles: 40_000.0,
+            },
+            LinkTier::Server => Cluster {
+                devices,
+                link_bw: 64.0,
+                link_energy_pj: 10.0,
+                hop_cycles: 4_000.0,
+            },
+            LinkTier::Datacenter => Cluster {
+                devices,
+                link_bw: 2048.0,
+                link_energy_pj: 1.5,
+                hop_cycles: 50.0,
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Fig 5(a): batch split across devices, gradients all-reduced.
     DataParallel,
@@ -35,6 +116,10 @@ pub enum Strategy {
     Pipeline { microbatches: usize },
     /// Fig 5(c): every layer split across devices, activations reduced.
     TensorParallel,
+    /// 3D composition over `dp·pp_stages·tp` devices: TP inside a stage,
+    /// stages pipelined over `microbatches`, `dp` replicas all-reduced.
+    /// Degenerates bit-identically to the pure strategies (module docs).
+    Hybrid { dp: usize, pp_stages: usize, microbatches: usize, tp: usize },
 }
 
 /// Multi-device estimate for one training iteration.
@@ -50,9 +135,14 @@ pub struct MultiDeviceResult {
     pub comm_bytes: f64,
 }
 
-fn fused_schedule(g: &Graph, accel: &Accelerator, mapping: &MappingConfig) -> ScheduleResult {
+fn fused_schedule_cached(
+    g: &Graph,
+    accel: &Accelerator,
+    mapping: &MappingConfig,
+    cache: Option<&CostCache>,
+) -> ScheduleResult {
     let p = fuse_greedy(g, &FusionConstraints::default());
-    schedule(g, &p, accel, mapping)
+    schedule_with_cache(g, &p, accel, mapping, cache)
 }
 
 /// Ring all-reduce cost of `bytes` over `n` devices: 2·(n−1)/n · bytes per
@@ -63,6 +153,81 @@ fn allreduce_cycles(bytes: f64, cluster: &Cluster) -> f64 {
     }
     let n = cluster.devices as f64;
     2.0 * (n - 1.0) / n * bytes / cluster.link_bw.max(1.0)
+}
+
+/// Megatron-style reduction footprint of a (sub)graph: total output bytes
+/// of the sharded MAC layers (one partial-sum all-reduce each, fwd and
+/// bwd already both present in a training graph) and how many collectives
+/// that is. Shared by the pure TensorParallel model and the TP axis of
+/// `Hybrid` so the degenerate case stays bit-identical.
+fn tp_reduce_stats<'a>(
+    nodes: impl Iterator<Item = &'a crate::workload::graph::Node>,
+    elem_bytes: u64,
+) -> (f64, usize) {
+    let mut reduce_bytes = 0f64;
+    let mut n_collectives = 0usize;
+    for node in nodes {
+        if node.kind.is_conv() || node.kind.is_gemm() {
+            reduce_bytes += (node.kind.out_elems() * elem_bytes) as f64;
+            n_collectives += 1;
+        }
+    }
+    (reduce_bytes, n_collectives)
+}
+
+/// Contiguous MAC-balanced stage split (GPipe-style) over topo order:
+/// node ids per stage, shared by `Pipeline` and the PP axis of `Hybrid`.
+fn split_stages(g: &Graph, n_stages: usize) -> Vec<Vec<usize>> {
+    let topo = g.topo_order();
+    let total_macs: u64 = g.total_macs(None);
+    let mut stages: Vec<Vec<usize>> = vec![vec![]; n_stages];
+    let mut acc = 0u64;
+    for &node in &topo {
+        let s = ((acc as u128 * n_stages as u128) / (total_macs.max(1) as u128)) as usize;
+        stages[s.min(n_stages - 1)].push(node);
+        acc += g.node(node).kind.macs();
+    }
+    stages
+}
+
+/// Induced subgraph of one stage plus the stage's outgoing boundary bytes
+/// (tensors that must cross to a later stage's device).
+fn stage_subgraph(g: &Graph, stage: &[usize]) -> (Graph, f64) {
+    let mut sub = Graph::with_elem_bytes(g.elem_bytes);
+    let mut map = std::collections::HashMap::new();
+    for &old in stage {
+        let node = g.node(old);
+        let id = sub.add_node(node.name.clone(), node.kind.clone(), node.phase);
+        map.insert(old, id);
+    }
+    let mut boundary_bytes = 0f64;
+    for e in &g.edges {
+        match (map.get(&e.src), map.get(&e.dst)) {
+            (Some(&a), Some(&b)) => {
+                sub.add_edge_full(a, b, e.bytes, e.is_activation);
+            }
+            (Some(_), None) => boundary_bytes += e.bytes as f64,
+            _ => {}
+        }
+    }
+    (sub, boundary_bytes)
+}
+
+/// Stage weights/states + in-flight microbatch activations of one stage,
+/// in the original graph's node ids (the pure-Pipeline accounting, reused
+/// by `Hybrid`): `(stage_param_bytes, stage_activation_bytes)`.
+fn stage_mem_parts(tg: &TrainingGraph, stage: &[usize]) -> (u64, u64) {
+    let stage_params: u64 = stage
+        .iter()
+        .filter(|&&x| tg.graph.node(x).phase == Phase::Forward)
+        .map(|&x| tg.graph.node(x).kind.weight_elems() * tg.graph.elem_bytes)
+        .sum();
+    let stage_acts: u64 = stage
+        .iter()
+        .filter(|&&x| tg.graph.out_edges(x).any(|e| e.is_activation))
+        .map(|&x| tg.graph.out_bytes(x))
+        .sum();
+    (stage_params, stage_acts)
 }
 
 /// Model one training iteration under a parallelism strategy.
@@ -78,19 +243,42 @@ pub fn model_strategy(
     mapping: &MappingConfig,
     cluster: &Cluster,
 ) -> MultiDeviceResult {
+    model_strategy_cached(strategy, full_batch, tg_builder, accel, mapping, cluster, None)
+}
+
+/// [`model_strategy`] with a shared group-cost memo for the inner
+/// single-device schedules. The per-device stage cost is a pure function
+/// of the stage's structure, so all cluster factorizations that produce
+/// the same stage shape hit the same entries — the memoization win the
+/// cluster DSE is built on. Results are bit-identical with or without the
+/// cache (the `eval` soundness contract).
+pub fn model_strategy_cached(
+    strategy: Strategy,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    accel: &Accelerator,
+    mapping: &MappingConfig,
+    cluster: &Cluster,
+    cache: Option<&CostCache>,
+) -> MultiDeviceResult {
     let n = cluster.devices.max(1);
     match strategy {
         Strategy::DataParallel => {
             let per_dev_batch = full_batch.div_ceil(n);
             let tg = tg_builder(per_dev_batch);
-            let r = fused_schedule(&tg.graph, accel, mapping);
+            let r = fused_schedule_cached(&tg.graph, accel, mapping, cache);
             let grad_bytes = tg.grad_bytes() as f64;
-            let ar = allreduce_cycles(grad_bytes, cluster);
+            // one flat gradient all-reduce per iteration
+            let sync = if n > 1 {
+                cluster.hop_cycles + allreduce_cycles(grad_bytes, cluster)
+            } else {
+                0.0
+            };
             let comm = if n > 1 { 2.0 * (n as f64 - 1.0) / n as f64 * grad_bytes * n as f64 } else { 0.0 };
             MultiDeviceResult {
                 strategy,
                 devices: n,
-                latency_cycles: r.latency_cycles + ar,
+                latency_cycles: r.latency_cycles + sync,
                 energy_pj: r.energy_pj * n as f64 + comm * cluster.link_energy_pj,
                 per_device_mem_bytes: tg.param_bytes()
                     + tg.grad_bytes()
@@ -103,62 +291,32 @@ pub fn model_strategy(
             let m = microbatches.max(1);
             let tg = tg_builder(full_batch.div_ceil(m).max(1)); // one microbatch graph
             // contiguous stage split balanced by MACs over topo order
-            let topo = tg.graph.topo_order();
-            let total_macs: u64 = tg.graph.total_macs(None);
-            let mut stages: Vec<Vec<usize>> = vec![vec![]; n];
-            let mut acc = 0u64;
-            for &node in &topo {
-                let s = ((acc as u128 * n as u128) / (total_macs.max(1) as u128)) as usize;
-                stages[s.min(n - 1)].push(node);
-                acc += tg.graph.node(node).kind.macs();
-            }
+            let stages = split_stages(&tg.graph, n);
             // per-stage time = schedule of the induced subgraph; boundary
             // tensors transfer between devices
             let mut stage_time = 0f64;
             let mut stage_energy_sum = 0f64;
             let mut boundary_bytes = 0f64;
             let mut per_dev_mem = 0u64;
+            let mut used_stages = 0usize;
             for stage in stages.iter().filter(|s| !s.is_empty()) {
-                // induced subgraph
-                let mut sub = Graph::with_elem_bytes(tg.graph.elem_bytes);
-                let mut map = std::collections::HashMap::new();
-                for &old in stage {
-                    let node = tg.graph.node(old);
-                    let id = sub.add_node(node.name.clone(), node.kind.clone(), node.phase);
-                    map.insert(old, id);
-                }
-                for e in &tg.graph.edges {
-                    match (map.get(&e.src), map.get(&e.dst)) {
-                        (Some(&a), Some(&b)) => {
-                            sub.add_edge_full(a, b, e.bytes, e.is_activation);
-                        }
-                        (Some(_), None) => boundary_bytes += e.bytes as f64,
-                        _ => {}
-                    }
-                }
-                let r = fused_schedule(&sub, accel, mapping);
+                let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
+                boundary_bytes += stage_boundary;
+                let r = fused_schedule_cached(&sub, accel, mapping, cache);
                 stage_time = stage_time.max(r.latency_cycles);
                 stage_energy_sum += r.energy_pj;
+                used_stages += 1;
                 // stage weights/states + in-flight microbatch activations
-                let stage_params: u64 = stage
-                    .iter()
-                    .filter(|&&x| tg.graph.node(x).phase == Phase::Forward)
-                    .map(|&x| tg.graph.node(x).kind.weight_elems() * tg.graph.elem_bytes)
-                    .sum();
-                let stage_acts: u64 = stage
-                    .iter()
-                    .filter(|&&x| {
-                        tg.graph.out_edges(x).any(|e| e.is_activation)
-                    })
-                    .map(|&x| tg.graph.out_bytes(x))
-                    .sum();
+                let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
                 per_dev_mem = per_dev_mem
                     .max(stage_params * (1 + tg.optimizer.states_per_param() as u64 + 1)
                         + stage_acts * (n.min(m) as u64));
             }
-            // GPipe fill/drain: (m + n − 1) stage slots per iteration
+            // GPipe fill/drain: (m + n − 1) stage slots per iteration, plus
+            // one hop launch per stage boundary
             let latency = stage_time * (m + n - 1) as f64
-                + boundary_bytes / cluster.link_bw.max(1.0);
+                + boundary_bytes / cluster.link_bw.max(1.0)
+                + used_stages.saturating_sub(1) as f64 * cluster.hop_cycles;
             MultiDeviceResult {
                 strategy,
                 devices: n,
@@ -171,19 +329,17 @@ pub fn model_strategy(
         }
         Strategy::TensorParallel => {
             let tg = tg_builder(full_batch);
-            let r = fused_schedule(&tg.graph, accel, mapping);
+            let r = fused_schedule_cached(&tg.graph, accel, mapping, cache);
             // ideal compute split + per-MAC-layer partial-sum reduction of
             // the output activations (Megatron-style, one reduce per
-            // sharded matmul in fwd and bwd)
-            let mut reduce_bytes = 0f64;
-            for node in &tg.graph.nodes {
-                if node.kind.is_conv() || node.kind.is_gemm() {
-                    reduce_bytes += (node.kind.out_elems() * tg.graph.elem_bytes) as f64;
-                }
-            }
+            // sharded matmul in fwd and bwd), each paying a hop launch
+            let (reduce_bytes, n_collectives) =
+                tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+            let hop = if n > 1 { n_collectives as f64 * cluster.hop_cycles } else { 0.0 };
             let comm = reduce_bytes * 2.0 * (n as f64 - 1.0) / n as f64 * n as f64;
             let latency = r.latency_cycles / n as f64
-                + allreduce_cycles(reduce_bytes, cluster);
+                + allreduce_cycles(reduce_bytes, cluster)
+                + hop;
             MultiDeviceResult {
                 strategy,
                 devices: n,
@@ -197,6 +353,121 @@ pub fn model_strategy(
                 comm_bytes: comm,
             }
         }
+        Strategy::Hybrid { dp, pp_stages, microbatches, tp } => {
+            let dp = dp.max(1);
+            let pp = pp_stages.max(1);
+            let m = microbatches.max(1);
+            let tp = tp.max(1);
+            let devices = dp * pp * tp;
+            let tp_cluster = Cluster { devices: tp, ..*cluster };
+            let dp_cluster = Cluster { devices: dp, ..*cluster };
+            // each replica sees 1/dp of the batch, pipelined in m
+            // microbatches (the pure-strategy batch rules composed)
+            let replica_batch = full_batch.div_ceil(dp);
+            let tg = tg_builder(replica_batch.div_ceil(m).max(1));
+            let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
+
+            let mut stage_time = 0f64;
+            let mut stage_energy_sum = 0f64;
+            let mut boundary_bytes = 0f64;
+            let mut per_dev_mem = 0u64;
+            let mut tp_comm_bytes = 0f64; // per microbatch, summed over stages
+            let mut used_stages = 0usize;
+
+            // one stage's contribution; `r` is its single-device schedule,
+            // `stage_states`/`stage_acts_inflight` its per-device memory
+            // before TP sharding
+            let mut eval_stage = |r: &ScheduleResult,
+                                  reduce_bytes: f64,
+                                  n_collectives: usize,
+                                  stage_states: u64,
+                                  stage_acts_inflight: u64| {
+                let tp_lat = if tp > 1 {
+                    r.latency_cycles / tp as f64
+                        + allreduce_cycles(reduce_bytes, &tp_cluster)
+                        + n_collectives as f64 * cluster.hop_cycles
+                } else {
+                    r.latency_cycles
+                };
+                stage_time = stage_time.max(tp_lat);
+                stage_energy_sum += r.energy_pj;
+                if tp > 1 {
+                    tp_comm_bytes +=
+                        reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
+                }
+                per_dev_mem = per_dev_mem.max(stage_states / tp as u64 + stage_acts_inflight);
+                used_stages += 1;
+            };
+
+            if pp == 1 {
+                // single stage: schedule the replica graph directly — no
+                // induced-subgraph rebuild, so `Hybrid{1,1,1,1}` replays
+                // the single-device `schedule()` bit for bit
+                let r = fused_schedule_cached(&tg.graph, accel, mapping, cache);
+                let (reduce_bytes, n_collectives) =
+                    tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+                let states =
+                    tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
+                eval_stage(&r, reduce_bytes, n_collectives, states, tg.saved_activation_bytes());
+            } else {
+                let stages = split_stages(&tg.graph, pp);
+                for stage in stages.iter().filter(|s| !s.is_empty()) {
+                    let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
+                    boundary_bytes += stage_boundary;
+                    let r = fused_schedule_cached(&sub, accel, mapping, cache);
+                    let (reduce_bytes, n_collectives) =
+                        tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+                    let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
+                    eval_stage(
+                        &r,
+                        reduce_bytes,
+                        n_collectives,
+                        stage_params * states_mult,
+                        stage_acts * (pp.min(m) as u64),
+                    );
+                }
+            }
+
+            // replica-level gradient all-reduce across the dp groups. With
+            // pp/tp sharding, each device holds only its ~1/(pp·tp) shard
+            // of the parameters and the per-shard all-reduces run
+            // concurrently (one dp-group per shard), so the critical-path
+            // wire time covers one shard, not the full model; the /1.0 at
+            // pp == tp == 1 is exact, preserving the DataParallel
+            // degeneracy bit for bit. Total comm *bytes* below are
+            // unchanged: pp·tp concurrent groups each move 1/(pp·tp) of
+            // the gradients.
+            let dp_sync = if dp > 1 {
+                cluster.hop_cycles
+                    + allreduce_cycles(
+                        tg.grad_bytes() as f64 / (pp * tp) as f64,
+                        &dp_cluster,
+                    )
+            } else {
+                0.0
+            };
+            let dp_comm = if dp > 1 {
+                2.0 * (dp as f64 - 1.0) / dp as f64 * tg.grad_bytes() as f64 * dp as f64
+            } else {
+                0.0
+            };
+
+            let latency = stage_time * (m + pp - 1) as f64
+                + boundary_bytes / cluster.link_bw.max(1.0)
+                + used_stages.saturating_sub(1) as f64 * cluster.hop_cycles
+                + dp_sync;
+            let comm =
+                (tp_comm_bytes * m as f64 + boundary_bytes * m as f64) * dp as f64 + dp_comm;
+            MultiDeviceResult {
+                strategy,
+                devices,
+                latency_cycles: latency,
+                energy_pj: (stage_energy_sum * m as f64) * dp as f64
+                    + comm * cluster.link_energy_pj,
+                per_device_mem_bytes: per_dev_mem,
+                comm_bytes: comm,
+            }
+        }
     }
 }
 
@@ -205,6 +476,7 @@ mod tests {
     use super::*;
     use crate::autodiff::{build_training_graph, TrainOptions};
     use crate::hardware::presets::EdgeTpuParams;
+    use crate::scheduler::schedule;
     use crate::workload::models::resnet18;
     use crate::workload::op::Optimizer;
 
@@ -218,7 +490,7 @@ mod tests {
     }
 
     fn cluster(n: usize) -> Cluster {
-        Cluster { devices: n, link_bw: 64.0, link_energy_pj: 10.0 }
+        Cluster { devices: n, link_bw: 64.0, link_energy_pj: 10.0, hop_cycles: 0.0 }
     }
 
     fn run(s: Strategy, n: usize) -> MultiDeviceResult {
@@ -231,6 +503,14 @@ mod tests {
             &MappingConfig::edge_tpu_default(),
             &cluster(n),
         )
+    }
+
+    fn bit_eq(a: &MultiDeviceResult, b: &MultiDeviceResult) {
+        assert_eq!(a.devices, b.devices);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes);
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
     }
 
     #[test]
@@ -293,5 +573,118 @@ mod tests {
             v[0].0
         };
         assert_ne!(by_lat, by_mem, "one strategy dominates both axes — model too simple");
+    }
+
+    // ---- the degeneracy contract (module docs): hybrids collapse to the
+    // pure strategies bit for bit ----
+
+    #[test]
+    fn hybrid_1111_is_bit_identical_to_single_device_schedule() {
+        let accel = EdgeTpuParams::baseline().build();
+        let mapping = MappingConfig::edge_tpu_default();
+        let h = model_strategy(
+            Strategy::Hybrid { dp: 1, pp_stages: 1, microbatches: 1, tp: 1 },
+            8,
+            &builder(),
+            &accel,
+            &mapping,
+            &cluster(1),
+        );
+        let tg = builder()(8);
+        let p = fuse_greedy(&tg.graph, &FusionConstraints::default());
+        let r = schedule(&tg.graph, &p, &accel, &mapping);
+        assert_eq!(h.latency_cycles.to_bits(), r.latency_cycles.to_bits());
+        assert_eq!(h.energy_pj.to_bits(), r.energy_pj.to_bits());
+        assert_eq!(h.comm_bytes, 0.0);
+        assert_eq!(h.devices, 1);
+        assert_eq!(
+            h.per_device_mem_bytes,
+            tg.param_bytes()
+                + tg.grad_bytes()
+                + tg.optimizer_state_bytes()
+                + tg.saved_activation_bytes()
+        );
+    }
+
+    #[test]
+    fn hybrid_dp_only_is_bit_identical_to_data_parallel() {
+        let h = run(Strategy::Hybrid { dp: 4, pp_stages: 1, microbatches: 1, tp: 1 }, 4);
+        let dp = run(Strategy::DataParallel, 4);
+        bit_eq(&h, &dp);
+    }
+
+    #[test]
+    fn hybrid_pp_only_is_bit_identical_to_pipeline() {
+        let h = run(Strategy::Hybrid { dp: 1, pp_stages: 4, microbatches: 4, tp: 1 }, 4);
+        let pp = run(Strategy::Pipeline { microbatches: 4 }, 4);
+        bit_eq(&h, &pp);
+    }
+
+    #[test]
+    fn hybrid_tp_only_is_bit_identical_to_tensor_parallel() {
+        let h = run(Strategy::Hybrid { dp: 1, pp_stages: 1, microbatches: 1, tp: 4 }, 4);
+        let tp = run(Strategy::TensorParallel, 4);
+        bit_eq(&h, &tp);
+    }
+
+    #[test]
+    fn degeneracy_holds_with_nonzero_hop_latency() {
+        // the `cluster(n)` helper above pins hop_cycles to 0.0, which
+        // zeroes every per-collective launch term — this corner re-pins
+        // all three pure-strategy identities on a real fabric tier so an
+        // edit to the hop arithmetic in one arm but not the other cannot
+        // slip past the suite
+        let accel = EdgeTpuParams::baseline().build();
+        let mapping = MappingConfig::edge_tpu_default();
+        let c = LinkTier::Edge.cluster(4);
+        assert!(c.hop_cycles > 0.0);
+        let run_c =
+            |s: Strategy| model_strategy(s, 8, &builder(), &accel, &mapping, &c);
+        bit_eq(
+            &run_c(Strategy::Hybrid { dp: 4, pp_stages: 1, microbatches: 1, tp: 1 }),
+            &run_c(Strategy::DataParallel),
+        );
+        bit_eq(
+            &run_c(Strategy::Hybrid { dp: 1, pp_stages: 4, microbatches: 4, tp: 1 }),
+            &run_c(Strategy::Pipeline { microbatches: 4 }),
+        );
+        bit_eq(
+            &run_c(Strategy::Hybrid { dp: 1, pp_stages: 1, microbatches: 1, tp: 4 }),
+            &run_c(Strategy::TensorParallel),
+        );
+    }
+
+    #[test]
+    fn hybrid_composition_is_consistent_and_cache_safe() {
+        let accel = EdgeTpuParams::baseline().build();
+        let mapping = MappingConfig::edge_tpu_default();
+        let c = cluster(4);
+        let s = Strategy::Hybrid { dp: 2, pp_stages: 2, microbatches: 4, tp: 1 };
+        let plain = model_strategy(s, 8, &builder(), &accel, &mapping, &c);
+        assert!(plain.latency_cycles.is_finite() && plain.latency_cycles > 0.0);
+        assert!(plain.energy_pj.is_finite() && plain.energy_pj > 0.0);
+        assert_eq!(plain.devices, 4);
+        assert!(plain.comm_bytes > 0.0, "both dp and pp axes must communicate");
+        // pipelining shards the model: less state per device than pure DP
+        let dp = run(Strategy::DataParallel, 4);
+        assert!(plain.per_device_mem_bytes < dp.per_device_mem_bytes);
+        // and the shared cost cache never changes the numbers
+        let cache = CostCache::new();
+        let cached =
+            model_strategy_cached(s, 8, &builder(), &accel, &mapping, &c, Some(&cache));
+        bit_eq(&plain, &cached);
+        assert!(cache.stats().misses > 0);
+    }
+
+    #[test]
+    fn link_tiers_order_sanely() {
+        let e = LinkTier::Edge.cluster(4);
+        let s = LinkTier::Server.cluster(4);
+        let d = LinkTier::Datacenter.cluster(4);
+        assert!(e.link_bw < s.link_bw && s.link_bw < d.link_bw);
+        assert!(e.hop_cycles > s.hop_cycles && s.hop_cycles > d.hop_cycles);
+        assert!(e.link_energy_pj > d.link_energy_pj);
+        assert_eq!(e.devices, 4);
+        assert_eq!(LinkTier::Edge.as_str(), "edge");
     }
 }

@@ -386,7 +386,7 @@ pub fn schedule_with_cache(
                 let gang_free = frees[gang - 1].0; // all gang members must be free
                 let start = gang_free.max(ready[gid]);
                 let finish = start + cost.cycles;
-                if best.as_ref().map_or(true, |b| finish < b.0) {
+                if best.as_ref().is_none_or(|b| finish < b.0) {
                     best = Some((finish, start, frees[..gang].iter().map(|f| f.1).min().unwrap(), gang, cost));
                     // store the representative core id; gang members resolved below
                     let _ = cid;

@@ -49,6 +49,12 @@ pub struct Graph {
     pub elem_bytes: u64,
 }
 
+impl Default for Graph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Graph {
     pub fn new() -> Self {
         Graph { nodes: vec![], edges: vec![], succ: vec![], pred: vec![], elem_bytes: BYTES_F32 }
@@ -205,7 +211,7 @@ impl Graph {
     pub fn total_macs(&self, phase: Option<Phase>) -> u64 {
         self.nodes
             .iter()
-            .filter(|n| phase.map_or(true, |p| n.phase == p))
+            .filter(|n| phase.is_none_or(|p| n.phase == p))
             .map(|n| n.kind.macs())
             .sum()
     }

@@ -8,7 +8,7 @@ use monet::autodiff::{
     apply_checkpointing, build_training_graph, checkpoint_candidates, CheckpointPlan,
     TrainOptions,
 };
-use monet::eval::{persist, CostCache};
+use monet::eval::{persist, CacheStats, CostCache};
 use monet::fusion::{fuse_greedy, FusionConstraints};
 use monet::ga::{CheckpointProblem, GaConfig};
 use monet::hardware::presets::{EdgeTpuParams, FuseMaxParams};
@@ -121,6 +121,55 @@ fn checkpoint_ga_identical_across_1_4_8_workers() {
     assert!(!serial.is_empty());
     assert_eq!(serial, run(4), "4-worker GA diverged from serial");
     assert_eq!(serial, run(8), "8-worker GA diverged from serial");
+}
+
+#[test]
+fn cluster_sweep_cached_and_uncached_agree_bitwise() {
+    // the cluster DSE's inner stage schedules ride the same cost cache as
+    // the single-device sweeps; sharing entries across DP/PP/TP
+    // factorizations and link tiers must never change a single bit of any
+    // row (the eval soundness contract, extended to deployment points)
+    use monet::dse::{run_cluster_sweep, ClusterSpace, SweepConfig};
+    use monet::parallelism::LinkTier;
+
+    let space = ClusterSpace {
+        device_counts: vec![1, 2, 4],
+        tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+        microbatches: vec![2],
+    };
+    let points = space.enumerate();
+    assert!(points.len() >= 12);
+    let accel = EdgeTpuParams::baseline().build();
+    let run = |use_cache: bool| {
+        run_cluster_sweep(
+            &points,
+            8,
+            &monet::figures::cluster_resnet18_builder,
+            &accel,
+            &SweepConfig {
+                mapping: MappingConfig::edge_tpu_default(),
+                use_cache,
+                workers: 4,
+                ..Default::default()
+            },
+            |_, _| {},
+        )
+    };
+    let (cached, stats) = run(true);
+    let (plain, no_stats) = run(false);
+    assert!(
+        stats.hits > 0,
+        "factorizations sharing stage shapes never hit the cache: {stats:?}"
+    );
+    assert_eq!(no_stats, CacheStats::default());
+    assert_eq!(cached.len(), plain.len());
+    for (a, b) in cached.iter().zip(&plain) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes);
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
+    }
 }
 
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
