@@ -1,5 +1,23 @@
-//! Design-space exploration (DESIGN.md S11): the sweep orchestrator, the
-//! Table II/III spaces, and the Pallas-kernel pre-filter.
+//! Design-space exploration (DESIGN.md S11): the end-user search layer
+//! over everything the lower layers can model.
+//!
+//! Three spaces are searchable:
+//!
+//! * **accelerator points** ([`DesignPoint`], Tables II/III) — swept by
+//!   [`run_sweep`]/[`search()`] with the Pallas-kernel pre-filter
+//!   ([`prefilter`]) pruning hopeless configurations before detailed
+//!   scheduling;
+//! * **homogeneous deployments** ([`ClusterPoint`]) — device counts ×
+//!   link tiers × DP/PP/TP factorizations ([`run_cluster_sweep`],
+//!   [`cluster_search`]);
+//! * **heterogeneous deployments** ([`crate::parallelism::HeteroPoint`])
+//!   — a mixed edge/server/datacenter device pool with a stage-placement
+//!   dimension ([`ClusterSpace::enumerate_hetero`], [`hetero_search`]).
+//!
+//! All sweeps share one [`crate::eval::CostCache`] across their worker
+//! pools and are bit-identical across worker counts and cache settings;
+//! cluster outcomes are ranked with the four-objective NSGA-II dominance
+//! set (iteration latency, energy, per-device memory, cluster size).
 
 pub mod prefilter;
 pub mod search;
@@ -8,12 +26,13 @@ pub mod sweep;
 
 pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};
 pub use search::{
-    best_latency_factorization, cluster_search, front_factorizations, front_recall, search,
+    best_latency_factorization, cluster_search, front_factorizations, front_recall,
+    hetero_search, mixed_domination_witness, mixed_placement, placed_only_on, search,
     ClusterSearchOutcome, SearchOutcome,
 };
 pub use space::{ClusterPoint, ClusterSpace, DesignPoint};
 pub use sweep::{
     evaluate_point_cached, evaluate_point_prepared, SweepPartitions,
-    evaluate_point, pareto_front, run_cluster_sweep, run_sweep, run_sweep_stats, ClusterRow,
-    FusionStrategy, Mode, SweepConfig, SweepRow,
+    evaluate_point, pareto_front, run_cluster_sweep, run_hetero_sweep, run_sweep,
+    run_sweep_stats, ClusterRow, FusionStrategy, Mode, SweepConfig, SweepRow,
 };

@@ -17,14 +17,14 @@ use std::time::Instant;
 use super::prefilter::{accel_to_cfg, graph_to_layers, select_survivors};
 use super::space::{ClusterSpace, DesignPoint};
 use super::sweep::{
-    evaluate_point_cached, pareto_front, run_cluster_sweep, ClusterRow, Mode, SweepConfig,
-    SweepPartitions, SweepRow,
+    evaluate_point_cached, pareto_front, run_cluster_sweep, run_hetero_sweep, ClusterRow, Mode,
+    SweepConfig, SweepPartitions, SweepRow,
 };
 use crate::autodiff::TrainingGraph;
 use crate::eval::{persist, CacheStats};
 use crate::ga::nsga2::pareto_rank0;
 use crate::hardware::accelerator::Accelerator;
-use crate::parallelism::LinkTier;
+use crate::parallelism::{HeteroCluster, LinkTier};
 use crate::runtime::cost_kernel::{cost_eval_native, CostKernel};
 use crate::workload::graph::Graph;
 
@@ -150,6 +150,78 @@ pub fn cluster_search(
         secs: t0.elapsed().as_secs_f64(),
         cache,
     }
+}
+
+/// Enumerate and evaluate the **heterogeneous** deployment space of a
+/// device pool — factorizations × stage placements × microbatch options
+/// (see [`ClusterSpace::enumerate_hetero`]) — and rank it with the same
+/// four-objective NSGA-II dominance set as [`cluster_search`]. The inner
+/// per-stage schedules ride the shared group-cost cache; `cfg.mapping` is
+/// the single-device mapping and `builder(batch)` must be pure in the
+/// batch size.
+pub fn hetero_search(
+    hc: &HeteroCluster,
+    microbatches: &[usize],
+    full_batch: usize,
+    builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
+    cfg: &SweepConfig,
+    progress: impl FnMut(usize, usize),
+) -> ClusterSearchOutcome {
+    let t0 = Instant::now();
+    let points = ClusterSpace::enumerate_hetero(hc, microbatches);
+    let (rows, cache) = run_hetero_sweep(&points, hc, full_batch, builder, cfg, progress);
+    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives()).collect();
+    let front = pareto_rank0(&objectives);
+    ClusterSearchOutcome {
+        n_points: points.len(),
+        front,
+        rows,
+        secs: t0.elapsed().as_secs_f64(),
+        cache,
+    }
+}
+
+/// Is this row a uniform placement hosted entirely on the named class?
+/// (Homogeneous rows have an empty placement and are never uniform-`c`.)
+pub fn placed_only_on(row: &ClusterRow, class: &str) -> bool {
+    !row.placement.is_empty() && row.placement.split('|').all(|c| c == class)
+}
+
+/// Does this row's placement span more than one device class?
+pub fn mixed_placement(row: &ClusterRow) -> bool {
+    let mut it = row.placement.split('|');
+    let first = it.next();
+    !row.placement.is_empty() && it.any(|c| Some(c) != first)
+}
+
+/// The heterogeneity acceptance witness: the index (into `outcome.rows`)
+/// of a **mixed-placement front row** that beats the best uniform-
+/// `lat_class` row on latency *and* the best uniform-`en_class` row on
+/// energy. For an edge+datacenter pool this is the paper's §II-C1 claim
+/// made executable: splitting the pipeline so the memory-heavy stages run
+/// on datacenter-class devices outruns every all-edge deployment while
+/// out-frugaling every all-datacenter one. Returns `None` when no front
+/// row does both.
+pub fn mixed_domination_witness(
+    outcome: &ClusterSearchOutcome,
+    lat_class: &str,
+    en_class: &str,
+) -> Option<usize> {
+    let rows = &outcome.rows;
+    let best_lat = rows
+        .iter()
+        .filter(|r| placed_only_on(r, lat_class))
+        .map(|r| r.latency_cycles)
+        .fold(f64::INFINITY, f64::min);
+    let best_en = rows
+        .iter()
+        .filter(|r| placed_only_on(r, en_class))
+        .map(|r| r.energy_pj)
+        .fold(f64::INFINITY, f64::min);
+    outcome.front.iter().copied().find(|&i| {
+        let r = &rows[i];
+        mixed_placement(r) && r.latency_cycles < best_lat && r.energy_pj < best_en
+    })
 }
 
 /// Distinct `(dp, pp, tp)` factorizations among the front rows, sorted.
@@ -310,6 +382,54 @@ mod tests {
             facts.len() >= 3,
             "degenerate cluster front — only {} factorization(s): {facts:?}",
             facts.len()
+        );
+    }
+
+    #[test]
+    fn gpt2_mixed_cluster_front_dominates_the_uniform_extremes() {
+        use crate::mapping::MappingConfig;
+        use crate::parallelism::{DeviceClass, HeteroCluster};
+
+        // the edge-to-datacenter acceptance bar: on an edge:2+datacenter:2
+        // pool training tiny GPT-2, the 4-objective front must contain a
+        // mixed-placement point that is faster than every all-edge
+        // deployment (datacenter-class stages soak up the latency) and
+        // cheaper than every all-datacenter deployment (edge-class stages
+        // dodge the V²·f energy scale)
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let cfg = SweepConfig {
+            mapping: MappingConfig::edge_tpu_default(),
+            ..Default::default()
+        };
+        let out = hetero_search(
+            &hc,
+            &[2, 4],
+            4,
+            &crate::figures::cluster_gpt2_builder,
+            &cfg,
+            |_, _| {},
+        );
+        assert_eq!(out.n_points, out.rows.len());
+        assert!(!out.front.is_empty());
+        assert!(out.cache.hits > 0, "placements repeating stage shapes must share costs");
+        // both uniform extremes actually exist in the enumerated space
+        assert!(out.rows.iter().any(|r| placed_only_on(r, "edge")));
+        assert!(out.rows.iter().any(|r| placed_only_on(r, "datacenter")));
+        assert!(out.rows.iter().any(|r| mixed_placement(r)));
+        let w = mixed_domination_witness(&out, "edge", "datacenter");
+        assert!(
+            w.is_some(),
+            "no mixed-placement front point dominates the best all-edge latency \
+             and the best all-datacenter energy"
+        );
+        let witness = &out.rows[w.unwrap()];
+        assert!(
+            witness.placement.contains("datacenter") && witness.placement.contains("edge"),
+            "witness must span both classes: {}",
+            witness.placement
         );
     }
 

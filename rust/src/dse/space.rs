@@ -2,11 +2,14 @@
 //! FuseMax (Table III) points, unified behind one `DesignPoint` type —
 //! plus the cluster-scale deployment space ([`ClusterSpace`]): device
 //! counts × link tiers × DP/PP/TP factorizations, the searchable
-//! dimension behind the Fig 5 edge→datacenter Pareto front.
+//! dimension behind the Fig 5 edge→datacenter Pareto front. The
+//! heterogeneous variant ([`ClusterSpace::enumerate_hetero`]) adds the
+//! **stage-placement** dimension: which device class of a mixed pool
+//! hosts which pipeline stage.
 
 use crate::hardware::accelerator::Accelerator;
 use crate::hardware::presets::{EdgeTpuParams, FuseMaxParams};
-use crate::parallelism::{Cluster, LinkTier, Strategy};
+use crate::parallelism::{Cluster, HeteroCluster, HeteroPoint, LinkTier, Strategy};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum DesignPoint {
@@ -162,6 +165,65 @@ impl ClusterSpace {
         out
     }
 
+    /// Pipelines up to this deep get their stage placements enumerated
+    /// exhaustively; deeper ones fall back to contiguous class blocks
+    /// (ascending and descending class order) — the sequence count at
+    /// depth `pp` over `k` classes is `k^pp`-bounded and would swamp the
+    /// sweep beyond this.
+    pub const MAX_EXHAUSTIVE_PLACEMENT: usize = 8;
+
+    /// Enumerate every heterogeneous deployment point of a device pool:
+    /// factorizations `dp·pp·tp ≤ total devices` × stage placements
+    /// feasible under the per-class device counts (each stage occupies
+    /// `dp·tp` devices of its class) × microbatch options. `m = 1` (no
+    /// microbatching) is always tried for pipelined points — it is the
+    /// minimum-energy pipeline corner (no per-microbatch weight
+    /// re-streaming). Symmetry pruning: [`HeteroCluster::new`] merges
+    /// identically-named pool entries, so no two enumerated placements
+    /// are permutations of indistinguishable classes; the `seen` set
+    /// drops exact duplicates (e.g. repeated `m = 1`). Deterministic
+    /// order: devices, factorization, placement (lexicographic class
+    /// order), microbatches.
+    pub fn enumerate_hetero(hc: &HeteroCluster, microbatches: &[usize]) -> Vec<HeteroPoint> {
+        let total = hc.total_devices();
+        let mut out: Vec<HeteroPoint> = vec![];
+        let mut seen: std::collections::HashSet<HeteroPoint> = std::collections::HashSet::new();
+        for n in 1..=total {
+            for (dp, pp, tp) in Self::factorizations(n) {
+                let gang = dp * tp;
+                let caps: Vec<usize> = hc.counts.iter().map(|&c| c / gang).collect();
+                if caps.iter().sum::<usize>() < pp {
+                    continue; // not enough stage slots anywhere
+                }
+                let placements = if pp <= Self::MAX_EXHAUSTIVE_PLACEMENT {
+                    class_sequences(pp, &caps)
+                } else {
+                    class_block_sequences(pp, &caps)
+                };
+                for placement in placements {
+                    let mut ms: Vec<usize> = vec![1];
+                    if pp > 1 {
+                        ms.extend(microbatches.iter().copied());
+                    }
+                    for &m in &ms {
+                        let p = HeteroPoint {
+                            dp,
+                            pp,
+                            microbatches: m,
+                            tp,
+                            placement: placement.clone(),
+                        };
+                        debug_assert!(p.feasible(hc));
+                        if seen.insert(p.clone()) {
+                            out.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Enumerate every deployment point of the space, deterministically
     /// ordered (devices, tier order, factorization, microbatches).
     pub fn enumerate(&self) -> Vec<ClusterPoint> {
@@ -181,6 +243,57 @@ impl ClusterSpace {
         }
         out
     }
+}
+
+/// All class-index sequences of length `len` under per-class multiplicity
+/// caps, in lexicographic class order.
+fn class_sequences(len: usize, caps: &[usize]) -> Vec<Vec<usize>> {
+    fn rec(len: usize, cur: &mut Vec<usize>, left: &mut [usize], out: &mut Vec<Vec<usize>>) {
+        if cur.len() == len {
+            out.push(cur.clone());
+            return;
+        }
+        for c in 0..left.len() {
+            if left[c] == 0 {
+                continue;
+            }
+            left[c] -= 1;
+            cur.push(c);
+            rec(len, cur, left, out);
+            cur.pop();
+            left[c] += 1;
+        }
+    }
+    let mut out = vec![];
+    let mut left = caps.to_vec();
+    rec(len, &mut Vec::with_capacity(len), &mut left, &mut out);
+    out
+}
+
+/// Contiguous class-block placements (each class's stages adjacent), in
+/// ascending and descending class order — the fallback beyond
+/// [`ClusterSpace::MAX_EXHAUSTIVE_PLACEMENT`].
+fn class_block_sequences(len: usize, caps: &[usize]) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = vec![];
+    for rev in [false, true] {
+        let order: Vec<usize> = if rev {
+            (0..caps.len()).rev().collect()
+        } else {
+            (0..caps.len()).collect()
+        };
+        let mut seq = Vec::with_capacity(len);
+        for &c in &order {
+            for _ in 0..caps[c] {
+                if seq.len() < len {
+                    seq.push(c);
+                }
+            }
+        }
+        if seq.len() == len && !out.contains(&seq) {
+            out.push(seq);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -226,6 +339,51 @@ mod tests {
             assert_eq!(set.len(), fs.len());
         }
         assert_eq!(ClusterSpace::factorizations(4).len(), 6);
+    }
+
+    #[test]
+    fn hetero_enumeration_is_feasible_unique_and_covers_the_extremes() {
+        use crate::parallelism::DeviceClass;
+
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let pts = ClusterSpace::enumerate_hetero(&hc, &[2, 4]);
+        assert!(!pts.is_empty());
+        let set: std::collections::HashSet<&HeteroPoint> = pts.iter().collect();
+        assert_eq!(set.len(), pts.len(), "duplicate deployment points");
+        let labels: std::collections::HashSet<String> = pts.iter().map(|p| p.label(&hc)).collect();
+        assert_eq!(labels.len(), pts.len(), "labels must be unique");
+        for p in &pts {
+            assert!(p.feasible(&hc), "infeasible point enumerated: {p:?}");
+            assert!(p.devices() <= hc.total_devices());
+            assert!(p.pp > 1 || p.microbatches == 1);
+        }
+        // the uniform extremes and genuinely mixed placements all appear
+        assert!(pts.iter().any(|p| !p.is_mixed() && p.placement == vec![0]));
+        assert!(pts.iter().any(|p| !p.is_mixed() && p.placement == vec![1]));
+        assert!(pts.iter().any(|p| p.is_mixed()));
+        // m = 1 is always tried for pipelined points
+        assert!(pts.iter().any(|p| p.pp > 1 && p.microbatches == 1));
+        // symmetry pruning: a split pool of identical classes enumerates
+        // exactly the same points as the merged pool
+        let split = HeteroCluster::new(vec![(DeviceClass::edge(), 2), (DeviceClass::edge(), 2)]);
+        let merged = HeteroCluster::new(vec![(DeviceClass::edge(), 4)]);
+        assert_eq!(
+            ClusterSpace::enumerate_hetero(&split, &[2]),
+            ClusterSpace::enumerate_hetero(&merged, &[2])
+        );
+    }
+
+    #[test]
+    fn class_sequences_respect_caps() {
+        let seqs = class_sequences(2, &[2, 1]);
+        assert_eq!(seqs, vec![vec![0, 0], vec![0, 1], vec![1, 0]]);
+        assert!(class_sequences(4, &[1, 1]).is_empty());
+        // the deep-pipeline fallback keeps only contiguous class blocks
+        let blocks = class_block_sequences(4, &[2, 2]);
+        assert_eq!(blocks, vec![vec![0, 0, 1, 1], vec![1, 1, 0, 0]]);
     }
 
     #[test]

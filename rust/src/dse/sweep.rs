@@ -21,7 +21,9 @@ use crate::eval::{persist, CacheStats, CostCache};
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
-use crate::parallelism::{model_strategy_cached, LinkTier};
+use crate::parallelism::{
+    model_strategy_cached, model_strategy_hetero, HeteroCluster, HeteroPoint, LinkTier,
+};
 use crate::scheduler::{schedule_with_cache, Partition};
 use crate::workload::graph::Graph;
 
@@ -274,11 +276,16 @@ pub struct ClusterRow {
     pub index: usize,
     pub label: String,
     pub devices: usize,
+    /// Homogeneous rows: the fabric tier swept. Heterogeneous rows: the
+    /// bottleneck tier of the placement (slowest used class fabric).
     pub tier: LinkTier,
     pub dp: usize,
     pub pp: usize,
     pub microbatches: usize,
     pub tp: usize,
+    /// Stage placement by class name, `|`-joined (e.g. `edge|datacenter`);
+    /// empty for homogeneous rows.
+    pub placement: String,
     pub latency_cycles: f64,
     pub energy_pj: f64,
     pub per_device_mem_bytes: u64,
@@ -370,6 +377,109 @@ pub fn run_cluster_sweep(
                         pp: p.pp,
                         microbatches: p.microbatches,
                         tp: p.tp,
+                        placement: String::new(),
+                        latency_cycles: r.latency_cycles,
+                        energy_pj: r.energy_pj,
+                        per_device_mem_bytes: r.per_device_mem_bytes,
+                        comm_bytes: r.comm_bytes,
+                    };
+                    if tx.send(row).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut all: Vec<ClusterRow> = Vec::with_capacity(n);
+        let mut done = 0usize;
+        while let Ok(row) = rx.recv() {
+            all.push(row);
+            done += 1;
+            progress(done, n);
+        }
+        all.sort_by_key(|r| r.index);
+        all
+    });
+    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+    if let Some(c) = &cache {
+        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
+    }
+    (rows, stats)
+}
+
+/// Evaluate every [`HeteroPoint`] of a heterogeneous device pool over the
+/// worker pool — the placement-aware sibling of [`run_cluster_sweep`],
+/// with the same cache lifecycle and determinism guarantees (rows are
+/// bit-identical across worker counts and with/without the shared cost
+/// cache). Each row's `placement` column records which class hosts which
+/// pipeline stage; `tier` is the placement's bottleneck fabric.
+///
+/// NOTE: the orchestration scaffolding (cache open/persist, scoped worker
+/// pool, work-stealing index, per-worker training-graph memo, index-sorted
+/// collection) deliberately mirrors [`run_cluster_sweep`] line for line —
+/// any fix to one MUST be mirrored into the other. Folding them into one
+/// generic harness needs higher-ranked closure bounds across the scoped
+/// threads; tracked as a ROADMAP follow-up rather than done here.
+pub fn run_hetero_sweep(
+    points: &[HeteroPoint],
+    hc: &HeteroCluster,
+    full_batch: usize,
+    builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
+    cfg: &SweepConfig,
+    mut progress: impl FnMut(usize, usize),
+) -> (Vec<ClusterRow>, CacheStats) {
+    let n = points.len();
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<ClusterRow>();
+    let cache = if cfg.use_cache {
+        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
+    } else {
+        None
+    };
+    let cache_ref = cache.as_ref();
+
+    let workers = cfg.workers.max(1).min(n.max(1));
+    let rows = std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let mapping = cfg.mapping;
+            scope.spawn(move || {
+                // per-worker training-graph memo, as in `run_cluster_sweep`
+                let memo: RefCell<HashMap<usize, TrainingGraph>> = RefCell::new(HashMap::new());
+                let local_builder = |batch: usize| -> TrainingGraph {
+                    if let Some(tg) = memo.borrow().get(&batch) {
+                        return tg.clone();
+                    }
+                    let tg = builder(batch);
+                    memo.borrow_mut().insert(batch, tg.clone());
+                    tg
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let p = &points[i];
+                    let r = model_strategy_hetero(
+                        p,
+                        full_batch,
+                        &local_builder,
+                        &mapping,
+                        hc,
+                        cache_ref,
+                    );
+                    let row = ClusterRow {
+                        index: i,
+                        label: p.label(hc),
+                        devices: r.devices,
+                        tier: hc.bottleneck_tier(&p.placement),
+                        dp: p.dp,
+                        pp: p.pp,
+                        microbatches: p.microbatches,
+                        tp: p.tp,
+                        placement: p.placement_names(hc),
                         latency_cycles: r.latency_cycles,
                         energy_pj: r.energy_pj,
                         per_device_mem_bytes: r.per_device_mem_bytes,
@@ -707,6 +817,49 @@ mod tests {
             assert_eq!(r.devices, p.devices);
             assert_eq!(r.factorization(), (p.dp, p.pp, p.tp));
             assert_eq!(r.objectives().len(), 4);
+        }
+    }
+
+    #[test]
+    fn hetero_sweep_is_deterministic_and_complete_across_worker_counts() {
+        use crate::parallelism::{DeviceClass, HeteroCluster};
+
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let points = super::super::space::ClusterSpace::enumerate_hetero(&hc, &[2]);
+        assert!(points.iter().any(|p| p.is_mixed()));
+        let run = |workers: usize| {
+            let mut calls = 0usize;
+            let (rows, stats) = run_hetero_sweep(
+                &points,
+                &hc,
+                4,
+                &crate::figures::cluster_resnet18_builder,
+                &SweepConfig {
+                    workers,
+                    mapping: MappingConfig::edge_tpu_default(),
+                    ..Default::default()
+                },
+                |_, _| calls += 1,
+            );
+            assert_eq!(calls, points.len());
+            (rows, stats)
+        };
+        let (one, s1) = run(1);
+        let (four, _) = run(4);
+        assert_eq!(one.len(), points.len());
+        assert!(s1.hits > 0, "placements sharing stage shapes must share costs");
+        for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+            assert_eq!(a.index, i);
+            assert_eq!(a.label, points[i].label(&hc));
+            assert_eq!(a.placement, points[i].placement_names(&hc));
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes);
+            assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
         }
     }
 

@@ -53,7 +53,11 @@
 //! hand** whenever the key is widened or its meaning changes — the same
 //! events that require widening the key in `scheduler::engine` — so
 //! snapshots written under the old contract self-invalidate instead of
-//! serving stale costs.
+//! serving stale costs. The authoritative statement of the rule — which
+//! changes force a bump, and why in-process bit-identity tests cannot
+//! substitute for it — lives in `ROADMAP.md` ("Snapshot-header rule");
+//! the per-version rationale is the History list on
+//! [`CACHE_CONTRACT_VERSION`] below.
 
 pub mod cost_cache;
 pub mod evict;
@@ -86,6 +90,17 @@ pub use persist::{load_cost_cache, open_cost_cache, persist_cost_cache, save_cos
 /// time.
 ///
 /// History:
+/// * **3** — heterogeneous clusters with stage placement (PR 4): the
+///   pipeline splitter became latency-balancing (`split_stages_balanced`
+///   re-schedules candidate cuts, changing every pipeline stage shape a
+///   snapshot may hold), and stage placement now selects the accelerator
+///   a stage's entries are keyed under (per-class `DeviceClass` core
+///   configurations enter the key via `hash_core_class`/`hash_env`).
+///   Entries from a v2 snapshot are structurally keyed and would still be
+///   *sound*, but they describe stage shapes the new splitter never
+///   produces — dead weight that defeats `--cache-cap` sizing — and the
+///   snapshot-header rule is deliberately conservative: the cost of a
+///   false bump is one cold run.
 /// * **2** — the cluster-scale parallelism DSE (PR 3): persisted snapshot
 ///   directories are now shared by single-device sweeps *and* cluster
 ///   sweeps whose entries come from pipeline-stage subgraph schedules;
@@ -94,7 +109,7 @@ pub use persist::{load_cost_cache, open_cost_cache, persist_cost_cache, save_cos
 ///   is ever replayed into the widened workload mix. Conservative by
 ///   design: the cost of a false bump is one cold run.
 /// * **1** — initial persisted-snapshot contract (PR 2).
-pub const CACHE_CONTRACT_VERSION: u32 = 2;
+pub const CACHE_CONTRACT_VERSION: u32 = 3;
 
 use std::hash::Hash;
 

@@ -25,7 +25,11 @@
 //!    GA warm-start memo below stores whole-schedule objectives, whose
 //!    dependencies are strictly wider than the cost-cache keys. In every
 //!    case, snapshots written under the old contract self-invalidate
-//!    instead of serving stale numbers.
+//!    instead of serving stale numbers. The bump-by-bump rationale
+//!    (currently v3: the latency-balancing stage splitter + per-class
+//!    stage placement of the heterogeneous cluster DSE) is the History
+//!    list on [`super::CACHE_CONTRACT_VERSION`]; the rule itself is also
+//!    recorded in `ROADMAP.md`.
 //!
 //! A checksum trailer (FNV-1a over the whole file body) additionally
 //! rejects truncated or bit-rotted files. Rejection is always total: a

@@ -10,8 +10,8 @@ use crate::autodiff::{
     stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
 };
 use crate::dse::{
-    cluster_search, pareto_front, run_sweep_stats, ClusterSearchOutcome, ClusterSpace,
-    DesignPoint, Mode, SweepConfig, SweepRow,
+    cluster_search, hetero_search, pareto_front, run_sweep_stats, ClusterSearchOutcome,
+    ClusterSpace, DesignPoint, Mode, SweepConfig, SweepRow,
 };
 use crate::eval::{persist, CacheStats};
 use crate::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
@@ -200,13 +200,32 @@ pub fn cluster_gpt2_builder(batch: usize) -> TrainingGraph {
     )
 }
 
+/// Canonical mixed edge+datacenter device pool for a cluster of exactly
+/// `max_devices` devices: half battery-class edge parts (odd budgets
+/// round the edge half up), half datacenter-class parts. A 1-device
+/// budget degenerates to a pure-edge pool (no mixed placements exist on
+/// one device). One definition so the Fig 5 mixed series and the tests
+/// model the same pool.
+pub fn cluster_mixed_pool(max_devices: usize) -> crate::parallelism::HeteroCluster {
+    use crate::parallelism::{DeviceClass, HeteroCluster};
+    let n = max_devices.max(1);
+    HeteroCluster::new(vec![
+        (DeviceClass::edge(), n.div_ceil(2)),
+        (DeviceClass::datacenter(), n / 2),
+    ])
+}
+
 /// Fig 5 made quantitative: enumerate the cluster deployment space
 /// (device counts × link tiers × DP/PP/TP factorizations) for ResNet-18
 /// and GPT-2 training on clusters of baseline Edge TPUs, rank it with the
 /// four-objective NSGA-II set (iteration latency, energy, per-device
 /// memory, cluster size) and emit every row plus its front membership.
 /// The GPT-2 workload is the reduced `tiny` config for the same
-/// tractability reason Fig 9 reduces its sweep workload.
+/// tractability reason Fig 9 reduces its sweep workload. A third,
+/// **mixed-cluster** series re-runs the GPT-2 workload on the
+/// [`cluster_mixed_pool`] edge+datacenter pool with the stage-placement
+/// dimension enumerated — the heterogeneous front the paper's
+/// edge-to-datacenter title promises.
 pub fn fig5_cluster_pareto(
     max_devices: usize,
     full_batch: usize,
@@ -234,14 +253,24 @@ pub fn fig5_cluster_pareto(
     );
     let gpt2_outcome =
         cluster_search(&space, full_batch, &cluster_gpt2_builder, &accel, &cfg, &mut progress);
+    let pool = cluster_mixed_pool(max_devices);
+    let mixed_outcome = hetero_search(
+        &pool,
+        &space.microbatches,
+        full_batch,
+        &cluster_gpt2_builder,
+        &cfg,
+        &mut progress,
+    );
     let figures = vec![
         ClusterFigure { workload: "resnet18".into(), outcome: resnet_outcome },
         ClusterFigure { workload: "gpt2".into(), outcome: gpt2_outcome },
+        ClusterFigure { workload: "gpt2-mixed".into(), outcome: mixed_outcome },
     ];
     if let Some(dir) = out_dir {
         write_csv(
             dir.join("fig5_cluster_pareto.csv"),
-            "workload,index,label,tier,devices,dp,pp,microbatches,tp,latency_cycles,energy_pj,per_device_mem_bytes,comm_bytes,on_front",
+            "workload,index,label,tier,devices,dp,pp,microbatches,tp,placement,latency_cycles,energy_pj,per_device_mem_bytes,comm_bytes,on_front",
             figures.iter().flat_map(|f| {
                 let front: std::collections::HashSet<usize> =
                     f.outcome.front.iter().copied().collect();
@@ -256,6 +285,7 @@ pub fn fig5_cluster_pareto(
                         r.pp.to_string(),
                         r.microbatches.to_string(),
                         r.tp.to_string(),
+                        format!("\"{}\"", r.placement),
                         format!("{:.6e}", r.latency_cycles),
                         format!("{:.6e}", r.energy_pj),
                         r.per_device_mem_bytes.to_string(),
@@ -731,11 +761,12 @@ mod tests {
     }
 
     #[test]
-    fn fig5_covers_both_workloads_with_nonempty_fronts() {
+    fn fig5_covers_all_series_with_nonempty_fronts() {
         let figs = fig5_cluster_pareto(2, 4, true, None, 0, None, |_, _| {});
-        assert_eq!(figs.len(), 2);
+        assert_eq!(figs.len(), 3);
         assert_eq!(figs[0].workload, "resnet18");
         assert_eq!(figs[1].workload, "gpt2");
+        assert_eq!(figs[2].workload, "gpt2-mixed");
         for f in &figs {
             assert_eq!(f.outcome.rows.len(), f.outcome.n_points);
             assert!(!f.outcome.front.is_empty(), "{}: empty front", f.workload);
@@ -743,10 +774,14 @@ mod tests {
                 assert!(i < f.outcome.rows.len());
             }
             // the single-device point exists and is on ≤2 devices like all
-            // rows of this reduced space
+            // rows of this reduced space (the mixed pool is edge:1+dc:1)
             assert!(f.outcome.rows.iter().all(|r| r.devices <= 2));
             assert!(f.outcome.rows.iter().any(|r| r.devices == 1));
         }
+        // the homogeneous series carry no placements; the mixed one does
+        assert!(figs[1].outcome.rows.iter().all(|r| r.placement.is_empty()));
+        assert!(figs[2].outcome.rows.iter().all(|r| !r.placement.is_empty()));
+        assert!(figs[2].outcome.rows.iter().any(|r| r.placement.contains('|')));
     }
 
     #[test]

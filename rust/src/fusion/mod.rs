@@ -1,5 +1,17 @@
 //! Constraint-based layer-fusion solver (DESIGN.md S9, paper §V-A):
-//! BFS candidate enumeration + min-cardinality exact cover.
+//! partition the operator graph into fused subgraphs whose intermediate
+//! tensors never leave a core's local memory — the paper's main lever
+//! against the off-chip traffic that dominates training energy.
+//!
+//! Two stages: [`candidates`] enumerates connected fusable subgraphs by
+//! BFS under the §V-A constraints (subgraph size, operator types, memory
+//! footprint, single entry/exit), and [`exact_cover`] picks a
+//! minimum-cardinality exact cover of the graph from them. [`fuse`] runs
+//! both; [`fuse_greedy`] is the fast approximation used inside sweeps and
+//! the GA, and [`fuse_manual_conv_bn_relu`] reproduces the hand pattern
+//! the paper compares against (Fig 10). The fusion decision depends only
+//! on the workload graph and the constraints — never on the accelerator —
+//! which is why sweeps hoist it out of their per-design-point loop.
 
 pub mod candidates;
 pub mod exact_cover;

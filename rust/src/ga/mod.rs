@@ -1,5 +1,17 @@
 //! Multi-objective genetic optimization (DESIGN.md S10): NSGA-II and the
 //! activation-checkpointing problem encoding (paper §V-B).
+//!
+//! [`nsga2`] is a generic parallel NSGA-II over bit-genomes: `Fn + Sync`
+//! evaluation fanned over `GaConfig::workers` scoped threads with a
+//! genome→objectives memo, bit-identical for any worker count, plus
+//! `pareto_rank0` — the N-objective rank-0 dominance set the cluster DSE
+//! reuses for its 4-objective fronts. [`checkpoint_opt`] encodes the
+//! checkpointing problem (genome bit = recompute this activation),
+//! evaluates through the shared [`crate::eval::CostCache`], and
+//! warm-starts across process restarts via persisted front + memo
+//! snapshots (see `CheckpointProblem::optimize_persistent`). [`milp`] is
+//! the linear Checkmate-style formulation (eq. 6) kept as the ablation
+//! baseline the GA is measured against.
 
 pub mod checkpoint_opt;
 pub mod milp;

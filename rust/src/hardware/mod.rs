@@ -1,6 +1,17 @@
 //! Hardware model (DESIGN.md S5): heterogeneous dataflow accelerators —
 //! dataflow cores with private memory hierarchies, interconnect, a shared
 //! buffer and off-chip memory. Replaces Stream's hardware description.
+//!
+//! [`core`] models one dataflow core (weight-/output-stationary arrays,
+//! SIMD) and its spatial utilization per op; [`accelerator`] composes
+//! cores into an HDA; [`energy`] holds the Horowitz-lineage pJ constants
+//! whose *ratios* (MAC ≪ SRAM ≪ DRAM) drive every qualitative
+//! conclusion; [`presets`] builds the paper's Table II/III search spaces
+//! plus the named device-class configurations
+//! (`EdgeTpuParams::server_class`, `EdgeTpuParams::datacenter_class`)
+//! that the heterogeneous cluster model in
+//! [`crate::parallelism::hetero`] wraps with fabric tiers and energy
+//! scales.
 
 pub mod accelerator;
 pub mod core;

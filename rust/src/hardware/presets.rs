@@ -58,6 +58,38 @@ impl EdgeTpuParams {
         self.per_pe_macs() * self.n_pes() as u64
     }
 
+    /// Server-class scale-up of the Edge TPU microarchitecture: same 4×4
+    /// PE grid, twice the per-PE compute (U=128) and local SRAM. The
+    /// mid-point of the heterogeneous `DeviceClass` ladder
+    /// (`parallelism::hetero`).
+    pub fn server_class() -> Self {
+        EdgeTpuParams {
+            x_pes: 4,
+            y_pes: 4,
+            u: 128,
+            l: 4,
+            local_mem: 4 << 20,
+            regfile: 64 << 10,
+        }
+    }
+
+    /// Datacenter-class scale-up: 4× the per-PE compute (U=128, L=8) and
+    /// local SRAM of the baseline, 2× its register file — the
+    /// high-throughput end of the heterogeneous `DeviceClass` ladder. The
+    /// matching fabric/bandwidth/energy deltas live on
+    /// `parallelism::hetero::DeviceClass`, not here: these params only
+    /// size the on-chip array.
+    pub fn datacenter_class() -> Self {
+        EdgeTpuParams {
+            x_pes: 4,
+            y_pes: 4,
+            u: 128,
+            l: 8,
+            local_mem: 8 << 20,
+            regfile: 128 << 10,
+        }
+    }
+
     /// The full Table II cartesian space (10 000 configurations).
     pub fn space() -> Vec<EdgeTpuParams> {
         let mut out = vec![];
@@ -282,6 +314,16 @@ mod tests {
         assert_eq!(a.cores.len(), 2);
         assert_eq!(a.total_macs(), 128 * 128 + 128);
         assert_eq!(a.global_buffer_bytes, 16 << 20);
+    }
+
+    #[test]
+    fn device_class_params_scale_monotonically() {
+        let e = EdgeTpuParams::baseline();
+        let s = EdgeTpuParams::server_class();
+        let d = EdgeTpuParams::datacenter_class();
+        assert!(e.per_pe_macs() < s.per_pe_macs() && s.per_pe_macs() < d.per_pe_macs());
+        assert!(e.local_mem < s.local_mem && s.local_mem < d.local_mem);
+        assert_eq!(d.per_pe_macs(), 4 * e.per_pe_macs());
     }
 
     #[test]

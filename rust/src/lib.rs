@@ -6,17 +6,22 @@
 //! accelerators (HDAs), with layer-fused scheduling, a constraint-based
 //! fusion solver, and NSGA-II activation-checkpointing optimization.
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (see DESIGN.md and the README's module map):
 //! * [`workload`] — operator-graph IR + model zoo (ResNet-18/50, GPT-2, MLP)
 //! * [`autodiff`] — training-graph generation + checkpointing transform
-//! * [`hardware`] — HDA model: dataflow cores, memories, interconnect
+//! * [`hardware`] — HDA model: dataflow cores, memories, interconnect,
+//!   presets incl. the edge/server/datacenter device-class configurations
 //! * [`mapping`] — spatial/temporal mapping + utilization
 //! * [`cost`] — analytical latency/energy/memory cost model
 //! * [`scheduler`] — layer-fused event-driven scheduler
 //! * [`eval`] — memoized, parallel evaluation engine (group-cost cache)
 //! * [`fusion`] — constraint fusion solver (BFS candidates + exact cover)
+//! * [`parallelism`] — DP/PP/TP deployment arithmetic: homogeneous
+//!   clusters, their 3D hybrid, and heterogeneous edge-to-datacenter
+//!   clusters with stage placement ([`parallelism::hetero`])
 //! * [`ga`] — NSGA-II and the checkpointing problem encoding
 //! * [`dse`] — design-space-exploration orchestrator
+//! * [`figures`] — one function per paper artifact (CSV + returned rows)
 //! * [`runtime`] — PJRT client executing AOT-compiled JAX/Pallas artifacts
 //! * [`report`] — CSV / ASCII figure emitters
 //! * [`util`] — small self-contained infrastructure (RNG, JSON, stats)

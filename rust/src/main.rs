@@ -12,9 +12,9 @@ use monet::ga::GaConfig;
 use monet::report::{ascii_bars, ascii_scatter, fmt_bytes};
 use monet::runtime::{Corpus, CostKernel, Gpt2Runner, Runtime};
 
-fn usage() -> ! {
-    eprintln!(
-        "MONET — modeling & optimization of NN training on heterogeneous dataflow accelerators
+/// The CLI grammar. `docs/CLI.md` is checked against this text by the
+/// `cli_reference_covers_usage` unit test, so the two cannot drift.
+const USAGE: &str = "MONET — modeling & optimization of NN training on heterogeneous dataflow accelerators
 
 USAGE: monet <command> [options]
 
@@ -22,7 +22,9 @@ COMMANDS
   fig1            ResNet-18 Edge-TPU sweep, energy-vs-latency (also fig8 data)
   fig3            ResNet-50 peak-memory breakdown (batch 1 & 8)
   fig5            cluster-parallelism Pareto front, edge→datacenter
-                  (ResNet-18 + GPT-2 training; CSV with front membership)
+                  (ResNet-18 + GPT-2 training, plus a mixed edge+datacenter
+                  GPT-2 series with stage placements; CSV with front
+                  membership)
   fig9            GPT-2 FuseMax sweep
   fig10           layer-fusion strategies comparison
   fig11           activation-checkpointing non-linearity
@@ -35,7 +37,10 @@ COMMANDS
                   (edge/server/datacenter) and rank them with the
                   4-objective NSGA-II set (iteration latency, energy,
                   per-device memory, cluster size); prints the front and
-                  the per-tier latency optimum
+                  the per-tier latency optimum. With --device-classes the
+                  space becomes heterogeneous: a mixed device pool with a
+                  stage-placement dimension (which class hosts which
+                  pipeline stage)
   ablation        MILP (eq. 6) vs NSGA-II checkpointing under the true pipeline
   train           end-to-end: train tiny GPT-2 via the AOT HLO artifacts
   validate        cross-check the AOT cost kernel against the native model
@@ -52,6 +57,14 @@ OPTIONS
   --workload W    cluster workload: resnet18 | gpt2 | both (cluster;
                   default both — gpt2 is the reduced tiny config, like the
                   fig9 sweep workload)
+  --device-classes L
+                  heterogeneous device pool for the cluster command, e.g.
+                  edge:2,datacenter:2 (classes: edge | server |
+                  datacenter). Switches cluster to the stage-placement
+                  DSE: every feasible dp/pp/tp factorization × placement
+                  of pipeline stages onto classes is enumerated, ranked
+                  with the same 4-objective set, and the front is compared
+                  against the best all-edge and all-datacenter deployments
   --steps N       training steps (train; default 300)
   --config NAME   gpt2 config (train; default tiny)
   --artifacts DIR artifacts directory (default artifacts)
@@ -62,17 +75,19 @@ OPTIONS
   --cache-dir DIR persist the group-cost cache across runs: warm-load the
                   snapshot in DIR before a sweep/search/GA, write it back
                   after (fig1/fig5/fig9/search/cluster/all/fig12; the
-                  cluster commands share entries across factorizations and
-                  link tiers — the stage-schedule memoization win).
-                  Stale/incompatible
+                  cluster commands share entries across factorizations,
+                  placements and link tiers — the stage-schedule
+                  memoization win). Stale/incompatible
                   snapshots are rejected wholesale. Sweep/search rows stay
                   bit-identical to a cold run; fig12 additionally
                   warm-starts the GA from the previous run's Pareto front,
                   which deliberately resumes (and so changes) the search.
                   --no-cache wins over this.
   --cache-cap N   bound the group-cost cache to ~N entries (second-chance/
-                  CLOCK eviction; default 0 = unbounded)"
-    );
+                  CLOCK eviction; default 0 = unbounded)";
+
+fn usage() -> ! {
+    eprintln!("{USAGE}");
     std::process::exit(2);
 }
 
@@ -84,6 +99,7 @@ struct Args {
     devices: usize,
     batch: usize,
     workload: String,
+    device_classes: Option<String>,
     steps: usize,
     config: String,
     artifacts: PathBuf,
@@ -102,6 +118,7 @@ fn parse_args() -> Args {
         devices: 8,
         batch: 4,
         workload: "both".into(),
+        device_classes: None,
         steps: 300,
         config: "tiny".into(),
         artifacts: "artifacts".into(),
@@ -124,6 +141,7 @@ fn parse_args() -> Args {
             "--devices" => args.devices = val().parse().unwrap_or_else(|_| usage()),
             "--batch" => args.batch = val().parse().unwrap_or_else(|_| usage()),
             "--workload" => args.workload = val(),
+            "--device-classes" => args.device_classes = Some(val()),
             "--steps" => args.steps = val().parse().unwrap_or_else(|_| usage()),
             "--config" => args.config = val(),
             "--artifacts" => args.artifacts = val().into(),
@@ -263,6 +281,142 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `edge:2,datacenter:2` into a device pool.
+fn parse_device_pool(spec: &str) -> Option<monet::parallelism::HeteroCluster> {
+    use monet::parallelism::{DeviceClass, HeteroCluster};
+    let mut pool = vec![];
+    for part in spec.split(',') {
+        let (name, count) = part.split_once(':')?;
+        let class = DeviceClass::by_name(name.trim())?;
+        let count: usize = count.trim().parse().ok()?;
+        pool.push((class, count));
+    }
+    let hc = HeteroCluster::new(pool);
+    if hc.total_devices() == 0 {
+        return None;
+    }
+    Some(hc)
+}
+
+/// `cluster --device-classes …`: the heterogeneous stage-placement DSE.
+fn cmd_cluster_hetero(args: &Args, spec: &str) -> Result<()> {
+    use monet::autodiff::TrainingGraph;
+    use monet::dse::{
+        front_factorizations, hetero_search, mixed_domination_witness, placed_only_on,
+        ClusterRow, SweepConfig,
+    };
+    use monet::figures::{cluster_gpt2_builder, cluster_resnet18_builder};
+    use monet::mapping::MappingConfig;
+    use monet::report::fmt_bytes;
+
+    let hc = parse_device_pool(spec).unwrap_or_else(|| usage());
+    let wanted: Vec<&str> = match args.workload.as_str() {
+        "both" => vec!["resnet18", "gpt2"],
+        "resnet18" => vec!["resnet18"],
+        "gpt2" => vec!["gpt2"],
+        _ => usage(),
+    };
+    let cfg = SweepConfig {
+        mapping: MappingConfig::edge_tpu_default(),
+        use_cache: !args.no_cache,
+        cache_dir: args.cache_dir.clone(),
+        cache_cap: args.cache_cap,
+        ..Default::default()
+    };
+    // the uniform extremes the mixed front is measured against: latency vs
+    // the slowest-fabric class, energy vs the hungriest class
+    let lat_class = hc
+        .classes
+        .iter()
+        .min_by_key(|c| c.tier.rank())
+        .map(|c| c.name.clone())
+        .unwrap_or_else(|| usage());
+    let en_class = hc
+        .classes
+        .iter()
+        .max_by(|a, b| a.energy_scale.total_cmp(&b.energy_scale))
+        .map(|c| c.name.clone())
+        .unwrap_or_else(|| usage());
+    // same microbatch options as the homogeneous space, so the two modes
+    // of the `cluster` command explore consistent pipelines
+    let microbatches = monet::dse::ClusterSpace::default_space(hc.total_devices()).microbatches;
+    for name in wanted {
+        eprintln!(
+            "cluster DSE [hetero]: {name} training, batch {}, pool {} (stage placements enumerated)...",
+            args.batch,
+            hc.label()
+        );
+        let builder: &(dyn Fn(usize) -> TrainingGraph + Sync) = if name == "resnet18" {
+            &cluster_resnet18_builder
+        } else {
+            &cluster_gpt2_builder
+        };
+        let out = hetero_search(&hc, &microbatches, args.batch, builder, &cfg, progress);
+        println!(
+            "\n[{name} | {}] {} deployment points evaluated in {:.2}s",
+            hc.label(),
+            out.rows.len(),
+            out.secs
+        );
+        print_cache_stats("cluster", &out.cache);
+        let facts = front_factorizations(&out);
+        println!(
+            "4-objective Pareto front (latency, energy, mem/device, devices): {} points, {} distinct dp/pp/tp factorizations",
+            out.front.len(),
+            facts.len()
+        );
+        let mut front_rows: Vec<&ClusterRow> =
+            out.front.iter().map(|&i| &out.rows[i]).collect();
+        front_rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
+        println!(
+            "{:<44} {:>13} {:>13} {:>11} {:>12}",
+            "deployment (placement)", "latency (cyc)", "energy (pJ)", "mem/device", "comm (B)"
+        );
+        for r in front_rows.iter().take(16) {
+            println!(
+                "{:<44} {:>13.3e} {:>13.3e} {:>11} {:>12.3e}",
+                r.label,
+                r.latency_cycles,
+                r.energy_pj,
+                fmt_bytes(r.per_device_mem_bytes),
+                r.comm_bytes
+            );
+        }
+        if front_rows.len() > 16 {
+            println!("  ... {} more front points", front_rows.len() - 16);
+        }
+        let best_lat = out
+            .rows
+            .iter()
+            .filter(|r| placed_only_on(r, &lat_class))
+            .map(|r| r.latency_cycles)
+            .fold(f64::INFINITY, f64::min);
+        let best_en = out
+            .rows
+            .iter()
+            .filter(|r| placed_only_on(r, &en_class))
+            .map(|r| r.energy_pj)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "uniform extremes: best all-{lat_class} latency {best_lat:.3e} cyc, best all-{en_class} energy {best_en:.3e} pJ"
+        );
+        match mixed_domination_witness(&out, &lat_class, &en_class) {
+            Some(i) => {
+                let w = &out.rows[i];
+                println!(
+                    "mixed-placement witness: {} — {:.3e} cyc (< all-{lat_class}) and {:.3e} pJ (< all-{en_class})",
+                    w.label, w.latency_cycles, w.energy_pj
+                );
+            }
+            None => println!(
+                "no mixed-placement front point dominates both uniform extremes on this pool"
+            ),
+        }
+    }
+    println!("\n(fig5 writes the full row set + placements + front membership as CSV)");
+    Ok(())
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     use monet::dse::{
         best_latency_factorization, cluster_search, front_factorizations, ClusterRow,
@@ -271,6 +425,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     use monet::figures::{cluster_gpt2_builder, cluster_resnet18_builder, cluster_setup};
     use monet::parallelism::LinkTier;
     use monet::report::fmt_bytes;
+
+    if let Some(spec) = args.device_classes.clone() {
+        return cmd_cluster_hetero(args, &spec);
+    }
 
     let wanted: Vec<&str> = match args.workload.as_str() {
         "both" => vec!["resnet18", "gpt2"],
@@ -682,5 +840,53 @@ fn main() -> Result<()> {
         "validate" => cmd_validate(&args),
         "info" => cmd_info(),
         _ => usage(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::USAGE;
+
+    /// `docs/CLI.md` is the human-readable CLI reference; this pins it to
+    /// `usage()` so the two cannot drift: every command and flag of the
+    /// usage text must be documented, and every flag the reference
+    /// mentions must actually exist. (`include_str!` additionally makes a
+    /// missing reference file a build error.)
+    #[test]
+    fn cli_reference_covers_usage() {
+        let md = include_str!("../../docs/CLI.md");
+        let token =
+            |s: &str| s.trim_matches(|c: char| !(c.is_alphanumeric() || c == '-')).to_string();
+        // a flag is two dashes followed by a word — this keeps markdown
+        // table separators ("---") and em-dash runs out of the flag sets
+        let is_flag = |w: &String| {
+            w.starts_with("--") && w.chars().nth(2).is_some_and(|c| c.is_alphanumeric())
+        };
+
+        let usage_flags: std::collections::BTreeSet<String> =
+            USAGE.split_whitespace().map(token).filter(is_flag).collect();
+        let md_flags: std::collections::BTreeSet<String> =
+            md.split_whitespace().map(token).filter(is_flag).collect();
+        assert!(!usage_flags.is_empty());
+        assert_eq!(usage_flags, md_flags, "docs/CLI.md flags drift from usage()");
+
+        // commands: the first token of each entry line of the COMMANDS
+        // section (entry lines are indented exactly two spaces;
+        // continuation lines are indented further)
+        let commands: Vec<&str> = {
+            let body = USAGE.split("COMMANDS").nth(1).expect("COMMANDS section");
+            let body = body.split("OPTIONS").next().expect("OPTIONS section");
+            body.lines()
+                .filter(|l| l.starts_with("  ") && !l.starts_with("   "))
+                .filter_map(|l| l.trim().split_whitespace().next())
+                .collect()
+        };
+        assert!(commands.contains(&"cluster") && commands.contains(&"fig5"));
+        for cmd in &commands {
+            assert!(
+                md.contains(&format!("`{cmd}`")),
+                "docs/CLI.md is missing command `{cmd}`"
+            );
+        }
     }
 }

@@ -1,0 +1,649 @@
+//! Heterogeneous edge-to-datacenter clusters (the paper's title promise,
+//! §II-C1 completed): per-device [`DeviceClass`]es drawn from
+//! `hardware::presets`, per-link fabric tiers between device pairs, and a
+//! **stage-placement** dimension — which class hosts which pipeline stage.
+//!
+//! The homogeneous model in the parent module assumes N identical devices
+//! on one fabric; a mixed HDA deployment (edge + server + datacenter nodes
+//! in one training job) breaks both assumptions. This module keeps the
+//! same GPipe/Megatron first-order arithmetic but makes three quantities
+//! placement-dependent:
+//!
+//! * **stage time** — each pipeline stage is scheduled on its assigned
+//!   class's accelerator, and the latency-balancing splitter
+//!   ([`super::split_stages_balanced`]) hands a slow edge-class stage
+//!   fewer nodes until the bottleneck equalizes;
+//! * **links** — traffic between two classes crosses the weaker of their
+//!   fabrics (min bandwidth, max hop latency, max energy-per-byte), and
+//!   the dp gradient all-reduce — one concurrent ring per parameter
+//!   shard, each ring on its stage's fabric — is charged at the *slowest
+//!   ring on its path*;
+//! * **energy** — each class carries a [`DeviceClass::energy_scale`]
+//!   (voltage/frequency scaling of datacenter silicon vs the edge
+//!   baseline) applied to its stages' on-device schedule energy. The
+//!   scale is applied *outside* the group-cost cache, so the eval
+//!   soundness contract is untouched.
+//!
+//! ## Degeneracy contract (extended from the parent module)
+//!
+//! A "mixed" cluster whose classes are all identical collapses to the
+//! homogeneous [`super::Strategy::Hybrid`] path on that class's
+//! accelerator and fabric tier: latency, per-device memory and comm
+//! bytes are **bit-identical**, and energy is bit-identical *up to the
+//! class's [`DeviceClass::energy_scale`]* — the on-device stage energies
+//! are multiplied by the scale before composition (comm energy is not),
+//! so for the scale-1 edge reference class every output matches bit for
+//! bit. The arithmetic below is arranged for exactly that: communication
+//! is accumulated per link-class pair and multiplied by the link
+//! constants once per pair, so a single-class placement collapses to the
+//! homogeneous single-fabric expressions. The `uniform_hetero_*` unit
+//! tests pin the full bit-identity on the edge class (including a merged
+//! edge+edge pool), and [`HeteroCluster::new`] merges identically-named
+//! pool entries so the placement enumeration cannot tell two copies of
+//! the same class apart (the symmetry pruning).
+
+use crate::autodiff::TrainingGraph;
+use crate::eval::CostCache;
+use crate::hardware::accelerator::Accelerator;
+use crate::hardware::core::Dataflow;
+use crate::hardware::presets::EdgeTpuParams;
+use crate::mapping::MappingConfig;
+
+use super::{
+    allreduce_cycles, fused_schedule_cached, split_stages_balanced, stage_mem_parts,
+    stage_subgraph, tp_reduce_stats, Cluster, LinkTier, MultiDeviceResult, Strategy,
+};
+
+/// One device class of a heterogeneous cluster: an accelerator
+/// configuration, the fabric tier its devices share, and its
+/// dynamic-energy scale relative to the edge baseline.
+#[derive(Debug, Clone)]
+pub struct DeviceClass {
+    /// Stable name — classes are identified by it ([`HeteroCluster::new`]
+    /// merges same-named pool entries) and the CLI selects presets with it
+    /// (`--device-classes edge:2,datacenter:2`).
+    pub name: String,
+    /// The on-device hardware model every stage placed on this class is
+    /// scheduled on.
+    pub accel: Accelerator,
+    /// Fabric among devices of this class; cross-class links combine two
+    /// tiers worst-case (see [`HeteroCluster::link`]).
+    pub tier: LinkTier,
+    /// Dynamic-energy multiplier vs the edge baseline (≈ V²·f scaling:
+    /// datacenter parts clock high at high voltage, edge parts are tuned
+    /// for pJ/MAC). Applied to the on-device schedule energy of this
+    /// class's stages — deployment-level modeling, outside the group-cost
+    /// cache.
+    pub energy_scale: f64,
+}
+
+impl DeviceClass {
+    /// Battery-class edge device: the Table II baseline Edge TPU on a
+    /// board-level fabric. The energy reference point (`energy_scale` 1).
+    pub fn edge() -> Self {
+        DeviceClass {
+            name: "edge".into(),
+            accel: EdgeTpuParams::baseline().build(),
+            tier: LinkTier::Edge,
+            energy_scale: 1.0,
+        }
+    }
+
+    /// Server-class device: 2× the per-PE compute and local SRAM, 2× the
+    /// off-chip bandwidth, PCIe-class chassis fabric, 2× the per-op
+    /// energy.
+    pub fn server() -> Self {
+        let mut accel = EdgeTpuParams::server_class().build();
+        accel.offchip_bw *= 2.0;
+        DeviceClass {
+            name: "server".into(),
+            accel,
+            tier: LinkTier::Server,
+            energy_scale: 2.0,
+        }
+    }
+
+    /// Datacenter-class device: 4× the per-PE compute and local SRAM of
+    /// the edge baseline, HBM-class off-chip bandwidth (4×), a
+    /// proportionally wider vector unit, a switched datacenter fabric —
+    /// and 4× the per-op energy (high clock, high voltage, HBM
+    /// interfaces).
+    pub fn datacenter() -> Self {
+        let mut accel = EdgeTpuParams::datacenter_class().build();
+        accel.offchip_bw *= 4.0;
+        for core in accel.cores.iter_mut() {
+            if let Dataflow::Simd { lanes } = core.dataflow {
+                core.dataflow = Dataflow::Simd { lanes: lanes * 4 };
+                core.onchip_bw *= 4.0;
+                core.local_mem_bytes *= 2;
+            }
+        }
+        DeviceClass {
+            name: "datacenter".into(),
+            accel,
+            tier: LinkTier::Datacenter,
+            energy_scale: 4.0,
+        }
+    }
+
+    /// The named presets the CLI accepts (`edge`, `server`, `datacenter`).
+    pub fn by_name(name: &str) -> Option<DeviceClass> {
+        match name {
+            "edge" => Some(Self::edge()),
+            "server" => Some(Self::server()),
+            "datacenter" => Some(Self::datacenter()),
+            _ => None,
+        }
+    }
+}
+
+/// A pool of device classes with per-class device counts — the hardware
+/// side of a heterogeneous deployment.
+#[derive(Debug, Clone)]
+pub struct HeteroCluster {
+    /// Distinct classes (same-named pool entries are merged by [`Self::new`]).
+    pub classes: Vec<DeviceClass>,
+    /// Devices available per class, parallel to `classes`.
+    pub counts: Vec<usize>,
+}
+
+impl HeteroCluster {
+    /// Build a pool, merging identically-named entries and dropping zero
+    /// counts — the symmetry pruning that keeps the placement enumeration
+    /// from producing permutations of indistinguishable classes. Classes
+    /// are identified by name: merging two same-named entries with
+    /// *different* hardware would silently mis-model half the pool, so
+    /// that misuse is rejected in debug builds.
+    pub fn new(pool: Vec<(DeviceClass, usize)>) -> Self {
+        let mut classes: Vec<DeviceClass> = vec![];
+        let mut counts: Vec<usize> = vec![];
+        for (class, count) in pool {
+            if count == 0 {
+                continue;
+            }
+            if let Some(i) = classes.iter().position(|c| c.name == class.name) {
+                debug_assert!(
+                    classes[i].tier == class.tier
+                        && classes[i].energy_scale == class.energy_scale
+                        && classes[i].accel.name == class.accel.name,
+                    "pool entries named {:?} differ in hardware; merging would mis-model them",
+                    class.name
+                );
+                counts[i] += count;
+            } else {
+                classes.push(class);
+                counts.push(count);
+            }
+        }
+        HeteroCluster { classes, counts }
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Stable pool label, e.g. `edge:2+datacenter:2`.
+    pub fn label(&self) -> String {
+        self.classes
+            .iter()
+            .zip(&self.counts)
+            .map(|(c, n)| format!("{}:{}", c.name, n))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Fabric parameters for a `devices`-wide group whose traffic runs
+    /// between a class-`a` and a class-`b` device. Same class → that
+    /// class's tier; cross-class → worst-case combine (min bandwidth, max
+    /// hop latency, max energy per byte): traffic between two fabrics
+    /// crosses the slower one plus a gateway.
+    pub fn link(&self, a: usize, b: usize, devices: usize) -> Cluster {
+        let ca = self.classes[a].tier.cluster(devices);
+        if a == b {
+            return ca;
+        }
+        let cb = self.classes[b].tier.cluster(devices);
+        Cluster {
+            devices,
+            link_bw: ca.link_bw.min(cb.link_bw),
+            link_energy_pj: ca.link_energy_pj.max(cb.link_energy_pj),
+            hop_cycles: ca.hop_cycles.max(cb.hop_cycles),
+        }
+    }
+
+    /// The fabric tier that bounds a placement: the slowest tier among the
+    /// classes it uses (edge < server < datacenter).
+    pub fn bottleneck_tier(&self, placement: &[usize]) -> LinkTier {
+        placement
+            .iter()
+            .map(|&c| self.classes[c].tier)
+            .min_by_key(|t| t.rank())
+            .unwrap_or(LinkTier::Datacenter)
+    }
+}
+
+/// One heterogeneous deployment point: a hybrid DP/PP/TP factorization
+/// plus the **stage placement** — the class index (into
+/// [`HeteroCluster::classes`]) hosting each pipeline stage. Every stage
+/// occupies `dp·tp` devices of its class (one tp-gang per dp replica).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct HeteroPoint {
+    pub dp: usize,
+    pub pp: usize,
+    /// Pipeline microbatches (1 whenever `pp == 1`).
+    pub microbatches: usize,
+    pub tp: usize,
+    /// Class index per pipeline stage; `placement.len() == pp`.
+    pub placement: Vec<usize>,
+}
+
+impl HeteroPoint {
+    pub fn devices(&self) -> usize {
+        self.dp * self.pp * self.tp
+    }
+
+    /// Does the pool have enough devices of each class for this placement
+    /// (`dp·tp` devices per stage hosted on the stage's class)?
+    pub fn feasible(&self, hc: &HeteroCluster) -> bool {
+        if self.placement.len() != self.pp.max(1) {
+            return false;
+        }
+        let gang = self.dp.max(1) * self.tp.max(1);
+        let mut used = vec![0usize; hc.classes.len()];
+        for &c in &self.placement {
+            if c >= hc.classes.len() {
+                return false;
+            }
+            used[c] += gang;
+        }
+        used.iter().zip(&hc.counts).all(|(u, cap)| u <= cap)
+    }
+
+    /// Does the placement span more than one device class?
+    pub fn is_mixed(&self) -> bool {
+        self.placement.windows(2).any(|w| w[0] != w[1])
+    }
+
+    /// Stage classes by name, `|`-joined (e.g. `edge|datacenter`).
+    pub fn placement_names(&self, hc: &HeteroCluster) -> String {
+        self.placement
+            .iter()
+            .map(|&c| hc.classes[c].name.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Stable row label, e.g. `mixed,n4,dp2,pp2,m4,tp1,edge|datacenter`.
+    pub fn label(&self, hc: &HeteroCluster) -> String {
+        format!(
+            "mixed,n{},dp{},pp{},m{},tp{},{}",
+            self.devices(),
+            self.dp,
+            self.pp,
+            self.microbatches,
+            self.tp,
+            self.placement_names(hc)
+        )
+    }
+}
+
+/// Model one training iteration of a heterogeneous deployment point —
+/// the placement-aware sibling of [`super::model_strategy_cached`] (see
+/// the module docs for what becomes placement-dependent, and for the
+/// bit-level degeneracy contract with the homogeneous path).
+pub fn model_strategy_hetero(
+    point: &HeteroPoint,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    mapping: &MappingConfig,
+    hc: &HeteroCluster,
+    cache: Option<&CostCache>,
+) -> MultiDeviceResult {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let dp = point.dp.max(1);
+    let pp = point.pp.max(1);
+    let m = point.microbatches.max(1);
+    let tp = point.tp.max(1);
+    assert_eq!(
+        point.placement.len(),
+        pp,
+        "placement must assign every pipeline stage a device class"
+    );
+    let devices = dp * pp * tp;
+
+    // each replica sees 1/dp of the batch, pipelined in m microbatches —
+    // the homogeneous `Hybrid` batch rules, unchanged
+    let replica_batch = full_batch.div_ceil(dp);
+    let tg = tg_builder(replica_batch.div_ceil(m).max(1));
+    let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
+
+    // one record per used (non-empty) stage, in stage order:
+    // (class, schedule, tp reduce bytes, tp collectives, stage states,
+    //  in-flight activation bytes, outgoing boundary bytes)
+    type StageInfo = (usize, crate::scheduler::ScheduleResult, f64, usize, u64, u64, f64);
+    let mut infos: Vec<StageInfo> = vec![];
+    if pp == 1 {
+        // single stage: schedule the replica graph directly (no induced-
+        // subgraph rebuild), mirroring the homogeneous arm so the
+        // degenerate corners replay it bit for bit
+        let c = point.placement[0];
+        let r = fused_schedule_cached(&tg.graph, &hc.classes[c].accel, mapping, cache);
+        let (reduce_bytes, n_collectives) =
+            tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+        let states = tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
+        infos.push((c, r, reduce_bytes, n_collectives, states, tg.saved_activation_bytes(), 0.0));
+    } else {
+        let stage_accels: Vec<&Accelerator> =
+            point.placement.iter().map(|&c| &hc.classes[c].accel).collect();
+        let stages = split_stages_balanced(&tg.graph, &stage_accels, mapping, cache);
+        for (s, stage) in stages.iter().enumerate() {
+            if stage.is_empty() {
+                continue;
+            }
+            let c = point.placement[s];
+            let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
+            let r = fused_schedule_cached(&sub, &hc.classes[c].accel, mapping, cache);
+            let (reduce_bytes, n_collectives) = tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+            let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
+            infos.push((
+                c,
+                r,
+                reduce_bytes,
+                n_collectives,
+                stage_params * states_mult,
+                stage_acts * (pp.min(m) as u64),
+                stage_boundary,
+            ));
+        }
+    }
+    let used_n = infos.len();
+
+    // per-link-class-pair communication buckets (BTreeMap: deterministic
+    // order). Keyed accumulation is what lets a uniform-class placement
+    // collapse bit-identically to the homogeneous arithmetic: bytes are
+    // summed first, then divided/multiplied by the link constants once
+    // per key, exactly like the homogeneous single-fabric expressions.
+    let mut tp_bytes: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut boundary_bytes: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut boundary_hops: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+
+    let mut stage_time = 0f64;
+    let mut stage_energy_sum = 0f64;
+    let mut per_dev_mem = 0u64;
+
+    for (i, (c, r, reduce_bytes, n_collectives, stage_states, stage_acts, boundary)) in
+        infos.iter().enumerate()
+    {
+        let c = *c;
+        // TP inside a stage runs on the stage class's own fabric
+        let tp_link = hc.link(c, c, tp);
+        let tp_lat = if tp > 1 {
+            r.latency_cycles / tp as f64
+                + allreduce_cycles(*reduce_bytes, &tp_link)
+                + *n_collectives as f64 * tp_link.hop_cycles
+        } else {
+            r.latency_cycles
+        };
+        stage_time = stage_time.max(tp_lat);
+        stage_energy_sum += r.energy_pj * hc.classes[c].energy_scale;
+        if tp > 1 {
+            *tp_bytes.entry((c, c)).or_insert(0.0) +=
+                reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
+        }
+        per_dev_mem = per_dev_mem.max(stage_states / tp as u64 + stage_acts);
+        // a stage's boundary tensors cross to the next used stage's class
+        if i + 1 < used_n && *boundary > 0.0 {
+            let next_c = infos[i + 1].0;
+            let key = (c.min(next_c), c.max(next_c));
+            *boundary_bytes.entry(key).or_insert(0.0) += *boundary;
+        }
+    }
+    for i in 1..used_n {
+        let (a, b) = (infos[i - 1].0, infos[i].0);
+        *boundary_hops.entry((a.min(b), a.max(b))).or_insert(0) += 1;
+    }
+
+    // replica-level gradient all-reduce: pp·tp concurrent per-shard rings,
+    // each stage's rings on that stage's class fabric — the critical path
+    // is the slowest ring, i.e. the dp all-reduce crosses the slowest
+    // link on its path. Its traffic is charged at that ring's link energy.
+    let mut dp_sync = 0f64;
+    let mut dp_worst_key: Option<(usize, usize)> = None;
+    if dp > 1 {
+        for info in &infos {
+            let c = info.0;
+            let link = hc.link(c, c, dp);
+            let t = link.hop_cycles
+                + allreduce_cycles(tg.grad_bytes() as f64 / (pp * tp) as f64, &link);
+            if t > dp_sync || dp_worst_key.is_none() {
+                dp_sync = t;
+                dp_worst_key = Some((c, c));
+            }
+        }
+    }
+    let dp_comm = if dp > 1 {
+        2.0 * (dp as f64 - 1.0) / dp as f64 * tg.grad_bytes() as f64 * dp as f64
+    } else {
+        0.0
+    };
+
+    // latency: identical composition to the homogeneous arm, with the
+    // per-key boundary terms collapsing to the single-fabric expressions
+    // on a uniform placement
+    let mut boundary_lat = 0f64;
+    for (&(a, b), &bytes) in &boundary_bytes {
+        boundary_lat += bytes / hc.link(a, b, 2).link_bw.max(1.0);
+    }
+    let mut hop_lat = 0f64;
+    for (&(a, b), &cnt) in &boundary_hops {
+        hop_lat += cnt as f64 * hc.link(a, b, 2).hop_cycles;
+    }
+    let latency = stage_time * (m + pp - 1) as f64 + boundary_lat + hop_lat + dp_sync;
+
+    // total comm bytes + comm energy, per link-class pair
+    let mut keys: BTreeSet<(usize, usize)> = BTreeSet::new();
+    keys.extend(tp_bytes.keys().copied());
+    keys.extend(boundary_bytes.keys().copied());
+    if let Some(k) = dp_worst_key {
+        keys.insert(k);
+    }
+    let mut comm_total = 0f64;
+    let mut comm_energy = 0f64;
+    for &(a, b) in &keys {
+        let t = tp_bytes.get(&(a, b)).copied().unwrap_or(0.0);
+        let bd = boundary_bytes.get(&(a, b)).copied().unwrap_or(0.0);
+        let mut k_comm = (t * m as f64 + bd * m as f64) * dp as f64;
+        if dp_worst_key == Some((a, b)) {
+            k_comm += dp_comm;
+        }
+        comm_total += k_comm;
+        comm_energy += k_comm * hc.link(a, b, 2).link_energy_pj;
+    }
+
+    MultiDeviceResult {
+        strategy: Strategy::Hybrid { dp, pp_stages: pp, microbatches: m, tp },
+        devices,
+        latency_cycles: latency,
+        energy_pj: (stage_energy_sum * m as f64) * dp as f64 + comm_energy,
+        per_device_mem_bytes: per_dev_mem,
+        comm_bytes: comm_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{build_training_graph, TrainOptions};
+    use crate::parallelism::model_strategy_cached;
+    use crate::workload::models::resnet18;
+    use crate::workload::op::Optimizer;
+
+    fn builder() -> impl Fn(usize) -> TrainingGraph {
+        |batch| {
+            build_training_graph(
+                &resnet18(batch.max(1), 32, 10),
+                TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+            )
+        }
+    }
+
+    fn bit_eq(a: &MultiDeviceResult, b: &MultiDeviceResult) {
+        assert_eq!(a.devices, b.devices);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes);
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
+    }
+
+    #[test]
+    fn pool_merges_identical_classes_and_drops_zeros() {
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 0),
+        ]);
+        assert_eq!(hc.classes.len(), 1);
+        assert_eq!(hc.counts, vec![4]);
+        assert_eq!(hc.total_devices(), 4);
+        assert_eq!(hc.label(), "edge:4");
+    }
+
+    #[test]
+    fn cross_class_links_combine_worst_case() {
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let ee = hc.link(0, 0, 2);
+        let dd = hc.link(1, 1, 2);
+        let ed = hc.link(0, 1, 2);
+        assert_eq!(ed.link_bw.to_bits(), ee.link_bw.min(dd.link_bw).to_bits());
+        assert!(ed.hop_cycles >= ee.hop_cycles.max(dd.hop_cycles) - 1e-9);
+        assert!(ed.link_energy_pj >= ee.link_energy_pj.max(dd.link_energy_pj) - 1e-9);
+        // the bottleneck tier of a mixed placement is the slowest one
+        assert_eq!(hc.bottleneck_tier(&[0, 1]), LinkTier::Edge);
+        assert_eq!(hc.bottleneck_tier(&[1, 1]), LinkTier::Datacenter);
+    }
+
+    #[test]
+    fn class_presets_resolve_by_name() {
+        for name in ["edge", "server", "datacenter"] {
+            let c = DeviceClass::by_name(name).unwrap();
+            assert_eq!(c.name, name);
+            assert!(c.energy_scale >= 1.0);
+            assert!(c.accel.total_macs() > 0);
+        }
+        assert!(DeviceClass::by_name("laptop").is_none());
+        // the ladder is ordered: faster and hungrier toward the datacenter
+        let (e, s, d) = (DeviceClass::edge(), DeviceClass::server(), DeviceClass::datacenter());
+        assert!(e.accel.total_macs() < s.accel.total_macs());
+        assert!(s.accel.total_macs() < d.accel.total_macs());
+        assert!(e.energy_scale < s.energy_scale && s.energy_scale < d.energy_scale);
+        assert!(e.accel.offchip_bw < d.accel.offchip_bw);
+    }
+
+    // ---- the extended degeneracy contract: a "mixed" cluster whose
+    // classes are all identical replays the PR 3 homogeneous path bit for
+    // bit, at every factorization corner ----
+
+    #[test]
+    fn uniform_hetero_cluster_is_bit_identical_to_homogeneous_hybrid() {
+        // two identically-named pool entries merge (the symmetry pruning),
+        // and the degenerate "mixed" cluster must replay the homogeneous
+        // Hybrid arithmetic on the same accelerator and fabric tier
+        let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 2), (DeviceClass::edge(), 2)]);
+        assert_eq!(hc.classes.len(), 1);
+        let accel = crate::hardware::presets::EdgeTpuParams::baseline().build();
+        let mapping = MappingConfig::edge_tpu_default();
+        let cases: Vec<(usize, usize, usize, usize, Vec<usize>)> = vec![
+            (1, 1, 1, 1, vec![0]),
+            (4, 1, 1, 1, vec![0]),
+            (1, 4, 4, 1, vec![0, 0, 0, 0]),
+            (1, 1, 1, 4, vec![0]),
+            (2, 2, 4, 1, vec![0, 0]),
+        ];
+        for (dp, pp, m, tp, placement) in cases {
+            let point = HeteroPoint { dp, pp, microbatches: m, tp, placement };
+            assert!(point.feasible(&hc));
+            let h = model_strategy_hetero(&point, 8, &builder(), &mapping, &hc, None);
+            let r = model_strategy_cached(
+                Strategy::Hybrid { dp, pp_stages: pp, microbatches: m, tp },
+                8,
+                &builder(),
+                &accel,
+                &mapping,
+                &LinkTier::Edge.cluster(dp * pp * tp),
+                None,
+            );
+            bit_eq(&h, &r);
+        }
+    }
+
+    #[test]
+    fn uniform_hetero_is_bit_identical_with_a_shared_cache_too() {
+        let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 4)]);
+        let mapping = MappingConfig::edge_tpu_default();
+        let point = HeteroPoint { dp: 1, pp: 2, microbatches: 4, tp: 2, placement: vec![0, 0] };
+        let plain = model_strategy_hetero(&point, 8, &builder(), &mapping, &hc, None);
+        let cache = CostCache::new();
+        let cached = model_strategy_hetero(&point, 8, &builder(), &mapping, &hc, Some(&cache));
+        bit_eq(&plain, &cached);
+        assert!(cache.stats().misses > 0);
+    }
+
+    #[test]
+    fn mixed_placement_is_finite_and_feasibility_holds() {
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let mapping = MappingConfig::edge_tpu_default();
+        let mixed = HeteroPoint { dp: 1, pp: 2, microbatches: 2, tp: 1, placement: vec![0, 1] };
+        assert!(mixed.feasible(&hc));
+        assert!(mixed.is_mixed());
+        assert_eq!(mixed.placement_names(&hc), "edge|datacenter");
+        assert_eq!(mixed.label(&hc), "mixed,n2,dp1,pp2,m2,tp1,edge|datacenter");
+        let r = model_strategy_hetero(&mixed, 4, &builder(), &mapping, &hc, None);
+        assert!(r.latency_cycles.is_finite() && r.latency_cycles > 0.0);
+        assert!(r.energy_pj.is_finite() && r.energy_pj > 0.0);
+        assert!(r.comm_bytes > 0.0, "a pipeline boundary must communicate");
+        assert_eq!(r.devices, 2);
+        // too many gangs for the pool → infeasible
+        let over = HeteroPoint { dp: 4, pp: 1, microbatches: 1, tp: 1, placement: vec![0] };
+        assert!(!over.feasible(&hc));
+        let uniform = HeteroPoint { dp: 1, pp: 2, microbatches: 2, tp: 1, placement: vec![1, 1] };
+        assert!(!uniform.is_mixed());
+    }
+
+    #[test]
+    fn datacenter_class_is_faster_but_hungrier_than_edge() {
+        // the two levers behind the mixed-placement fronts: at the same
+        // factorization, an all-datacenter placement must cut latency vs
+        // all-edge (bigger arrays, more bandwidth) while paying more
+        // energy (the V²·f scale) — otherwise one class dominates and the
+        // placement dimension is pointless
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let mapping = MappingConfig::edge_tpu_default();
+        let run = |class: usize| {
+            let p = HeteroPoint {
+                dp: 1,
+                pp: 2,
+                microbatches: 2,
+                tp: 1,
+                placement: vec![class, class],
+            };
+            model_strategy_hetero(&p, 4, &builder(), &mapping, &hc, None)
+        };
+        let edge = run(0);
+        let dc = run(1);
+        assert!(
+            dc.latency_cycles < edge.latency_cycles,
+            "datacenter-class devices must be faster"
+        );
+        assert!(dc.energy_pj > edge.energy_pj, "datacenter-class devices must pay more energy");
+    }
+}

@@ -1,7 +1,11 @@
 //! Multi-device parallelism strategies (paper §II-C1, Fig 5): data,
-//! pipeline and tensor parallelism across a cluster of identical HDAs —
-//! plus their GPipe/Megatron-style 3D composition ([`Strategy::Hybrid`]),
-//! which is what the cluster-scale DSE actually searches over.
+//! pipeline and tensor parallelism across a cluster of HDAs — plus their
+//! GPipe/Megatron-style 3D composition ([`Strategy::Hybrid`]), which is
+//! what the cluster-scale DSE actually searches over. Clusters come in two
+//! flavours: the homogeneous model below (N identical devices on one
+//! fabric) and the heterogeneous edge-to-datacenter model in [`hetero`]
+//! (per-device [`hetero::DeviceClass`]es, per-link tiers, and a
+//! stage-placement dimension).
 //!
 //! Single-device latency/energy come from the layer-fused scheduler; this
 //! module layers the deployment-level costs on top — gradient all-reduce
@@ -32,6 +36,8 @@
 //! they are what lets the cluster DSE enumerate only `Hybrid` points
 //! without losing the pure strategies as special cases.
 
+pub mod hetero;
+
 use crate::autodiff::TrainingGraph;
 use crate::eval::CostCache;
 use crate::fusion::{fuse_greedy, FusionConstraints};
@@ -40,6 +46,8 @@ use crate::mapping::MappingConfig;
 use crate::scheduler::{schedule_with_cache, ScheduleResult};
 use crate::workload::graph::Graph;
 use crate::workload::op::Phase;
+
+pub use hetero::{model_strategy_hetero, DeviceClass, HeteroCluster, HeteroPoint};
 
 /// The inter-device fabric (NVLink/PCIe/NoC-class, in cycle units of the
 /// device clock).
@@ -80,6 +88,16 @@ impl LinkTier {
             LinkTier::Edge => "edge",
             LinkTier::Server => "server",
             LinkTier::Datacenter => "datacenter",
+        }
+    }
+
+    /// Tier ordering for bottleneck computations: 0 is the slowest fabric
+    /// (edge), rising toward the datacenter.
+    pub fn rank(&self) -> u8 {
+        match self {
+            LinkTier::Edge => 0,
+            LinkTier::Server => 1,
+            LinkTier::Datacenter => 2,
         }
     }
 
@@ -135,7 +153,7 @@ pub struct MultiDeviceResult {
     pub comm_bytes: f64,
 }
 
-fn fused_schedule_cached(
+pub(crate) fn fused_schedule_cached(
     g: &Graph,
     accel: &Accelerator,
     mapping: &MappingConfig,
@@ -147,7 +165,7 @@ fn fused_schedule_cached(
 
 /// Ring all-reduce cost of `bytes` over `n` devices: 2·(n−1)/n · bytes per
 /// link, overlappable chunks — we charge the non-overlapped wire time.
-fn allreduce_cycles(bytes: f64, cluster: &Cluster) -> f64 {
+pub(crate) fn allreduce_cycles(bytes: f64, cluster: &Cluster) -> f64 {
     if cluster.devices <= 1 {
         return 0.0;
     }
@@ -160,7 +178,7 @@ fn allreduce_cycles(bytes: f64, cluster: &Cluster) -> f64 {
 /// bwd already both present in a training graph) and how many collectives
 /// that is. Shared by the pure TensorParallel model and the TP axis of
 /// `Hybrid` so the degenerate case stays bit-identical.
-fn tp_reduce_stats<'a>(
+pub(crate) fn tp_reduce_stats<'a>(
     nodes: impl Iterator<Item = &'a crate::workload::graph::Node>,
     elem_bytes: u64,
 ) -> (f64, usize) {
@@ -176,7 +194,8 @@ fn tp_reduce_stats<'a>(
 }
 
 /// Contiguous MAC-balanced stage split (GPipe-style) over topo order:
-/// node ids per stage, shared by `Pipeline` and the PP axis of `Hybrid`.
+/// node ids per stage. Kept as the *seed* of [`split_stages_balanced`] and
+/// as the oracle its tests compare against.
 fn split_stages(g: &Graph, n_stages: usize) -> Vec<Vec<usize>> {
     let topo = g.topo_order();
     let total_macs: u64 = g.total_macs(None);
@@ -190,9 +209,105 @@ fn split_stages(g: &Graph, n_stages: usize) -> Vec<Vec<usize>> {
     stages
 }
 
+/// Boundary-refinement sweeps of the latency-balancing splitter. Two
+/// passes let every cut react once to its neighbours' moves; more passes
+/// were not observed to shift cuts further on the model zoo.
+const BALANCE_PASSES: usize = 2;
+
+/// Contiguous **latency-balanced** stage split: seeds with the
+/// MAC-balanced cut over topo order, then refines every cut by binary
+/// search on the two adjacent stages' *scheduled* latencies — each probe
+/// re-schedules the candidate stages on their assigned accelerators
+/// through the shared cost cache. This is what fixes memory-bound stages
+/// breaking the MAC proxy (the ROADMAP "pipeline-stage load balancing"
+/// item), and what makes heterogeneous placements meaningful:
+/// `stage_accels[s]` is the device class hosting the s-th stage, so a
+/// slow edge-class stage is handed fewer nodes until the bottleneck
+/// equalizes.
+///
+/// A candidate cut is accepted only when it strictly reduces the
+/// bottleneck of the two stages it moves work between, so the global
+/// bottleneck (max stage latency) is monotonically non-increasing over
+/// the refinement. Deterministic: no RNG, fixed probe order, latencies
+/// from the deterministic scheduler (bit-identical with or without the
+/// cache, so cached and uncached sweeps pick identical cuts).
+pub fn split_stages_balanced(
+    g: &Graph,
+    stage_accels: &[&Accelerator],
+    mapping: &MappingConfig,
+    cache: Option<&CostCache>,
+) -> Vec<Vec<usize>> {
+    let n_stages = stage_accels.len().max(1);
+    let topo = g.topo_order();
+    // MAC-balanced seed (the PR 3 split exactly), expressed as cut
+    // positions into the topo order — `split_stages` assigns stages
+    // monotonically over the topo walk, so each stage is one contiguous
+    // topo range
+    let seed = split_stages(g, n_stages);
+    let mut cuts = vec![0usize; n_stages + 1];
+    for s in 0..n_stages {
+        cuts[s + 1] = cuts[s] + seed[s].len();
+    }
+    if n_stages > 1 && topo.len() > 1 {
+        // scheduled latency of topo[start..end] on the s-th stage's
+        // device, memoized per (stage, range); the inner group costs
+        // additionally share the sweep-wide cost cache, so repeated stage
+        // shapes across candidate cuts, placements and tiers are cheap
+        let memo = std::cell::RefCell::new(std::collections::HashMap::new());
+        let stage_lat = |s: usize, start: usize, end: usize| -> f64 {
+            if start >= end {
+                return 0.0;
+            }
+            if let Some(&v) = memo.borrow().get(&(s, start, end)) {
+                return v;
+            }
+            let (sub, _) = stage_subgraph(g, &topo[start..end]);
+            let v = fused_schedule_cached(&sub, stage_accels[s], mapping, cache).latency_cycles;
+            memo.borrow_mut().insert((s, start, end), v);
+            v
+        };
+        for _pass in 0..BALANCE_PASSES {
+            for b in 1..n_stages {
+                let lo = cuts[b - 1];
+                let hi = cuts[b + 1];
+                if hi - lo < 2 {
+                    continue; // cannot keep both adjacent stages non-empty
+                }
+                let mut best_cut = cuts[b].clamp(lo + 1, hi - 1);
+                let mut best = stage_lat(b - 1, lo, best_cut).max(stage_lat(b, best_cut, hi));
+                // binary-search the crossing point of the two monotone
+                // stage latencies (left grows, right shrinks with the cut)
+                let (mut l, mut h) = (lo + 1, hi - 1);
+                while l <= h {
+                    let mid = l + (h - l) / 2;
+                    let left = stage_lat(b - 1, lo, mid);
+                    let right = stage_lat(b, mid, hi);
+                    let bottleneck = left.max(right);
+                    if bottleneck < best {
+                        best = bottleneck;
+                        best_cut = mid;
+                    }
+                    if left < right {
+                        l = mid + 1;
+                    } else if left > right {
+                        if mid == l {
+                            break;
+                        }
+                        h = mid - 1;
+                    } else {
+                        break;
+                    }
+                }
+                cuts[b] = best_cut;
+            }
+        }
+    }
+    (0..n_stages).map(|s| topo[cuts[s]..cuts[s + 1]].to_vec()).collect()
+}
+
 /// Induced subgraph of one stage plus the stage's outgoing boundary bytes
 /// (tensors that must cross to a later stage's device).
-fn stage_subgraph(g: &Graph, stage: &[usize]) -> (Graph, f64) {
+pub(crate) fn stage_subgraph(g: &Graph, stage: &[usize]) -> (Graph, f64) {
     let mut sub = Graph::with_elem_bytes(g.elem_bytes);
     let mut map = std::collections::HashMap::new();
     for &old in stage {
@@ -216,7 +331,7 @@ fn stage_subgraph(g: &Graph, stage: &[usize]) -> (Graph, f64) {
 /// Stage weights/states + in-flight microbatch activations of one stage,
 /// in the original graph's node ids (the pure-Pipeline accounting, reused
 /// by `Hybrid`): `(stage_param_bytes, stage_activation_bytes)`.
-fn stage_mem_parts(tg: &TrainingGraph, stage: &[usize]) -> (u64, u64) {
+pub(crate) fn stage_mem_parts(tg: &TrainingGraph, stage: &[usize]) -> (u64, u64) {
     let stage_params: u64 = stage
         .iter()
         .filter(|&&x| tg.graph.node(x).phase == Phase::Forward)
@@ -290,8 +405,9 @@ pub fn model_strategy_cached(
         Strategy::Pipeline { microbatches } => {
             let m = microbatches.max(1);
             let tg = tg_builder(full_batch.div_ceil(m).max(1)); // one microbatch graph
-            // contiguous stage split balanced by MACs over topo order
-            let stages = split_stages(&tg.graph, n);
+            // contiguous stage split balanced by scheduled latency
+            let stage_accels = vec![accel; n];
+            let stages = split_stages_balanced(&tg.graph, &stage_accels, mapping, cache);
             // per-stage time = schedule of the induced subgraph; boundary
             // tensors transfer between devices
             let mut stage_time = 0f64;
@@ -410,7 +526,8 @@ pub fn model_strategy_cached(
                     tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
                 eval_stage(&r, reduce_bytes, n_collectives, states, tg.saved_activation_bytes());
             } else {
-                let stages = split_stages(&tg.graph, pp);
+                let stage_accels = vec![accel; pp];
+                let stages = split_stages_balanced(&tg.graph, &stage_accels, mapping, cache);
                 for stage in stages.iter().filter(|s| !s.is_empty()) {
                     let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
                     boundary_bytes += stage_boundary;
@@ -674,6 +791,49 @@ mod tests {
             model_strategy_cached(s, 8, &builder(), &accel, &mapping, &c, Some(&cache));
         bit_eq(&plain, &cached);
         assert!(cache.stats().misses > 0);
+    }
+
+    #[test]
+    fn balanced_split_partitions_the_graph_contiguously() {
+        let tg = builder()(4);
+        let accel = EdgeTpuParams::baseline().build();
+        let mapping = MappingConfig::edge_tpu_default();
+        let accels = [&accel, &accel, &accel, &accel];
+        let stages = split_stages_balanced(&tg.graph, &accels, &mapping, None);
+        assert_eq!(stages.len(), 4);
+        // the stages are exactly the topo order, cut into contiguous ranges
+        let flat: Vec<usize> = stages.iter().flatten().copied().collect();
+        assert_eq!(flat, tg.graph.topo_order());
+    }
+
+    #[test]
+    fn balanced_split_never_worsens_the_mac_split_bottleneck() {
+        // the refinement accepts only strict pair-bottleneck improvements,
+        // so the scheduled max-stage latency is ≤ the MAC-balanced seed's —
+        // on an identical-device pipeline and on a mixed edge+datacenter one
+        let tg = builder()(4);
+        let mapping = MappingConfig::edge_tpu_default();
+        let edge = EdgeTpuParams::baseline().build();
+        let dc = EdgeTpuParams::datacenter_class().build();
+        let bottleneck = |stages: &[Vec<usize>], accels: &[&Accelerator]| -> f64 {
+            stages
+                .iter()
+                .zip(accels)
+                .filter(|(s, _)| !s.is_empty())
+                .map(|(s, a)| {
+                    let (sub, _) = stage_subgraph(&tg.graph, s);
+                    fused_schedule_cached(&sub, a, &mapping, None).latency_cycles
+                })
+                .fold(0.0, f64::max)
+        };
+        for accels in [[&edge, &edge, &edge, &edge], [&edge, &dc, &edge, &dc]] {
+            let seed = split_stages(&tg.graph, 4);
+            let balanced = split_stages_balanced(&tg.graph, &accels, &mapping, None);
+            assert!(
+                bottleneck(&balanced, &accels) <= bottleneck(&seed, &accels),
+                "latency balancing worsened the bottleneck"
+            );
+        }
     }
 
     #[test]

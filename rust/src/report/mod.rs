@@ -1,5 +1,14 @@
 //! Report emitters (DESIGN.md S15): CSV files under `results/` plus ASCII
-//! scatter/bar renderings so every figure regenerates without matplotlib.
+//! scatter/bar/Gantt renderings so every figure regenerates without
+//! matplotlib or any plotting dependency.
+//!
+//! [`write_csv`] is the one CSV serializer every figure goes through
+//! (header + row iterator, no quoting logic beyond what callers embed);
+//! [`ascii_scatter`], [`ascii_bars`] and [`ascii_gantt`] render the same
+//! data for the terminal, and [`fmt_bytes`] pretty-prints memory sizes.
+//! Keeping this layer dumb is deliberate: every number in a rendering is
+//! computed upstream, so tests pin figures by asserting on the returned
+//! rows rather than parsing output.
 
 use std::fmt::Write as _;
 use std::io::Write as _;

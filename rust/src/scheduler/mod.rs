@@ -1,5 +1,18 @@
 //! Layer-fused scheduling (DESIGN.md S8): graph partitions + the
 //! event-driven list scheduler over HDA cores and links.
+//!
+//! [`Partition`] groups graph nodes into fused subgraphs (from the
+//! [`crate::fusion`] solver or singletons); [`engine`] list-schedules the
+//! group DAG over the accelerator's cores, choosing a core class and
+//! tensor-parallel gang width per group by earliest finish time, charging
+//! transfers, memory lifetimes and energy along the way. Everything is
+//! deterministic — ties broken structurally, never by iteration order —
+//! because the DSE and GA layers pin bit-identical results across worker
+//! counts and cache settings. [`schedule_with_cache`] is the memoized
+//! entry point: the per-(group, core class, gang, env) costs go through
+//! the [`crate::eval`] group-cost cache, whose key must widen whenever
+//! this module's cost inputs do (the soundness contract in `eval`'s
+//! docs).
 
 pub mod engine;
 pub mod partition;

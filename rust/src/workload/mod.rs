@@ -1,6 +1,15 @@
 //! Workload IR: operator graphs (nodes = ops, edges = tensors), the model
 //! zoo that builds them, and the builder DSL. This layer replaces ONNX in
 //! the paper's pipeline (DESIGN.md S1/S2).
+//!
+//! [`op`] defines the operator vocabulary (conv/GEMM/eltwise/norm/…)
+//! with closed-form MAC/element counts — the quantities every cost
+//! estimate downstream is a function of; [`graph`] is the DAG container
+//! with the topo/ancestor utilities the schedulers and splitters lean
+//! on; [`models`] builds ResNet-18/50, GPT-2 (full and reduced configs),
+//! MobileNet and MLPs at arbitrary batch/resolution, which is what lets
+//! the parallelism layer re-instantiate a workload per microbatch or
+//! replica batch size.
 
 pub mod builder;
 pub mod graph;

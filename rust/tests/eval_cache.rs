@@ -172,12 +172,94 @@ fn cluster_sweep_cached_and_uncached_agree_bitwise() {
     }
 }
 
+#[test]
+fn hetero_sweep_cached_and_uncached_agree_bitwise() {
+    // the heterogeneous cluster DSE threads stage placements through the
+    // same cost cache — per-class accelerators key their own entries via
+    // the structural core-class hash, and sharing them across placements
+    // and factorizations must never change a single bit of any row
+    use monet::dse::{run_hetero_sweep, ClusterSpace, SweepConfig};
+    use monet::parallelism::{DeviceClass, HeteroCluster};
+
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 2), (DeviceClass::datacenter(), 2)]);
+    let points = ClusterSpace::enumerate_hetero(&hc, &[2]);
+    assert!(points.iter().any(|p| p.is_mixed()), "space must contain mixed placements");
+    let run = |use_cache: bool| {
+        run_hetero_sweep(
+            &points,
+            &hc,
+            4,
+            &monet::figures::cluster_resnet18_builder,
+            &SweepConfig {
+                mapping: MappingConfig::edge_tpu_default(),
+                use_cache,
+                workers: 4,
+                ..Default::default()
+            },
+            |_, _| {},
+        )
+    };
+    let (cached, stats) = run(true);
+    let (plain, no_stats) = run(false);
+    assert!(stats.hits > 0, "placements sharing stage shapes never hit the cache: {stats:?}");
+    assert_eq!(no_stats, CacheStats::default());
+    assert_eq!(cached.len(), plain.len());
+    for (a, b) in cached.iter().zip(&plain) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes);
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits());
+    }
+}
+
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir()
         .join(format!("monet_eval_cache_{tag}_{}", std::process::id()));
     std::fs::remove_dir_all(&d).ok();
     std::fs::create_dir_all(&d).unwrap();
     d
+}
+
+#[test]
+fn persisted_hetero_sweep_is_bit_identical_and_warm_on_restart() {
+    // a heterogeneous sweep restarted against its own snapshot recomputes
+    // nothing and replays every row bit for bit — the persistence
+    // lifecycle extended to placement-keyed entries (stale snapshots from
+    // older contracts are rejected wholesale by the persist-layer tests)
+    use monet::dse::{run_hetero_sweep, ClusterSpace, SweepConfig};
+    use monet::parallelism::{DeviceClass, HeteroCluster};
+
+    let dir = tmp_dir("hetero");
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 1), (DeviceClass::datacenter(), 1)]);
+    let points = ClusterSpace::enumerate_hetero(&hc, &[2]);
+    let cfg = SweepConfig {
+        mapping: MappingConfig::edge_tpu_default(),
+        workers: 2,
+        cache_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let run = || {
+        run_hetero_sweep(
+            &points,
+            &hc,
+            4,
+            &monet::figures::cluster_resnet18_builder,
+            &cfg,
+            |_, _| {},
+        )
+    };
+    let (r1, _s1) = run();
+    let (r2, s2) = run();
+    assert_eq!(s2.misses, 0, "warm hetero run recomputed group costs: {s2:?}");
+    assert_eq!(r1.len(), r2.len());
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
