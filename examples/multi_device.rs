@@ -1,27 +1,167 @@
 //! Parallelism strategies across multiple HDAs (paper §II-C1, Fig 5 made
-//! quantitative): data / pipeline / tensor parallelism for ResNet-18
-//! training on clusters of baseline Edge TPUs.
+//! quantitative) — and the canonical **"add your own design space"**
+//! example for the generic `dse::engine` harness: define a point type, a
+//! `DesignSpace` (deterministic enumeration + stable ids) and an
+//! `Evaluate` instance, and `Engine::run` supplies the worker pool, the
+//! shared cost-cache lifecycle, progress reporting and deterministic row
+//! ordering — no hand-rolled threading.
 //!
 //! Run: `cargo run --release --example multi_device`
 
-use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
+use monet::dse::{ClusterScratch, DesignSpace, Engine, EngineConfig, Evaluate};
+use monet::eval::CostCache;
+use monet::hardware::accelerator::Accelerator;
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
-use monet::parallelism::{model_strategy, Cluster, Strategy};
+use monet::parallelism::{model_strategy_memo, Cluster, Strategy};
 use monet::report::{fmt_bytes, write_csv};
 use monet::workload::models::resnet18;
 use monet::workload::op::Optimizer;
 
+/// 1. Your point type: one (strategy, cluster size) cell of the grid.
+struct StrategyPoint {
+    name: &'static str,
+    strategy: Strategy,
+    devices: usize,
+}
+
+/// 2. Your `DesignSpace`: deterministic enumeration + stable ids.
+struct StrategyGrid {
+    points: Vec<StrategyPoint>,
+}
+
+impl StrategyGrid {
+    fn paper_grid() -> Self {
+        let mut points = vec![];
+        for n in [1usize, 2, 4, 8] {
+            points.push(StrategyPoint {
+                name: "data-parallel",
+                strategy: Strategy::DataParallel,
+                devices: n,
+            });
+            points.push(StrategyPoint {
+                name: "pipeline (m=8)",
+                strategy: Strategy::Pipeline { microbatches: 8 },
+                devices: n,
+            });
+            points.push(StrategyPoint {
+                name: "tensor-parallel",
+                strategy: Strategy::TensorParallel,
+                devices: n,
+            });
+            points.push(StrategyPoint {
+                name: "hybrid (dp2,pp=n/2,m=8)",
+                strategy: Strategy::Hybrid {
+                    dp: 2.min(n),
+                    pp_stages: (n / 2).max(1),
+                    microbatches: 8,
+                    tp: 1,
+                },
+                devices: n,
+            });
+        }
+        StrategyGrid { points }
+    }
+}
+
+impl DesignSpace for StrategyGrid {
+    type Point = StrategyPoint;
+
+    fn points(&self) -> &[StrategyPoint] {
+        &self.points
+    }
+
+    fn point_id(&self, index: usize) -> String {
+        let p = &self.points[index];
+        format!("{},n{}", p.name, p.devices)
+    }
+}
+
+/// The training-graph builder — must be a pure function of the batch
+/// (the per-worker scratch memoizes it).
+fn resnet18_builder(batch: usize) -> TrainingGraph {
+    build_training_graph(
+        &resnet18(batch.max(1), 32, 10),
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    )
+}
+
+/// One result row (your own shape — the engine is generic over it).
+struct Row {
+    name: &'static str,
+    devices: usize,
+    latency_cycles: f64,
+    energy_pj: f64,
+    per_device_mem_bytes: u64,
+    comm_bytes: f64,
+}
+
+/// 3. Your `Evaluate` instance. The contract: a pure function of
+/// (index, point, &self); the scratch may only memoize pure work (here:
+/// the per-batch training graphs and the balanced stage cuts, via the
+/// reusable `ClusterScratch`).
+struct StrategyEval {
+    accel: Accelerator,
+    mapping: MappingConfig,
+    full_batch: usize,
+}
+
+impl Evaluate for StrategyEval {
+    type Point = StrategyPoint;
+    type Row = Row;
+    type Scratch = ClusterScratch;
+
+    fn scratch(&self) -> ClusterScratch {
+        ClusterScratch::default()
+    }
+
+    fn evaluate(
+        &self,
+        _index: usize,
+        p: &StrategyPoint,
+        cache: Option<&CostCache>,
+        scratch: &mut ClusterScratch,
+    ) -> Vec<Row> {
+        let builder = scratch.graph_builder(&resnet18_builder);
+        let cluster = Cluster {
+            devices: p.devices,
+            link_bw: 64.0,
+            link_energy_pj: 10.0,
+            hop_cycles: 0.0,
+        };
+        let r = model_strategy_memo(
+            p.strategy,
+            self.full_batch,
+            &builder,
+            &self.accel,
+            &self.mapping,
+            &cluster,
+            cache,
+            Some(&scratch.cuts),
+        );
+        vec![Row {
+            name: p.name,
+            devices: p.devices,
+            latency_cycles: r.latency_cycles,
+            energy_pj: r.energy_pj,
+            per_device_mem_bytes: r.per_device_mem_bytes,
+            comm_bytes: r.comm_bytes,
+        }]
+    }
+}
+
 fn main() {
-    let accel = EdgeTpuParams::baseline().build();
-    let mapping = MappingConfig::edge_tpu_default();
-    let builder = |batch: usize| {
-        build_training_graph(
-            &resnet18(batch.max(1), 32, 10),
-            TrainOptions { optimizer: Optimizer::Adam, include_update: true },
-        )
-    };
     let full_batch = 16;
+    let space = StrategyGrid::paper_grid();
+    let eval = StrategyEval {
+        accel: EdgeTpuParams::baseline().build(),
+        mapping: MappingConfig::edge_tpu_default(),
+        full_batch,
+    };
+
+    // 4. One call: worker pool, shared cost cache, deterministic order.
+    let (rows, stats) = Engine::new(EngineConfig::default()).run(&space, &eval, |_, _| {});
 
     println!("ResNet-18 training (Adam, batch {full_batch}) on clusters of baseline Edge TPUs");
     println!(
@@ -29,43 +169,29 @@ fn main() {
         "strategy", "n", "latency (cyc)", "energy (pJ)", "mem/device", "comm"
     );
     let mut csv_rows = vec![];
-    for n in [1usize, 2, 4, 8] {
-        let cluster =
-            Cluster { devices: n, link_bw: 64.0, link_energy_pj: 10.0, hop_cycles: 0.0 };
-        for (name, s) in [
-            ("data-parallel", Strategy::DataParallel),
-            ("pipeline (m=8)", Strategy::Pipeline { microbatches: 8 }),
-            ("tensor-parallel", Strategy::TensorParallel),
-            (
-                "hybrid (dp2,pp=n/2,m=8)",
-                Strategy::Hybrid {
-                    dp: 2.min(n),
-                    pp_stages: (n / 2).max(1),
-                    microbatches: 8,
-                    tp: 1,
-                },
-            ),
-        ] {
-            let r = model_strategy(s, full_batch, &builder, &accel, &mapping, &cluster);
-            println!(
-                "{:<26} {:>4} {:>14.3e} {:>13.3e} {:>12} {:>12}",
-                name,
-                n,
-                r.latency_cycles,
-                r.energy_pj,
-                fmt_bytes(r.per_device_mem_bytes),
-                fmt_bytes(r.comm_bytes as u64),
-            );
-            csv_rows.push(vec![
-                name.to_string(),
-                n.to_string(),
-                format!("{:.6e}", r.latency_cycles),
-                format!("{:.6e}", r.energy_pj),
-                r.per_device_mem_bytes.to_string(),
-                format!("{:.3e}", r.comm_bytes),
-            ]);
+    let mut last_devices = 0usize;
+    for r in &rows {
+        if last_devices != 0 && r.devices != last_devices {
+            println!();
         }
-        println!();
+        last_devices = r.devices;
+        println!(
+            "{:<26} {:>4} {:>14.3e} {:>13.3e} {:>12} {:>12}",
+            r.name,
+            r.devices,
+            r.latency_cycles,
+            r.energy_pj,
+            fmt_bytes(r.per_device_mem_bytes),
+            fmt_bytes(r.comm_bytes as u64),
+        );
+        csv_rows.push(vec![
+            r.name.to_string(),
+            r.devices.to_string(),
+            format!("{:.6e}", r.latency_cycles),
+            format!("{:.6e}", r.energy_pj),
+            r.per_device_mem_bytes.to_string(),
+            format!("{:.3e}", r.comm_bytes),
+        ]);
     }
     write_csv(
         "results/multi_device.csv",
@@ -74,9 +200,17 @@ fn main() {
     )
     .unwrap();
     println!(
+        "\nShared group-cost cache across the pool: {} hits / {} misses ({:.1}% hit rate)",
+        stats.hits,
+        stats.misses,
+        stats.hit_rate() * 100.0
+    );
+    println!(
         "Takeaways (paper §II-C1): data parallelism buys latency but replicates all\n\
          optimizer state per device; pipelining cuts per-device memory at fill/drain\n\
          cost; tensor parallelism shards state but pays per-layer reduction traffic.\n\
+         To add your own design space: a point type + DesignSpace + Evaluate, then\n\
+         Engine::run — the worker pool, cache lifecycle and determinism come free.\n\
          CSV: results/multi_device.csv"
     );
 }

@@ -1,0 +1,180 @@
+//! `cargo bench --bench bench_dse` — throughput of the unified
+//! `dse::engine` harness across the three sweep families (single-device
+//! accelerator points, homogeneous cluster deployments, heterogeneous
+//! stage placements), cold cache vs warm-persisted cache. Emits
+//! `BENCH_dse.json` (uploaded as a CI artifact alongside
+//! `BENCH_eval.json`) so engine/harness overhead regressions are visible
+//! across PRs.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::dse::{
+    run_cluster_sweep, run_hetero_sweep, run_sweep_stats, ClusterSpace, DesignPoint, SweepConfig,
+};
+use monet::hardware::presets::EdgeTpuParams;
+use monet::mapping::MappingConfig;
+use monet::parallelism::{DeviceClass, HeteroCluster, LinkTier};
+use monet::workload::models::resnet18;
+use monet::workload::op::Optimizer;
+
+struct FamilyResult {
+    name: &'static str,
+    points: usize,
+    cold_secs: f64,
+    warm_secs: f64,
+}
+
+impl FamilyResult {
+    fn cold_pps(&self) -> f64 {
+        self.points as f64 / self.cold_secs
+    }
+
+    fn warm_pps(&self) -> f64 {
+        self.points as f64 / self.warm_secs
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("monet_bench_dse_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Run `sweep(cfg)` twice against one persisted cache dir — cold (fills
+/// and persists the snapshot) then warm (replays it) — returning the
+/// family's throughput record.
+fn time_family(
+    name: &'static str,
+    points: usize,
+    sweep: impl Fn(&SweepConfig) -> usize,
+    mapping: MappingConfig,
+) -> FamilyResult {
+    let dir = tmp_dir(name);
+    let cfg = SweepConfig { mapping, cache_dir: Some(dir.clone()), ..Default::default() };
+    let t0 = Instant::now();
+    let rows_cold = sweep(&cfg);
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let rows_warm = sweep(&cfg);
+    let warm_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(rows_cold, rows_warm, "{name}: warm run changed the row count");
+    std::fs::remove_dir_all(&dir).ok();
+    FamilyResult { name, points, cold_secs, warm_secs }
+}
+
+fn main() {
+    println!("== MONET dse::engine throughput (cold vs warm-persisted cache) ==\n");
+    let mut results: Vec<FamilyResult> = vec![];
+
+    // single-device accelerator sweep (the fig1 family, strided small)
+    {
+        let fwd = resnet18(1, 32, 10);
+        let tg = build_training_graph(
+            &fwd,
+            TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+        );
+        let points = DesignPoint::edge_space(300);
+        let n = points.len();
+        results.push(time_family(
+            "edge_sweep",
+            n,
+            |cfg| run_sweep_stats(&points, &fwd, &tg.graph, cfg, |_, _| {}).0.len(),
+            MappingConfig::edge_tpu_default(),
+        ));
+    }
+
+    // homogeneous cluster deployments (the fig5 family)
+    {
+        let space = ClusterSpace {
+            device_counts: vec![1, 2, 4],
+            tiers: LinkTier::all().to_vec(),
+            microbatches: vec![2, 4],
+        };
+        let points = space.enumerate();
+        let n = points.len();
+        let accel = EdgeTpuParams::baseline().build();
+        results.push(time_family(
+            "cluster_sweep",
+            n,
+            |cfg| {
+                run_cluster_sweep(
+                    &points,
+                    8,
+                    &monet::figures::cluster_resnet18_builder,
+                    &accel,
+                    cfg,
+                    |_, _| {},
+                )
+                .0
+                .len()
+            },
+            MappingConfig::edge_tpu_default(),
+        ));
+    }
+
+    // heterogeneous stage placements (the cluster --device-classes family)
+    {
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let points = ClusterSpace::enumerate_hetero(&hc, &[2]);
+        let n = points.len();
+        results.push(time_family(
+            "hetero_sweep",
+            n,
+            |cfg| {
+                run_hetero_sweep(
+                    &points,
+                    &hc,
+                    4,
+                    &monet::figures::cluster_resnet18_builder,
+                    cfg,
+                    |_, _| {},
+                )
+                .0
+                .len()
+            },
+            MappingConfig::edge_tpu_default(),
+        ));
+    }
+
+    println!(
+        "{:<16} {:>8} {:>12} {:>12} {:>14} {:>14}",
+        "family", "points", "cold (s)", "warm (s)", "cold pts/s", "warm pts/s"
+    );
+    for r in &results {
+        println!(
+            "{:<16} {:>8} {:>12.3} {:>12.3} {:>14.1} {:>14.1}",
+            r.name,
+            r.points,
+            r.cold_secs,
+            r.warm_secs,
+            r.cold_pps(),
+            r.warm_pps()
+        );
+    }
+
+    let families_json: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "    \"{}\": {{\n      \"points\": {},\n      \"points_per_sec_cold\": {:.2},\n      \"points_per_sec_warm\": {:.2},\n      \"warm_speedup\": {:.3}\n    }}",
+                r.name,
+                r.points,
+                r.cold_pps(),
+                r.warm_pps(),
+                r.cold_secs / r.warm_secs
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n  \"families\": {{\n{}\n  }}\n}}\n",
+        families_json.join(",\n")
+    );
+    std::fs::write("BENCH_dse.json", &json).expect("writing BENCH_dse.json");
+    println!("\n    -> BENCH_dse.json written");
+    println!("\nbench_dse done");
+}

@@ -1,0 +1,522 @@
+//! The unified DSE evaluation engine: **one** generic worker-pool harness
+//! behind every experiment in the repo.
+//!
+//! Before this module, the repo carried four hand-rolled copies of the
+//! same orchestration — `run_sweep_stats` (single-device accelerator
+//! points), `run_cluster_sweep` (homogeneous deployments),
+//! `run_hetero_sweep` (stage-placement deployments, cross-noted as a
+//! line-for-line mirror of the previous one) and the NSGA-II GA's
+//! per-generation batch evaluator — each re-implementing the worker
+//! pool, the cost-cache lifecycle and the determinism guarantees by
+//! hand. They are now all instances of this API (see
+//! [`super::sweep::SweepEval`], [`super::sweep::ClusterEval`],
+//! [`super::sweep::HeteroEval`] and [`map_parallel`] in
+//! `ga::nsga2::evaluate_batch`), so the next search dimension lands as
+//! one [`DesignSpace`] + [`Evaluate`] pair instead of a fifth fork.
+//!
+//! ## The three pieces
+//!
+//! * [`DesignSpace`] — a finite, **deterministically ordered** set of
+//!   points with **stable ids**: enumerating the same space twice yields
+//!   the same points in the same order, and `point_id(i)` is unique
+//!   within the space and stable across runs/builds (it names rows in
+//!   CSVs, caches and golden tests).
+//! * [`Evaluate`] — how one point becomes result rows. One instance is
+//!   shared by every worker (`&self`), plus a per-worker [`Evaluate::Scratch`]
+//!   for memos that must not be contended across threads.
+//! * [`Engine`] — the harness. [`Engine::run`] owns the worker pool
+//!   (work-stealing index over scoped threads), the per-worker scratch,
+//!   the shared [`CostCache`] **lifecycle** (`use_cache` /
+//!   `cache_dir` / `cache_cap` — open, warm-load, bound, persist; the
+//!   `--no-cache` escape hatch wins over persistence and skips both load
+//!   and save), the progress callback, the cache counters, and the
+//!   deterministic result ordering.
+//!
+//! ## The evaluation contract (what an [`Evaluate`] impl may NOT read)
+//!
+//! Mirroring the `eval` cost-cache soundness contract
+//! (`rust/src/eval/mod.rs`), `Evaluate::evaluate` must be a **pure
+//! function** of `(index, point, &self)`. It may not read:
+//!
+//! * worker identity, thread ids, or how points were distributed over
+//!   the pool;
+//! * wall-clock time, environment variables, or any global mutable
+//!   state;
+//! * results of *other* points (each point must evaluate as if alone);
+//! * the scratch, except as a **memo of pure functions** of the inputs —
+//!   a hit must return bit-identical values to a recompute (the
+//!   per-worker training-graph and stage-cuts memos obey this);
+//! * the cost cache, except through the passed handle — and only for
+//!   values that are themselves pure (the `eval` contract).
+//!
+//! Anything else breaks the engine's core guarantee, pinned by
+//! `tests/dse_engine.rs`: **rows are bit-identical across any worker
+//! count and any cache setting** (off / cold / warm-persisted /
+//! capacity-bounded).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use super::space::{ClusterPoint, DesignPoint};
+use crate::eval::{persist, CacheStats, CostCache};
+use crate::parallelism::{HeteroCluster, HeteroPoint};
+
+/// A finite, deterministically ordered set of evaluable design points
+/// with stable per-point ids. See the module docs for the contract.
+pub trait DesignSpace {
+    type Point: Sync;
+
+    /// The points, in the space's canonical (deterministic) order.
+    fn points(&self) -> &[Self::Point];
+
+    /// Stable, unique-within-the-space id of the `index`-th point — the
+    /// same string the family's [`Evaluate`] impl emits as the row label
+    /// (golden tests and CSVs key on it). Uniqueness is enforced in
+    /// debug builds by [`Engine::run`], which is what keeps a space's
+    /// ids and its evaluator's labels from drifting apart silently.
+    fn point_id(&self, index: usize) -> String;
+
+    fn len(&self) -> usize {
+        self.points().len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.points().is_empty()
+    }
+}
+
+/// The single-device accelerator space: a slice of [`DesignPoint`]s in
+/// enumeration order, identified by their sweep labels.
+impl DesignSpace for [DesignPoint] {
+    type Point = DesignPoint;
+
+    fn points(&self) -> &[DesignPoint] {
+        self
+    }
+
+    fn point_id(&self, index: usize) -> String {
+        self[index].label()
+    }
+}
+
+/// The homogeneous deployment space: a slice of [`ClusterPoint`]s in
+/// enumeration order, identified by their row labels.
+impl DesignSpace for [ClusterPoint] {
+    type Point = ClusterPoint;
+
+    fn points(&self) -> &[ClusterPoint] {
+        self
+    }
+
+    fn point_id(&self, index: usize) -> String {
+        self[index].label()
+    }
+}
+
+/// The heterogeneous stage-placement space: enumerated [`HeteroPoint`]s
+/// plus the device pool they are placed on (a point's label needs the
+/// pool's class names, so a bare slice cannot implement [`DesignSpace`]).
+pub struct HeteroSpace<'a> {
+    pub points: &'a [HeteroPoint],
+    pub cluster: &'a HeteroCluster,
+}
+
+impl DesignSpace for HeteroSpace<'_> {
+    type Point = HeteroPoint;
+
+    fn points(&self) -> &[HeteroPoint] {
+        self.points
+    }
+
+    fn point_id(&self, index: usize) -> String {
+        self.points[index].label(self.cluster)
+    }
+}
+
+/// The minimized objective set every MONET experiment reports — the
+/// typed replacement for the ad-hoc `Vec<f64>` rows the sweeps used to
+/// hand to the NSGA-II ranking. Single-device rows report `devices = 1`;
+/// cluster rows report per-device memory and the cluster size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    pub memory_bytes: u64,
+    pub devices: usize,
+}
+
+impl Objectives {
+    /// The flat minimized vector `ga::nsga2::pareto_rank0` consumes, in
+    /// the canonical order (latency, energy, memory, devices).
+    pub fn to_vec(self) -> Vec<f64> {
+        vec![
+            self.latency_cycles,
+            self.energy_pj,
+            self.memory_bytes as f64,
+            self.devices as f64,
+        ]
+    }
+}
+
+/// How one design point becomes result rows. One instance serves the
+/// whole pool (`&self` from every worker); per-worker mutable state
+/// lives in [`Evaluate::Scratch`]. See the module docs for what an
+/// implementation may NOT read.
+pub trait Evaluate: Sync {
+    type Point: Sync;
+    /// One result row; a point may emit several (e.g. one per mode).
+    type Row: Send;
+    /// Per-worker scratch: memos of pure functions only (training-graph
+    /// memo, stage-cuts memo). Created once per worker, never shared.
+    type Scratch;
+
+    /// Fresh scratch for one worker.
+    fn scratch(&self) -> Self::Scratch;
+
+    /// Evaluate the `index`-th point into rows. `cache` is the
+    /// engine-owned shared cost cache (`None` under `--no-cache`).
+    fn evaluate(
+        &self,
+        index: usize,
+        point: &Self::Point,
+        cache: Option<&CostCache>,
+        scratch: &mut Self::Scratch,
+    ) -> Vec<Self::Row>;
+}
+
+/// The engine's orchestration knobs: worker count plus the shared
+/// cost-cache lifecycle (the CLI's `--no-cache` / `--cache-dir` /
+/// `--cache-cap` triple — one definition, so the semantics cannot drift
+/// across commands).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads (1 = serial). Results are bit-identical for every
+    /// value — parallelism only changes wall-clock.
+    pub workers: usize,
+    /// Share one [`CostCache`] across the pool. `false` (the
+    /// `--no-cache` escape hatch) recomputes every group cost and
+    /// **wins over `cache_dir`**: nothing is loaded or saved.
+    pub use_cache: bool,
+    /// Persist the cost cache across process runs (`--cache-dir`):
+    /// warm-load the snapshot before the run, write it back after.
+    /// Stale/incompatible snapshots are rejected wholesale
+    /// (see [`crate::eval::persist`]).
+    pub cache_dir: Option<PathBuf>,
+    /// Bound the cache to ~this many entries with the sharded CLOCK
+    /// policy (`--cache-cap`); 0 = unbounded.
+    pub cache_cap: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            use_cache: true,
+            cache_dir: None,
+            cache_cap: 0,
+        }
+    }
+}
+
+/// The generic sweep/search harness. See the module docs.
+pub struct Engine {
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Engine { cfg }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Evaluate every point of `space` over the worker pool and return
+    /// the rows plus the shared cache's counters.
+    ///
+    /// Guarantees (pinned by `tests/dse_engine.rs`):
+    ///
+    /// * **ordering** — rows come back sorted by point index; a point's
+    ///   own rows keep their emission order;
+    /// * **determinism** — bit-identical rows for any `workers` value
+    ///   and any cache setting (off / cold / warm / bounded);
+    /// * **lifecycle** — with `use_cache`, the cache is opened (warm-
+    ///   loading a `cache_dir` snapshot when present, bounded by
+    ///   `cache_cap`) before evaluation and persisted back after; with
+    ///   `use_cache` off nothing is loaded, counted or saved;
+    /// * **progress** — `progress(done, total)` fires once per completed
+    ///   point, in completion order.
+    pub fn run<S, E>(
+        &self,
+        space: &S,
+        eval: &E,
+        mut progress: impl FnMut(usize, usize),
+    ) -> (Vec<E::Row>, CacheStats)
+    where
+        S: DesignSpace + ?Sized,
+        E: Evaluate<Point = S::Point>,
+    {
+        let points = space.points();
+        let n = points.len();
+        #[cfg(debug_assertions)]
+        {
+            // the DesignSpace id contract: unique within the space
+            let mut seen = std::collections::HashSet::with_capacity(n);
+            for i in 0..n {
+                let id = space.point_id(i);
+                assert!(seen.insert(id.clone()), "DesignSpace ids must be unique: {id:?}");
+            }
+        }
+        let cache = if self.cfg.use_cache {
+            Some(persist::open_cost_cache(self.cfg.cache_dir.as_deref(), self.cfg.cache_cap))
+        } else {
+            None
+        };
+        let cache_ref = cache.as_ref();
+
+        let mut keyed: Vec<(usize, Vec<E::Row>)> = Vec::with_capacity(n);
+        let mut done = 0usize;
+        run_pool(
+            self.cfg.workers,
+            n,
+            &|| eval.scratch(),
+            &|i, scratch: &mut E::Scratch| eval.evaluate(i, &points[i], cache_ref, scratch),
+            |i, rows| {
+                keyed.push((i, rows));
+                done += 1;
+                progress(done, n);
+            },
+        );
+        keyed.sort_by_key(|&(i, _)| i);
+
+        let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+        if let Some(c) = &cache {
+            persist::persist_cost_cache(c, self.cfg.cache_dir.as_deref());
+        }
+        (keyed.into_iter().flat_map(|(_, rows)| rows).collect(), stats)
+    }
+}
+
+/// Deterministic parallel map over a slice: `out[i] == f(&items[i])`
+/// for every `i`, regardless of `workers`. This is the engine's pool
+/// exposed for callers that own their own caching (the NSGA-II GA's
+/// per-generation genome batches); `f` must be pure.
+pub fn map_parallel<T, R>(
+    workers: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+{
+    let n = items.len();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    run_pool(
+        workers,
+        n,
+        &|| (),
+        &|i, _scratch: &mut ()| f(&items[i]),
+        |i, r| out[i] = Some(r),
+    );
+    out.into_iter().map(|r| r.expect("pool delivered every index")).collect()
+}
+
+/// The one worker-pool core every harness shares: a work-stealing index
+/// over scoped threads, one `scratch()` per worker, results streamed
+/// back to the caller's thread as `(index, result)` via `sink` (in
+/// completion order — callers needing index order sort or slot by `i`).
+/// Serial (no threads spawned) when one worker suffices.
+fn run_pool<R, Sc>(
+    workers: usize,
+    n: usize,
+    scratch: &(impl Fn() -> Sc + Sync),
+    task: &(impl Fn(usize, &mut Sc) -> R + Sync),
+    mut sink: impl FnMut(usize, R),
+) where
+    R: Send,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 {
+        let mut sc = scratch();
+        for i in 0..n {
+            sink(i, task(i, &mut sc));
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let mut sc = scratch();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if tx.send((i, task(i, &mut sc))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((i, r)) = rx.recv() {
+            sink(i, r);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic space: points are integers, ids are their decimal
+    /// strings.
+    struct IntSpace(Vec<u64>);
+
+    impl DesignSpace for IntSpace {
+        type Point = u64;
+
+        fn points(&self) -> &[u64] {
+            &self.0
+        }
+
+        fn point_id(&self, index: usize) -> String {
+            format!("int{}", self.0[index])
+        }
+    }
+
+    /// Squares each point; the scratch counts this worker's evaluations
+    /// (a memo-shaped use: it never alters results).
+    struct SquareEval;
+
+    impl Evaluate for SquareEval {
+        type Point = u64;
+        type Row = (usize, u64);
+        type Scratch = usize;
+
+        fn scratch(&self) -> usize {
+            0
+        }
+
+        fn evaluate(
+            &self,
+            index: usize,
+            point: &u64,
+            _cache: Option<&CostCache>,
+            scratch: &mut usize,
+        ) -> Vec<(usize, u64)> {
+            *scratch += 1;
+            vec![(index, point * point)]
+        }
+    }
+
+    fn no_cache_cfg(workers: usize) -> EngineConfig {
+        EngineConfig { workers, use_cache: false, ..Default::default() }
+    }
+
+    #[test]
+    fn rows_are_index_ordered_and_identical_across_worker_counts() {
+        let space = IntSpace((0..97).map(|i| i * 3 + 1).collect());
+        let run = |workers: usize| {
+            let mut calls = 0usize;
+            let (rows, stats) =
+                Engine::new(no_cache_cfg(workers)).run(&space, &SquareEval, |_, _| calls += 1);
+            assert_eq!(calls, space.len());
+            assert_eq!(stats, CacheStats::default());
+            rows
+        };
+        let serial = run(1);
+        assert_eq!(serial.len(), 97);
+        for (i, &(idx, sq)) in serial.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(sq, space.0[i] * space.0[i]);
+        }
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(8));
+        assert_eq!(serial, run(64), "more workers than points must still work");
+    }
+
+    #[test]
+    fn multi_row_points_keep_emission_order() {
+        struct PairEval;
+        impl Evaluate for PairEval {
+            type Point = u64;
+            type Row = (usize, &'static str);
+            type Scratch = ();
+            fn scratch(&self) {}
+            fn evaluate(
+                &self,
+                index: usize,
+                _point: &u64,
+                _cache: Option<&CostCache>,
+                _scratch: &mut (),
+            ) -> Vec<(usize, &'static str)> {
+                vec![(index, "first"), (index, "second")]
+            }
+        }
+        let space = IntSpace((0..13).collect());
+        let (rows, _) = Engine::new(no_cache_cfg(4)).run(&space, &PairEval, |_, _| {});
+        assert_eq!(rows.len(), 26);
+        for (i, pair) in rows.chunks(2).enumerate() {
+            assert_eq!(pair[0], (i, "first"));
+            assert_eq!(pair[1], (i, "second"));
+        }
+    }
+
+    #[test]
+    fn empty_space_yields_no_rows_and_no_progress() {
+        let space = IntSpace(vec![]);
+        let mut calls = 0usize;
+        let (rows, stats) =
+            Engine::new(no_cache_cfg(4)).run(&space, &SquareEval, |_, _| calls += 1);
+        assert!(rows.is_empty());
+        assert_eq!(calls, 0);
+        assert_eq!(stats, CacheStats::default());
+    }
+
+    #[test]
+    fn map_parallel_matches_serial_map_for_any_worker_count() {
+        let items: Vec<u64> = (0..61).map(|i| i * 7).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for workers in [1usize, 2, 3, 8, 100] {
+            assert_eq!(map_parallel(workers, &items, |x| x * x + 1), expect);
+        }
+        let empty: Vec<u64> = vec![];
+        assert!(map_parallel(4, &empty, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn hetero_space_ids_come_from_the_pool() {
+        use crate::parallelism::DeviceClass;
+        let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 2)]);
+        let points = vec![HeteroPoint {
+            dp: 1,
+            pp: 2,
+            microbatches: 2,
+            tp: 1,
+            placement: vec![0, 0],
+        }];
+        let space = HeteroSpace { points: &points, cluster: &hc };
+        assert_eq!(space.len(), 1);
+        assert_eq!(space.point_id(0), points[0].label(&hc));
+    }
+
+    #[test]
+    fn objectives_vector_is_canonically_ordered() {
+        let o = Objectives {
+            latency_cycles: 2.0,
+            energy_pj: 3.0,
+            memory_bytes: 5,
+            devices: 7,
+        };
+        assert_eq!(o.to_vec(), vec![2.0, 3.0, 5.0, 7.0]);
+    }
+}

@@ -1,29 +1,46 @@
 //! Design-space exploration (DESIGN.md S11): the end-user search layer
 //! over everything the lower layers can model.
 //!
-//! Three spaces are searchable:
+//! The load-bearing piece is [`engine`] — **one** generic worker-pool
+//! harness ([`Engine::run`]) owning chunking, per-worker scratch, the
+//! shared cost-cache lifecycle (`--no-cache`/`--cache-dir`/
+//! `--cache-cap`), stat aggregation and deterministic result ordering.
+//! Every experiment is a [`DesignSpace`] (deterministic point
+//! enumeration + stable ids) paired with an [`Evaluate`] instance;
+//! adding a search dimension means writing one such pair, not forking a
+//! harness.
+//!
+//! Three spaces are searchable today:
 //!
 //! * **accelerator points** ([`DesignPoint`], Tables II/III) — swept by
-//!   [`run_sweep`]/[`search()`] with the Pallas-kernel pre-filter
-//!   ([`prefilter`]) pruning hopeless configurations before detailed
-//!   scheduling;
+//!   [`run_sweep`]/[`search()`] (via [`sweep::SweepEval`]) with the
+//!   Pallas-kernel pre-filter ([`prefilter`]) pruning hopeless
+//!   configurations before detailed scheduling;
 //! * **homogeneous deployments** ([`ClusterPoint`]) — device counts ×
-//!   link tiers × DP/PP/TP factorizations ([`run_cluster_sweep`],
-//!   [`cluster_search`]);
+//!   link tiers × DP/PP/TP factorizations ([`run_cluster_sweep`] via
+//!   [`sweep::ClusterEval`], ranked by [`cluster_search`]);
 //! * **heterogeneous deployments** ([`crate::parallelism::HeteroPoint`])
 //!   — a mixed edge/server/datacenter device pool with a stage-placement
-//!   dimension ([`ClusterSpace::enumerate_hetero`], [`hetero_search`]).
+//!   dimension ([`ClusterSpace::enumerate_hetero`], [`hetero_search`]
+//!   via [`sweep::HeteroEval`] over a [`HeteroSpace`]).
 //!
-//! All sweeps share one [`crate::eval::CostCache`] across their worker
-//! pools and are bit-identical across worker counts and cache settings;
-//! cluster outcomes are ranked with the four-objective NSGA-II dominance
-//! set (iteration latency, energy, per-device memory, cluster size).
+//! The NSGA-II GA's per-generation genome batches ride the same pool
+//! core through [`engine::map_parallel`]. All families share one
+//! [`crate::eval::CostCache`] across their workers and are bit-identical
+//! across worker counts and cache settings (pinned in
+//! `tests/dse_engine.rs`); cluster outcomes are ranked with the typed
+//! four-objective [`Objectives`] set (iteration latency, energy,
+//! per-device memory, cluster size) through NSGA-II rank-0 dominance.
 
+pub mod engine;
 pub mod prefilter;
 pub mod search;
 pub mod space;
 pub mod sweep;
 
+pub use engine::{
+    map_parallel, DesignSpace, Engine, EngineConfig, Evaluate, HeteroSpace, Objectives,
+};
 pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};
 pub use search::{
     best_latency_factorization, cluster_search, front_factorizations, front_recall,
@@ -32,7 +49,8 @@ pub use search::{
 };
 pub use space::{ClusterPoint, ClusterSpace, DesignPoint};
 pub use sweep::{
-    evaluate_point_cached, evaluate_point_prepared, SweepPartitions,
-    evaluate_point, pareto_front, run_cluster_sweep, run_hetero_sweep, run_sweep,
-    run_sweep_stats, ClusterRow, FusionStrategy, Mode, SweepConfig, SweepRow,
+    evaluate_point, evaluate_point_cached, evaluate_point_prepared, pareto_front,
+    run_cluster_sweep, run_hetero_sweep, run_sweep, run_sweep_stats, ClusterEval, ClusterRow,
+    ClusterScratch, FusionStrategy, HeteroEval, Mode, SweepConfig, SweepEval, SweepPartitions,
+    SweepRow,
 };

@@ -14,14 +14,15 @@
 
 use std::time::Instant;
 
+use super::engine::Engine;
 use super::prefilter::{accel_to_cfg, graph_to_layers, select_survivors};
 use super::space::{ClusterSpace, DesignPoint};
 use super::sweep::{
-    evaluate_point_cached, pareto_front, run_cluster_sweep, run_hetero_sweep, ClusterRow, Mode,
-    SweepConfig, SweepPartitions, SweepRow,
+    pareto_front, run_cluster_sweep, run_hetero_sweep, ClusterRow, Mode, SweepConfig, SweepEval,
+    SweepPartitions, SweepRow,
 };
 use crate::autodiff::TrainingGraph;
-use crate::eval::{persist, CacheStats};
+use crate::eval::CacheStats;
 use crate::ga::nsga2::pareto_rank0;
 use crate::hardware::accelerator::Accelerator;
 use crate::parallelism::{HeteroCluster, LinkTier};
@@ -66,34 +67,27 @@ pub fn search(
     let survivors = select_survivors(&scores, keep_frac, 8);
     let prefilter_secs = t0.elapsed().as_secs_f64();
 
-    // stage 2: detailed layer-fused scheduling on the survivors, sharing
-    // one group-cost memo across every survivor evaluation
+    // stage 2: detailed layer-fused scheduling on the survivors through
+    // the generic engine harness (same worker pool and cache lifecycle
+    // as every sweep family: `--no-cache` wins, `--cache-dir` snapshots
+    // warm-load/persist, `--cache-cap` bounds), sharing one group-cost
+    // memo across every survivor evaluation
     let t1 = Instant::now();
     let mut cfg = cfg.clone();
     cfg.modes = vec![Mode::Training];
     let parts = SweepPartitions::prepare(fwd, train, &cfg);
-    // same cache lifecycle as `run_sweep_stats`: warm-load a persisted
-    // snapshot when `cfg.cache_dir` is set, persist it back afterwards
-    // (`--no-cache` wins and skips both)
-    let cache = if cfg.use_cache {
-        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
-    } else {
-        None
-    };
-    let mut rows: Vec<SweepRow> = survivors
-        .iter()
-        .flat_map(|&i| {
-            evaluate_point_cached(i, &points[i], fwd, train, &parts, &cfg, cache.as_ref())
-        })
-        .collect();
+    let survivor_points: Vec<DesignPoint> = survivors.iter().map(|&i| points[i]).collect();
+    let eval = SweepEval { fwd, train, parts: &parts, cfg: &cfg };
+    let (mut rows, stats) =
+        Engine::new(cfg.engine()).run(&survivor_points[..], &eval, |_, _| {});
+    // the engine indexes the survivor slice; report original point indices
+    for r in rows.iter_mut() {
+        r.index = survivors[r.index];
+    }
     // total_cmp: a degenerate survivor must not abort the whole search
     rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
     let detail_secs = t1.elapsed().as_secs_f64();
 
-    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
-    if let Some(c) = &cache {
-        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
-    }
     let front = pareto_front(&rows);
     SearchOutcome {
         n_points: points.len(),
@@ -141,7 +135,7 @@ pub fn cluster_search(
     let t0 = Instant::now();
     let points = space.enumerate();
     let (rows, cache) = run_cluster_sweep(&points, full_batch, builder, accel, cfg, progress);
-    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives()).collect();
+    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
     let front = pareto_rank0(&objectives);
     ClusterSearchOutcome {
         n_points: points.len(),
@@ -170,7 +164,7 @@ pub fn hetero_search(
     let t0 = Instant::now();
     let points = ClusterSpace::enumerate_hetero(hc, microbatches);
     let (rows, cache) = run_hetero_sweep(&points, hc, full_batch, builder, cfg, progress);
-    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives()).collect();
+    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
     let front = pareto_rank0(&objectives);
     ClusterSearchOutcome {
         n_points: points.len(),

@@ -2,27 +2,28 @@
 //!
 //! A sweep walks a list of design points; for each, it builds the HDA,
 //! schedules the inference and/or training graph with the configured
-//! fusion strategy, and emits one row per (point, mode). Work is
-//! distributed over a worker pool (std::thread — tokio is not vendored in
-//! this offline environment, and the workload is pure CPU anyway) with a
-//! shared job queue, and results are streamed back over a channel so the
-//! caller can report progress (backpressure = bounded queue).
+//! fusion strategy, and emits one row per (point, mode). All
+//! orchestration — the worker pool, the shared cost-cache lifecycle
+//! (`use_cache`/`cache_dir`/`cache_cap`), progress reporting and the
+//! deterministic result ordering — lives in the generic
+//! [`super::engine`] harness; this module only defines the per-family
+//! [`Evaluate`] instances ([`SweepEval`], [`ClusterEval`],
+//! [`HeteroEval`]) and the thin entry points the figures/CLI call.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
 
+use super::engine::{Engine, EngineConfig, Evaluate, HeteroSpace, Objectives};
 use super::space::{ClusterPoint, DesignPoint};
 use crate::autodiff::TrainingGraph;
-use crate::eval::{persist, CacheStats, CostCache};
+use crate::eval::{CacheStats, CostCache};
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
 use crate::parallelism::{
-    model_strategy_cached, model_strategy_hetero, HeteroCluster, HeteroPoint, LinkTier,
+    model_strategy_hetero_memo, model_strategy_memo, HeteroCluster, HeteroPoint, LinkTier,
+    StageCutsMemo,
 };
 use crate::scheduler::{schedule_with_cache, Partition};
 use crate::workload::graph::Graph;
@@ -65,6 +66,18 @@ pub struct SweepRow {
     pub utilization: f64,
 }
 
+impl SweepRow {
+    /// The typed minimized objective set of this row (a single device).
+    pub fn objectives(&self) -> Objectives {
+        Objectives {
+            latency_cycles: self.latency_cycles,
+            energy_pj: self.energy_pj,
+            memory_bytes: self.peak_dram_bytes,
+            devices: 1,
+        }
+    }
+}
+
 #[derive(Clone)]
 pub struct SweepConfig {
     pub mapping: MappingConfig,
@@ -100,6 +113,21 @@ impl Default for SweepConfig {
             use_cache: true,
             cache_dir: None,
             cache_cap: 0,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// The engine-level orchestration knobs of this sweep config (worker
+    /// count + the cost-cache lifecycle triple). Every sweep family and
+    /// the staged search derive their [`EngineConfig`] through this one
+    /// method, so the CLI cache flags cannot drift across commands.
+    pub fn engine(&self) -> EngineConfig {
+        EngineConfig {
+            workers: self.workers,
+            use_cache: self.use_cache,
+            cache_dir: self.cache_dir.clone(),
+            cache_cap: self.cache_cap,
         }
     }
 }
@@ -186,8 +214,39 @@ pub fn evaluate_point_cached(
         .collect()
 }
 
-/// Run the sweep over a worker pool. Rows are returned sorted by
-/// (index, mode) so output is deterministic regardless of thread timing.
+/// The single-device accelerator sweep as an [`Evaluate`] instance: one
+/// [`SweepRow`] per configured mode, via [`evaluate_point_cached`]. The
+/// fusion partitions are accelerator-independent, solved once and shared
+/// read-only across the pool. Stateless per worker (the shared cost
+/// cache is the only memo this family needs).
+pub struct SweepEval<'a> {
+    pub fwd: &'a Graph,
+    pub train: &'a Graph,
+    pub parts: &'a SweepPartitions,
+    pub cfg: &'a SweepConfig,
+}
+
+impl Evaluate for SweepEval<'_> {
+    type Point = DesignPoint;
+    type Row = SweepRow;
+    type Scratch = ();
+
+    fn scratch(&self) {}
+
+    fn evaluate(
+        &self,
+        index: usize,
+        point: &DesignPoint,
+        cache: Option<&CostCache>,
+        _scratch: &mut (),
+    ) -> Vec<SweepRow> {
+        evaluate_point_cached(index, point, self.fwd, self.train, self.parts, self.cfg, cache)
+    }
+}
+
+/// Run the sweep over the engine's worker pool. Rows are returned sorted
+/// by (index, mode) so output is deterministic regardless of thread
+/// timing.
 pub fn run_sweep(
     points: &[DesignPoint],
     fwd: &Graph,
@@ -206,60 +265,15 @@ pub fn run_sweep_stats(
     fwd: &Graph,
     train: &Graph,
     cfg: &SweepConfig,
-    mut progress: impl FnMut(usize, usize),
+    progress: impl FnMut(usize, usize),
 ) -> (Vec<SweepRow>, CacheStats) {
-    let n = points.len();
-    let next = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = mpsc::channel::<Vec<SweepRow>>();
-    // fusion is accelerator-independent: solve once, share across workers;
-    // likewise one group-cost memo serves the whole pool
+    // fusion is accelerator-independent: solve once, share across workers
     let parts = SweepPartitions::prepare(fwd, train, cfg);
-    let parts = &parts;
-    // cache lifecycle: warm-load a persisted snapshot when `cache_dir` is
-    // set (a rejected snapshot just starts cold), bounded by `cache_cap`;
-    // `--no-cache` still wins and skips both load and save
-    let cache = if cfg.use_cache {
-        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
-    } else {
-        None
-    };
-    let cache_ref = cache.as_ref();
-
-    let workers = cfg.workers.max(1).min(n.max(1));
-    let rows = std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = Arc::clone(&next);
-            let tx = tx.clone();
-            let cfg = cfg.clone();
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let rows = evaluate_point_cached(
-                    i, &points[i], fwd, train, parts, &cfg, cache_ref,
-                );
-                if tx.send(rows).is_err() {
-                    break;
-                }
-            });
-        }
-        drop(tx);
-
-        let mut all: Vec<SweepRow> = Vec::with_capacity(n * cfg.modes.len());
-        let mut done = 0usize;
-        while let Ok(rows) = rx.recv() {
-            all.extend(rows);
-            done += 1;
-            progress(done, n);
-        }
-        all.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
-        all
-    });
-    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
-    if let Some(c) = &cache {
-        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
-    }
+    let eval = SweepEval { fwd, train, parts: &parts, cfg };
+    let (mut rows, stats) = Engine::new(cfg.engine()).run(points, &eval, progress);
+    // historical row order: inference before training per point, whatever
+    // order `cfg.modes` listed them in
+    rows.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
     (rows, stats)
 }
 
@@ -293,14 +307,16 @@ pub struct ClusterRow {
 }
 
 impl ClusterRow {
-    /// The four minimized NSGA-II objectives of the cluster DSE.
-    pub fn objectives(&self) -> Vec<f64> {
-        vec![
-            self.latency_cycles,
-            self.energy_pj,
-            self.per_device_mem_bytes as f64,
-            self.devices as f64,
-        ]
+    /// The typed four-objective NSGA-II set of the cluster DSE
+    /// (iteration latency, energy, per-device memory, cluster size; all
+    /// minimized — `.to_vec()` feeds `pareto_rank0`).
+    pub fn objectives(&self) -> Objectives {
+        Objectives {
+            latency_cycles: self.latency_cycles,
+            energy_pj: self.energy_pj,
+            memory_bytes: self.per_device_mem_bytes,
+            devices: self.devices,
+        }
     }
 
     /// `(dp, pp, tp)` — the strategy factorization, microbatches aside.
@@ -309,205 +325,187 @@ impl ClusterRow {
     }
 }
 
-/// Evaluate every [`ClusterPoint`] over the worker pool, sharing one
-/// group-cost cache: the per-device stage schedules are pure functions of
-/// the stage structure, so factorizations yielding the same stage shape
-/// (and the same point on every link tier) hit the same entries. The
-/// cache lifecycle (`use_cache`/`cache_dir`/`cache_cap`) and determinism
-/// guarantees match [`run_sweep_stats`]; `cfg.mapping` supplies the
-/// single-device mapping. `builder(batch)` must be a pure function of the
-/// batch size — each worker memoizes it per batch.
+/// Per-worker scratch of the cluster-scale sweep families: the
+/// training-graph memo (distinct factorizations mostly share their
+/// replica-batch / microbatch sizes, and `builder(batch)` must be a pure
+/// function of the batch) plus the stage-cuts memo (deployment points
+/// sharing a microbatch graph and stage-class sequence reuse one
+/// latency-balanced split — ROADMAP hetero follow-up (d)). Both are
+/// memos of pure functions, so they never change a row (the engine's
+/// evaluation contract).
+#[derive(Default)]
+pub struct ClusterScratch {
+    graphs: RefCell<HashMap<usize, TrainingGraph>>,
+    pub cuts: StageCutsMemo,
+}
+
+impl ClusterScratch {
+    /// The memoizing view of `build` this worker hands to the strategy
+    /// models (`build` must be pure in the batch size). Public so custom
+    /// [`Evaluate`] impls — see `examples/multi_device.rs` — can reuse
+    /// the scratch instead of re-rolling the memo.
+    pub fn graph_builder<'a>(
+        &'a self,
+        build: &'a (dyn Fn(usize) -> TrainingGraph + Sync),
+    ) -> impl Fn(usize) -> TrainingGraph + 'a {
+        move |batch: usize| {
+            if let Some(tg) = self.graphs.borrow().get(&batch) {
+                return tg.clone();
+            }
+            let tg = build(batch);
+            self.graphs.borrow_mut().insert(batch, tg.clone());
+            tg
+        }
+    }
+}
+
+/// The homogeneous deployment sweep as an [`Evaluate`] instance: one
+/// [`ClusterRow`] per [`ClusterPoint`], via the hybrid strategy model on
+/// one accelerator and the point's link tier.
+pub struct ClusterEval<'a> {
+    pub full_batch: usize,
+    pub builder: &'a (dyn Fn(usize) -> TrainingGraph + Sync),
+    pub accel: &'a Accelerator,
+    pub mapping: MappingConfig,
+}
+
+impl Evaluate for ClusterEval<'_> {
+    type Point = ClusterPoint;
+    type Row = ClusterRow;
+    type Scratch = ClusterScratch;
+
+    fn scratch(&self) -> ClusterScratch {
+        ClusterScratch::default()
+    }
+
+    fn evaluate(
+        &self,
+        index: usize,
+        p: &ClusterPoint,
+        cache: Option<&CostCache>,
+        scratch: &mut ClusterScratch,
+    ) -> Vec<ClusterRow> {
+        let local_builder = scratch.graph_builder(self.builder);
+        let r = model_strategy_memo(
+            p.strategy(),
+            self.full_batch,
+            &local_builder,
+            self.accel,
+            &self.mapping,
+            &p.cluster(),
+            cache,
+            Some(&scratch.cuts),
+        );
+        vec![ClusterRow {
+            index,
+            label: p.label(),
+            devices: r.devices,
+            tier: p.tier,
+            dp: p.dp,
+            pp: p.pp,
+            microbatches: p.microbatches,
+            tp: p.tp,
+            placement: String::new(),
+            latency_cycles: r.latency_cycles,
+            energy_pj: r.energy_pj,
+            per_device_mem_bytes: r.per_device_mem_bytes,
+            comm_bytes: r.comm_bytes,
+        }]
+    }
+}
+
+/// Evaluate every [`ClusterPoint`] over the engine's worker pool,
+/// sharing one group-cost cache: the per-device stage schedules are pure
+/// functions of the stage structure, so factorizations yielding the same
+/// stage shape (and the same point on every link tier) hit the same
+/// entries. The cache lifecycle (`use_cache`/`cache_dir`/`cache_cap`)
+/// and determinism guarantees match [`run_sweep_stats`]; `cfg.mapping`
+/// supplies the single-device mapping. `builder(batch)` must be a pure
+/// function of the batch size — each worker memoizes it per batch.
 pub fn run_cluster_sweep(
     points: &[ClusterPoint],
     full_batch: usize,
     builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
     accel: &Accelerator,
     cfg: &SweepConfig,
-    mut progress: impl FnMut(usize, usize),
+    progress: impl FnMut(usize, usize),
 ) -> (Vec<ClusterRow>, CacheStats) {
-    let n = points.len();
-    let next = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = mpsc::channel::<ClusterRow>();
-    let cache = if cfg.use_cache {
-        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
-    } else {
-        None
-    };
-    let cache_ref = cache.as_ref();
-
-    let workers = cfg.workers.max(1).min(n.max(1));
-    let rows = std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = Arc::clone(&next);
-            let tx = tx.clone();
-            let mapping = cfg.mapping;
-            scope.spawn(move || {
-                // per-worker training-graph memo: distinct factorizations
-                // mostly share their (replica batch / microbatch) sizes
-                let memo: RefCell<HashMap<usize, TrainingGraph>> = RefCell::new(HashMap::new());
-                let local_builder = |batch: usize| -> TrainingGraph {
-                    if let Some(tg) = memo.borrow().get(&batch) {
-                        return tg.clone();
-                    }
-                    let tg = builder(batch);
-                    memo.borrow_mut().insert(batch, tg.clone());
-                    tg
-                };
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let p = &points[i];
-                    let r = model_strategy_cached(
-                        p.strategy(),
-                        full_batch,
-                        &local_builder,
-                        accel,
-                        &mapping,
-                        &p.cluster(),
-                        cache_ref,
-                    );
-                    let row = ClusterRow {
-                        index: i,
-                        label: p.label(),
-                        devices: r.devices,
-                        tier: p.tier,
-                        dp: p.dp,
-                        pp: p.pp,
-                        microbatches: p.microbatches,
-                        tp: p.tp,
-                        placement: String::new(),
-                        latency_cycles: r.latency_cycles,
-                        energy_pj: r.energy_pj,
-                        per_device_mem_bytes: r.per_device_mem_bytes,
-                        comm_bytes: r.comm_bytes,
-                    };
-                    if tx.send(row).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(tx);
-
-        let mut all: Vec<ClusterRow> = Vec::with_capacity(n);
-        let mut done = 0usize;
-        while let Ok(row) = rx.recv() {
-            all.push(row);
-            done += 1;
-            progress(done, n);
-        }
-        all.sort_by_key(|r| r.index);
-        all
-    });
-    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
-    if let Some(c) = &cache {
-        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
-    }
-    (rows, stats)
+    let eval = ClusterEval { full_batch, builder, accel, mapping: cfg.mapping };
+    Engine::new(cfg.engine()).run(points, &eval, progress)
 }
 
-/// Evaluate every [`HeteroPoint`] of a heterogeneous device pool over the
-/// worker pool — the placement-aware sibling of [`run_cluster_sweep`],
-/// with the same cache lifecycle and determinism guarantees (rows are
-/// bit-identical across worker counts and with/without the shared cost
-/// cache). Each row's `placement` column records which class hosts which
-/// pipeline stage; `tier` is the placement's bottleneck fabric.
-///
-/// NOTE: the orchestration scaffolding (cache open/persist, scoped worker
-/// pool, work-stealing index, per-worker training-graph memo, index-sorted
-/// collection) deliberately mirrors [`run_cluster_sweep`] line for line —
-/// any fix to one MUST be mirrored into the other. Folding them into one
-/// generic harness needs higher-ranked closure bounds across the scoped
-/// threads; tracked as a ROADMAP follow-up rather than done here.
+/// The heterogeneous stage-placement sweep as an [`Evaluate`] instance:
+/// one [`ClusterRow`] per [`HeteroPoint`], via the placement-aware
+/// strategy model on the pool's device classes. Each row's `placement`
+/// column records which class hosts which pipeline stage; `tier` is the
+/// placement's bottleneck fabric.
+pub struct HeteroEval<'a> {
+    pub hc: &'a HeteroCluster,
+    pub full_batch: usize,
+    pub builder: &'a (dyn Fn(usize) -> TrainingGraph + Sync),
+    pub mapping: MappingConfig,
+}
+
+impl Evaluate for HeteroEval<'_> {
+    type Point = HeteroPoint;
+    type Row = ClusterRow;
+    type Scratch = ClusterScratch;
+
+    fn scratch(&self) -> ClusterScratch {
+        ClusterScratch::default()
+    }
+
+    fn evaluate(
+        &self,
+        index: usize,
+        p: &HeteroPoint,
+        cache: Option<&CostCache>,
+        scratch: &mut ClusterScratch,
+    ) -> Vec<ClusterRow> {
+        let local_builder = scratch.graph_builder(self.builder);
+        let r = model_strategy_hetero_memo(
+            p,
+            self.full_batch,
+            &local_builder,
+            &self.mapping,
+            self.hc,
+            cache,
+            Some(&scratch.cuts),
+        );
+        vec![ClusterRow {
+            index,
+            label: p.label(self.hc),
+            devices: r.devices,
+            tier: self.hc.bottleneck_tier(&p.placement),
+            dp: p.dp,
+            pp: p.pp,
+            microbatches: p.microbatches,
+            tp: p.tp,
+            placement: p.placement_names(self.hc),
+            latency_cycles: r.latency_cycles,
+            energy_pj: r.energy_pj,
+            per_device_mem_bytes: r.per_device_mem_bytes,
+            comm_bytes: r.comm_bytes,
+        }]
+    }
+}
+
+/// Evaluate every [`HeteroPoint`] of a heterogeneous device pool — the
+/// placement-aware sibling of [`run_cluster_sweep`], with the same cache
+/// lifecycle and determinism guarantees (rows are bit-identical across
+/// worker counts and with/without the shared cost cache), through the
+/// same [`Engine`] harness.
 pub fn run_hetero_sweep(
     points: &[HeteroPoint],
     hc: &HeteroCluster,
     full_batch: usize,
     builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
     cfg: &SweepConfig,
-    mut progress: impl FnMut(usize, usize),
+    progress: impl FnMut(usize, usize),
 ) -> (Vec<ClusterRow>, CacheStats) {
-    let n = points.len();
-    let next = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = mpsc::channel::<ClusterRow>();
-    let cache = if cfg.use_cache {
-        Some(persist::open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap))
-    } else {
-        None
-    };
-    let cache_ref = cache.as_ref();
-
-    let workers = cfg.workers.max(1).min(n.max(1));
-    let rows = std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = Arc::clone(&next);
-            let tx = tx.clone();
-            let mapping = cfg.mapping;
-            scope.spawn(move || {
-                // per-worker training-graph memo, as in `run_cluster_sweep`
-                let memo: RefCell<HashMap<usize, TrainingGraph>> = RefCell::new(HashMap::new());
-                let local_builder = |batch: usize| -> TrainingGraph {
-                    if let Some(tg) = memo.borrow().get(&batch) {
-                        return tg.clone();
-                    }
-                    let tg = builder(batch);
-                    memo.borrow_mut().insert(batch, tg.clone());
-                    tg
-                };
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let p = &points[i];
-                    let r = model_strategy_hetero(
-                        p,
-                        full_batch,
-                        &local_builder,
-                        &mapping,
-                        hc,
-                        cache_ref,
-                    );
-                    let row = ClusterRow {
-                        index: i,
-                        label: p.label(hc),
-                        devices: r.devices,
-                        tier: hc.bottleneck_tier(&p.placement),
-                        dp: p.dp,
-                        pp: p.pp,
-                        microbatches: p.microbatches,
-                        tp: p.tp,
-                        placement: p.placement_names(hc),
-                        latency_cycles: r.latency_cycles,
-                        energy_pj: r.energy_pj,
-                        per_device_mem_bytes: r.per_device_mem_bytes,
-                        comm_bytes: r.comm_bytes,
-                    };
-                    if tx.send(row).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(tx);
-
-        let mut all: Vec<ClusterRow> = Vec::with_capacity(n);
-        let mut done = 0usize;
-        while let Ok(row) = rx.recv() {
-            all.push(row);
-            done += 1;
-            progress(done, n);
-        }
-        all.sort_by_key(|r| r.index);
-        all
-    });
-    let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
-    if let Some(c) = &cache {
-        persist::persist_cost_cache(c, cfg.cache_dir.as_deref());
-    }
-    (rows, stats)
+    let space = HeteroSpace { points, cluster: hc };
+    let eval = HeteroEval { hc, full_batch, builder, mapping: cfg.mapping };
+    Engine::new(cfg.engine()).run(&space, &eval, progress)
 }
 
 /// Pareto front over (latency, energy): indices of non-dominated rows, in
@@ -816,7 +814,8 @@ mod tests {
         for (p, r) in points.iter().zip(&one) {
             assert_eq!(r.devices, p.devices);
             assert_eq!(r.factorization(), (p.dp, p.pp, p.tp));
-            assert_eq!(r.objectives().len(), 4);
+            assert_eq!(r.objectives().to_vec().len(), 4);
+            assert_eq!(r.objectives().devices, r.devices);
         }
     }
 

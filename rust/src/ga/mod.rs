@@ -2,7 +2,8 @@
 //! activation-checkpointing problem encoding (paper §V-B).
 //!
 //! [`nsga2`] is a generic parallel NSGA-II over bit-genomes: `Fn + Sync`
-//! evaluation fanned over `GaConfig::workers` scoped threads with a
+//! evaluation fanned over `GaConfig::workers` threads of the generic DSE
+//! pool ([`crate::dse::engine::map_parallel`]) with a
 //! genome→objectives memo, bit-identical for any worker count, plus
 //! `pareto_rank0` — the N-objective rank-0 dominance set the cluster DSE
 //! reuses for its 4-objective fronts. [`checkpoint_opt`] encodes the

@@ -7,12 +7,14 @@
 //! §Perf (the memoized-evaluation PR): objective evaluation is the GA's
 //! entire cost — each call runs the full checkpoint→fuse→schedule pipeline
 //! — so (a) each generation's genomes are generated first and evaluated as
-//! a batch fanned out over `cfg.workers` scoped threads, and (b) a
-//! genome→objectives memo skips re-evaluating duplicate genomes, which
-//! dominate once the population converges. Both are invisible in the
-//! results: `eval` must be pure (`Fn + Sync`), genomes are produced by the
-//! same RNG stream as the serial implementation, and results are assigned
-//! by index — the outcome is bit-identical for any worker count.
+//! a batch fanned out over `cfg.workers` via the generic DSE pool
+//! ([`crate::dse::engine::map_parallel`] — the same worker-pool core every
+//! sweep family runs on), and (b) a genome→objectives memo skips
+//! re-evaluating duplicate genomes, which dominate once the population
+//! converges. Both are invisible in the results: `eval` must be pure
+//! (`Fn + Sync`), genomes are produced by the same RNG stream as the
+//! serial implementation, and results are assigned by index — the outcome
+//! is bit-identical for any worker count.
 
 use std::collections::{HashMap, HashSet};
 
@@ -180,9 +182,10 @@ impl Default for GaConfig {
 
 /// Turn a batch of genomes into ranked-zero individuals, evaluating only
 /// genomes absent from `memo` (first occurrence wins within the batch) and
-/// fanning fresh evaluations over `workers` scoped threads. Order of the
-/// returned individuals matches `genomes`; the memo makes duplicate
-/// genomes — common once the population converges — cost one lookup.
+/// fanning fresh evaluations over `workers` threads of the generic DSE
+/// pool. Order of the returned individuals matches `genomes`; the memo
+/// makes duplicate genomes — common once the population converges — cost
+/// one lookup.
 fn evaluate_batch(
     genomes: Vec<Genome>,
     eval: &(impl Fn(&Genome) -> Objectives + Sync),
@@ -199,22 +202,10 @@ fn evaluate_batch(
         }
     }
 
-    let fresh: Vec<Objectives> = if workers <= 1 || need.len() <= 1 {
-        need.iter().map(eval).collect()
-    } else {
-        let chunk = need.len().div_ceil(workers.min(need.len()));
-        let mut out: Vec<Objectives> = Vec::with_capacity(need.len());
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = need
-                .chunks(chunk)
-                .map(|gs| scope.spawn(move || gs.iter().map(eval).collect::<Vec<_>>()))
-                .collect();
-            for h in handles {
-                out.extend(h.join().expect("nsga2 evaluation worker panicked"));
-            }
-        });
-        out
-    };
+    // the generic engine's deterministic parallel map: fresh[i] ==
+    // eval(&need[i]) for any worker count (serial when one suffices) —
+    // the GA shares the DSE harness's pool core instead of forking it
+    let fresh: Vec<Objectives> = crate::dse::engine::map_parallel(workers, &need, eval);
     for (g, o) in need.into_iter().zip(fresh) {
         memo.insert(g, o);
     }

@@ -20,7 +20,9 @@
 //!   clusters, their 3D hybrid, and heterogeneous edge-to-datacenter
 //!   clusters with stage placement ([`parallelism::hetero`])
 //! * [`ga`] — NSGA-II and the checkpointing problem encoding
-//! * [`dse`] — design-space-exploration orchestrator
+//! * [`dse`] — design-space exploration: the generic [`dse::engine`]
+//!   evaluation harness (one worker pool + cache lifecycle behind every
+//!   sweep/search/GA batch) plus the searchable spaces
 //! * [`figures`] — one function per paper artifact (CSV + returned rows)
 //! * [`runtime`] — PJRT client executing AOT-compiled JAX/Pallas artifacts
 //! * [`report`] — CSV / ASCII figure emitters

@@ -48,10 +48,11 @@ COMMANDS
 
 OPTIONS
   --stride N      design-space subsampling stride (fig1/fig9/all; default 20)
-  --pop N         GA population (fig12; default 32)
-  --gens N        GA generations (fig12; default 30)
+  --pop N         GA population (fig12/ablation; default 32)
+  --gens N        GA generations (fig12/ablation; default 30)
   --devices N     max cluster size (cluster/fig5; device counts are the
-                  powers of two ≤ N; default 8)
+                  powers of two ≤ N; default 8). Ignored by cluster
+                  --device-classes: there the pool defines the size
   --batch N       global training batch split across the cluster
                   (cluster/fig5; default 4)
   --workload W    cluster workload: resnet18 | gpt2 | both (cluster;
@@ -888,5 +889,29 @@ mod tests {
                 "docs/CLI.md is missing command `{cmd}`"
             );
         }
+    }
+
+    /// The unified `dse::engine` audit of the cache/GA flag surface
+    /// (ISSUE 5 satellite): flags consumed by a handler must list that
+    /// command in their usage entry, and flags a path ignores must say
+    /// so. Pins the two findings so they cannot regress: `--pop`/`--gens`
+    /// are read by `ablation` as well as `fig12`, and the heterogeneous
+    /// `cluster --device-classes` path derives the cluster size from the
+    /// pool, ignoring `--devices`.
+    #[test]
+    fn usage_flag_applicability_matches_the_handlers() {
+        let entry = |flag: &str| -> &str {
+            let start = USAGE.find(flag).expect(flag);
+            let rest = &USAGE[start..];
+            // an entry runs until the next "  --" option line
+            let end = rest[2..].find("\n  --").map(|i| i + 2).unwrap_or(rest.len());
+            &rest[..end]
+        };
+        assert!(entry("--pop N").contains("ablation"), "--pop is read by cmd_ablation");
+        assert!(entry("--gens N").contains("ablation"), "--gens is read by cmd_ablation");
+        assert!(
+            entry("--devices N").contains("Ignored by cluster\n                  --device-classes"),
+            "the hetero cluster path ignores --devices; usage() must say so"
+        );
     }
 }

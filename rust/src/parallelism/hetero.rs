@@ -50,8 +50,8 @@ use crate::hardware::presets::EdgeTpuParams;
 use crate::mapping::MappingConfig;
 
 use super::{
-    allreduce_cycles, fused_schedule_cached, split_stages_balanced, stage_mem_parts,
-    stage_subgraph, tp_reduce_stats, Cluster, LinkTier, MultiDeviceResult, Strategy,
+    allreduce_cycles, fused_schedule_cached, stage_mem_parts, stage_subgraph, tp_reduce_stats,
+    Cluster, LinkTier, MultiDeviceResult, Strategy,
 };
 
 /// One device class of a heterogeneous cluster: an accelerator
@@ -299,6 +299,23 @@ pub fn model_strategy_hetero(
     hc: &HeteroCluster,
     cache: Option<&CostCache>,
 ) -> MultiDeviceResult {
+    model_strategy_hetero_memo(point, full_batch, tg_builder, mapping, hc, cache, None)
+}
+
+/// [`model_strategy_hetero`] with the optional per-worker stage-cuts
+/// memo ([`super::StageCutsMemo`]): deployment points sharing their
+/// (microbatch size, stage-class placement) — e.g. the same placement at
+/// different `tp` widths — skip re-deriving the latency-balanced split.
+/// Results are bit-identical with or without the memo.
+pub fn model_strategy_hetero_memo(
+    point: &HeteroPoint,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    mapping: &MappingConfig,
+    hc: &HeteroCluster,
+    cache: Option<&CostCache>,
+    cuts: Option<&super::StageCutsMemo>,
+) -> MultiDeviceResult {
     use std::collections::{BTreeMap, BTreeSet};
 
     let dp = point.dp.max(1);
@@ -315,7 +332,8 @@ pub fn model_strategy_hetero(
     // each replica sees 1/dp of the batch, pipelined in m microbatches —
     // the homogeneous `Hybrid` batch rules, unchanged
     let replica_batch = full_batch.div_ceil(dp);
-    let tg = tg_builder(replica_batch.div_ceil(m).max(1));
+    let micro_batch = replica_batch.div_ceil(m).max(1);
+    let tg = tg_builder(micro_batch);
     let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
 
     // one record per used (non-empty) stage, in stage order:
@@ -336,7 +354,15 @@ pub fn model_strategy_hetero(
     } else {
         let stage_accels: Vec<&Accelerator> =
             point.placement.iter().map(|&c| &hc.classes[c].accel).collect();
-        let stages = split_stages_balanced(&tg.graph, &stage_accels, mapping, cache);
+        let stages = super::balanced_stages(
+            &tg.graph,
+            &stage_accels,
+            mapping,
+            cache,
+            micro_batch,
+            point.placement.clone(),
+            cuts,
+        );
         for (s, stage) in stages.iter().enumerate() {
             if stage.is_empty() {
                 continue;
@@ -614,6 +640,41 @@ mod tests {
         assert!(!over.feasible(&hc));
         let uniform = HeteroPoint { dp: 1, pp: 2, microbatches: 2, tp: 1, placement: vec![1, 1] };
         assert!(!uniform.is_mixed());
+    }
+
+    #[test]
+    fn hetero_stage_cuts_memo_is_bit_identical_across_tp_widths() {
+        use crate::parallelism::StageCutsMemo;
+        // two deployment points sharing (microbatch graph, placement) but
+        // differing in tp: the balanced split is tp-independent, so the
+        // memo derives it once — and never changes a bit of either row
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 2),
+            (DeviceClass::datacenter(), 2),
+        ]);
+        let mapping = MappingConfig::edge_tpu_default();
+        let memo = StageCutsMemo::new();
+        let points = [
+            HeteroPoint { dp: 1, pp: 2, microbatches: 2, tp: 1, placement: vec![0, 1] },
+            HeteroPoint { dp: 1, pp: 2, microbatches: 2, tp: 2, placement: vec![0, 1] },
+        ];
+        for p in &points {
+            assert!(p.feasible(&hc));
+            let plain = model_strategy_hetero(p, 4, &builder(), &mapping, &hc, None);
+            let memoed =
+                model_strategy_hetero_memo(p, 4, &builder(), &mapping, &hc, None, Some(&memo));
+            bit_eq(&plain, &memoed);
+        }
+        assert_eq!(memo.misses(), 1, "shared (microbatch, placement) must derive once");
+        assert_eq!(memo.hits(), 1);
+        // flipping the placement is a different key
+        let flipped =
+            HeteroPoint { dp: 1, pp: 2, microbatches: 2, tp: 1, placement: vec![1, 0] };
+        let plain = model_strategy_hetero(&flipped, 4, &builder(), &mapping, &hc, None);
+        let memoed =
+            model_strategy_hetero_memo(&flipped, 4, &builder(), &mapping, &hc, None, Some(&memo));
+        bit_eq(&plain, &memoed);
+        assert_eq!(memo.misses(), 2);
     }
 
     #[test]

@@ -47,7 +47,9 @@ use crate::scheduler::{schedule_with_cache, ScheduleResult};
 use crate::workload::graph::Graph;
 use crate::workload::op::Phase;
 
-pub use hetero::{model_strategy_hetero, DeviceClass, HeteroCluster, HeteroPoint};
+pub use hetero::{
+    model_strategy_hetero, model_strategy_hetero_memo, DeviceClass, HeteroCluster, HeteroPoint,
+};
 
 /// The inter-device fabric (NVLink/PCIe/NoC-class, in cycle units of the
 /// device clock).
@@ -214,6 +216,82 @@ fn split_stages(g: &Graph, n_stages: usize) -> Vec<Vec<usize>> {
 /// were not observed to shift cuts further on the model zoo.
 const BALANCE_PASSES: usize = 2;
 
+/// Per-worker memo of latency-balanced stage splits, keyed on
+/// (microbatch size, stage-class sequence) — the ROADMAP hetero
+/// follow-up (d): deployment points sharing a placement used to re-derive
+/// identical [`split_stages_balanced`] refinements per point (the inner
+/// group costs hit the shared cost cache, but the scheduler walks and
+/// binary searches did not). The split is a pure function of (microbatch
+/// graph, per-stage accelerators, mapping) and `tg_builder` is pure in
+/// the batch, so within one sweep the pair (microbatch size, class
+/// sequence) determines the stages exactly — a hit returns the same
+/// `Vec<Vec<usize>>` a recompute would, bit for bit (node ids are stable
+/// because the builder regenerates an identical graph).
+///
+/// **Validity scope:** one memo must only ever see ONE builder, ONE
+/// mapping and ONE class-index→accelerator assignment — i.e. one sweep's
+/// evaluator. The engine creates one per worker (`Evaluate::Scratch`),
+/// which satisfies that by construction. Not `Sync` (deliberately):
+/// sharing across workers would serialize them on a lock for no win.
+#[derive(Default)]
+pub struct StageCutsMemo {
+    stages: std::cell::RefCell<std::collections::HashMap<(usize, Vec<usize>), Vec<Vec<usize>>>>,
+    hits: std::cell::Cell<usize>,
+    misses: std::cell::Cell<usize>,
+}
+
+impl StageCutsMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memo hits so far (splits returned without re-deriving).
+    pub fn hits(&self) -> usize {
+        self.hits.get()
+    }
+
+    /// Memo misses so far (splits actually derived).
+    pub fn misses(&self) -> usize {
+        self.misses.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// [`split_stages_balanced`] behind the optional per-worker memo:
+/// `micro_batch` is the batch `g` was built with and `classes` the
+/// stage-class sequence selecting `stage_accels` (the homogeneous paths
+/// pass `vec![0; n_stages]` — one implicit class). `memo: None` always
+/// recomputes; results are bit-identical either way.
+fn balanced_stages(
+    g: &Graph,
+    stage_accels: &[&Accelerator],
+    mapping: &MappingConfig,
+    cache: Option<&CostCache>,
+    micro_batch: usize,
+    classes: Vec<usize>,
+    memo: Option<&StageCutsMemo>,
+) -> Vec<Vec<usize>> {
+    let Some(m) = memo else {
+        return split_stages_balanced(g, stage_accels, mapping, cache);
+    };
+    let key = (micro_batch, classes);
+    if let Some(stages) = m.stages.borrow().get(&key) {
+        m.hits.set(m.hits.get() + 1);
+        return stages.clone();
+    }
+    let stages = split_stages_balanced(g, stage_accels, mapping, cache);
+    m.misses.set(m.misses.get() + 1);
+    m.stages.borrow_mut().insert(key, stages.clone());
+    stages
+}
+
 /// Contiguous **latency-balanced** stage split: seeds with the
 /// MAC-balanced cut over topo order, then refines every cut by binary
 /// search on the two adjacent stages' *scheduled* latencies — each probe
@@ -376,6 +454,24 @@ pub fn model_strategy_cached(
     cluster: &Cluster,
     cache: Option<&CostCache>,
 ) -> MultiDeviceResult {
+    model_strategy_memo(strategy, full_batch, tg_builder, accel, mapping, cluster, cache, None)
+}
+
+/// [`model_strategy_cached`] with the optional per-worker stage-cuts
+/// memo ([`StageCutsMemo`]): pipelined factorizations sharing their
+/// (microbatch size, stage count) skip re-deriving the latency-balanced
+/// split. Results are bit-identical with or without the memo; the
+/// engine's per-family evaluators are the intended callers.
+pub fn model_strategy_memo(
+    strategy: Strategy,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    accel: &Accelerator,
+    mapping: &MappingConfig,
+    cluster: &Cluster,
+    cache: Option<&CostCache>,
+    cuts: Option<&StageCutsMemo>,
+) -> MultiDeviceResult {
     let n = cluster.devices.max(1);
     match strategy {
         Strategy::DataParallel => {
@@ -404,10 +500,13 @@ pub fn model_strategy_cached(
         }
         Strategy::Pipeline { microbatches } => {
             let m = microbatches.max(1);
-            let tg = tg_builder(full_batch.div_ceil(m).max(1)); // one microbatch graph
+            let micro_batch = full_batch.div_ceil(m).max(1);
+            let tg = tg_builder(micro_batch); // one microbatch graph
             // contiguous stage split balanced by scheduled latency
             let stage_accels = vec![accel; n];
-            let stages = split_stages_balanced(&tg.graph, &stage_accels, mapping, cache);
+            let stages = balanced_stages(
+                &tg.graph, &stage_accels, mapping, cache, micro_batch, vec![0; n], cuts,
+            );
             // per-stage time = schedule of the induced subgraph; boundary
             // tensors transfer between devices
             let mut stage_time = 0f64;
@@ -480,7 +579,8 @@ pub fn model_strategy_cached(
             // each replica sees 1/dp of the batch, pipelined in m
             // microbatches (the pure-strategy batch rules composed)
             let replica_batch = full_batch.div_ceil(dp);
-            let tg = tg_builder(replica_batch.div_ceil(m).max(1));
+            let micro_batch = replica_batch.div_ceil(m).max(1);
+            let tg = tg_builder(micro_batch);
             let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
 
             let mut stage_time = 0f64;
@@ -527,7 +627,9 @@ pub fn model_strategy_cached(
                 eval_stage(&r, reduce_bytes, n_collectives, states, tg.saved_activation_bytes());
             } else {
                 let stage_accels = vec![accel; pp];
-                let stages = split_stages_balanced(&tg.graph, &stage_accels, mapping, cache);
+                let stages = balanced_stages(
+                    &tg.graph, &stage_accels, mapping, cache, micro_batch, vec![0; pp], cuts,
+                );
                 for stage in stages.iter().filter(|s| !s.is_empty()) {
                     let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
                     boundary_bytes += stage_boundary;
@@ -834,6 +936,39 @@ mod tests {
                 "latency balancing worsened the bottleneck"
             );
         }
+    }
+
+    #[test]
+    fn stage_cuts_memo_is_bit_identical_and_skips_repeat_splits() {
+        let accel = EdgeTpuParams::baseline().build();
+        let mapping = MappingConfig::edge_tpu_default();
+        let c = cluster(4);
+        let memo = StageCutsMemo::new();
+        // Pipeline{m=4} on 4 devices and Hybrid{1,4,4,1} build the same
+        // microbatch graph and stage count, so one derivation must serve
+        // all three evaluations — bit-identically to the memo-free path
+        let cases = [
+            Strategy::Pipeline { microbatches: 4 },
+            Strategy::Hybrid { dp: 1, pp_stages: 4, microbatches: 4, tp: 1 },
+            Strategy::Hybrid { dp: 1, pp_stages: 4, microbatches: 4, tp: 1 },
+        ];
+        for s in cases {
+            let plain = model_strategy(s, 8, &builder(), &accel, &mapping, &c);
+            let memoed =
+                model_strategy_memo(s, 8, &builder(), &accel, &mapping, &c, None, Some(&memo));
+            bit_eq(&plain, &memoed);
+        }
+        assert_eq!(memo.misses(), 1, "shared (microbatch, stages) key must derive once");
+        assert_eq!(memo.hits(), 2);
+        assert_eq!(memo.len(), 1);
+        // a different microbatch count changes the graph → fresh entry
+        let s = Strategy::Pipeline { microbatches: 2 };
+        let plain = model_strategy(s, 8, &builder(), &accel, &mapping, &c);
+        let memoed =
+            model_strategy_memo(s, 8, &builder(), &accel, &mapping, &c, None, Some(&memo));
+        bit_eq(&plain, &memoed);
+        assert_eq!(memo.misses(), 2);
+        assert_eq!(memo.len(), 2);
     }
 
     #[test]

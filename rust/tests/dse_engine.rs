@@ -1,0 +1,377 @@
+//! Integration pins for the unified `dse::engine` harness: every sweep
+//! family (single-device accelerator points, homogeneous cluster
+//! deployments, heterogeneous stage placements) must produce rows
+//! **bit-identical** to a serial, cache-free reference loop — the exact
+//! per-point math the pre-engine bespoke harnesses ran — at every worker
+//! count and cache setting (off / cold / warm-persisted /
+//! capacity-bounded). A final test pins the engine-owned cache-flag
+//! semantics (`--no-cache` wins, `--cache-dir` persists, `--cache-cap`
+//! bounds) uniformly across the families, so no command can drift.
+
+use std::path::PathBuf;
+
+use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::dse::{
+    evaluate_point_cached, run_cluster_sweep, run_hetero_sweep, run_sweep_stats, ClusterRow,
+    ClusterSpace, DesignPoint, SweepConfig, SweepPartitions, SweepRow,
+};
+use monet::eval::{persist, CacheStats};
+use monet::figures::cluster_resnet18_builder;
+use monet::hardware::presets::EdgeTpuParams;
+use monet::mapping::MappingConfig;
+use monet::parallelism::{
+    model_strategy_cached, model_strategy_hetero, DeviceClass, HeteroCluster, LinkTier,
+};
+use monet::workload::models::resnet18;
+use monet::workload::op::Optimizer;
+
+fn sweep_rows_bit_eq(expect: &[SweepRow], got: &[SweepRow], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: row count");
+    for (a, b) in expect.iter().zip(got) {
+        assert_eq!(a.index, b.index, "{what}: index");
+        assert_eq!(a.label, b.label, "{what}: label");
+        assert_eq!(a.mode, b.mode, "{what}: mode");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(), "{what}: latency");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(a.peak_dram_bytes, b.peak_dram_bytes, "{what}: peak dram");
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{what}: utilization");
+    }
+}
+
+fn cluster_rows_bit_eq(expect: &[ClusterRow], got: &[ClusterRow], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: row count");
+    for (a, b) in expect.iter().zip(got) {
+        assert_eq!(a.index, b.index, "{what}: index");
+        assert_eq!(a.label, b.label, "{what}: label");
+        assert_eq!(a.placement, b.placement, "{what}: placement");
+        assert_eq!(a.tier, b.tier, "{what}: tier");
+        assert_eq!(a.devices, b.devices, "{what}: devices");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(), "{what}: latency");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes, "{what}: mem");
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits(), "{what}: comm");
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("monet_dse_engine_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// The property-style engine matrix on the single-device space: 1/2/8
+/// workers × {cache off, cold, bounded, warm-persisted}, every cell
+/// bit-identical to the serial cache-free reference (the pre-engine
+/// harness's exact per-point math).
+#[test]
+fn single_device_sweep_matches_the_serial_reference_everywhere() {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+    );
+    let points = DesignPoint::edge_space(3000);
+    assert!(points.len() >= 2);
+    let base = SweepConfig { workers: 1, ..Default::default() };
+    let parts = SweepPartitions::prepare(&fwd, &tg.graph, &base);
+    let reference: Vec<SweepRow> = points
+        .iter()
+        .enumerate()
+        .flat_map(|(i, p)| evaluate_point_cached(i, p, &fwd, &tg.graph, &parts, &base, None))
+        .collect();
+
+    for workers in [1usize, 2, 8] {
+        for (use_cache, cache_cap) in [(false, 0usize), (true, 0), (true, 16)] {
+            let cfg = SweepConfig { workers, use_cache, cache_cap, ..Default::default() };
+            let (rows, stats) = run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |_, _| {});
+            let what = format!("workers={workers} use_cache={use_cache} cap={cache_cap}");
+            sweep_rows_bit_eq(&reference, &rows, &what);
+            if use_cache {
+                assert!(stats.hits + stats.misses > 0, "{what}: cache never consulted");
+                if cache_cap > 0 {
+                    assert!(stats.entries <= cache_cap, "{what}: cap exceeded: {stats:?}");
+                }
+            } else {
+                assert_eq!(stats, CacheStats::default(), "{what}: no-cache must not count");
+            }
+        }
+        // warm-persisted: the second run replays the snapshot bit for bit
+        let dir = tmp_dir(&format!("sweep_w{workers}"));
+        let cfg =
+            SweepConfig { workers, cache_dir: Some(dir.clone()), ..Default::default() };
+        let (first, _) = run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |_, _| {});
+        let (second, s2) = run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |_, _| {});
+        sweep_rows_bit_eq(&reference, &first, "cold persisted");
+        sweep_rows_bit_eq(&reference, &second, "warm persisted");
+        assert_eq!(s2.misses, 0, "warm run recomputed group costs: {s2:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Golden pin for the homogeneous cluster family: engine output ≡ the
+/// serial reference built directly from `model_strategy_cached` (what
+/// the retired bespoke pool computed per point), across workers and
+/// cache settings.
+#[test]
+fn cluster_sweep_matches_the_serial_reference_everywhere() {
+    let space = ClusterSpace {
+        device_counts: vec![1, 2],
+        tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+        microbatches: vec![2],
+    };
+    let points = space.enumerate();
+    assert!(points.len() >= 6);
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let full_batch = 4usize;
+    let reference: Vec<ClusterRow> = points
+        .iter()
+        .enumerate()
+        .map(|(index, p)| {
+            let r = model_strategy_cached(
+                p.strategy(),
+                full_batch,
+                &cluster_resnet18_builder,
+                &accel,
+                &mapping,
+                &p.cluster(),
+                None,
+            );
+            ClusterRow {
+                index,
+                label: p.label(),
+                devices: r.devices,
+                tier: p.tier,
+                dp: p.dp,
+                pp: p.pp,
+                microbatches: p.microbatches,
+                tp: p.tp,
+                placement: String::new(),
+                latency_cycles: r.latency_cycles,
+                energy_pj: r.energy_pj,
+                per_device_mem_bytes: r.per_device_mem_bytes,
+                comm_bytes: r.comm_bytes,
+            }
+        })
+        .collect();
+
+    let dir = tmp_dir("cluster");
+    for workers in [1usize, 4] {
+        for (use_cache, cache_dir, cache_cap) in [
+            (false, None, 0usize),
+            (true, None, 0),
+            (true, None, 24),
+            (true, Some(dir.clone()), 0),
+        ] {
+            let what = format!(
+                "workers={workers} use_cache={use_cache} dir={} cap={cache_cap}",
+                cache_dir.is_some()
+            );
+            let cfg = SweepConfig {
+                mapping,
+                workers,
+                use_cache,
+                cache_dir,
+                cache_cap,
+                ..Default::default()
+            };
+            let (rows, stats) = run_cluster_sweep(
+                &points,
+                full_batch,
+                &cluster_resnet18_builder,
+                &accel,
+                &cfg,
+                |_, _| {},
+            );
+            cluster_rows_bit_eq(&reference, &rows, &what);
+            if !use_cache {
+                assert_eq!(stats, CacheStats::default(), "{what}");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Golden pin for the heterogeneous stage-placement family: engine
+/// output ≡ the serial reference built directly from
+/// `model_strategy_hetero`, across workers and cache settings — the
+/// per-worker stage-cuts memo the engine adds must be invisible in the
+/// rows.
+#[test]
+fn hetero_sweep_matches_the_serial_reference_everywhere() {
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 1), (DeviceClass::datacenter(), 1)]);
+    let points = ClusterSpace::enumerate_hetero(&hc, &[2]);
+    assert!(points.len() >= 4);
+    let mapping = MappingConfig::edge_tpu_default();
+    let full_batch = 4usize;
+    let reference: Vec<ClusterRow> = points
+        .iter()
+        .enumerate()
+        .map(|(index, p)| {
+            let r = model_strategy_hetero(
+                p,
+                full_batch,
+                &cluster_resnet18_builder,
+                &mapping,
+                &hc,
+                None,
+            );
+            ClusterRow {
+                index,
+                label: p.label(&hc),
+                devices: r.devices,
+                tier: hc.bottleneck_tier(&p.placement),
+                dp: p.dp,
+                pp: p.pp,
+                microbatches: p.microbatches,
+                tp: p.tp,
+                placement: p.placement_names(&hc),
+                latency_cycles: r.latency_cycles,
+                energy_pj: r.energy_pj,
+                per_device_mem_bytes: r.per_device_mem_bytes,
+                comm_bytes: r.comm_bytes,
+            }
+        })
+        .collect();
+
+    let dir = tmp_dir("hetero");
+    for workers in [1usize, 4] {
+        for (use_cache, cache_dir, cache_cap) in [
+            (false, None, 0usize),
+            (true, None, 0),
+            (true, None, 24),
+            (true, Some(dir.clone()), 0),
+        ] {
+            let what = format!(
+                "workers={workers} use_cache={use_cache} dir={} cap={cache_cap}",
+                cache_dir.is_some()
+            );
+            let cfg = SweepConfig {
+                mapping,
+                workers,
+                use_cache,
+                cache_dir,
+                cache_cap,
+                ..Default::default()
+            };
+            let (rows, stats) = run_hetero_sweep(
+                &points,
+                &hc,
+                full_batch,
+                &cluster_resnet18_builder,
+                &cfg,
+                |_, _| {},
+            );
+            cluster_rows_bit_eq(&reference, &rows, &what);
+            if !use_cache {
+                assert_eq!(stats, CacheStats::default(), "{what}");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The engine-owned cache-flag semantics, pinned uniformly across all
+/// three sweep families (the ISSUE 5 flag audit): `--no-cache` wins over
+/// `--cache-dir` (nothing loaded, counted or **written**), `--cache-dir`
+/// persists a snapshot that makes the restarted run recompute nothing,
+/// and `--cache-cap` bounds the entry count.
+#[test]
+fn cache_flag_semantics_are_uniform_across_all_sweep_families() {
+    type Family = (&'static str, Box<dyn Fn(&SweepConfig) -> CacheStats>);
+    let families: Vec<Family> = vec![
+        (
+            "single-device",
+            Box::new(|cfg: &SweepConfig| {
+                let fwd = resnet18(1, 32, 10);
+                let tg = build_training_graph(
+                    &fwd,
+                    TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+                );
+                let points = DesignPoint::edge_space(4000);
+                run_sweep_stats(&points, &fwd, &tg.graph, cfg, |_, _| {}).1
+            }),
+        ),
+        (
+            "cluster",
+            Box::new(|cfg: &SweepConfig| {
+                let space = ClusterSpace {
+                    device_counts: vec![2],
+                    tiers: vec![LinkTier::Edge],
+                    microbatches: vec![2],
+                };
+                let accel = EdgeTpuParams::baseline().build();
+                run_cluster_sweep(
+                    &space.enumerate(),
+                    4,
+                    &cluster_resnet18_builder,
+                    &accel,
+                    cfg,
+                    |_, _| {},
+                )
+                .1
+            }),
+        ),
+        (
+            "hetero",
+            Box::new(|cfg: &SweepConfig| {
+                let hc = HeteroCluster::new(vec![
+                    (DeviceClass::edge(), 1),
+                    (DeviceClass::datacenter(), 1),
+                ]);
+                let points = ClusterSpace::enumerate_hetero(&hc, &[2]);
+                run_hetero_sweep(&points, &hc, 4, &cluster_resnet18_builder, cfg, |_, _| {}).1
+            }),
+        ),
+    ];
+
+    let mapping = MappingConfig::edge_tpu_default();
+    for (name, run) in &families {
+        // `--no-cache` wins over `--cache-dir`: zero counters AND no
+        // snapshot on disk afterwards
+        let dir = tmp_dir(&format!("flags_nocache_{name}"));
+        let stats = run(&SweepConfig {
+            mapping,
+            workers: 2,
+            use_cache: false,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        assert_eq!(stats, CacheStats::default(), "{name}: --no-cache must zero the counters");
+        assert!(
+            !dir.join(persist::COST_SNAPSHOT_FILE).exists(),
+            "{name}: --no-cache wrote a snapshot despite winning over --cache-dir"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+
+        // `--cache-dir` persists: a snapshot exists and the restarted
+        // run recomputes nothing
+        let dir = tmp_dir(&format!("flags_dir_{name}"));
+        let cfg = SweepConfig {
+            mapping,
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let cold = run(&cfg);
+        assert!(cold.misses > 0, "{name}: cold run must compute something");
+        assert!(
+            dir.join(persist::COST_SNAPSHOT_FILE).exists(),
+            "{name}: --cache-dir produced no snapshot"
+        );
+        let warm = run(&cfg);
+        assert_eq!(warm.misses, 0, "{name}: warm restart recomputed: {warm:?}");
+        assert_eq!(cold.entries, warm.entries, "{name}: entry sets must match");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // `--cache-cap` bounds the cache on every family
+        let stats = run(&SweepConfig {
+            mapping,
+            workers: 2,
+            cache_cap: 8,
+            ..Default::default()
+        });
+        assert!(stats.entries <= 8, "{name}: cap ignored: {stats:?}");
+        assert!(stats.evictions > 0, "{name}: cap 8 never evicted: {stats:?}");
+    }
+}
