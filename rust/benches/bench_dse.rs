@@ -11,7 +11,8 @@ use std::time::Instant;
 
 use monet::autodiff::{build_training_graph, TrainOptions};
 use monet::dse::{
-    run_cluster_sweep, run_hetero_sweep, run_sweep_stats, ClusterSpace, DesignPoint, SweepConfig,
+    run_cluster_sweep, run_hetero_sweep, run_sweep_outcome, run_sweep_stats, ClusterSpace,
+    DesignPoint, SweepConfig,
 };
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
@@ -141,6 +142,37 @@ fn main() {
         ));
     }
 
+    // crash-safety overhead: the same single-device sweep journaled to a
+    // --run-dir (journaled = evaluate + per-point checksummed append;
+    // replay = --resume over the complete journal, zero evaluations)
+    let (journal_points, journaled_secs, replay_secs) = {
+        let fwd = resnet18(1, 32, 10);
+        let tg = build_training_graph(
+            &fwd,
+            TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+        );
+        let points = DesignPoint::edge_space(300);
+        let dir = tmp_dir("journal");
+        let cfg = |resume: bool| SweepConfig {
+            mapping: MappingConfig::edge_tpu_default(),
+            run_dir: Some(dir.clone()),
+            resume,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(false), |_, _| {})
+            .expect("journaled sweep");
+        let journaled_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let replay = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(true), |_, _| {})
+            .expect("resumed sweep");
+        let replay_secs = t1.elapsed().as_secs_f64();
+        assert_eq!(out.rows.len(), replay.rows.len(), "replay changed the row count");
+        assert_eq!(replay.resumed, points.len(), "resume evaluated instead of replaying");
+        std::fs::remove_dir_all(&dir).ok();
+        (points.len(), journaled_secs, replay_secs)
+    };
+
     println!(
         "{:<16} {:>8} {:>12} {:>12} {:>14} {:>14}",
         "family", "points", "cold (s)", "warm (s)", "cold pts/s", "warm pts/s"
@@ -170,8 +202,19 @@ fn main() {
             )
         })
         .collect();
+    println!(
+        "{:<16} {:>8} {:>12.3} {:>12.3}   (journaled sweep vs full --resume replay)",
+        "run_journal", journal_points, journaled_secs, replay_secs
+    );
+    let journal_json = format!(
+        "  \"journal\": {{\n    \"points\": {},\n    \"points_per_sec_journaled\": {:.2},\n    \"points_per_sec_replay\": {:.2}\n  }},\n",
+        journal_points,
+        journal_points as f64 / journaled_secs,
+        journal_points as f64 / replay_secs
+    );
     let json = format!(
-        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n  \"families\": {{\n{}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n{}  \"families\": {{\n{}\n  }}\n}}\n",
+        journal_json,
         families_json.join(",\n")
     );
     std::fs::write("BENCH_dse.json", &json).expect("writing BENCH_dse.json");

@@ -32,6 +32,17 @@
 //!   and save), the progress callback, the cache counters, and the
 //!   deterministic result ordering.
 //!
+//! ## Crash safety and fault isolation
+//!
+//! [`Engine::run_journaled`] adds the resilience layer (`--run-dir` /
+//! `--resume`): every completed point is appended to a checksummed
+//! [`super::journal`] record, so a killed run resumes bit-identically,
+//! replaying completed points instead of re-evaluating them. Independent
+//! of journaling, every per-point evaluation runs inside a
+//! `catch_unwind` fence: one poisoned point becomes a diagnostic-carrying
+//! [`PointFailure`] in the [`RunOutcome`] while the rest of the sweep
+//! completes (see *Failure semantics* on [`Engine::run`]).
+//!
 //! ## The evaluation contract (what an [`Evaluate`] impl may NOT read)
 //!
 //! Mirroring the `eval` cost-cache soundness contract
@@ -54,10 +65,14 @@
 //! count and any cache setting** (off / cold / warm-persisted /
 //! capacity-bounded).
 
+use std::collections::HashMap;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
+use super::journal::{self, JournalRow, PointRecord};
 use super::space::{ClusterPoint, DesignPoint};
 use crate::eval::{persist, CacheStats, CostCache};
 use crate::parallelism::{HeteroCluster, HeteroPoint};
@@ -185,10 +200,86 @@ pub trait Evaluate: Sync {
     ) -> Vec<Self::Row>;
 }
 
+/// One design point whose evaluation panicked: the engine's per-point
+/// isolation caught it, recorded the diagnostic, and completed the rest
+/// of the sweep. Surfaced in [`RunOutcome::failures`] (and journaled, so
+/// a resumed run neither re-evaluates nor forgets the point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointFailure {
+    /// Index of the point in its [`DesignSpace`].
+    pub index: usize,
+    /// The space's stable id of the point ([`DesignSpace::point_id`]).
+    pub point_id: String,
+    /// The panic payload (or `"non-string panic payload"`).
+    pub diagnostic: String,
+}
+
+/// Everything one engine run produced: the rows of every successful
+/// point (index-ordered), the shared cache's end-of-run counters
+/// (including the snapshot-lifecycle events), the isolated per-point
+/// failures, and how many points were replayed from a resumed journal
+/// rather than evaluated.
+#[derive(Debug, Clone)]
+pub struct RunOutcome<R> {
+    pub rows: Vec<R>,
+    pub cache: CacheStats,
+    pub failures: Vec<PointFailure>,
+    pub resumed: usize,
+}
+
+impl<R> RunOutcome<R> {
+    /// Did every point evaluate cleanly?
+    pub fn is_clean(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Structural failure of the engine or the parallel map itself (as
+/// opposed to isolated per-point failures, which are data in
+/// [`RunOutcome::failures`]). Implements `std::error::Error`, so it
+/// converts into [`crate::util::error::Error`] via `?`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// The worker pool delivered no result for these indices (sorted) —
+    /// a harness bug, never an input problem.
+    MissingIndices(Vec<usize>),
+    /// [`try_map_parallel`] items whose closure panicked, with their
+    /// diagnostics (sorted by index).
+    Poisoned(Vec<(usize, String)>),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::MissingIndices(idx) => {
+                write!(
+                    f,
+                    "worker pool delivered no result for {} item(s): indices {:?}",
+                    idx.len(),
+                    idx
+                )
+            }
+            EngineError::Poisoned(items) => {
+                write!(f, "{} item(s) panicked during parallel evaluation:", items.len())?;
+                for (i, diag) in items.iter().take(5) {
+                    write!(f, " [{i}: {diag}]")?;
+                }
+                if items.len() > 5 {
+                    write!(f, " (+{} more)", items.len() - 5)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
 /// The engine's orchestration knobs: worker count plus the shared
 /// cost-cache lifecycle (the CLI's `--no-cache` / `--cache-dir` /
 /// `--cache-cap` triple — one definition, so the semantics cannot drift
-/// across commands).
+/// across commands) plus the crash-safety pair (`--run-dir` /
+/// `--resume`).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Worker threads (1 = serial). Results are bit-identical for every
@@ -206,6 +297,15 @@ pub struct EngineConfig {
     /// Bound the cache to ~this many entries with the sharded CLOCK
     /// policy (`--cache-cap`); 0 = unbounded.
     pub cache_cap: usize,
+    /// Journal every completed point to this directory (`--run-dir`),
+    /// making the run resumable after a crash. `None` (the default)
+    /// journals nothing. Only honored by [`Engine::run_journaled`] —
+    /// plain [`Engine::run`] serves row types with no journal codec.
+    pub run_dir: Option<PathBuf>,
+    /// Replay a `run_dir` journal left by a previous (killed) run before
+    /// evaluating (`--resume`): completed points are restored from the
+    /// journal, bit-identically, and only the remainder is evaluated.
+    pub resume: bool,
 }
 
 impl Default for EngineConfig {
@@ -215,6 +315,8 @@ impl Default for EngineConfig {
             use_cache: true,
             cache_dir: None,
             cache_cap: 0,
+            run_dir: None,
+            resume: false,
         }
     }
 }
@@ -233,13 +335,13 @@ impl Engine {
         &self.cfg
     }
 
-    /// Evaluate every point of `space` over the worker pool and return
-    /// the rows plus the shared cache's counters.
+    /// Evaluate every point of `space` over the worker pool.
     ///
-    /// Guarantees (pinned by `tests/dse_engine.rs`):
+    /// Guarantees (pinned by `tests/dse_engine.rs` and
+    /// `tests/fault_injection.rs`):
     ///
-    /// * **ordering** — rows come back sorted by point index; a point's
-    ///   own rows keep their emission order;
+    /// * **ordering** — [`RunOutcome::rows`] come back sorted by point
+    ///   index; a point's own rows keep their emission order;
     /// * **determinism** — bit-identical rows for any `workers` value
     ///   and any cache setting (off / cold / warm / bounded);
     /// * **lifecycle** — with `use_cache`, the cache is opened (warm-
@@ -248,12 +350,123 @@ impl Engine {
     ///   `use_cache` off nothing is loaded, counted or saved;
     /// * **progress** — `progress(done, total)` fires once per completed
     ///   point, in completion order.
+    ///
+    /// # Failure semantics
+    ///
+    /// Three disjoint failure classes, three disjoint channels:
+    ///
+    /// * **A panicking point** is *isolated*: the evaluation runs inside
+    ///   a `catch_unwind` fence, the panic becomes a
+    ///   [`PointFailure`] in [`RunOutcome::failures`], and every other
+    ///   point still evaluates. The run returns `Ok`; callers decide
+    ///   whether a degraded sweep is acceptable (the CLI reports each
+    ///   failure and exits nonzero).
+    /// * **Cache-lifecycle trouble** (rejected snapshot, failed
+    ///   persist) *degrades gracefully*: warnings plus the
+    ///   `snapshots_rejected` / `snapshots_quarantined` / `io_retries`
+    ///   counters in [`RunOutcome::cache`] — never a panic, never
+    ///   silence, never a changed row.
+    /// * **A harness defect** (the pool failing to deliver an index) is
+    ///   the only `Err`: [`EngineError::MissingIndices`].
     pub fn run<S, E>(
         &self,
         space: &S,
         eval: &E,
+        progress: impl FnMut(usize, usize),
+    ) -> Result<RunOutcome<E::Row>, EngineError>
+    where
+        S: DesignSpace + ?Sized,
+        E: Evaluate<Point = S::Point>,
+    {
+        self.run_core(space, eval, progress, HashMap::new(), |_, _| {})
+    }
+
+    /// [`Engine::run`] plus the crash-safety layer, for row types with a
+    /// journal codec ([`JournalRow`]).
+    ///
+    /// With `run_dir` set, every completed point (rows *or* isolated
+    /// failure) is appended to the checksummed run journal before the
+    /// next progress tick; with `resume` also set, a journal left by a
+    /// previous run of the **same design space** (same
+    /// [`journal::space_digest`]) is replayed first — torn tails are
+    /// truncated to the last good record — and only the remaining points
+    /// evaluate. A resumed run's [`RunOutcome::rows`] are bit-identical
+    /// to an uninterrupted run's.
+    ///
+    /// # Failure semantics
+    ///
+    /// Everything on [`Engine::run`] holds, plus: a journal that cannot
+    /// be opened (unwritable `run_dir`, disk full) or appended to
+    /// degrades with a warning to an unjournaled run — journaling
+    /// trouble never fails a sweep, and never changes a row. A resume
+    /// against a journal from a different space/config quarantines the
+    /// file and starts fresh.
+    pub fn run_journaled<S, E>(
+        &self,
+        space: &S,
+        eval: &E,
+        progress: impl FnMut(usize, usize),
+    ) -> Result<RunOutcome<E::Row>, EngineError>
+    where
+        S: DesignSpace + ?Sized,
+        E: Evaluate<Point = S::Point>,
+        E::Row: JournalRow,
+    {
+        let Some(run_dir) = self.cfg.run_dir.clone() else {
+            return self.run_core(space, eval, progress, HashMap::new(), |_, _| {});
+        };
+        let digest = journal::space_digest(space);
+        let path = run_dir.join(journal::RUN_JOURNAL_FILE);
+        let (payloads, file) =
+            match journal::open_journal(&path, journal::RUN_MAGIC, digest, self.cfg.resume) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!(
+                        "warning: cannot open run journal {} ({e}); \
+                         continuing without crash-safety",
+                        path.display()
+                    );
+                    return self.run_core(space, eval, progress, HashMap::new(), |_, _| {});
+                }
+            };
+        let n = space.len();
+        let mut replay: HashMap<usize, PointRecord<E::Row>> = HashMap::new();
+        for payload in &payloads {
+            if let Some((i, rec)) = journal::decode_point_record::<E::Row>(payload) {
+                if i < n {
+                    replay.insert(i, rec);
+                }
+            }
+        }
+        let mut file = file;
+        let mut dead = false;
+        self.run_core(space, eval, progress, replay, move |i, rec| {
+            if dead {
+                return;
+            }
+            let payload = journal::encode_point_record(i, rec);
+            if let Err(e) = file.append_record(&payload) {
+                eprintln!(
+                    "warning: run journal write failed ({e}); \
+                     continuing without crash-safety"
+                );
+                dead = true;
+            }
+        })
+    }
+
+    /// The shared core: pool + cache lifecycle + panic isolation, with
+    /// `replay` pre-filling completed points and `on_complete` observing
+    /// each newly completed one (on the calling thread, in completion
+    /// order — the journal append needs no locks).
+    fn run_core<S, E>(
+        &self,
+        space: &S,
+        eval: &E,
         mut progress: impl FnMut(usize, usize),
-    ) -> (Vec<E::Row>, CacheStats)
+        replay: HashMap<usize, PointRecord<E::Row>>,
+        mut on_complete: impl FnMut(usize, &PointRecord<E::Row>),
+    ) -> Result<RunOutcome<E::Row>, EngineError>
     where
         S: DesignSpace + ?Sized,
         E: Evaluate<Point = S::Point>,
@@ -276,33 +489,95 @@ impl Engine {
         };
         let cache_ref = cache.as_ref();
 
-        let mut keyed: Vec<(usize, Vec<E::Row>)> = Vec::with_capacity(n);
-        let mut done = 0usize;
+        let mut slots: Vec<Option<PointRecord<E::Row>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let resumed = replay.len();
+        for (i, rec) in replay {
+            slots[i] = Some(rec);
+        }
+        let pending: Vec<usize> =
+            (0..n).filter(|&i| slots[i].is_none()).collect();
+        let mut done = resumed;
+        if resumed > 0 {
+            progress(done, n);
+        }
         run_pool(
             self.cfg.workers,
-            n,
+            pending.len(),
             &|| eval.scratch(),
-            &|i, scratch: &mut E::Scratch| eval.evaluate(i, &points[i], cache_ref, scratch),
-            |i, rows| {
-                keyed.push((i, rows));
+            &|j, scratch: &mut E::Scratch| {
+                let i = pending[j];
+                // AssertUnwindSafe: a panicking evaluation may only have
+                // touched its own per-worker scratch (dropped with the
+                // worker) and the cost cache outside its locks (compute
+                // happens unlocked; see CostCache::get_or_compute), so no
+                // shared state observable by other points is left torn.
+                match catch_unwind(AssertUnwindSafe(|| {
+                    crate::util::fault::panic_point(i);
+                    eval.evaluate(i, &points[i], cache_ref, scratch)
+                })) {
+                    Ok(rows) => PointRecord::Rows(rows),
+                    Err(payload) => PointRecord::Failed(panic_message(payload)),
+                }
+            },
+            |j, rec| {
+                let i = pending[j];
+                on_complete(i, &rec);
+                slots[i] = Some(rec);
                 done += 1;
                 progress(done, n);
             },
         );
-        keyed.sort_by_key(|&(i, _)| i);
 
-        let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+        // satellite of the robustness PR: a structured error instead of
+        // the old `expect("pool delivered every index")`
+        let missing: Vec<usize> =
+            (0..n).filter(|&i| slots[i].is_none()).collect();
+        if !missing.is_empty() {
+            return Err(EngineError::MissingIndices(missing));
+        }
+
+        // persist BEFORE snapshotting the counters, so retried-write
+        // events (CacheStats::io_retries) reach the end-of-run report
         if let Some(c) = &cache {
             persist::persist_cost_cache(c, self.cfg.cache_dir.as_deref());
         }
-        (keyed.into_iter().flat_map(|(_, rows)| rows).collect(), stats)
+        let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+
+        let mut rows = Vec::new();
+        let mut failures = Vec::new();
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(PointRecord::Rows(r)) => rows.extend(r),
+                Some(PointRecord::Failed(diagnostic)) => failures.push(PointFailure {
+                    index: i,
+                    point_id: space.point_id(i),
+                    diagnostic,
+                }),
+                None => unreachable!("missing indices returned above"),
+            }
+        }
+        Ok(RunOutcome { rows, cache: stats, failures, resumed })
+    }
+}
+
+/// Render a caught panic payload for diagnostics.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
 /// Deterministic parallel map over a slice: `out[i] == f(&items[i])`
 /// for every `i`, regardless of `workers`. This is the engine's pool
 /// exposed for callers that own their own caching (the NSGA-II GA's
-/// per-generation genome batches); `f` must be pure.
+/// per-generation genome batches); `f` must be pure. Panics on any
+/// [`EngineError`] — callers that need the structured error (which item
+/// panicked, with what diagnostic) use [`try_map_parallel`].
 pub fn map_parallel<T, R>(
     workers: usize,
     items: &[T],
@@ -312,17 +587,54 @@ where
     T: Sync,
     R: Send,
 {
+    try_map_parallel(workers, items, f)
+        .unwrap_or_else(|e| panic!("parallel map failed: {e}"))
+}
+
+/// [`map_parallel`] with structured failure: a panicking item does not
+/// abort the process — every item still runs, and the collected
+/// diagnostics come back as [`EngineError::Poisoned`] (sorted by index).
+pub fn try_map_parallel<T, R>(
+    workers: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Result<Vec<R>, EngineError>
+where
+    T: Sync,
+    R: Send,
+{
     let n = items.len();
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
+    let mut poisoned: Vec<(usize, String)> = Vec::new();
     run_pool(
         workers,
         n,
         &|| (),
-        &|i, _scratch: &mut ()| f(&items[i]),
-        |i, r| out[i] = Some(r),
+        &|i, _scratch: &mut ()| {
+            catch_unwind(AssertUnwindSafe(|| f(&items[i]))).map_err(panic_message)
+        },
+        |i, r| match r {
+            Ok(v) => out[i] = Some(v),
+            Err(diag) => poisoned.push((i, diag)),
+        },
     );
-    out.into_iter().map(|r| r.expect("pool delivered every index")).collect()
+    if !poisoned.is_empty() {
+        poisoned.sort_by(|a, b| a.0.cmp(&b.0));
+        return Err(EngineError::Poisoned(poisoned));
+    }
+    let mut missing = Vec::new();
+    let mut vals = Vec::with_capacity(n);
+    for (i, slot) in out.into_iter().enumerate() {
+        match slot {
+            Some(v) => vals.push(v),
+            None => missing.push(i),
+        }
+    }
+    if !missing.is_empty() {
+        return Err(EngineError::MissingIndices(missing));
+    }
+    Ok(vals)
 }
 
 /// The one worker-pool core every harness shares: a work-stealing index
@@ -376,6 +688,7 @@ fn run_pool<R, Sc>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::persist::Reader;
 
     /// A synthetic space: points are integers, ids are their decimal
     /// strings.
@@ -418,6 +731,38 @@ mod tests {
         }
     }
 
+    impl JournalRow for (usize, u64) {
+        fn encode(&self, buf: &mut Vec<u8>) {
+            crate::eval::persist::put_u64(buf, self.0 as u64);
+            crate::eval::persist::put_u64(buf, self.1);
+        }
+        fn decode(r: &mut Reader<'_>) -> Option<(usize, u64)> {
+            Some((r.u64()? as usize, r.u64()?))
+        }
+    }
+
+    /// Panics on one configured point, squares the rest.
+    struct PanickyEval(u64);
+
+    impl Evaluate for PanickyEval {
+        type Point = u64;
+        type Row = (usize, u64);
+        type Scratch = ();
+
+        fn scratch(&self) {}
+
+        fn evaluate(
+            &self,
+            index: usize,
+            point: &u64,
+            _cache: Option<&CostCache>,
+            _scratch: &mut (),
+        ) -> Vec<(usize, u64)> {
+            assert!(*point != self.0, "poisoned point {point}");
+            vec![(index, point * point)]
+        }
+    }
+
     fn no_cache_cfg(workers: usize) -> EngineConfig {
         EngineConfig { workers, use_cache: false, ..Default::default() }
     }
@@ -427,11 +772,14 @@ mod tests {
         let space = IntSpace((0..97).map(|i| i * 3 + 1).collect());
         let run = |workers: usize| {
             let mut calls = 0usize;
-            let (rows, stats) =
-                Engine::new(no_cache_cfg(workers)).run(&space, &SquareEval, |_, _| calls += 1);
+            let out = Engine::new(no_cache_cfg(workers))
+                .run(&space, &SquareEval, |_, _| calls += 1)
+                .unwrap();
             assert_eq!(calls, space.len());
-            assert_eq!(stats, CacheStats::default());
-            rows
+            assert_eq!(out.cache, CacheStats::default());
+            assert!(out.is_clean());
+            assert_eq!(out.resumed, 0);
+            out.rows
         };
         let serial = run(1);
         assert_eq!(serial.len(), 97);
@@ -463,9 +811,9 @@ mod tests {
             }
         }
         let space = IntSpace((0..13).collect());
-        let (rows, _) = Engine::new(no_cache_cfg(4)).run(&space, &PairEval, |_, _| {});
-        assert_eq!(rows.len(), 26);
-        for (i, pair) in rows.chunks(2).enumerate() {
+        let out = Engine::new(no_cache_cfg(4)).run(&space, &PairEval, |_, _| {}).unwrap();
+        assert_eq!(out.rows.len(), 26);
+        for (i, pair) in out.rows.chunks(2).enumerate() {
             assert_eq!(pair[0], (i, "first"));
             assert_eq!(pair[1], (i, "second"));
         }
@@ -475,11 +823,70 @@ mod tests {
     fn empty_space_yields_no_rows_and_no_progress() {
         let space = IntSpace(vec![]);
         let mut calls = 0usize;
-        let (rows, stats) =
-            Engine::new(no_cache_cfg(4)).run(&space, &SquareEval, |_, _| calls += 1);
-        assert!(rows.is_empty());
+        let out =
+            Engine::new(no_cache_cfg(4)).run(&space, &SquareEval, |_, _| calls += 1).unwrap();
+        assert!(out.rows.is_empty());
         assert_eq!(calls, 0);
-        assert_eq!(stats, CacheStats::default());
+        assert_eq!(out.cache, CacheStats::default());
+    }
+
+    #[test]
+    fn a_panicking_point_is_isolated_not_fatal() {
+        let space = IntSpace((0..20).collect());
+        for workers in [1usize, 2, 8] {
+            let out = Engine::new(no_cache_cfg(workers))
+                .run(&space, &PanickyEval(7), |_, _| {})
+                .unwrap();
+            assert_eq!(out.rows.len(), 19, "every healthy point must evaluate");
+            assert_eq!(out.failures.len(), 1);
+            let f = &out.failures[0];
+            assert_eq!(f.index, 7);
+            assert_eq!(f.point_id, "int7");
+            assert!(f.diagnostic.contains("poisoned point 7"), "{:?}", f.diagnostic);
+            assert!(!out.rows.iter().any(|&(i, _)| i == 7));
+        }
+    }
+
+    #[test]
+    fn journaled_run_resumes_bit_identically_without_reevaluating() {
+        let dir = std::env::temp_dir()
+            .join(format!("monet_engine_journal_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let space = IntSpace((0..31).map(|i| i + 100).collect());
+        let cfg = EngineConfig {
+            workers: 2,
+            use_cache: false,
+            run_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let full = Engine::new(cfg.clone()).run_journaled(&space, &SquareEval, |_, _| {}).unwrap();
+        assert_eq!(full.resumed, 0);
+
+        /// Refuses to evaluate anything — a resume of a complete journal
+        /// must replay every point.
+        struct MustNotRun;
+        impl Evaluate for MustNotRun {
+            type Point = u64;
+            type Row = (usize, u64);
+            type Scratch = ();
+            fn scratch(&self) {}
+            fn evaluate(
+                &self,
+                _i: usize,
+                _p: &u64,
+                _c: Option<&CostCache>,
+                _s: &mut (),
+            ) -> Vec<(usize, u64)> {
+                panic!("resume of a complete journal re-evaluated a point")
+            }
+        }
+        let resumed = Engine::new(EngineConfig { resume: true, ..cfg })
+            .run_journaled(&space, &MustNotRun, |_, _| {})
+            .unwrap();
+        assert_eq!(resumed.resumed, space.len());
+        assert!(resumed.is_clean(), "{:?}", resumed.failures);
+        assert_eq!(resumed.rows, full.rows);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -491,6 +898,42 @@ mod tests {
         }
         let empty: Vec<u64> = vec![];
         assert!(map_parallel(4, &empty, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn try_map_parallel_names_every_poisoned_item() {
+        let items: Vec<u64> = (0..16).collect();
+        for workers in [1usize, 4] {
+            let err = try_map_parallel(workers, &items, |&x| {
+                assert!(x != 3 && x != 11, "bad item {x}");
+                x * 2
+            })
+            .unwrap_err();
+            match err {
+                EngineError::Poisoned(items) => {
+                    let idx: Vec<usize> = items.iter().map(|p| p.0).collect();
+                    assert_eq!(idx, vec![3, 11]);
+                    assert!(items[0].1.contains("bad item 3"));
+                }
+                other => panic!("expected Poisoned, got {other:?}"),
+            }
+        }
+        assert!(try_map_parallel(2, &items, |&x| x).is_ok());
+    }
+
+    #[test]
+    fn engine_error_displays_are_actionable() {
+        let e = EngineError::MissingIndices(vec![3, 9]);
+        assert!(e.to_string().contains("[3, 9]"), "{e}");
+        let p = EngineError::Poisoned(vec![(5, "kaboom".into())]);
+        let s = p.to_string();
+        assert!(s.contains('5') && s.contains("kaboom"), "{s}");
+        // EngineError converts into the repo-wide error type via `?`
+        fn fails() -> crate::util::error::Result<()> {
+            Err(EngineError::MissingIndices(vec![1]))?;
+            Ok(())
+        }
+        assert!(fails().is_err());
     }
 
     #[test]

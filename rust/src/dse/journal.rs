@@ -1,0 +1,652 @@
+//! Crash-safe run journaling for the DSE engine (and the GA's
+//! per-generation checkpoints): an **append-only, checksummed** record log
+//! in `--run-dir` that makes a killed multi-hour sweep resumable.
+//!
+//! ## File layout
+//!
+//! Every journal opens with a 56-byte header —
+//!
+//! ```text
+//! magic(8) | format u32 | contract u32 | hasher fingerprint u128 |
+//! space digest u128 | fnv64(first 48 bytes) u64
+//! ```
+//!
+//! — the same three structural guards as the snapshot-header rule in
+//! [`crate::eval::persist`] (format version, hasher fingerprint,
+//! [`crate::eval::CACHE_CONTRACT_VERSION`]) **plus a design-space
+//! digest**: a journal is only replayable against the identical,
+//! identically-ordered point set, so [`space_digest`] folds every
+//! `point_id` into the header and a resumed run against a different
+//! space/config rejects the file wholesale. Unlike snapshots, an
+//! append-only file cannot carry a whole-file checksum trailer, so the
+//! header checksums itself and each record carries its own trailer:
+//!
+//! ```text
+//! payload_len u32 | payload | fnv64(payload) u64
+//! ```
+//!
+//! ## Torn tails
+//!
+//! A crash mid-append leaves a torn final record. Replay parses records
+//! until the first length/checksum violation, truncates the file back to
+//! the last good record boundary, and returns only the valid prefix —
+//! so `--resume` after a kill at *any* byte offset recovers cleanly
+//! (pinned by `tests/fault_injection.rs`, which truncates at every byte).
+//!
+//! ## Hot-path cost
+//!
+//! Appends are buffered writes with a `flush` (no per-record `fsync`):
+//! a record survives a process kill once the OS has it, which is the
+//! failure model this PR targets (killed runs, panics, torn writes —
+//! not power loss). `BENCH_dse.json` pins the overhead.
+
+use std::fs;
+use std::io::{self, Seek, Write};
+use std::path::Path;
+
+use super::engine::DesignSpace;
+use super::sweep::{ClusterRow, Mode, SweepRow};
+use crate::eval::cost_cache::StructuralHasher;
+use crate::eval::persist::{
+    fnv64, hasher_fingerprint, put_f64, put_str, put_u128, put_u32, put_u64, Reader,
+};
+use crate::parallelism::LinkTier;
+
+/// Byte-layout version of the journal codec.
+pub const JOURNAL_FORMAT_VERSION: u32 = 1;
+
+/// File name of the engine's per-point run journal inside a `--run-dir`.
+pub const RUN_JOURNAL_FILE: &str = "run_journal.bin";
+
+/// File name of the GA's per-generation journal inside a `--run-dir`.
+pub const GA_JOURNAL_FILE: &str = "ga_journal.bin";
+
+/// Magic of the per-point run journal.
+pub const RUN_MAGIC: &[u8; 8] = b"MONETJN\0";
+
+/// Magic of the GA generation journal (distinct from the warm-start
+/// snapshot's `MONETGA\0`).
+pub const GA_JOURNAL_MAGIC: &[u8; 8] = b"MONETGJ\0";
+
+/// Total header size: magic(8) + format(4) + contract(4) + fingerprint(16)
+/// + space digest(16) + header checksum(8).
+pub const HEADER_LEN: usize = 56;
+
+/// Sanity cap on one record's payload (a flipped length-prefix byte must
+/// not make replay attempt a multi-gigabyte read).
+const MAX_RECORD_LEN: usize = 1 << 26; // 64 MiB
+
+/// What the journal remembers about one completed design point: its rows,
+/// or the diagnostic of its isolated failure. Replay restores either —
+/// a resumed run neither re-evaluates nor forgets a failed point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PointRecord<R> {
+    Rows(Vec<R>),
+    Failed(String),
+}
+
+/// A row type the engine can journal: a self-contained binary encoding
+/// whose decode is bit-exact (floats round-trip through `to_bits`) and
+/// never panics on torn input (every accessor is bounds-checked).
+pub trait JournalRow: Sized {
+    fn encode(&self, buf: &mut Vec<u8>);
+    fn decode(r: &mut Reader<'_>) -> Option<Self>;
+}
+
+impl JournalRow for SweepRow {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, self.index as u64);
+        put_str(buf, &self.label);
+        buf.push(match self.mode {
+            Mode::Inference => 0,
+            Mode::Training => 1,
+        });
+        put_u64(buf, self.total_macs);
+        put_f64(buf, self.color_axis);
+        put_f64(buf, self.latency_cycles);
+        put_f64(buf, self.energy_pj);
+        put_u64(buf, self.peak_dram_bytes);
+        put_f64(buf, self.utilization);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Option<SweepRow> {
+        Some(SweepRow {
+            index: r.u64()? as usize,
+            label: r.str()?,
+            mode: match r.take(1)?[0] {
+                0 => Mode::Inference,
+                1 => Mode::Training,
+                _ => return None,
+            },
+            total_macs: r.u64()?,
+            color_axis: r.f64()?,
+            latency_cycles: r.f64()?,
+            energy_pj: r.f64()?,
+            peak_dram_bytes: r.u64()?,
+            utilization: r.f64()?,
+        })
+    }
+}
+
+impl JournalRow for ClusterRow {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, self.index as u64);
+        put_str(buf, &self.label);
+        put_u64(buf, self.devices as u64);
+        buf.push(self.tier.rank());
+        put_u64(buf, self.dp as u64);
+        put_u64(buf, self.pp as u64);
+        put_u64(buf, self.microbatches as u64);
+        put_u64(buf, self.tp as u64);
+        put_str(buf, &self.placement);
+        put_f64(buf, self.latency_cycles);
+        put_f64(buf, self.energy_pj);
+        put_u64(buf, self.per_device_mem_bytes);
+        put_f64(buf, self.comm_bytes);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Option<ClusterRow> {
+        Some(ClusterRow {
+            index: r.u64()? as usize,
+            label: r.str()?,
+            devices: r.u64()? as usize,
+            tier: *LinkTier::all().get(r.take(1)?[0] as usize)?,
+            dp: r.u64()? as usize,
+            pp: r.u64()? as usize,
+            microbatches: r.u64()? as usize,
+            tp: r.u64()? as usize,
+            placement: r.str()?,
+            latency_cycles: r.f64()?,
+            energy_pj: r.f64()?,
+            per_device_mem_bytes: r.u64()?,
+            comm_bytes: r.f64()?,
+        })
+    }
+}
+
+/// Digest of a design space's identity: its length plus every `point_id`,
+/// in order, through [`StructuralHasher`]. Equal iff the space enumerates
+/// the same points in the same order — the replay-compatibility guard the
+/// journal header carries.
+pub fn space_digest<S: DesignSpace + ?Sized>(space: &S) -> u128 {
+    use std::hash::{Hash, Hasher as _};
+    let mut h = StructuralHasher::new();
+    let n = space.len();
+    n.hash(&mut h);
+    for i in 0..n {
+        space.point_id(i).hash(&mut h);
+    }
+    h.finish128()
+}
+
+fn header_bytes(magic: &[u8; 8], digest: u128) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(HEADER_LEN);
+    buf.extend_from_slice(magic);
+    put_u32(&mut buf, JOURNAL_FORMAT_VERSION);
+    put_u32(&mut buf, crate::eval::CACHE_CONTRACT_VERSION);
+    put_u128(&mut buf, hasher_fingerprint());
+    put_u128(&mut buf, digest);
+    let sum = fnv64(&buf);
+    put_u64(&mut buf, sum);
+    debug_assert_eq!(buf.len(), HEADER_LEN);
+    buf
+}
+
+fn header_is_valid(buf: &[u8], magic: &[u8; 8], digest: u128) -> bool {
+    buf.len() >= HEADER_LEN && buf[..HEADER_LEN] == header_bytes(magic, digest)[..]
+}
+
+/// An open, append-position journal. Records stream through
+/// [`JournalFile::append_record`]; the handle is used from the engine's
+/// serial sink (one writer, no locks).
+pub struct JournalFile {
+    file: io::BufWriter<fs::File>,
+}
+
+impl JournalFile {
+    /// Append one checksummed record and flush it to the OS. Consults the
+    /// fault-injection hooks ([`crate::util::fault`]) so tests can fail
+    /// or corrupt exactly the n-th journal write.
+    pub fn append_record(&mut self, payload: &[u8]) -> io::Result<()> {
+        crate::util::fault::write_gate("journal")?;
+        let mut rec = Vec::with_capacity(payload.len() + 12);
+        put_u32(&mut rec, payload.len() as u32);
+        rec.extend_from_slice(payload);
+        put_u64(&mut rec, fnv64(payload));
+        crate::util::fault::maybe_flip(&mut rec);
+        self.file.write_all(&rec)?;
+        self.file.flush()
+    }
+}
+
+/// Parse the record region of `buf` (everything after the header):
+/// returns the valid payloads and the byte offset just past the last
+/// good record — the truncation point for a torn tail.
+fn parse_records(buf: &[u8]) -> (Vec<Vec<u8>>, usize) {
+    let mut payloads = Vec::new();
+    let mut pos = HEADER_LEN;
+    loop {
+        let Some(len_bytes) = buf.get(pos..pos + 4) else { break };
+        let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+        if len > MAX_RECORD_LEN {
+            break;
+        }
+        let Some(payload) = buf.get(pos + 4..pos + 4 + len) else { break };
+        let Some(sum_bytes) = buf.get(pos + 4 + len..pos + 12 + len) else { break };
+        if fnv64(payload) != u64::from_le_bytes(sum_bytes.try_into().unwrap()) {
+            break;
+        }
+        payloads.push(payload.to_vec());
+        pos += 12 + len;
+    }
+    (payloads, pos)
+}
+
+/// Open (or create) the journal at `path`.
+///
+/// * `resume == false`: start a fresh journal (any existing file is
+///   overwritten) and return no replayed payloads.
+/// * `resume == true`: validate the header against `magic`/`digest` and
+///   the structural guards; replay every checksummed record, truncating a
+///   torn tail back to the last good record boundary. A header that fails
+///   validation (different space, stale contract, bit rot) quarantines
+///   the file to a `.corrupt` sidecar with a warning and starts fresh —
+///   resuming against the wrong journal must lose the journal, never
+///   corrupt the run.
+///
+/// Returns the replayed payloads plus the handle positioned for appends.
+pub fn open_journal(
+    path: &Path,
+    magic: &[u8; 8],
+    digest: u128,
+    resume: bool,
+) -> io::Result<(Vec<Vec<u8>>, JournalFile)> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    if resume {
+        if let Ok(buf) = fs::read(path) {
+            if header_is_valid(&buf, magic, digest) {
+                let (payloads, valid_len) = parse_records(&buf);
+                let mut file = fs::OpenOptions::new().write(true).open(path)?;
+                if valid_len < buf.len() {
+                    eprintln!(
+                        "warning: journal {} has a torn tail ({} trailing bytes); \
+                         truncating to the last good record boundary",
+                        path.display(),
+                        buf.len() - valid_len
+                    );
+                    file.set_len(valid_len as u64)?;
+                }
+                file.seek(io::SeekFrom::End(0))?;
+                return Ok((payloads, JournalFile { file: io::BufWriter::new(file) }));
+            }
+            // a file exists but is not our journal (foreign space, stale
+            // contract, corrupt header): quarantine, never overwrite
+            let quarantine = path.with_extension("bin.corrupt");
+            match fs::rename(path, &quarantine) {
+                Ok(()) => eprintln!(
+                    "warning: cannot resume from journal {} (wrong design space, stale \
+                     format/contract, or corrupt header); quarantined to {} and starting fresh",
+                    path.display(),
+                    quarantine.display()
+                ),
+                Err(e) => eprintln!(
+                    "warning: cannot resume from journal {} and could not quarantine it \
+                     ({e}); starting fresh",
+                    path.display()
+                ),
+            }
+        }
+    }
+    let mut file = fs::File::create(path)?;
+    file.write_all(&header_bytes(magic, digest))?;
+    file.flush()?;
+    Ok((Vec::new(), JournalFile { file: io::BufWriter::new(file) }))
+}
+
+/// The clean record boundaries of the journal at `path`: byte offsets a
+/// crash could truncate the file to and still leave every preceding
+/// record replayable — `HEADER_LEN`, then the end of each valid record.
+/// Empty when the file has no valid header. The crash-at-every-boundary
+/// recovery tests iterate exactly these.
+pub fn journal_record_bounds(path: &Path) -> io::Result<Vec<u64>> {
+    let buf = fs::read(path)?;
+    if buf.len() < HEADER_LEN {
+        return Ok(Vec::new());
+    }
+    let mut bounds = vec![HEADER_LEN as u64];
+    let mut pos = HEADER_LEN;
+    loop {
+        let Some(len_bytes) = buf.get(pos..pos + 4) else { break };
+        let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+        if len > MAX_RECORD_LEN || buf.get(pos + 4..pos + 12 + len).is_none() {
+            break;
+        }
+        pos += 12 + len;
+        bounds.push(pos as u64);
+    }
+    Ok(bounds)
+}
+
+/// Encode one completed point for the run journal: which index finished,
+/// and either its rows or its failure diagnostic.
+pub fn encode_point_record<R: JournalRow>(index: usize, rec: &PointRecord<R>) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match rec {
+        PointRecord::Rows(rows) => {
+            buf.push(0);
+            put_u64(&mut buf, index as u64);
+            put_u32(&mut buf, rows.len() as u32);
+            for row in rows {
+                row.encode(&mut buf);
+            }
+        }
+        PointRecord::Failed(diag) => {
+            buf.push(1);
+            put_u64(&mut buf, index as u64);
+            put_str(&mut buf, diag);
+        }
+    }
+    buf
+}
+
+/// Inverse of [`encode_point_record`]; `None` on any malformed payload
+/// (replay then simply re-evaluates the point).
+pub fn decode_point_record<R: JournalRow>(payload: &[u8]) -> Option<(usize, PointRecord<R>)> {
+    let mut r = Reader::new(payload);
+    let kind = r.take(1)?[0];
+    let index = r.u64()? as usize;
+    let rec = match kind {
+        0 => {
+            let n = r.u32()? as usize;
+            let mut rows = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                rows.push(R::decode(&mut r)?);
+            }
+            PointRecord::Rows(rows)
+        }
+        1 => PointRecord::Failed(r.str()?),
+        _ => return None,
+    };
+    if !r.exhausted() {
+        return None;
+    }
+    Some((index, rec))
+}
+
+/// Encode one GA generation checkpoint for the GA journal.
+pub fn encode_ga_checkpoint(cp: &crate::ga::nsga2::GaCheckpoint) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, cp.generation as u64);
+    for s in cp.rng {
+        put_u64(&mut buf, s);
+    }
+    put_u32(&mut buf, cp.population.len() as u32);
+    for (genome, objs) in &cp.population {
+        put_u32(&mut buf, genome.len() as u32);
+        buf.extend(genome.iter().map(|&b| b as u8));
+        put_u32(&mut buf, objs.len() as u32);
+        for &o in objs {
+            put_f64(&mut buf, o);
+        }
+    }
+    buf
+}
+
+/// Inverse of [`encode_ga_checkpoint`]; `None` on any malformed payload.
+pub fn decode_ga_checkpoint(payload: &[u8]) -> Option<crate::ga::nsga2::GaCheckpoint> {
+    let mut r = Reader::new(payload);
+    let generation = r.u64()? as usize;
+    let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let n = r.u32()? as usize;
+    let mut population = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let width = r.u32()? as usize;
+        let genome: Vec<bool> = r.take(width)?.iter().map(|&b| b != 0).collect();
+        let n_obj = r.u32()? as usize;
+        let mut objs = Vec::with_capacity(n_obj.min(4096));
+        for _ in 0..n_obj {
+            objs.push(r.f64()?);
+        }
+        population.push((genome, objs));
+    }
+    if !r.exhausted() {
+        return None;
+    }
+    Some(crate::ga::nsga2::GaCheckpoint { generation, rng, population })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("monet_journal_{tag}_{}", std::process::id()));
+        fs::remove_dir_all(&d).ok();
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_payloads(path: &Path, digest: u128, payloads: &[&[u8]]) {
+        let (_, mut j) = open_journal(path, RUN_MAGIC, digest, false).unwrap();
+        for p in payloads {
+            j.append_record(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn journal_round_trips_records_across_reopen() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join(RUN_JOURNAL_FILE);
+        write_payloads(&path, 7, &[b"alpha", b"", b"gamma-record"]);
+        let (replayed, mut j) = open_journal(&path, RUN_MAGIC, 7, true).unwrap();
+        assert_eq!(replayed, vec![b"alpha".to_vec(), b"".to_vec(), b"gamma-record".to_vec()]);
+        // appends after a resume land after the replayed records
+        j.append_record(b"delta").unwrap();
+        drop(j);
+        let (again, _) = open_journal(&path, RUN_MAGIC, 7, true).unwrap();
+        assert_eq!(again.len(), 4);
+        assert_eq!(again[3], b"delta".to_vec());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_to_the_last_good_record() {
+        let dir = tmp_dir("torn");
+        let path = dir.join(RUN_JOURNAL_FILE);
+        write_payloads(&path, 1, &[b"one", b"two"]);
+        let full = fs::read(&path).unwrap();
+        let bounds = journal_record_bounds(&path).unwrap();
+        assert_eq!(bounds.len(), 3, "header + two record ends");
+        assert_eq!(*bounds.last().unwrap() as usize, full.len());
+        // every truncation point recovers the records wholly before it
+        for cut in HEADER_LEN..=full.len() {
+            fs::write(&path, &full[..cut]).unwrap();
+            let (replayed, _) = open_journal(&path, RUN_MAGIC, 1, true).unwrap();
+            let expect = bounds.iter().filter(|&&b| b as usize <= cut).count() - 1;
+            assert_eq!(replayed.len(), expect, "cut at byte {cut}");
+            let now = fs::metadata(&path).unwrap().len();
+            assert!(bounds.contains(&now), "cut at {cut} left a non-boundary length {now}");
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_digest_or_magic_quarantines_and_starts_fresh() {
+        let dir = tmp_dir("digest");
+        let path = dir.join(RUN_JOURNAL_FILE);
+        write_payloads(&path, 42, &[b"rec"]);
+        // same file, different design space → nothing replays, evidence kept
+        let (replayed, _) = open_journal(&path, RUN_MAGIC, 43, true).unwrap();
+        assert!(replayed.is_empty());
+        assert!(path.with_extension("bin.corrupt").exists());
+
+        write_payloads(&path, 42, &[b"rec"]);
+        let (replayed, _) = open_journal(&path, GA_JOURNAL_MAGIC, 42, true).unwrap();
+        assert!(replayed.is_empty(), "foreign magic must not replay");
+        // a non-resume open always starts fresh
+        write_payloads(&path, 42, &[b"rec"]);
+        let (replayed, _) = open_journal(&path, RUN_MAGIC, 42, false).unwrap();
+        assert!(replayed.is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_record_stops_replay_at_the_previous_boundary() {
+        let dir = tmp_dir("corrupt");
+        let path = dir.join(RUN_JOURNAL_FILE);
+        write_payloads(&path, 9, &[b"good-one", b"good-two"]);
+        let bounds = journal_record_bounds(&path).unwrap();
+        let mut buf = fs::read(&path).unwrap();
+        // flip a byte inside the second record's payload
+        let off = bounds[1] as usize + 5;
+        buf[off] ^= 0x01;
+        fs::write(&path, &buf).unwrap();
+        let (replayed, _) = open_journal(&path, RUN_MAGIC, 9, true).unwrap();
+        assert_eq!(replayed, vec![b"good-one".to_vec()]);
+        assert_eq!(fs::metadata(&path).unwrap().len(), bounds[1]);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_row_encoding_is_bit_exact() {
+        let row = SweepRow {
+            index: 12,
+            label: "pe16x16_l4MiB".into(),
+            mode: Mode::Training,
+            total_macs: 123_456_789,
+            color_axis: 0.125,
+            latency_cycles: f64::from_bits(0x400921FB54442D18),
+            energy_pj: 1.5e12,
+            peak_dram_bytes: u64::MAX / 3,
+            utilization: 0.875,
+        };
+        let mut buf = Vec::new();
+        row.encode(&mut buf);
+        let mut r = Reader::new(&buf);
+        let back = SweepRow::decode(&mut r).unwrap();
+        assert!(r.exhausted());
+        assert_eq!(back.index, row.index);
+        assert_eq!(back.label, row.label);
+        assert_eq!(back.mode, row.mode);
+        assert_eq!(back.total_macs, row.total_macs);
+        assert_eq!(back.latency_cycles.to_bits(), row.latency_cycles.to_bits());
+        assert_eq!(back.energy_pj.to_bits(), row.energy_pj.to_bits());
+        assert_eq!(back.peak_dram_bytes, row.peak_dram_bytes);
+        // torn input decodes to None, never panics
+        for cut in 0..buf.len() {
+            assert!(SweepRow::decode(&mut Reader::new(&buf[..cut])).is_none());
+        }
+    }
+
+    #[test]
+    fn cluster_row_encoding_round_trips_every_tier() {
+        for tier in LinkTier::all() {
+            let row = ClusterRow {
+                index: 3,
+                label: format!("d4_{}_dp2", tier.as_str()),
+                devices: 4,
+                tier,
+                dp: 2,
+                pp: 2,
+                microbatches: 8,
+                tp: 1,
+                placement: "edge|datacenter".into(),
+                latency_cycles: 1e9,
+                energy_pj: 2e12,
+                per_device_mem_bytes: 1 << 33,
+                comm_bytes: 3.5e8,
+            };
+            let mut buf = Vec::new();
+            row.encode(&mut buf);
+            let back = ClusterRow::decode(&mut Reader::new(&buf)).unwrap();
+            assert_eq!(back.tier, tier);
+            assert_eq!(back.label, row.label);
+            assert_eq!(back.placement, row.placement);
+            assert_eq!(back.latency_cycles.to_bits(), row.latency_cycles.to_bits());
+            assert_eq!(back.per_device_mem_bytes, row.per_device_mem_bytes);
+        }
+    }
+
+    #[test]
+    fn point_records_round_trip_rows_and_failures() {
+        let rows = vec![
+            SweepRow {
+                index: 5,
+                label: "a".into(),
+                mode: Mode::Inference,
+                total_macs: 1,
+                color_axis: 0.0,
+                latency_cycles: 2.0,
+                energy_pj: 3.0,
+                peak_dram_bytes: 4,
+                utilization: 0.5,
+            };
+            2
+        ];
+        let payload = encode_point_record(5, &PointRecord::Rows(rows.clone()));
+        let (idx, rec) = decode_point_record::<SweepRow>(&payload).unwrap();
+        assert_eq!(idx, 5);
+        assert_eq!(rec, PointRecord::Rows(rows));
+
+        let payload =
+            encode_point_record::<SweepRow>(9, &PointRecord::Failed("boom at layer 3".into()));
+        let (idx, rec) = decode_point_record::<SweepRow>(&payload).unwrap();
+        assert_eq!(idx, 9);
+        assert_eq!(rec, PointRecord::Failed("boom at layer 3".into()));
+        // malformed kind byte
+        let mut bad = payload.clone();
+        bad[0] = 7;
+        assert!(decode_point_record::<SweepRow>(&bad).is_none());
+    }
+
+    #[test]
+    fn ga_checkpoint_round_trips_bit_exact() {
+        let cp = crate::ga::nsga2::GaCheckpoint {
+            generation: 11,
+            rng: [1, u64::MAX, 3, 0xDEAD_BEEF],
+            population: vec![
+                (vec![true, false, true], vec![1.5, f64::from_bits(0x7FF0000000000000)]),
+                (vec![false; 5], vec![0.0, -0.0, 2.5]),
+            ],
+        };
+        let payload = encode_ga_checkpoint(&cp);
+        let back = decode_ga_checkpoint(&payload).unwrap();
+        assert_eq!(back.generation, cp.generation);
+        assert_eq!(back.rng, cp.rng);
+        assert_eq!(back.population.len(), cp.population.len());
+        for ((ga, oa), (gb, ob)) in cp.population.iter().zip(&back.population) {
+            assert_eq!(ga, gb);
+            let bits_a: Vec<u64> = oa.iter().map(|o| o.to_bits()).collect();
+            let bits_b: Vec<u64> = ob.iter().map(|o| o.to_bits()).collect();
+            assert_eq!(bits_a, bits_b);
+        }
+        for cut in 0..payload.len() {
+            assert!(decode_ga_checkpoint(&payload[..cut]).is_none());
+        }
+    }
+
+    #[test]
+    fn space_digest_tracks_point_identity_and_order() {
+        struct Ids(Vec<&'static str>);
+        impl DesignSpace for Ids {
+            type Point = &'static str;
+            fn points(&self) -> &[&'static str] {
+                &self.0
+            }
+            fn point_id(&self, index: usize) -> String {
+                self.0[index].to_string()
+            }
+        }
+        let a = space_digest(&Ids(vec!["x", "y"]));
+        assert_eq!(a, space_digest(&Ids(vec!["x", "y"])));
+        assert_ne!(a, space_digest(&Ids(vec!["y", "x"])), "order matters");
+        assert_ne!(a, space_digest(&Ids(vec!["x", "y", "z"])));
+        assert_ne!(a, space_digest(&Ids(vec![])));
+    }
+}

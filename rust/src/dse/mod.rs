@@ -33,14 +33,17 @@
 //! per-device memory, cluster size) through NSGA-II rank-0 dominance.
 
 pub mod engine;
+pub mod journal;
 pub mod prefilter;
 pub mod search;
 pub mod space;
 pub mod sweep;
 
 pub use engine::{
-    map_parallel, DesignSpace, Engine, EngineConfig, Evaluate, HeteroSpace, Objectives,
+    map_parallel, try_map_parallel, DesignSpace, Engine, EngineConfig, EngineError, Evaluate,
+    HeteroSpace, Objectives, PointFailure, RunOutcome,
 };
+pub use journal::{journal_record_bounds, JournalRow, PointRecord};
 pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};
 pub use search::{
     best_latency_factorization, cluster_search, front_factorizations, front_recall,
@@ -50,7 +53,7 @@ pub use search::{
 pub use space::{ClusterPoint, ClusterSpace, DesignPoint};
 pub use sweep::{
     evaluate_point, evaluate_point_cached, evaluate_point_prepared, pareto_front,
-    run_cluster_sweep, run_hetero_sweep, run_sweep, run_sweep_stats, ClusterEval, ClusterRow,
-    ClusterScratch, FusionStrategy, HeteroEval, Mode, SweepConfig, SweepEval, SweepPartitions,
-    SweepRow,
+    run_cluster_sweep, run_cluster_sweep_outcome, run_hetero_sweep, run_hetero_sweep_outcome,
+    run_sweep, run_sweep_outcome, run_sweep_stats, ClusterEval, ClusterRow, ClusterScratch,
+    FusionStrategy, HeteroEval, Mode, SweepConfig, SweepEval, SweepPartitions, SweepRow,
 };

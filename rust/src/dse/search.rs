@@ -14,12 +14,12 @@
 
 use std::time::Instant;
 
-use super::engine::Engine;
+use super::engine::{Engine, PointFailure};
 use super::prefilter::{accel_to_cfg, graph_to_layers, select_survivors};
 use super::space::{ClusterSpace, DesignPoint};
 use super::sweep::{
-    pareto_front, run_cluster_sweep, run_hetero_sweep, ClusterRow, Mode, SweepConfig, SweepEval,
-    SweepPartitions, SweepRow,
+    pareto_front, run_cluster_sweep_outcome, run_hetero_sweep_outcome, ClusterRow, Mode,
+    SweepConfig, SweepEval, SweepPartitions, SweepRow,
 };
 use crate::autodiff::TrainingGraph;
 use crate::eval::CacheStats;
@@ -42,6 +42,12 @@ pub struct SearchOutcome {
     /// Group-cost cache counters of the detailed stage (zeros with
     /// `cfg.use_cache` off).
     pub cache: CacheStats,
+    /// Survivors whose detailed evaluation panicked — isolated by the
+    /// engine, reported with original point indices, absent from `rows`.
+    pub failures: Vec<PointFailure>,
+    /// Survivors replayed from a resumed `cfg.run_dir` journal instead of
+    /// re-evaluated (0 without `--resume`).
+    pub resumed: usize,
 }
 
 /// Search `points` for the best training configurations of (`fwd`,`train`).
@@ -78,25 +84,31 @@ pub fn search(
     let parts = SweepPartitions::prepare(fwd, train, &cfg);
     let survivor_points: Vec<DesignPoint> = survivors.iter().map(|&i| points[i]).collect();
     let eval = SweepEval { fwd, train, parts: &parts, cfg: &cfg };
-    let (mut rows, stats) =
-        Engine::new(cfg.engine()).run(&survivor_points[..], &eval, |_, _| {});
+    let mut out = Engine::new(cfg.engine())
+        .run_journaled(&survivor_points[..], &eval, |_, _| {})
+        .unwrap_or_else(|e| panic!("search failed: {e}"));
     // the engine indexes the survivor slice; report original point indices
-    for r in rows.iter_mut() {
+    for r in out.rows.iter_mut() {
         r.index = survivors[r.index];
     }
+    for f in out.failures.iter_mut() {
+        f.index = survivors[f.index];
+    }
     // total_cmp: a degenerate survivor must not abort the whole search
-    rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
+    out.rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
     let detail_secs = t1.elapsed().as_secs_f64();
 
-    let front = pareto_front(&rows);
+    let front = pareto_front(&out.rows);
     SearchOutcome {
         n_points: points.len(),
-        n_survivors: rows.len(),
-        rows,
+        n_survivors: out.rows.len() + out.failures.len(),
+        rows: out.rows,
         front,
         prefilter_secs,
         detail_secs,
-        cache: stats,
+        cache: out.cache,
+        failures: out.failures,
+        resumed: out.resumed,
     }
 }
 
@@ -117,12 +129,18 @@ pub struct ClusterSearchOutcome {
     /// Group-cost cache counters of the stage schedules (zeros with
     /// `cfg.use_cache` off).
     pub cache: CacheStats,
+    /// Deployment points whose evaluation panicked — isolated by the
+    /// engine, absent from `rows`.
+    pub failures: Vec<PointFailure>,
+    /// Points replayed from a resumed `cfg.run_dir` journal instead of
+    /// re-evaluated (0 without `--resume`).
+    pub resumed: usize,
 }
 
 /// Enumerate and evaluate a [`ClusterSpace`] for one training workload
 /// and rank it with the four-objective NSGA-II dominance set. The inner
 /// per-device stage schedules share the sweep's group-cost cache (see
-/// [`run_cluster_sweep`]); `cfg.mapping` is the single-device mapping and
+/// [`run_cluster_sweep_outcome`]); `cfg.mapping` is the single-device mapping and
 /// `builder(batch)` must be pure in the batch size.
 pub fn cluster_search(
     space: &ClusterSpace,
@@ -134,15 +152,18 @@ pub fn cluster_search(
 ) -> ClusterSearchOutcome {
     let t0 = Instant::now();
     let points = space.enumerate();
-    let (rows, cache) = run_cluster_sweep(&points, full_batch, builder, accel, cfg, progress);
-    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
+    let out = run_cluster_sweep_outcome(&points, full_batch, builder, accel, cfg, progress)
+        .unwrap_or_else(|e| panic!("cluster search failed: {e}"));
+    let objectives: Vec<Vec<f64>> = out.rows.iter().map(|r| r.objectives().to_vec()).collect();
     let front = pareto_rank0(&objectives);
     ClusterSearchOutcome {
         n_points: points.len(),
         front,
-        rows,
+        rows: out.rows,
         secs: t0.elapsed().as_secs_f64(),
-        cache,
+        cache: out.cache,
+        failures: out.failures,
+        resumed: out.resumed,
     }
 }
 
@@ -163,15 +184,18 @@ pub fn hetero_search(
 ) -> ClusterSearchOutcome {
     let t0 = Instant::now();
     let points = ClusterSpace::enumerate_hetero(hc, microbatches);
-    let (rows, cache) = run_hetero_sweep(&points, hc, full_batch, builder, cfg, progress);
-    let objectives: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
+    let out = run_hetero_sweep_outcome(&points, hc, full_batch, builder, cfg, progress)
+        .unwrap_or_else(|e| panic!("hetero search failed: {e}"));
+    let objectives: Vec<Vec<f64>> = out.rows.iter().map(|r| r.objectives().to_vec()).collect();
     let front = pareto_rank0(&objectives);
     ClusterSearchOutcome {
         n_points: points.len(),
         front,
-        rows,
+        rows: out.rows,
         secs: t0.elapsed().as_secs_f64(),
-        cache,
+        cache: out.cache,
+        failures: out.failures,
+        resumed: out.resumed,
     }
 }
 

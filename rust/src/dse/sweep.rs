@@ -14,7 +14,9 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use super::engine::{Engine, EngineConfig, Evaluate, HeteroSpace, Objectives};
+use super::engine::{
+    Engine, EngineConfig, EngineError, Evaluate, HeteroSpace, Objectives, RunOutcome,
+};
 use super::space::{ClusterPoint, DesignPoint};
 use crate::autodiff::TrainingGraph;
 use crate::eval::{CacheStats, CostCache};
@@ -100,6 +102,14 @@ pub struct SweepConfig {
     /// Bound the cache to ~this many entries with the sharded CLOCK policy
     /// (`--cache-cap`); 0 (the default) = unbounded.
     pub cache_cap: usize,
+    /// Journal every completed point to this directory (`--run-dir`),
+    /// making the sweep resumable after a crash; `None` (the default)
+    /// journals nothing. See `dse::journal`.
+    pub run_dir: Option<PathBuf>,
+    /// Replay a `run_dir` journal left by a killed run (`--resume`):
+    /// completed points are restored bit-identically, only the remainder
+    /// evaluates.
+    pub resume: bool,
 }
 
 impl Default for SweepConfig {
@@ -113,6 +123,8 @@ impl Default for SweepConfig {
             use_cache: true,
             cache_dir: None,
             cache_cap: 0,
+            run_dir: None,
+            resume: false,
         }
     }
 }
@@ -128,6 +140,8 @@ impl SweepConfig {
             use_cache: self.use_cache,
             cache_dir: self.cache_dir.clone(),
             cache_cap: self.cache_cap,
+            run_dir: self.run_dir.clone(),
+            resume: self.resume,
         }
     }
 }
@@ -267,14 +281,51 @@ pub fn run_sweep_stats(
     cfg: &SweepConfig,
     progress: impl FnMut(usize, usize),
 ) -> (Vec<SweepRow>, CacheStats) {
+    unwrap_outcome("sweep", run_sweep_outcome(points, fwd, train, cfg, progress))
+}
+
+/// The full-fidelity sweep entry point: [`run_sweep_stats`] with the
+/// crash-safety layer (`cfg.run_dir`/`cfg.resume`) and structured
+/// degradation — isolated per-point failures come back as data in
+/// [`RunOutcome::failures`] instead of aborting the sweep, and the only
+/// `Err` is a harness defect ([`EngineError::MissingIndices`]).
+pub fn run_sweep_outcome(
+    points: &[DesignPoint],
+    fwd: &Graph,
+    train: &Graph,
+    cfg: &SweepConfig,
+    progress: impl FnMut(usize, usize),
+) -> Result<RunOutcome<SweepRow>, EngineError> {
     // fusion is accelerator-independent: solve once, share across workers
     let parts = SweepPartitions::prepare(fwd, train, cfg);
     let eval = SweepEval { fwd, train, parts: &parts, cfg };
-    let (mut rows, stats) = Engine::new(cfg.engine()).run(points, &eval, progress);
+    let mut out = Engine::new(cfg.engine()).run_journaled(points, &eval, progress)?;
     // historical row order: inference before training per point, whatever
     // order `cfg.modes` listed them in
-    rows.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
-    (rows, stats)
+    out.rows.sort_by_key(|r| (r.index, r.mode != Mode::Inference));
+    Ok(out)
+}
+
+/// Legacy-shape adapter: the `(rows, stats)` entry points predate the
+/// structured [`RunOutcome`] and keep their fail-loud contract — an
+/// engine error or an isolated point failure panics with the structured
+/// diagnostic (fault-free runs, the only thing their callers execute,
+/// never take these branches).
+fn unwrap_outcome<R>(
+    what: &str,
+    outcome: Result<RunOutcome<R>, EngineError>,
+) -> (Vec<R>, CacheStats) {
+    let out = outcome.unwrap_or_else(|e| panic!("{what} failed: {e}"));
+    if let Some(f) = out.failures.first() {
+        panic!(
+            "{what} point {} ({}) failed: {} ({} failed point(s) total)",
+            f.index,
+            f.point_id,
+            f.diagnostic,
+            out.failures.len()
+        );
+    }
+    (out.rows, out.cache)
 }
 
 // ---------------------------------------------------------------------------
@@ -430,8 +481,24 @@ pub fn run_cluster_sweep(
     cfg: &SweepConfig,
     progress: impl FnMut(usize, usize),
 ) -> (Vec<ClusterRow>, CacheStats) {
+    unwrap_outcome(
+        "cluster sweep",
+        run_cluster_sweep_outcome(points, full_batch, builder, accel, cfg, progress),
+    )
+}
+
+/// [`run_cluster_sweep`] with the crash-safety layer and structured
+/// degradation — see [`run_sweep_outcome`].
+pub fn run_cluster_sweep_outcome(
+    points: &[ClusterPoint],
+    full_batch: usize,
+    builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
+    accel: &Accelerator,
+    cfg: &SweepConfig,
+    progress: impl FnMut(usize, usize),
+) -> Result<RunOutcome<ClusterRow>, EngineError> {
     let eval = ClusterEval { full_batch, builder, accel, mapping: cfg.mapping };
-    Engine::new(cfg.engine()).run(points, &eval, progress)
+    Engine::new(cfg.engine()).run_journaled(points, &eval, progress)
 }
 
 /// The heterogeneous stage-placement sweep as an [`Evaluate`] instance:
@@ -503,9 +570,25 @@ pub fn run_hetero_sweep(
     cfg: &SweepConfig,
     progress: impl FnMut(usize, usize),
 ) -> (Vec<ClusterRow>, CacheStats) {
+    unwrap_outcome(
+        "hetero sweep",
+        run_hetero_sweep_outcome(points, hc, full_batch, builder, cfg, progress),
+    )
+}
+
+/// [`run_hetero_sweep`] with the crash-safety layer and structured
+/// degradation — see [`run_sweep_outcome`].
+pub fn run_hetero_sweep_outcome(
+    points: &[HeteroPoint],
+    hc: &HeteroCluster,
+    full_batch: usize,
+    builder: &(dyn Fn(usize) -> TrainingGraph + Sync),
+    cfg: &SweepConfig,
+    progress: impl FnMut(usize, usize),
+) -> Result<RunOutcome<ClusterRow>, EngineError> {
     let space = HeteroSpace { points, cluster: hc };
     let eval = HeteroEval { hc, full_batch, builder, mapping: cfg.mapping };
-    Engine::new(cfg.engine()).run(&space, &eval, progress)
+    Engine::new(cfg.engine()).run_journaled(&space, &eval, progress)
 }
 
 /// Pareto front over (latency, energy): indices of non-dominated rows, in

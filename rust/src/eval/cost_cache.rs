@@ -115,6 +115,15 @@ pub struct CacheStats {
     /// Entries displaced by the CLOCK policy to admit new ones (always 0
     /// for an unbounded cache).
     pub evictions: u64,
+    /// Snapshot files present but refused at open time (stale contract,
+    /// foreign hasher, truncation, bit rot). Without this counter a lost
+    /// snapshot is indistinguishable from a first run.
+    pub snapshots_rejected: u64,
+    /// Rejected snapshots successfully moved to their `.corrupt` sidecar.
+    pub snapshots_quarantined: u64,
+    /// Transient snapshot-write failures absorbed by the bounded
+    /// retry-with-backoff in [`super::persist::persist_cost_cache`].
+    pub io_retries: u64,
 }
 
 impl CacheStats {
@@ -137,6 +146,9 @@ pub struct CostCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    snapshots_rejected: AtomicU64,
+    snapshots_quarantined: AtomicU64,
+    io_retries: AtomicU64,
 }
 
 impl CostCache {
@@ -157,6 +169,9 @@ impl CostCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            snapshots_rejected: AtomicU64::new(0),
+            snapshots_quarantined: AtomicU64::new(0),
+            io_retries: AtomicU64::new(0),
         }
     }
 
@@ -213,12 +228,31 @@ impl CostCache {
         out
     }
 
+    /// Record a snapshot file that failed verification at open time.
+    pub fn note_snapshot_rejected(&self) {
+        self.snapshots_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rejected snapshot successfully moved to its `.corrupt`
+    /// sidecar for post-mortem inspection.
+    pub fn note_snapshot_quarantined(&self) {
+        self.snapshots_quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one transient snapshot-write failure that was retried.
+    pub fn note_io_retry(&self) {
+        self.io_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.shards.iter().map(|s| s.read().unwrap().len()).sum(),
             evictions: self.evictions.load(Ordering::Relaxed),
+            snapshots_rejected: self.snapshots_rejected.load(Ordering::Relaxed),
+            snapshots_quarantined: self.snapshots_quarantined.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
         }
     }
 
@@ -228,6 +262,9 @@ impl CostCache {
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
         self.evictions.store(0, Ordering::Relaxed);
+        self.snapshots_rejected.store(0, Ordering::Relaxed);
+        self.snapshots_quarantined.store(0, Ordering::Relaxed);
+        self.io_retries.store(0, Ordering::Relaxed);
     }
 }
 
@@ -312,6 +349,21 @@ mod tests {
         // a re-miss after eviction recomputes the same pure value
         let key = 0u128; // shard 0, first inserted, certainly evicted
         assert_eq!(cache.get_or_compute(key, || make(0)).cycles, 0.0);
+    }
+
+    #[test]
+    fn lifecycle_counters_accumulate_and_reset() {
+        let cache = CostCache::new();
+        cache.note_snapshot_rejected();
+        cache.note_snapshot_quarantined();
+        cache.note_io_retry();
+        cache.note_io_retry();
+        let s = cache.stats();
+        assert_eq!(s.snapshots_rejected, 1);
+        assert_eq!(s.snapshots_quarantined, 1);
+        assert_eq!(s.io_retries, 2);
+        cache.reset_counters();
+        assert_eq!(cache.stats(), CacheStats::default());
     }
 
     #[test]

@@ -78,25 +78,31 @@ pub fn hasher_fingerprint() -> u128 {
 }
 
 // ---------------------------------------------------------------------------
-// codec primitives
+// codec primitives — shared with `dse::journal`, which writes its records
+// with the same little-endian layout and FNV-1a checksums
 // ---------------------------------------------------------------------------
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
-fn put_u128(buf: &mut Vec<u8>, v: u128) {
+pub fn put_u128(buf: &mut Vec<u8>, v: u128) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
     buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+/// Length-prefixed UTF-8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 /// FNV-1a over the file body — corruption detection only (the structural
 /// guards live in the header).
-fn fnv64(bytes: &[u8]) -> u64 {
+pub fn fnv64(bytes: &[u8]) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325u64;
     for &b in bytes {
         h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
@@ -104,13 +110,19 @@ fn fnv64(bytes: &[u8]) -> u64 {
     h
 }
 
-struct Reader<'a> {
+/// Bounds-checked little-endian cursor over a snapshot/journal payload.
+/// Every accessor returns `None` past the end — decoding never panics on
+/// torn or corrupt input.
+pub struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
         let end = self.pos.checked_add(n)?;
         if end > self.buf.len() {
             return None;
@@ -119,19 +131,24 @@ impl<'a> Reader<'a> {
         self.pos = end;
         Some(out)
     }
-    fn u32(&mut self) -> Option<u32> {
+    pub fn u32(&mut self) -> Option<u32> {
         Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
     }
-    fn u64(&mut self) -> Option<u64> {
+    pub fn u64(&mut self) -> Option<u64> {
         Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
     }
-    fn u128(&mut self) -> Option<u128> {
+    pub fn u128(&mut self) -> Option<u128> {
         Some(u128::from_le_bytes(self.take(16)?.try_into().ok()?))
     }
-    fn f64(&mut self) -> Option<f64> {
+    pub fn f64(&mut self) -> Option<f64> {
         Some(f64::from_bits(self.u64()?))
     }
-    fn exhausted(&self) -> bool {
+    /// Inverse of [`put_str`].
+    pub fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+    pub fn exhausted(&self) -> bool {
         self.pos == self.buf.len()
     }
 }
@@ -173,11 +190,15 @@ fn verified_reader<'a>(buf: &'a [u8], magic: &[u8; 8]) -> Option<Reader<'a>> {
 }
 
 /// Checksum, then write-to-temp + rename (atomic on POSIX within one
-/// filesystem).
+/// filesystem). Consults the fault-injection hooks
+/// ([`crate::util::fault`]) so tests can fail or corrupt exactly the n-th
+/// snapshot write; with no plan armed both hooks are no-ops.
 fn write_snapshot(dir: &Path, file: &str, mut buf: Vec<u8>) -> io::Result<PathBuf> {
     fs::create_dir_all(dir)?;
     let sum = fnv64(&buf);
     put_u64(&mut buf, sum);
+    crate::util::fault::write_gate(file)?;
+    crate::util::fault::maybe_flip(&mut buf);
     let path = dir.join(file);
     let tmp = dir.join(format!("{file}.tmp.{}", std::process::id()));
     fs::write(&tmp, &buf)?;
@@ -236,9 +257,40 @@ pub fn load_cost_cache(dir: &Path, capacity: usize) -> Option<CostCache> {
 
 /// Load-or-new: warm-load the snapshot under `dir` when one is present
 /// and valid, else start a fresh cache of `capacity` entries.
+///
+/// A snapshot file that exists but is **rejected** (stale contract,
+/// foreign hasher, truncation, bit rot) is not silently discarded: it is
+/// quarantined to a `cost_cache.bin.corrupt` sidecar, a warning names the
+/// file and the fallback, and the returned cold cache carries the event
+/// in its [`CacheStats`] (`snapshots_rejected`/`snapshots_quarantined`) so
+/// the end-of-run report can distinguish "first run" from "snapshot lost".
+/// [`load_cost_cache`] itself stays pure — it never touches the file.
 pub fn open_cost_cache(dir: Option<&Path>, capacity: usize) -> CostCache {
     if let Some(d) = dir {
         if let Some(cache) = load_cost_cache(d, capacity) {
+            return cache;
+        }
+        let path = d.join(COST_SNAPSHOT_FILE);
+        if path.exists() {
+            let cache = CostCache::with_capacity(capacity);
+            cache.note_snapshot_rejected();
+            let quarantine = d.join(format!("{COST_SNAPSHOT_FILE}.corrupt"));
+            match fs::rename(&path, &quarantine) {
+                Ok(()) => {
+                    cache.note_snapshot_quarantined();
+                    eprintln!(
+                        "warning: rejected cost-cache snapshot {} (stale, truncated or corrupt); \
+                         quarantined to {} and starting cold",
+                        path.display(),
+                        quarantine.display()
+                    );
+                }
+                Err(e) => eprintln!(
+                    "warning: rejected cost-cache snapshot {} (stale, truncated or corrupt) \
+                     and could not quarantine it ({e}); starting cold",
+                    path.display()
+                ),
+            }
             return cache;
         }
     }
@@ -246,11 +298,28 @@ pub fn open_cost_cache(dir: Option<&Path>, capacity: usize) -> CostCache {
 }
 
 /// Best-effort save for end-of-run hooks: a persistence failure must not
-/// fail the sweep that produced the results, so it only warns.
+/// fail the sweep that produced the results. Transient IO errors get a
+/// bounded retry with exponential backoff (counted in
+/// [`CacheStats::io_retries`]); only after the final attempt fails does a
+/// warning — never a panic, never silence — report the loss.
 pub fn persist_cost_cache(cache: &CostCache, dir: Option<&Path>) {
+    const ATTEMPTS: u32 = 3;
     if let Some(d) = dir {
-        if let Err(e) = save_cost_cache(cache, d) {
-            eprintln!("warning: failed to persist cost cache to {}: {e}", d.display());
+        let mut delay = std::time::Duration::from_millis(10);
+        for attempt in 1..=ATTEMPTS {
+            match save_cost_cache(cache, d) {
+                Ok(_) => return,
+                Err(e) if attempt < ATTEMPTS => {
+                    cache.note_io_retry();
+                    std::thread::sleep(delay);
+                    delay *= 2;
+                    let _ = e;
+                }
+                Err(e) => eprintln!(
+                    "warning: failed to persist cost cache to {} after {ATTEMPTS} attempts: {e}",
+                    d.display()
+                ),
+            }
         }
     }
 }
@@ -521,6 +590,44 @@ mod tests {
         assert!(load_ga_warmstart(&dir, 0xABCE, width).is_none());
         assert!(load_ga_warmstart(&dir, 0xABCD, width + 1).is_none());
         fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejected_snapshot_is_quarantined_with_counters() {
+        let dir = tmp_dir("quarantine");
+        let cache = CostCache::new();
+        cache.insert_loaded(1, cost(1));
+        let path = save_cost_cache(&cache, &dir).unwrap();
+        let mut bad = fs::read(&path).unwrap();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        fs::write(&path, &bad).unwrap();
+
+        let cold = open_cost_cache(Some(&dir), 0);
+        let s = cold.stats();
+        assert_eq!(s.entries, 0, "nothing from a corrupt snapshot may load");
+        assert_eq!(s.snapshots_rejected, 1);
+        assert_eq!(s.snapshots_quarantined, 1);
+        assert!(!path.exists(), "rejected snapshot must be moved aside");
+        let sidecar = dir.join(format!("{COST_SNAPSHOT_FILE}.corrupt"));
+        assert!(sidecar.exists(), "quarantine sidecar missing");
+        assert_eq!(fs::read(&sidecar).unwrap(), bad, "sidecar must hold the evidence");
+
+        // with the corpse moved aside, the next open is a plain first run
+        let again = open_cost_cache(Some(&dir), 0);
+        assert_eq!(again.stats().snapshots_rejected, 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reader_str_round_trips_and_rejects_torn_input() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "hello monet");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.str().as_deref(), Some("hello monet"));
+        assert!(r.exhausted());
+        let mut torn = Reader::new(&buf[..buf.len() - 1]);
+        assert!(torn.str().is_none(), "short payload must not decode");
     }
 
     #[test]

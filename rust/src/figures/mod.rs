@@ -10,8 +10,8 @@ use crate::autodiff::{
     stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
 };
 use crate::dse::{
-    cluster_search, hetero_search, pareto_front, run_sweep_stats, ClusterSearchOutcome,
-    ClusterSpace, DesignPoint, Mode, SweepConfig, SweepRow,
+    cluster_search, hetero_search, pareto_front, run_sweep_outcome, ClusterSearchOutcome,
+    ClusterSpace, DesignPoint, Mode, PointFailure, SweepConfig, SweepRow,
 };
 use crate::eval::{persist, CacheStats};
 use crate::fusion::{fuse, fuse_greedy, fuse_manual_conv_bn_relu, FusionConstraints};
@@ -52,6 +52,12 @@ pub struct EdgeSweep {
     /// Counters of the group-cost cache shared across the sweep's worker
     /// pool (zeros when the sweep ran with `--no-cache`).
     pub cache: CacheStats,
+    /// Design points whose evaluation panicked, isolated by the engine
+    /// (empty on a clean run; such points have no rows).
+    pub failures: Vec<PointFailure>,
+    /// Points replayed from the `--run-dir` journal instead of
+    /// re-evaluated (0 without `--resume`).
+    pub resumed: usize,
 }
 
 /// Sweep the Table II space (strided) with ResNet-18 fwd + training graphs
@@ -62,18 +68,23 @@ pub fn fig1_fig8_edge_sweep(
     out_dir: Option<&Path>,
     progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
-    fig1_fig8_edge_sweep_cfg(stride, true, None, 0, out_dir, progress)
+    fig1_fig8_edge_sweep_cfg(stride, true, None, 0, None, false, out_dir, progress)
 }
 
 /// [`fig1_fig8_edge_sweep`] with the cache lifecycle knobs: `use_cache`
 /// (`--no-cache` escape hatch, wins over everything), `cache_dir`
 /// (`--cache-dir` persistence) and `cache_cap` (`--cache-cap` bound,
-/// 0 = unbounded).
+/// 0 = unbounded) — plus the crash-safety knobs: `run_dir` (`--run-dir`
+/// journaling) and `resume` (`--resume` replay of completed points).
+/// Points whose evaluation panics are isolated into
+/// [`EdgeSweep::failures`] rather than aborting the sweep.
 pub fn fig1_fig8_edge_sweep_cfg(
     stride: usize,
     use_cache: bool,
     cache_dir: Option<&Path>,
     cache_cap: usize,
+    run_dir: Option<&Path>,
+    resume: bool,
     out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
@@ -88,14 +99,16 @@ pub fn fig1_fig8_edge_sweep_cfg(
         use_cache,
         cache_dir: cache_dir.map(|p| p.to_path_buf()),
         cache_cap,
+        run_dir: run_dir.map(|p| p.to_path_buf()),
+        resume,
         ..Default::default()
     };
-    let (rows, cache) =
-        run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
+    let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n))
+        .unwrap_or_else(|e| panic!("edge sweep failed: {e}"));
     if let Some(dir) = out_dir {
-        csv_of_sweep(&dir.join("fig1_fig8_edge_sweep.csv"), &rows).unwrap();
+        csv_of_sweep(&dir.join("fig1_fig8_edge_sweep.csv"), &out.rows).unwrap();
     }
-    EdgeSweep { rows, cache }
+    EdgeSweep { rows: out.rows, cache: out.cache, failures: out.failures, resumed: out.resumed }
 }
 
 // ---------------------------------------------------------------------------
@@ -232,15 +245,23 @@ pub fn fig5_cluster_pareto(
     use_cache: bool,
     cache_dir: Option<&Path>,
     cache_cap: usize,
+    run_dir: Option<&Path>,
+    resume: bool,
     out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> Vec<ClusterFigure> {
     let (space, accel, mapping) = cluster_setup(max_devices);
-    let cfg = SweepConfig {
+    // each series journals into its own subdirectory: the two homogeneous
+    // series enumerate the *same* space (identical point ids → identical
+    // journal digest), so sharing one journal file would let a resume
+    // replay one workload's rows into the other
+    let cfg = |series: &str| SweepConfig {
         mapping,
         use_cache,
         cache_dir: cache_dir.map(|p| p.to_path_buf()),
         cache_cap,
+        run_dir: run_dir.map(|p| p.join(series)),
+        resume,
         ..Default::default()
     };
     let resnet_outcome = cluster_search(
@@ -248,18 +269,24 @@ pub fn fig5_cluster_pareto(
         full_batch,
         &cluster_resnet18_builder,
         &accel,
-        &cfg,
+        &cfg("resnet18"),
         &mut progress,
     );
-    let gpt2_outcome =
-        cluster_search(&space, full_batch, &cluster_gpt2_builder, &accel, &cfg, &mut progress);
+    let gpt2_outcome = cluster_search(
+        &space,
+        full_batch,
+        &cluster_gpt2_builder,
+        &accel,
+        &cfg("gpt2"),
+        &mut progress,
+    );
     let pool = cluster_mixed_pool(max_devices);
     let mixed_outcome = hetero_search(
         &pool,
         &space.microbatches,
         full_batch,
         &cluster_gpt2_builder,
-        &cfg,
+        &cfg("gpt2-mixed"),
         &mut progress,
     );
     let figures = vec![
@@ -315,16 +342,18 @@ pub fn fig9_fusemax_sweep(
     out_dir: Option<&Path>,
     progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
-    fig9_fusemax_sweep_cfg(stride, true, None, 0, out_dir, progress)
+    fig9_fusemax_sweep_cfg(stride, true, None, 0, None, false, out_dir, progress)
 }
 
-/// [`fig9_fusemax_sweep`] with the cache lifecycle knobs (see
-/// [`fig1_fig8_edge_sweep_cfg`]).
+/// [`fig9_fusemax_sweep`] with the cache lifecycle and crash-safety knobs
+/// (see [`fig1_fig8_edge_sweep_cfg`]).
 pub fn fig9_fusemax_sweep_cfg(
     stride: usize,
     use_cache: bool,
     cache_dir: Option<&Path>,
     cache_cap: usize,
+    run_dir: Option<&Path>,
+    resume: bool,
     out_dir: Option<&Path>,
     mut progress: impl FnMut(usize, usize),
 ) -> EdgeSweep {
@@ -339,14 +368,16 @@ pub fn fig9_fusemax_sweep_cfg(
         use_cache,
         cache_dir: cache_dir.map(|p| p.to_path_buf()),
         cache_cap,
+        run_dir: run_dir.map(|p| p.to_path_buf()),
+        resume,
         ..Default::default()
     };
-    let (rows, cache) =
-        run_sweep_stats(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n));
+    let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |d, n| progress(d, n))
+        .unwrap_or_else(|e| panic!("fusemax sweep failed: {e}"));
     if let Some(dir) = out_dir {
-        csv_of_sweep(&dir.join("fig9_fusemax_sweep.csv"), &rows).unwrap();
+        csv_of_sweep(&dir.join("fig9_fusemax_sweep.csv"), &out.rows).unwrap();
     }
-    EdgeSweep { rows, cache }
+    EdgeSweep { rows: out.rows, cache: out.cache, failures: out.failures, resumed: out.resumed }
 }
 
 // ---------------------------------------------------------------------------
@@ -538,7 +569,7 @@ pub fn fig12_checkpoint_ga(
     ga: &GaConfig,
     out_dir: Option<&Path>,
 ) -> (Vec<GaFrontRow>, TrainingGraph) {
-    fig12_checkpoint_ga_cached(ga, None, 0, out_dir)
+    fig12_checkpoint_ga_cached(ga, None, 0, None, false, out_dir)
 }
 
 /// [`fig12_checkpoint_ga`] with the cross-restart cache lifecycle: with a
@@ -546,11 +577,18 @@ pub fn fig12_checkpoint_ga(
 /// warm-starts from the previous run's front + genome memo
 /// (`CheckpointProblem::optimize_persistent`), so a restarted run resumes
 /// from the previous Pareto front. `cache_cap` bounds the cost cache
-/// (0 = unbounded).
+/// (0 = unbounded). With a `run_dir`, every completed generation is
+/// journaled (`CheckpointProblem::optimize_journaled`) and `resume`
+/// restarts from the last intact checkpoint — `run_dir` wins over the
+/// warm-start path (the journal resumes the *same* search; a warm start
+/// seeds a *new* one), while the cost cache is warm-loaded/persisted
+/// either way.
 pub fn fig12_checkpoint_ga_cached(
     ga: &GaConfig,
     cache_dir: Option<&Path>,
     cache_cap: usize,
+    run_dir: Option<&Path>,
+    resume: bool,
     out_dir: Option<&Path>,
 ) -> (Vec<GaFrontRow>, TrainingGraph) {
     let fwd = resnet18(1, 224, 1000);
@@ -567,9 +605,10 @@ pub fn fig12_checkpoint_ga_cached(
         persist::open_cost_cache(cache_dir, cache_cap),
     );
     let (base_lat, base_en, _) = problem.evaluate(&CheckpointPlan::save_all());
-    let front = match cache_dir {
-        Some(dir) => problem.optimize_persistent(ga, dir),
-        None => problem.optimize(ga),
+    let front = match (run_dir, cache_dir) {
+        (Some(rd), _) => problem.optimize_journaled(ga, rd, resume),
+        (None, Some(dir)) => problem.optimize_persistent(ga, dir),
+        (None, None) => problem.optimize(ga),
     };
     persist::persist_cost_cache(problem.cost_cache(), cache_dir);
     let rows: Vec<GaFrontRow> = front
@@ -762,7 +801,7 @@ mod tests {
 
     #[test]
     fn fig5_covers_all_series_with_nonempty_fronts() {
-        let figs = fig5_cluster_pareto(2, 4, true, None, 0, None, |_, _| {});
+        let figs = fig5_cluster_pareto(2, 4, true, None, 0, None, false, None, |_, _| {});
         assert_eq!(figs.len(), 3);
         assert_eq!(figs[0].workload, "resnet18");
         assert_eq!(figs[1].workload, "gpt2");

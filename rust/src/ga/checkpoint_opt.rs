@@ -15,7 +15,8 @@ use crate::autodiff::{
 };
 use crate::eval::{persist, CacheStats, CostCache, StructuralHasher};
 use crate::fusion::{fuse_greedy, FusionConstraints};
-use crate::ga::nsga2::{nsga2_with_memo, GaConfig, Genome, Individual, Objectives};
+use crate::dse::journal;
+use crate::ga::nsga2::{nsga2_resumable, nsga2_with_memo, GaConfig, Genome, Individual, Objectives};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
 use crate::scheduler::{schedule_with_cache, Partition};
@@ -271,6 +272,91 @@ impl<'a> CheckpointProblem<'a> {
         front
     }
 
+    /// Identity of one GA *run* for journal/resume purposes: the problem's
+    /// [`warm_key`](CheckpointProblem::warm_key) plus every GA parameter
+    /// that shapes the genome stream (population, generations, rates, seed,
+    /// injected seeds). `workers` is deliberately excluded — the front is
+    /// bit-identical for any worker count, so a journal written with 8
+    /// workers resumes cleanly under 1.
+    pub fn ga_run_digest(&self, ga: &GaConfig) -> u128 {
+        let mut h = StructuralHasher::new();
+        self.warm_key().hash(&mut h);
+        self.candidates.len().hash(&mut h);
+        ga.population.hash(&mut h);
+        ga.generations.hash(&mut h);
+        ga.crossover_p.to_bits().hash(&mut h);
+        ga.mutation_p.to_bits().hash(&mut h);
+        ga.seed.hash(&mut h);
+        ga.seeds.hash(&mut h);
+        h.finish128()
+    }
+
+    /// [`CheckpointProblem::optimize`] with crash-safe per-generation
+    /// journaling: every completed generation appends a checksummed
+    /// [`GaCheckpoint`](crate::ga::nsga2::GaCheckpoint) to
+    /// `run_dir/ga_journal.bin`, and `resume` restarts the search from the
+    /// last intact checkpoint whose run digest matches — so a GA killed
+    /// mid-search loses at most one generation, and the resumed front is
+    /// bit-identical to an uninterrupted run.
+    ///
+    /// Failure semantics: an unopenable journal (unwritable `run_dir`,
+    /// quarantined mismatched file) degrades to a plain unjournaled
+    /// [`optimize`](CheckpointProblem::optimize) with a warning; a write
+    /// failure mid-run warns once and the search continues without further
+    /// checkpoints. Neither path panics or changes the returned front.
+    pub fn optimize_journaled(
+        &self,
+        ga: &GaConfig,
+        run_dir: &Path,
+        resume: bool,
+    ) -> Vec<CheckpointSolution> {
+        let digest = self.ga_run_digest(ga);
+        let path = run_dir.join(journal::GA_JOURNAL_FILE);
+        let (payloads, file) = match journal::open_journal(
+            &path,
+            journal::GA_JOURNAL_MAGIC,
+            digest,
+            resume,
+        ) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!(
+                    "warning: GA journal {} unavailable ({e}); running without crash-safety",
+                    path.display()
+                );
+                return self.optimize(ga);
+            }
+        };
+        let resume_cp = payloads.iter().rev().find_map(|p| journal::decode_ga_checkpoint(p));
+        let mut file = file;
+        let mut dead = false;
+        let front = nsga2_resumable(
+            self.candidates.len(),
+            ga,
+            |genome| {
+                let plan = self.genome_to_plan(genome);
+                let (lat, en, mem) = self.evaluate(&plan);
+                vec![lat, en, mem as f64]
+            },
+            &mut HashMap::new(),
+            resume_cp,
+            |cp| {
+                if dead {
+                    return;
+                }
+                if let Err(e) = file.append_record(&journal::encode_ga_checkpoint(cp)) {
+                    dead = true;
+                    eprintln!(
+                        "warning: GA journal write to {} failed ({e}); \
+                         continuing without further checkpoints",
+                        path.display()
+                    );
+                }
+            },
+        );
+        self.solutions_from(front)
+    }
+
     fn solutions_from(&self, front: Vec<Individual>) -> Vec<CheckpointSolution> {
         let baseline = stored_activation_bytes(self.tg, &CheckpointPlan::save_all()) / 2;
         let mut out: Vec<CheckpointSolution> = front
@@ -363,6 +449,43 @@ mod tests {
         let s = p.cache_stats();
         // the second evaluation reuses the transform and every group cost
         assert!(s.hits > 0, "cost cache never hit: {s:?}");
+    }
+
+    #[test]
+    fn journaled_ga_matches_unjournaled_and_resumes_bit_identically() {
+        let (tg, accel) = problem_parts();
+        let p = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let ga = GaConfig { population: 8, generations: 3, workers: 1, ..Default::default() };
+        let dir = std::env::temp_dir()
+            .join(format!("monet_ga_journal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let key = |v: &[CheckpointSolution]| {
+            v.iter()
+                .map(|s| {
+                    (
+                        s.plan.clone(),
+                        s.latency_cycles.to_bits(),
+                        s.energy_pj.to_bits(),
+                        s.stored_bytes_fp16,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let plain = p.optimize(&ga);
+        let journaled = p.optimize_journaled(&ga, &dir, false);
+        assert_eq!(key(&plain), key(&journaled), "journaling changed the front");
+        assert!(dir.join(journal::GA_JOURNAL_FILE).exists(), "no journal written");
+        // resume from the completed journal: the final checkpoint replays
+        // the front without re-running a single generation
+        let resumed = p.optimize_journaled(&ga, &dir, true);
+        assert_eq!(key(&plain), key(&resumed), "resume diverged");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -20,5 +20,6 @@ pub mod nsga2;
 
 pub use checkpoint_opt::{CheckpointProblem, CheckpointSolution};
 pub use nsga2::{
-    dominates, nsga2, nsga2_with_memo, pareto_rank0, GaConfig, Genome, Individual, Objectives,
+    dominates, nsga2, nsga2_resumable, nsga2_with_memo, pareto_rank0, GaCheckpoint, GaConfig,
+    Genome, Individual, Objectives,
 };

@@ -180,6 +180,38 @@ impl Default for GaConfig {
     }
 }
 
+/// Everything needed to restart NSGA-II exactly where a previous run
+/// stopped: the generation about to run, the RNG's raw state, and the
+/// surviving population as `(genome, objectives)` pairs. Rank and crowding
+/// are deliberately absent — the generation loop recomputes both before
+/// using them, so a population resumed from a checkpoint walks the same
+/// path as one that never stopped.
+///
+/// Checkpoints are emitted by [`nsga2_resumable`] after the initial
+/// population is evaluated (`generation == 0`) and after every completed
+/// generation (`generation == g + 1`); `dse::journal` gives them a
+/// checksummed on-disk encoding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaCheckpoint {
+    /// Index of the next generation to run (0 = none run yet).
+    pub generation: usize,
+    /// Raw xoshiro256** state at the checkpoint boundary.
+    pub rng: [u64; 4],
+    /// Surviving population, in truncation order.
+    pub population: Vec<(Genome, Objectives)>,
+}
+
+fn checkpoint_of(generation: usize, rng: &Rng, pop: &[Individual]) -> GaCheckpoint {
+    GaCheckpoint {
+        generation,
+        rng: rng.state(),
+        population: pop
+            .iter()
+            .map(|i| (i.genome.clone(), i.objectives.clone()))
+            .collect(),
+    }
+}
+
 /// Turn a batch of genomes into ranked-zero individuals, evaluating only
 /// genomes absent from `memo` (first occurrence wins within the batch) and
 /// fanning fresh evaluations over `workers` threads of the generic DSE
@@ -242,35 +274,83 @@ pub fn nsga2_with_memo(
     eval: impl Fn(&Genome) -> Objectives + Sync,
     memo: &mut HashMap<Genome, Objectives>,
 ) -> Vec<Individual> {
-    let mut rng = Rng::seed_from_u64(cfg.seed);
-    // initial population: all-false (save everything = the baseline),
-    // all-true, any injected warm-start genomes (previous front), then
-    // random genomes with varying density. Injected genomes consume no
-    // RNG, so an empty `cfg.seeds` reproduces the unseeded stream.
-    let injected: Vec<Genome> = cfg
-        .seeds
-        .iter()
-        .take(cfg.population.saturating_sub(2))
-        .map(|s| {
-            let mut g = s.clone();
-            g.resize(width, false);
-            g
-        })
-        .collect();
-    let seeds: Vec<Genome> = (0..cfg.population)
-        .map(|i| match i {
-            0 => vec![false; width],
-            1 => vec![true; width],
-            i if i >= 2 && i - 2 < injected.len() => injected[i - 2].clone(),
-            _ => {
-                let p = rng.range_f64(0.05, 0.8);
-                (0..width).map(|_| rng.bool(p)).collect()
-            }
-        })
-        .collect();
-    let mut pop = evaluate_batch(seeds, &eval, memo, cfg.workers);
+    nsga2_resumable(width, cfg, eval, memo, None, |_| {})
+}
 
-    for _gen in 0..cfg.generations {
+/// [`nsga2_with_memo`] with crash-safe checkpointing: `on_generation` is
+/// invoked with a [`GaCheckpoint`] after the initial population is
+/// evaluated and again after every completed generation, and `resume`
+/// restarts the search from a previously emitted checkpoint.
+///
+/// Determinism contract: the hook consumes no RNG and observes no shared
+/// state, so a run with a no-op hook is bit-identical to [`nsga2_with_memo`],
+/// and a run resumed from checkpoint `g` produces the same final front,
+/// genome for genome, as one that ran `0..generations` uninterrupted —
+/// the checkpoint restores the exact RNG state and surviving population,
+/// and rank/crowding are recomputed before each use. A checkpoint whose
+/// `generation` is at or past `cfg.generations` skips the loop entirely
+/// and goes straight to front extraction.
+///
+/// Checkpointed `(genome, objectives)` pairs are trusted the same way
+/// warm-memo entries are: they must come from the same pure `eval`. They
+/// are inserted into `memo` on resume so surviving genomes are never
+/// re-evaluated.
+pub fn nsga2_resumable(
+    width: usize,
+    cfg: &GaConfig,
+    eval: impl Fn(&Genome) -> Objectives + Sync,
+    memo: &mut HashMap<Genome, Objectives>,
+    resume: Option<GaCheckpoint>,
+    mut on_generation: impl FnMut(&GaCheckpoint),
+) -> Vec<Individual> {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let start_gen;
+    let mut pop;
+    if let Some(cp) = resume {
+        // restart exactly where the checkpoint was taken: RNG state and
+        // the surviving population (rank/crowding are recomputed below)
+        rng = Rng::from_state(cp.rng);
+        start_gen = cp.generation.min(cfg.generations);
+        pop = cp
+            .population
+            .into_iter()
+            .map(|(genome, objectives)| {
+                memo.insert(genome.clone(), objectives.clone());
+                Individual { genome, objectives, rank: 0, crowding: 0.0 }
+            })
+            .collect::<Vec<_>>();
+    } else {
+        // initial population: all-false (save everything = the baseline),
+        // all-true, any injected warm-start genomes (previous front), then
+        // random genomes with varying density. Injected genomes consume no
+        // RNG, so an empty `cfg.seeds` reproduces the unseeded stream.
+        let injected: Vec<Genome> = cfg
+            .seeds
+            .iter()
+            .take(cfg.population.saturating_sub(2))
+            .map(|s| {
+                let mut g = s.clone();
+                g.resize(width, false);
+                g
+            })
+            .collect();
+        let seeds: Vec<Genome> = (0..cfg.population)
+            .map(|i| match i {
+                0 => vec![false; width],
+                1 => vec![true; width],
+                i if i >= 2 && i - 2 < injected.len() => injected[i - 2].clone(),
+                _ => {
+                    let p = rng.range_f64(0.05, 0.8);
+                    (0..width).map(|_| rng.bool(p)).collect()
+                }
+            })
+            .collect();
+        start_gen = 0;
+        pop = evaluate_batch(seeds, &eval, memo, cfg.workers);
+        on_generation(&checkpoint_of(0, &rng, &pop));
+    }
+
+    for _gen in start_gen..cfg.generations {
         let fronts = non_dominated_sort(&mut pop);
         for f in &fronts {
             crowding_distance(&mut pop, f);
@@ -320,6 +400,7 @@ pub fn nsga2_with_memo(
                 .then(b.crowding.total_cmp(&a.crowding))
         });
         pop.truncate(cfg.population);
+        on_generation(&checkpoint_of(_gen + 1, &rng, &pop));
     }
 
     // return the deduplicated first front
@@ -558,6 +639,62 @@ mod tests {
             v.iter().map(|i| (i.genome.clone(), i.objectives.clone())).collect::<Vec<_>>()
         };
         assert_eq!(key(&cold), key(&warm));
+    }
+
+    #[test]
+    fn resumed_run_matches_uninterrupted_at_every_checkpoint() {
+        let cfg = GaConfig { population: 10, generations: 6, workers: 1, ..Default::default() };
+        let eval = |g: &Genome| -> Objectives {
+            let ones = g.iter().filter(|&&b| b).count() as f64;
+            let runs = g.windows(2).filter(|p| p[0] != p[1]).count() as f64;
+            vec![ones, runs]
+        };
+        let key = |v: Vec<Individual>| {
+            v.into_iter().map(|i| (i.genome, i.objectives)).collect::<Vec<_>>()
+        };
+        let mut cps: Vec<GaCheckpoint> = vec![];
+        let full = key(nsga2_resumable(9, &cfg, eval, &mut HashMap::new(), None, |cp| {
+            cps.push(cp.clone())
+        }));
+        // one checkpoint after init + one per generation
+        assert_eq!(cps.len(), cfg.generations + 1);
+        assert_eq!(cps[0].generation, 0);
+        assert_eq!(cps.last().unwrap().generation, cfg.generations);
+        // restarting from every boundary reproduces the uninterrupted front
+        for cp in cps {
+            let resumed =
+                key(nsga2_resumable(9, &cfg, eval, &mut HashMap::new(), Some(cp), |_| {}));
+            assert_eq!(resumed, full, "resume diverged from the uninterrupted run");
+        }
+    }
+
+    #[test]
+    fn resume_from_the_final_checkpoint_evaluates_nothing() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cfg = GaConfig { population: 8, generations: 3, workers: 1, ..Default::default() };
+        let eval = |g: &Genome| vec![g.iter().filter(|&&b| b).count() as f64];
+        let mut last: Option<GaCheckpoint> = None;
+        let full = nsga2_resumable(6, &cfg, eval, &mut HashMap::new(), None, |cp| {
+            last = Some(cp.clone())
+        });
+        let cp = last.expect("a checkpoint was emitted");
+        let calls = AtomicUsize::new(0);
+        let resumed = nsga2_resumable(
+            6,
+            &cfg,
+            |g: &Genome| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                vec![g.iter().filter(|&&b| b).count() as f64]
+            },
+            &mut HashMap::new(),
+            Some(cp),
+            |_| {},
+        );
+        assert_eq!(calls.load(Ordering::Relaxed), 0, "final checkpoint must skip the loop");
+        let key = |v: &[Individual]| {
+            v.iter().map(|i| (i.genome.clone(), i.objectives.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&full), key(&resumed));
     }
 
     #[test]

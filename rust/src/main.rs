@@ -85,7 +85,20 @@ OPTIONS
                   which deliberately resumes (and so changes) the search.
                   --no-cache wins over this.
   --cache-cap N   bound the group-cost cache to ~N entries (second-chance/
-                  CLOCK eviction; default 0 = unbounded)";
+                  CLOCK eviction; default 0 = unbounded)
+  --run-dir DIR   crash-safety: journal every completed design point (and
+                  every completed GA generation for fig12) into DIR as it
+                  finishes (fig1/fig5/fig9/search/cluster/all/fig12). Each
+                  command journals into its own subdirectory of DIR, so
+                  one DIR serves a whole `all` run. Rows are bit-identical
+                  with journaling on or off
+  --resume        replay completed work from the --run-dir journal and
+                  evaluate only the remainder (requires --run-dir). A torn
+                  record from a mid-write crash is truncated back to the
+                  last intact record; a journal from a different design
+                  space or format is quarantined to a .corrupt sidecar and
+                  the run starts fresh. Resumed results are bit-identical
+                  to an uninterrupted run";
 
 fn usage() -> ! {
     eprintln!("{USAGE}");
@@ -108,6 +121,8 @@ struct Args {
     no_cache: bool,
     cache_dir: Option<PathBuf>,
     cache_cap: usize,
+    run_dir: Option<PathBuf>,
+    resume: bool,
 }
 
 fn parse_args() -> Args {
@@ -127,6 +142,8 @@ fn parse_args() -> Args {
         no_cache: false,
         cache_dir: None,
         cache_cap: 0,
+        run_dir: None,
+        resume: false,
     };
     let mut it = std::env::args().skip(1);
     match it.next() {
@@ -150,10 +167,93 @@ fn parse_args() -> Args {
             "--no-cache" => args.no_cache = true,
             "--cache-dir" => args.cache_dir = Some(val().into()),
             "--cache-cap" => args.cache_cap = val().parse().unwrap_or_else(|_| usage()),
+            "--run-dir" => args.run_dir = Some(val().into()),
+            "--resume" => args.resume = true,
             _ => usage(),
         }
     }
+    if args.resume && args.run_dir.is_none() {
+        eprintln!("error: --resume requires --run-dir (there is no journal to resume from)");
+        std::process::exit(2);
+    }
+    // validate directory-taking flags at parse time: a typo'd or
+    // unwritable path must fail now with an actionable message, not hours
+    // into a sweep when the first snapshot/journal write happens
+    if let Some(dir) = &args.cache_dir {
+        validate_dir_flag("--cache-dir", dir);
+    }
+    if let Some(dir) = &args.run_dir {
+        validate_dir_flag("--run-dir", dir);
+    }
     args
+}
+
+/// Parse-time check of a directory-valued flag: the path must be an
+/// existing directory or creatable (existing parent), and writable.
+fn validate_dir_flag(flag: &str, path: &std::path::Path) {
+    let fail = |msg: String| -> ! {
+        eprintln!("error: {flag} {}: {msg}", path.display());
+        std::process::exit(2);
+    };
+    if path.exists() {
+        if !path.is_dir() {
+            fail("exists but is not a directory".into());
+        }
+    } else {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() && !parent.exists() {
+                fail(format!(
+                    "parent directory {} does not exist (create it or fix the path)",
+                    parent.display()
+                ));
+            }
+        }
+        if let Err(e) = std::fs::create_dir_all(path) {
+            fail(format!("cannot create directory: {e}"));
+        }
+    }
+    let probe = path.join(".monet_write_probe");
+    match std::fs::write(&probe, b"probe") {
+        Ok(()) => {
+            let _ = std::fs::remove_file(&probe);
+        }
+        Err(e) => fail(format!("directory is not writable: {e}")),
+    }
+}
+
+/// Per-command subdirectory of `--run-dir`, so `all` (and the two-workload
+/// `cluster` command) never share one journal file between runs over
+/// different — or identically-enumerated but differently-modeled — spaces.
+fn run_subdir(args: &Args, name: &str) -> Option<PathBuf> {
+    args.run_dir.as_ref().map(|d| d.join(name))
+}
+
+/// Print resume/failure diagnostics for one sweep family; returns `Err`
+/// when any point failed so the process exits nonzero (degraded results
+/// must not look like clean ones), while the completed rows and CSVs
+/// above remain usable.
+fn report_run_health(
+    what: &str,
+    resumed: usize,
+    failures: &[monet::dse::PointFailure],
+) -> Result<()> {
+    if resumed > 0 {
+        eprintln!("  {what}: {resumed} point(s) replayed from the run journal");
+    }
+    for f in failures {
+        eprintln!(
+            "  {what}: point {} ({}) FAILED and was isolated: {}",
+            f.index, f.point_id, f.diagnostic
+        );
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        bail!(
+            "{what}: {} design point(s) failed (results above are complete for all other points)",
+            failures.len()
+        )
+    }
 }
 
 fn progress(done: usize, total: usize) {
@@ -207,22 +307,35 @@ fn print_cache_stats(what: &str, s: &monet::eval::CacheStats) {
             s.evictions
         );
     }
+    // lifecycle trouble is rare — only surface the counters when nonzero
+    if s.snapshots_rejected + s.snapshots_quarantined + s.io_retries > 0 {
+        eprintln!(
+            "  {what} cache lifecycle: {} snapshot(s) rejected, {} quarantined, {} IO retr{}",
+            s.snapshots_rejected,
+            s.snapshots_quarantined,
+            s.io_retries,
+            if s.io_retries == 1 { "y" } else { "ies" }
+        );
+    }
 }
 
 fn cmd_fig1(args: &Args) -> Result<()> {
     eprintln!("Edge-TPU sweep (Table II, stride {})...", args.stride);
+    let run_dir = run_subdir(args, "fig1");
     let sweep = figures::fig1_fig8_edge_sweep_cfg(
         args.stride,
         !args.no_cache,
         args.cache_dir.as_deref(),
         args.cache_cap,
+        run_dir.as_deref(),
+        args.resume,
         Some(&args.out),
         progress,
     );
     render_sweep("Fig 1/8: ResNet-18 on Edge TPU", &sweep.rows);
     print_cache_stats("sweep", &sweep.cache);
     println!("rows: {} → {}/fig1_fig8_edge_sweep.csv", sweep.rows.len(), args.out.display());
-    Ok(())
+    report_run_health("fig1", sweep.resumed, &sweep.failures)
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {
@@ -258,12 +371,15 @@ fn cmd_fig5(args: &Args) -> Result<()> {
         "cluster-parallelism space (≤{} devices, batch {}, edge→datacenter)...",
         args.devices, args.batch
     );
+    let run_dir = run_subdir(args, "fig5");
     let figs = figures::fig5_cluster_pareto(
         args.devices,
         args.batch,
         !args.no_cache,
         args.cache_dir.as_deref(),
         args.cache_cap,
+        run_dir.as_deref(),
+        args.resume,
         Some(&args.out),
         progress,
     );
@@ -279,6 +395,10 @@ fn cmd_fig5(args: &Args) -> Result<()> {
         print_cache_stats("cluster", &f.outcome.cache);
     }
     println!("rows → {}/fig5_cluster_pareto.csv", args.out.display());
+    for f in &figs {
+        let what = format!("fig5 [{}]", f.workload);
+        report_run_health(&what, f.outcome.resumed, &f.outcome.failures)?;
+    }
     Ok(())
 }
 
@@ -317,11 +437,16 @@ fn cmd_cluster_hetero(args: &Args, spec: &str) -> Result<()> {
         "gpt2" => vec!["gpt2"],
         _ => usage(),
     };
-    let cfg = SweepConfig {
+    // per-workload journal subdirectories: both workloads enumerate the
+    // same placement space (same point ids → same journal digest), so they
+    // must not share one journal file
+    let cfg = |series: &str| SweepConfig {
         mapping: MappingConfig::edge_tpu_default(),
         use_cache: !args.no_cache,
         cache_dir: args.cache_dir.clone(),
         cache_cap: args.cache_cap,
+        run_dir: run_subdir(args, &format!("cluster-hetero/{series}")),
+        resume: args.resume,
         ..Default::default()
     };
     // the uniform extremes the mixed front is measured against: latency vs
@@ -352,7 +477,7 @@ fn cmd_cluster_hetero(args: &Args, spec: &str) -> Result<()> {
         } else {
             &cluster_gpt2_builder
         };
-        let out = hetero_search(&hc, &microbatches, args.batch, builder, &cfg, progress);
+        let out = hetero_search(&hc, &microbatches, args.batch, builder, &cfg(name), progress);
         println!(
             "\n[{name} | {}] {} deployment points evaluated in {:.2}s",
             hc.label(),
@@ -360,6 +485,7 @@ fn cmd_cluster_hetero(args: &Args, spec: &str) -> Result<()> {
             out.secs
         );
         print_cache_stats("cluster", &out.cache);
+        report_run_health(&format!("cluster [{name}]"), out.resumed, &out.failures)?;
         let facts = front_factorizations(&out);
         println!(
             "4-objective Pareto front (latency, energy, mem/device, devices): {} points, {} distinct dp/pp/tp factorizations",
@@ -441,11 +567,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // figure always model the same space on the same hardware
     let (space, accel, mapping) = cluster_setup(args.devices);
     let top_devices = *space.device_counts.last().unwrap_or(&1);
-    let cfg = SweepConfig {
+    // per-workload journal subdirectories — both workloads sweep the same
+    // space (same point ids → same journal digest)
+    let cfg = |series: &str| SweepConfig {
         mapping,
         use_cache: !args.no_cache,
         cache_dir: args.cache_dir.clone(),
         cache_cap: args.cache_cap,
+        run_dir: run_subdir(args, &format!("cluster/{series}")),
+        resume: args.resume,
         ..Default::default()
     };
     for name in wanted {
@@ -458,9 +588,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         // the canonical fig5 workload builders, so `cluster` and `fig5`
         // can never drift apart on what they model
         let out: ClusterSearchOutcome = if name == "resnet18" {
-            cluster_search(&space, args.batch, &cluster_resnet18_builder, &accel, &cfg, progress)
+            let b = &cluster_resnet18_builder;
+            cluster_search(&space, args.batch, b, &accel, &cfg(name), progress)
         } else {
-            cluster_search(&space, args.batch, &cluster_gpt2_builder, &accel, &cfg, progress)
+            let b = &cluster_gpt2_builder;
+            cluster_search(&space, args.batch, b, &accel, &cfg(name), progress)
         };
         println!(
             "\n[{name}] {} deployment points evaluated in {:.2}s",
@@ -468,6 +600,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             out.secs
         );
         print_cache_stats("cluster", &out.cache);
+        report_run_health(&format!("cluster [{name}]"), out.resumed, &out.failures)?;
         let facts = front_factorizations(&out);
         println!(
             "4-objective Pareto front (latency, energy, mem/device, devices): {} points, {} distinct dp/pp/tp factorizations",
@@ -509,18 +642,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
 fn cmd_fig9(args: &Args) -> Result<()> {
     eprintln!("FuseMax sweep (Table III, stride {})...", args.stride);
+    let run_dir = run_subdir(args, "fig9");
     let sweep = figures::fig9_fusemax_sweep_cfg(
         args.stride,
         !args.no_cache,
         args.cache_dir.as_deref(),
         args.cache_cap,
+        run_dir.as_deref(),
+        args.resume,
         Some(&args.out),
         progress,
     );
     render_sweep("Fig 9: GPT-2 on FuseMax", &sweep.rows);
     print_cache_stats("sweep", &sweep.cache);
     println!("rows: {} → {}/fig9_fusemax_sweep.csv", sweep.rows.len(), args.out.display());
-    Ok(())
+    report_run_health("fig9", sweep.resumed, &sweep.failures)
 }
 
 fn cmd_fig10(args: &Args) -> Result<()> {
@@ -557,8 +693,22 @@ fn cmd_fig12(args: &Args) -> Result<()> {
     if cache_dir.is_some() {
         eprintln!("  (cache lifecycle on: cost cache + GA warm-start persisted)");
     }
-    let (rows, _tg) =
-        figures::fig12_checkpoint_ga_cached(&ga, cache_dir, args.cache_cap, Some(&args.out));
+    let run_dir = run_subdir(args, "fig12");
+    if let Some(rd) = &run_dir {
+        eprintln!(
+            "  (crash-safety on: per-generation checkpoints journaled to {}{})",
+            rd.display(),
+            if args.resume { ", resuming from the last intact one" } else { "" }
+        );
+    }
+    let (rows, _tg) = figures::fig12_checkpoint_ga_cached(
+        &ga,
+        cache_dir,
+        args.cache_cap,
+        run_dir.as_deref(),
+        args.resume,
+        Some(&args.out),
+    );
     println!("Fig 12: Pareto front (ResNet-18 training, Adam, batch 1, 224²)");
     println!("{:>10} {:>14} {:>12} {:>12}", "mem saved", "stored (MiB16)", "Δlatency", "Δenergy");
     for r in &rows {
@@ -660,6 +810,8 @@ fn cmd_search(args: &Args) -> Result<()> {
         use_cache: !args.no_cache,
         cache_dir: args.cache_dir.clone(),
         cache_cap: args.cache_cap,
+        run_dir: run_subdir(args, "search"),
+        resume: args.resume,
         ..Default::default()
     };
     // the AOT Pallas kernel if artifacts exist, native twin otherwise
@@ -688,7 +840,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         );
     }
     println!("\nPareto front: {} configs", out.front.len());
-    Ok(())
+    report_run_health("search", out.resumed, &out.failures)
 }
 
 fn cmd_ablation(args: &Args) -> Result<()> {

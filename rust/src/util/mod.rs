@@ -3,6 +3,7 @@
 //! in this offline build environment — see DESIGN.md §Substitutions.
 
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod proptest;
 pub mod rng;

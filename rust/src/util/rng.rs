@@ -80,6 +80,18 @@ impl Rng {
             xs.swap(i, self.usize(i + 1));
         }
     }
+
+    /// Snapshot the full generator state. `from_state(state())` resumes
+    /// the stream exactly — the hook GA run journals use to make a
+    /// resumed search bit-identical to an uninterrupted one.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +142,18 @@ mod tests {
         s.sort_unstable();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn state_round_trip_resumes_the_stream() {
+        let mut a = Rng::seed_from_u64(17);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

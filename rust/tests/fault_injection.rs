@@ -1,0 +1,419 @@
+//! Crash-safety pins for the robustness layer, driven by the
+//! deterministic fault-injection harness (`monet::util::fault`):
+//!
+//! * **resume ≡ uninterrupted** — for every sweep family (single-device,
+//!   homogeneous cluster, heterogeneous placement) and for the GA, a run
+//!   killed at *any* journal record boundary (and mid-record: torn tails
+//!   truncate) resumes to rows/fronts bit-identical to a run that was
+//!   never interrupted;
+//! * **panic isolation** — an injected per-point panic becomes one
+//!   `PointFailure`, every other point still evaluates, and the failure
+//!   itself is journaled so a resume replays it instead of re-panicking;
+//! * **cache-lifecycle degradation** — an injected snapshot byte-flip is
+//!   rejected + quarantined on the next run (counted in `CacheStats`)
+//!   without changing a row; an injected transient write failure is
+//!   retried (counted) and the snapshot still lands.
+//!
+//! Tests that install a `FaultPlan` mutate process-global hooks, and the
+//! journal/snapshot writers consult those globals — so **every** test in
+//! this binary serializes behind `FAULT_LOCK` (the CI job additionally
+//! runs this binary with `--test-threads=1`).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use monet::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
+use monet::dse::journal::{GA_JOURNAL_FILE, RUN_JOURNAL_FILE};
+use monet::dse::{
+    journal_record_bounds, run_cluster_sweep_outcome, run_hetero_sweep_outcome, run_sweep_outcome,
+    ClusterRow, ClusterSpace, DesignPoint, SweepConfig, SweepRow,
+};
+use monet::eval::persist;
+use monet::figures::cluster_resnet18_builder;
+use monet::fusion::FusionConstraints;
+use monet::ga::{CheckpointProblem, CheckpointSolution, GaConfig};
+use monet::hardware::accelerator::Accelerator;
+use monet::hardware::presets::EdgeTpuParams;
+use monet::mapping::MappingConfig;
+use monet::parallelism::{DeviceClass, HeteroCluster, LinkTier};
+use monet::util::fault::{self, FaultPlan};
+use monet::workload::graph::Graph;
+use monet::workload::models::{mlp, resnet18};
+use monet::workload::op::Optimizer;
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Clears the global fault plan even when the test body panics, so one
+/// failing assertion cannot corrupt the rest of the binary.
+struct PlanGuard;
+impl Drop for PlanGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn install(plan: FaultPlan) -> PlanGuard {
+    fault::install(plan);
+    PlanGuard
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("monet_fault_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn sweep_rows_bit_eq(expect: &[SweepRow], got: &[SweepRow], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: row count");
+    for (a, b) in expect.iter().zip(got) {
+        assert_eq!(a.index, b.index, "{what}: index");
+        assert_eq!(a.label, b.label, "{what}: label");
+        assert_eq!(a.mode, b.mode, "{what}: mode");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(), "{what}: latency");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(a.peak_dram_bytes, b.peak_dram_bytes, "{what}: peak dram");
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{what}: utilization");
+    }
+}
+
+fn cluster_rows_bit_eq(expect: &[ClusterRow], got: &[ClusterRow], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: row count");
+    for (a, b) in expect.iter().zip(got) {
+        assert_eq!(a.index, b.index, "{what}: index");
+        assert_eq!(a.label, b.label, "{what}: label");
+        assert_eq!(a.placement, b.placement, "{what}: placement");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(), "{what}: latency");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes, "{what}: mem");
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits(), "{what}: comm");
+    }
+}
+
+fn edge_fixture() -> (Graph, TrainingGraph, Vec<DesignPoint>) {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+    );
+    let points = DesignPoint::edge_space(3000);
+    assert!(points.len() >= 2);
+    (fwd, tg, points)
+}
+
+/// Single-device family: journaling is invisible in the rows, and a run
+/// killed at **every** record boundary — plus mid-record, exercising
+/// torn-tail truncation — resumes bit-identically to the uninterrupted
+/// run, replaying exactly the surviving records.
+#[test]
+fn edge_sweep_resumes_bit_identically_at_every_record_boundary() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (fwd, tg, points) = edge_fixture();
+    let dir = tmp_dir("edge_resume");
+    let cfg = |run: bool, resume: bool| SweepConfig {
+        workers: 2,
+        run_dir: run.then(|| dir.clone()),
+        resume,
+        ..Default::default()
+    };
+
+    let plain = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(false, false), |_, _| {})
+        .expect("unjournaled run");
+    let full = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(true, false), |_, _| {})
+        .expect("journaled run");
+    assert!(full.is_clean(), "{:?}", full.failures);
+    assert_eq!(full.resumed, 0);
+    sweep_rows_bit_eq(&plain.rows, &full.rows, "journaling changed rows");
+
+    let jpath = dir.join(RUN_JOURNAL_FILE);
+    let complete = std::fs::read(&jpath).expect("journal missing");
+    let bounds = journal_record_bounds(&jpath).expect("journal unreadable");
+    assert_eq!(bounds.len(), points.len() + 1, "one journal record per point");
+
+    for (k, &cut) in bounds.iter().enumerate() {
+        std::fs::write(&jpath, &complete[..cut as usize]).unwrap();
+        let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(true, true), |_, _| {})
+            .expect("resumed run");
+        assert_eq!(out.resumed, k, "cut at record boundary {k}: replay count");
+        sweep_rows_bit_eq(&full.rows, &out.rows, &format!("resume from boundary {k}"));
+    }
+
+    // torn tail: a cut strictly inside a record truncates back to the
+    // last good boundary and resumes from there
+    let mid = bounds[1] + 3;
+    assert!(mid < *bounds.last().unwrap(), "space too small for a torn cut");
+    std::fs::write(&jpath, &complete[..mid as usize]).unwrap();
+    let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(true, true), |_, _| {})
+        .expect("torn resume");
+    assert_eq!(out.resumed, 1, "torn tail must truncate to the last good record");
+    sweep_rows_bit_eq(&full.rows, &out.rows, "resume from torn tail");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cluster families (homogeneous device×tier×strategy grid and
+/// heterogeneous stage placements): same resume-at-every-boundary
+/// bit-identity as the single-device family.
+#[test]
+fn cluster_and_hetero_sweeps_resume_bit_identically() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let full_batch = 4usize;
+
+    // homogeneous
+    let space = ClusterSpace {
+        device_counts: vec![1, 2],
+        tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+        microbatches: vec![2],
+    };
+    let points = space.enumerate();
+    assert!(points.len() >= 6);
+    let dir = tmp_dir("cluster_resume");
+    let cfg = |run: bool, resume: bool| SweepConfig {
+        mapping,
+        workers: 2,
+        run_dir: run.then(|| dir.clone()),
+        resume,
+        ..Default::default()
+    };
+    let full = run_cluster_sweep_outcome(
+        &points,
+        full_batch,
+        &cluster_resnet18_builder,
+        &accel,
+        &cfg(true, false),
+        |_, _| {},
+    )
+    .expect("cluster run");
+    assert!(full.is_clean(), "{:?}", full.failures);
+    let jpath = dir.join(RUN_JOURNAL_FILE);
+    let complete = std::fs::read(&jpath).unwrap();
+    let bounds = journal_record_bounds(&jpath).unwrap();
+    assert_eq!(bounds.len(), points.len() + 1);
+    for (k, &cut) in bounds.iter().enumerate() {
+        std::fs::write(&jpath, &complete[..cut as usize]).unwrap();
+        let out = run_cluster_sweep_outcome(
+            &points,
+            full_batch,
+            &cluster_resnet18_builder,
+            &accel,
+            &cfg(true, true),
+            |_, _| {},
+        )
+        .expect("cluster resume");
+        assert_eq!(out.resumed, k, "cluster boundary {k}");
+        cluster_rows_bit_eq(&full.rows, &out.rows, &format!("cluster resume {k}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // heterogeneous
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 1), (DeviceClass::datacenter(), 1)]);
+    let hpoints = ClusterSpace::enumerate_hetero(&hc, &[2]);
+    assert!(hpoints.len() >= 4);
+    let hdir = tmp_dir("hetero_resume");
+    let hcfg = |resume: bool| SweepConfig {
+        mapping,
+        workers: 2,
+        run_dir: Some(hdir.clone()),
+        resume,
+        ..Default::default()
+    };
+    let hfull = run_hetero_sweep_outcome(
+        &hpoints,
+        &hc,
+        full_batch,
+        &cluster_resnet18_builder,
+        &hcfg(false),
+        |_, _| {},
+    )
+    .expect("hetero run");
+    assert!(hfull.is_clean(), "{:?}", hfull.failures);
+    let hjpath = hdir.join(RUN_JOURNAL_FILE);
+    let hcomplete = std::fs::read(&hjpath).unwrap();
+    let hbounds = journal_record_bounds(&hjpath).unwrap();
+    assert_eq!(hbounds.len(), hpoints.len() + 1);
+    for (k, &cut) in hbounds.iter().enumerate() {
+        std::fs::write(&hjpath, &hcomplete[..cut as usize]).unwrap();
+        let out = run_hetero_sweep_outcome(
+            &hpoints,
+            &hc,
+            full_batch,
+            &cluster_resnet18_builder,
+            &hcfg(true),
+            |_, _| {},
+        )
+        .expect("hetero resume");
+        assert_eq!(out.resumed, k, "hetero boundary {k}");
+        cluster_rows_bit_eq(&hfull.rows, &out.rows, &format!("hetero resume {k}"));
+    }
+    std::fs::remove_dir_all(&hdir).ok();
+}
+
+/// An injected panic on one point must not take down the sweep: the
+/// point becomes a `PointFailure` carrying the panic message, every
+/// other point's rows are bit-identical to a clean run, the failure is
+/// journaled, and a resume (fault cleared) replays the failure rather
+/// than re-evaluating or forgetting the point.
+#[test]
+fn injected_panic_is_isolated_journaled_and_replayed_on_resume() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (fwd, tg, points) = edge_fixture();
+    let clean = run_sweep_outcome(
+        &points,
+        &fwd,
+        &tg.graph,
+        &SweepConfig { workers: 2, ..Default::default() },
+        |_, _| {},
+    )
+    .expect("clean run");
+
+    let k = 1usize;
+    let dir = tmp_dir("panic_isolation");
+    let cfg = |resume: bool| SweepConfig {
+        workers: 2,
+        run_dir: Some(dir.clone()),
+        resume,
+        ..Default::default()
+    };
+    let faulted = {
+        let _plan = install(FaultPlan { panic_on_point: Some(k), ..Default::default() });
+        run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(false), |_, _| {})
+            .expect("faulted run must still complete")
+    };
+    assert_eq!(faulted.failures.len(), 1, "{:?}", faulted.failures);
+    assert_eq!(faulted.failures[0].index, k);
+    assert!(
+        faulted.failures[0].diagnostic.contains("injected fault"),
+        "diagnostic lost: {:?}",
+        faulted.failures[0]
+    );
+    assert!(!faulted.failures[0].point_id.is_empty());
+    // every surviving point is bit-identical to the clean run
+    let expect: Vec<SweepRow> = clean.rows.iter().filter(|r| r.index != k).cloned().collect();
+    sweep_rows_bit_eq(&expect, &faulted.rows, "panic isolation rows");
+
+    // the journal holds one record per point — the failure included —
+    // and a resume replays everything, panicking nowhere
+    let bounds = journal_record_bounds(&dir.join(RUN_JOURNAL_FILE)).unwrap();
+    assert_eq!(bounds.len(), points.len() + 1, "failed point must be journaled too");
+    let resumed = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg(true), |_, _| {})
+        .expect("resume after failure");
+    assert_eq!(resumed.resumed, points.len());
+    assert_eq!(resumed.failures, faulted.failures, "failure must replay, not vanish");
+    sweep_rows_bit_eq(&faulted.rows, &resumed.rows, "resume after failure");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// GA family: the per-generation checkpoint journal makes the
+/// checkpointing search resumable from **every** generation boundary,
+/// and each resume reproduces the uninterrupted front bit for bit.
+#[test]
+fn ga_front_resumes_bit_identically_from_every_generation_boundary() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let tg = build_training_graph(
+        &mlp(1, 32, 64, 3, 10),
+        TrainOptions { optimizer: Optimizer::Adam, include_update: true },
+    );
+    let accel: Accelerator = EdgeTpuParams::baseline().build();
+    let p = CheckpointProblem::new(
+        &tg,
+        &accel,
+        MappingConfig::default(),
+        FusionConstraints::default(),
+    );
+    let ga = GaConfig { population: 8, generations: 3, workers: 1, ..Default::default() };
+    let key = |v: &[CheckpointSolution]| {
+        v.iter()
+            .map(|s| {
+                (
+                    s.plan.clone(),
+                    s.latency_cycles.to_bits(),
+                    s.energy_pj.to_bits(),
+                    s.stored_bytes_fp16,
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+
+    let dir = tmp_dir("ga_resume");
+    let full = p.optimize_journaled(&ga, &dir, false);
+    let jpath = dir.join(GA_JOURNAL_FILE);
+    let complete = std::fs::read(&jpath).expect("GA journal missing");
+    let bounds = journal_record_bounds(&jpath).unwrap();
+    // one checkpoint after the initial evaluation + one per generation
+    assert_eq!(bounds.len(), ga.generations + 2, "checkpoint cadence");
+
+    for (g, &cut) in bounds.iter().enumerate() {
+        std::fs::write(&jpath, &complete[..cut as usize]).unwrap();
+        let resumed = p.optimize_journaled(&ga, &dir, true);
+        assert_eq!(key(&full), key(&resumed), "GA resume from checkpoint {g} diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A snapshot corrupted on disk (injected byte-flip during the write)
+/// must be rejected and quarantined on the next run — counted in
+/// `CacheStats`, rows untouched — and the run then writes a fresh valid
+/// snapshot that warm-loads cleanly afterwards.
+#[test]
+fn corrupt_snapshot_is_quarantined_and_the_run_recovers() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (fwd, tg, points) = edge_fixture();
+    let dir = tmp_dir("snapshot_flip");
+    let cfg = SweepConfig { workers: 2, cache_dir: Some(dir.clone()), ..Default::default() };
+    let reference = run_sweep_outcome(
+        &points,
+        &fwd,
+        &tg.graph,
+        &SweepConfig { workers: 2, ..Default::default() },
+        |_, _| {},
+    )
+    .expect("reference run");
+
+    {
+        let _plan = install(FaultPlan { flip_byte: Some(1234), ..Default::default() });
+        run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |_, _| {}).expect("corrupting run");
+    }
+    assert!(dir.join(persist::COST_SNAPSHOT_FILE).exists(), "snapshot never written");
+
+    let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |_, _| {})
+        .expect("run over corrupt snapshot");
+    assert!(out.cache.snapshots_rejected >= 1, "rejection uncounted: {:?}", out.cache);
+    assert!(out.cache.snapshots_quarantined >= 1, "quarantine uncounted: {:?}", out.cache);
+    let sidecar = dir.join(format!("{}.corrupt", persist::COST_SNAPSHOT_FILE));
+    assert!(sidecar.exists(), "corrupt snapshot must be quarantined, not deleted");
+    sweep_rows_bit_eq(&reference.rows, &out.rows, "rows after snapshot loss");
+
+    // the run above re-persisted a valid snapshot: the next run is warm
+    let warm = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |_, _| {})
+        .expect("warm run");
+    assert_eq!(warm.cache.misses, 0, "recovered snapshot did not warm-load: {:?}", warm.cache);
+    assert_eq!(warm.cache.snapshots_rejected, 0, "{:?}", warm.cache);
+    sweep_rows_bit_eq(&reference.rows, &warm.rows, "rows after recovery");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A transient IO failure on the snapshot write (injected: the first
+/// write fails) must be retried with backoff — counted in
+/// `CacheStats::io_retries` — and the snapshot still lands.
+#[test]
+fn transient_snapshot_write_failure_is_retried() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (fwd, tg, points) = edge_fixture();
+    let dir = tmp_dir("write_retry");
+    let cfg = SweepConfig { workers: 2, cache_dir: Some(dir.clone()), ..Default::default() };
+    let out = {
+        let _plan = install(FaultPlan { fail_write: Some(1), ..Default::default() });
+        run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |_, _| {})
+            .expect("run with failing first write")
+    };
+    assert!(out.is_clean(), "{:?}", out.failures);
+    assert!(out.cache.io_retries >= 1, "retry uncounted: {:?}", out.cache);
+    assert!(dir.join(persist::COST_SNAPSHOT_FILE).exists(), "retry never landed the snapshot");
+
+    // and the retried snapshot is valid: the next run warm-loads it
+    let warm = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |_, _| {})
+        .expect("warm run");
+    assert_eq!(warm.cache.misses, 0, "retried snapshot did not warm-load: {:?}", warm.cache);
+    sweep_rows_bit_eq(&out.rows, &warm.rows, "rows across retried persist");
+    std::fs::remove_dir_all(&dir).ok();
+}
