@@ -1,7 +1,10 @@
 //! `cargo bench --bench bench_dse` — throughput of the unified
 //! `dse::engine` harness across the three sweep families (single-device
 //! accelerator points, homogeneous cluster deployments, heterogeneous
-//! stage placements), cold cache vs warm-persisted cache. Emits
+//! stage placements), cold cache vs warm-persisted cache, plus the
+//! `ga-cluster` deployment GA on a 256-device pool (front hypervolume
+//! proxy vs the block-fallback baseline, and the fraction of the
+//! enumerable space visited). Emits
 //! `BENCH_dse.json` (uploaded as a CI artifact alongside
 //! `BENCH_eval.json`) so engine/harness overhead regressions are visible
 //! across PRs.
@@ -9,15 +12,16 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use monet::autodiff::{build_training_graph, TrainOptions};
+use monet::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
 use monet::dse::{
-    run_cluster_sweep, run_hetero_sweep, run_sweep_outcome, run_sweep_stats, ClusterSpace,
-    DesignPoint, SweepConfig,
+    ga_cluster_search, run_cluster_sweep, run_hetero_sweep, run_sweep_outcome, run_sweep_stats,
+    ClusterRow, ClusterSpace, DesignPoint, SweepConfig,
 };
+use monet::ga::{DeploymentGenome, GaConfig};
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
 use monet::parallelism::{DeviceClass, HeteroCluster, LinkTier};
-use monet::workload::models::resnet18;
+use monet::workload::models::{mlp, resnet18};
 use monet::workload::op::Optimizer;
 
 struct FamilyResult {
@@ -173,6 +177,70 @@ fn main() {
         (points.len(), journaled_secs, replay_secs)
     };
 
+    // past-the-wall deployment GA (the ga-cluster family): front quality
+    // vs the block-fallback baseline on a 256-device pool, plus how small
+    // a fraction of the enumerable space the search visits
+    let (ga_evaluated, ga_enumerated, ga_secs, ga_json) = {
+        fn tiny_builder(batch: usize) -> TrainingGraph {
+            build_training_graph(&mlp(batch.max(1), 8, 16, 2, 4), TrainOptions::default())
+        }
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 128),
+            (DeviceClass::server(), 64),
+            (DeviceClass::datacenter(), 64),
+        ]);
+        let ga: GaConfig<DeploymentGenome> =
+            GaConfig { population: 16, generations: 6, ..Default::default() };
+        let cfg = SweepConfig { mapping: MappingConfig::edge_tpu_default(), ..Default::default() };
+        let t0 = Instant::now();
+        let out = ga_cluster_search(&hc, &[2], 4, &tiny_builder, "tiny-mlp", &ga, &cfg, |_, _| {});
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+
+        // hypervolume proxy: sum of per-point dominated boxes against the
+        // reference point 1.1^d after max-normalizing each objective over
+        // both fronts (overlap overcounted — a proxy, comparable between
+        // the two fronts since they share the normalization)
+        let objs = |rows: &[ClusterRow]| -> Vec<Vec<f64>> {
+            rows.iter().map(|r| r.objectives().to_vec()).collect()
+        };
+        let ga_o = objs(&out.rows);
+        let fb_o = objs(&out.fallback_front);
+        let dims = ga_o.first().map_or(0, |o| o.len());
+        let mut maxs = vec![f64::MIN; dims];
+        for o in ga_o.iter().chain(&fb_o) {
+            for (m, v) in maxs.iter_mut().zip(o) {
+                *m = m.max(*v);
+            }
+        }
+        let hv = |front: &[Vec<f64>]| -> f64 {
+            front
+                .iter()
+                .map(|o| {
+                    o.iter()
+                        .zip(&maxs)
+                        .map(|(v, m)| (1.1 - v / m.max(1e-300)).max(0.0))
+                        .product::<f64>()
+                })
+                .sum()
+        };
+        let (hv_ga, hv_fb) = (hv(&ga_o), hv(&fb_o));
+        let json = format!(
+            "  \"ga_cluster\": {{\n    \"pool_devices\": {},\n    \"enumerable_points\": {},\n    \"points_evaluated\": {},\n    \"evaluated_fraction\": {:.6},\n    \"front_points\": {},\n    \"fallback_front_points\": {},\n    \"hv_proxy_front\": {:.6},\n    \"hv_proxy_fallback\": {:.6},\n    \"hv_gain\": {:.4},\n    \"secs\": {:.3}\n  }},\n",
+            hc.total_devices(),
+            out.enumerated,
+            out.evaluated,
+            out.evaluated as f64 / out.enumerated.max(1) as f64,
+            out.rows.len(),
+            out.fallback_front.len(),
+            hv_ga,
+            hv_fb,
+            hv_ga / hv_fb.max(1e-300),
+            secs
+        );
+        (out.evaluated, out.enumerated, secs, json)
+    };
+
     println!(
         "{:<16} {:>8} {:>12} {:>12} {:>14} {:>14}",
         "family", "points", "cold (s)", "warm (s)", "cold pts/s", "warm pts/s"
@@ -206,6 +274,15 @@ fn main() {
         "{:<16} {:>8} {:>12.3} {:>12.3}   (journaled sweep vs full --resume replay)",
         "run_journal", journal_points, journaled_secs, replay_secs
     );
+    println!(
+        "{:<16} {:>8} {:>12.3}              ({} of {} enumerable points visited, {:.2}%)",
+        "ga_cluster",
+        ga_evaluated,
+        ga_secs,
+        ga_evaluated,
+        ga_enumerated,
+        ga_evaluated as f64 / ga_enumerated.max(1) as f64 * 100.0
+    );
     let journal_json = format!(
         "  \"journal\": {{\n    \"points\": {},\n    \"points_per_sec_journaled\": {:.2},\n    \"points_per_sec_replay\": {:.2}\n  }},\n",
         journal_points,
@@ -213,8 +290,9 @@ fn main() {
         journal_points as f64 / replay_secs
     );
     let json = format!(
-        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n{}  \"families\": {{\n{}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n{}{}  \"families\": {{\n{}\n  }}\n}}\n",
         journal_json,
+        ga_json,
         families_json.join(",\n")
     );
     std::fs::write("BENCH_dse.json", &json).expect("writing BENCH_dse.json");

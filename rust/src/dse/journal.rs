@@ -377,8 +377,63 @@ pub fn decode_point_record<R: JournalRow>(payload: &[u8]) -> Option<(usize, Poin
     Some((index, rec))
 }
 
-/// Encode one GA generation checkpoint for the GA journal.
-pub fn encode_ga_checkpoint(cp: &crate::ga::nsga2::GaCheckpoint) -> Vec<u8> {
+/// A genome type the GA journal can persist inside a checkpoint record.
+/// Same contract as [`JournalRow`]: a self-contained binary encoding whose
+/// decode is bit-exact and never panics on torn input (every accessor is
+/// bounds-checked). Implemented for the boolean checkpointing genome (the
+/// historical byte layout, unchanged) and for
+/// [`crate::ga::DeploymentGenome`].
+pub trait GenomeCodec: Sized {
+    fn encode(&self, buf: &mut Vec<u8>);
+    fn decode(r: &mut Reader<'_>) -> Option<Self>;
+}
+
+/// The boolean checkpointing genome: `width u32 | one byte per bit`.
+/// Byte-identical to the pre-generification hard-coded codec, so GA
+/// journals written before this refactor replay unchanged.
+impl GenomeCodec for Vec<bool> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u32(buf, self.len() as u32);
+        buf.extend(self.iter().map(|&b| b as u8));
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Option<Self> {
+        let width = r.u32()? as usize;
+        Some(r.take(width)?.iter().map(|&b| b != 0).collect())
+    }
+}
+
+/// `dp/pp/m/tp u64 ×4 | n_stages u32 | class index u32 per stage`.
+impl GenomeCodec for crate::ga::DeploymentGenome {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, self.dp as u64);
+        put_u64(buf, self.pp as u64);
+        put_u64(buf, self.microbatches as u64);
+        put_u64(buf, self.tp as u64);
+        put_u32(buf, self.placement.len() as u32);
+        for &c in &self.placement {
+            put_u32(buf, c as u32);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Option<Self> {
+        let dp = r.u64()? as usize;
+        let pp = r.u64()? as usize;
+        let microbatches = r.u64()? as usize;
+        let tp = r.u64()? as usize;
+        let n = r.u32()? as usize;
+        let mut placement = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            placement.push(r.u32()? as usize);
+        }
+        Some(crate::ga::DeploymentGenome { dp, pp, microbatches, tp, placement })
+    }
+}
+
+/// Encode one GA generation checkpoint for the GA journal. Generic over
+/// the genome via [`GenomeCodec`]; for `Vec<bool>` the bytes are
+/// identical to the pre-generification codec.
+pub fn encode_ga_checkpoint<G: GenomeCodec>(cp: &crate::ga::nsga2::GaCheckpoint<G>) -> Vec<u8> {
     let mut buf = Vec::new();
     put_u64(&mut buf, cp.generation as u64);
     for s in cp.rng {
@@ -386,8 +441,7 @@ pub fn encode_ga_checkpoint(cp: &crate::ga::nsga2::GaCheckpoint) -> Vec<u8> {
     }
     put_u32(&mut buf, cp.population.len() as u32);
     for (genome, objs) in &cp.population {
-        put_u32(&mut buf, genome.len() as u32);
-        buf.extend(genome.iter().map(|&b| b as u8));
+        genome.encode(&mut buf);
         put_u32(&mut buf, objs.len() as u32);
         for &o in objs {
             put_f64(&mut buf, o);
@@ -397,15 +451,16 @@ pub fn encode_ga_checkpoint(cp: &crate::ga::nsga2::GaCheckpoint) -> Vec<u8> {
 }
 
 /// Inverse of [`encode_ga_checkpoint`]; `None` on any malformed payload.
-pub fn decode_ga_checkpoint(payload: &[u8]) -> Option<crate::ga::nsga2::GaCheckpoint> {
+pub fn decode_ga_checkpoint<G: GenomeCodec>(
+    payload: &[u8],
+) -> Option<crate::ga::nsga2::GaCheckpoint<G>> {
     let mut r = Reader::new(payload);
     let generation = r.u64()? as usize;
     let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
     let n = r.u32()? as usize;
     let mut population = Vec::with_capacity(n.min(4096));
     for _ in 0..n {
-        let width = r.u32()? as usize;
-        let genome: Vec<bool> = r.take(width)?.iter().map(|&b| b != 0).collect();
+        let genome = G::decode(&mut r)?;
         let n_obj = r.u32()? as usize;
         let mut objs = Vec::with_capacity(n_obj.min(4096));
         for _ in 0..n_obj {
@@ -616,7 +671,7 @@ mod tests {
             ],
         };
         let payload = encode_ga_checkpoint(&cp);
-        let back = decode_ga_checkpoint(&payload).unwrap();
+        let back = decode_ga_checkpoint::<Vec<bool>>(&payload).unwrap();
         assert_eq!(back.generation, cp.generation);
         assert_eq!(back.rng, cp.rng);
         assert_eq!(back.population.len(), cp.population.len());
@@ -627,7 +682,44 @@ mod tests {
             assert_eq!(bits_a, bits_b);
         }
         for cut in 0..payload.len() {
-            assert!(decode_ga_checkpoint(&payload[..cut]).is_none());
+            assert!(decode_ga_checkpoint::<Vec<bool>>(&payload[..cut]).is_none());
+        }
+    }
+
+    #[test]
+    fn deployment_checkpoint_round_trips_bit_exact() {
+        use crate::ga::DeploymentGenome;
+        let cp = crate::ga::nsga2::GaCheckpoint {
+            generation: 3,
+            rng: [9, 0, u64::MAX, 0xC0DE],
+            population: vec![
+                (
+                    DeploymentGenome {
+                        dp: 4,
+                        pp: 3,
+                        microbatches: 8,
+                        tp: 2,
+                        placement: vec![0, 1, 1],
+                    },
+                    vec![10.0, -0.0, f64::INFINITY, 256.0],
+                ),
+                (
+                    DeploymentGenome {
+                        dp: 1,
+                        pp: 1,
+                        microbatches: 1,
+                        tp: 1,
+                        placement: vec![2],
+                    },
+                    vec![1.0],
+                ),
+            ],
+        };
+        let payload = encode_ga_checkpoint(&cp);
+        let back = decode_ga_checkpoint::<DeploymentGenome>(&payload).unwrap();
+        assert_eq!(back, cp);
+        for cut in 0..payload.len() {
+            assert!(decode_ga_checkpoint::<DeploymentGenome>(&payload[..cut]).is_none());
         }
     }
 

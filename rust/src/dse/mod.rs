@@ -24,6 +24,15 @@
 //!   dimension ([`ClusterSpace::enumerate_hetero`], [`hetero_search`]
 //!   via [`sweep::HeteroEval`] over a [`HeteroSpace`]).
 //!
+//! Past the exhaustive-enumeration wall (256+-device pools, where the
+//! placement dimension is `k^pp`-bounded), [`ga_cluster_search`] evolves
+//! [`crate::ga::DeploymentGenome`]s over the generic NSGA-II core
+//! instead: the contiguous-block fallback enumeration
+//! ([`ClusterSpace::enumerate_hetero_fallback`]) is evaluated as a
+//! journaled backbone and baseline, and the returned rank-0 front weakly
+//! dominates every fallback front row while visiting a small fraction of
+//! [`ClusterSpace::count_hetero`] points.
+//!
 //! The NSGA-II GA's per-generation genome batches ride the same pool
 //! core through [`engine::map_parallel`]. All families share one
 //! [`crate::eval::CostCache`] across their workers and are bit-identical
@@ -47,8 +56,8 @@ pub use journal::{journal_record_bounds, JournalRow, PointRecord};
 pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};
 pub use search::{
     best_latency_factorization, cluster_search, front_factorizations, front_recall,
-    hetero_search, mixed_domination_witness, mixed_placement, placed_only_on, search,
-    ClusterSearchOutcome, SearchOutcome,
+    ga_cluster_search, hetero_search, mixed_domination_witness, mixed_placement, placed_only_on,
+    search, ClusterSearchOutcome, GaClusterOutcome, SearchOutcome,
 };
 pub use space::{ClusterPoint, ClusterSpace, DesignPoint};
 pub use sweep::{

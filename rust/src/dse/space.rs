@@ -224,6 +224,122 @@ impl ClusterSpace {
         out
     }
 
+    /// The block-fallback restriction of
+    /// [`enumerate_hetero`](ClusterSpace::enumerate_hetero): every
+    /// factorization gets only the contiguous class-block placements
+    /// (what deep pipelines degrade to beyond
+    /// [`MAX_EXHAUSTIVE_PLACEMENT`](ClusterSpace::MAX_EXHAUSTIVE_PLACEMENT)),
+    /// at every depth. This scales linearly in pool size where full
+    /// enumeration is `k^pp`-bounded — it is the evaluable backbone (and
+    /// the head-to-head baseline) of the `ga-cluster` search on 256+
+    /// device pools. Same loop structure, ordering and dedup as the full
+    /// enumeration, so its points are a subset of
+    /// [`enumerate_hetero`](ClusterSpace::enumerate_hetero) wherever
+    /// that is computable.
+    pub fn enumerate_hetero_fallback(
+        hc: &HeteroCluster,
+        microbatches: &[usize],
+    ) -> Vec<HeteroPoint> {
+        let total = hc.total_devices();
+        let mut out: Vec<HeteroPoint> = vec![];
+        let mut seen: std::collections::HashSet<HeteroPoint> = std::collections::HashSet::new();
+        for n in 1..=total {
+            for (dp, pp, tp) in Self::factorizations(n) {
+                let gang = dp * tp;
+                let caps: Vec<usize> = hc.counts.iter().map(|&c| c / gang).collect();
+                if caps.iter().sum::<usize>() < pp {
+                    continue;
+                }
+                for placement in class_block_sequences(pp, &caps) {
+                    let mut ms: Vec<usize> = vec![1];
+                    if pp > 1 {
+                        ms.extend(microbatches.iter().copied());
+                    }
+                    for &m in &ms {
+                        let p = HeteroPoint {
+                            dp,
+                            pp,
+                            microbatches: m,
+                            tp,
+                            placement: placement.clone(),
+                        };
+                        debug_assert!(p.feasible(hc));
+                        if seen.insert(p.clone()) {
+                            out.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact size of [`enumerate_hetero`](ClusterSpace::enumerate_hetero)
+    /// without materializing it — the denominator of the `ga-cluster`
+    /// points-evaluated ratio, computable even where the enumeration
+    /// itself would take hours. Placement counts come from a multinomial
+    /// DP (distinct cap-bounded class sequences) below the exhaustive
+    /// wall and from the ≤ 2 contiguous blocks above it; the microbatch
+    /// menu is deduplicated exactly as the enumeration's `seen` set
+    /// would (no other duplicate source exists: a factorization pins its
+    /// device count, and placements within one generator are distinct).
+    pub fn count_hetero(hc: &HeteroCluster, microbatches: &[usize]) -> u64 {
+        let total = hc.total_devices();
+        let mut count = 0u64;
+        for n in 1..=total {
+            for (dp, pp, tp) in Self::factorizations(n) {
+                let gang = dp * tp;
+                let caps: Vec<usize> = hc.counts.iter().map(|&c| c / gang).collect();
+                if caps.iter().sum::<usize>() < pp {
+                    continue;
+                }
+                let placements = if pp <= Self::MAX_EXHAUSTIVE_PLACEMENT {
+                    count_class_sequences(pp, &caps)
+                } else {
+                    class_block_sequences(pp, &caps).len() as u64
+                };
+                let ms = if pp > 1 {
+                    let mut ms: Vec<usize> = vec![1];
+                    for &m in microbatches {
+                        if !ms.contains(&m) {
+                            ms.push(m);
+                        }
+                    }
+                    ms.len() as u64
+                } else {
+                    1
+                };
+                count = count.saturating_add(placements.saturating_mul(ms));
+            }
+        }
+        count
+    }
+
+    /// A [`crate::ga::DeploymentGenome`] carries the same information as
+    /// a [`HeteroPoint`]; the GA evolves the former, the cost model
+    /// consumes the latter.
+    pub fn genome_to_hetero(g: &crate::ga::DeploymentGenome) -> HeteroPoint {
+        HeteroPoint {
+            dp: g.dp,
+            pp: g.pp,
+            microbatches: g.microbatches,
+            tp: g.tp,
+            placement: g.placement.clone(),
+        }
+    }
+
+    /// Inverse of [`genome_to_hetero`](ClusterSpace::genome_to_hetero)
+    /// (used to warm-start the GA from enumerated fronts).
+    pub fn hetero_to_genome(p: &HeteroPoint) -> crate::ga::DeploymentGenome {
+        crate::ga::DeploymentGenome {
+            dp: p.dp,
+            pp: p.pp,
+            microbatches: p.microbatches,
+            tp: p.tp,
+            placement: p.placement.clone(),
+        }
+    }
+
     /// Enumerate every deployment point of the space, deterministically
     /// ordered (devices, tier order, factorization, microbatches).
     pub fn enumerate(&self) -> Vec<ClusterPoint> {
@@ -268,6 +384,39 @@ fn class_sequences(len: usize, caps: &[usize]) -> Vec<Vec<usize>> {
     let mut left = caps.to_vec();
     rec(len, &mut Vec::with_capacity(len), &mut left, &mut out);
     out
+}
+
+/// Number of distinct class-index sequences of length `len` under
+/// per-class multiplicity caps — `class_sequences(len, caps).len()`
+/// without materializing. DP over classes: admitting a class with cap
+/// `c` maps `dp[j] → Σ_{u≤min(c,j)} dp[j-u]·C(j,u)` (choose the new
+/// class's positions among the `j` slots).
+fn count_class_sequences(len: usize, caps: &[usize]) -> u64 {
+    let mut dp = vec![0u64; len + 1];
+    dp[0] = 1;
+    for &c in caps {
+        let mut next = vec![0u64; len + 1];
+        for j in 0..=len {
+            for u in 0..=c.min(j) {
+                next[j] = next[j].saturating_add(
+                    dp[j - u].saturating_mul(binom(j as u64, u as u64)),
+                );
+            }
+        }
+        dp = next;
+    }
+    dp[len]
+}
+
+/// Binomial coefficient C(n, k) for the small values the placement DP
+/// needs (`n ≤ MAX_EXHAUSTIVE_PLACEMENT`).
+fn binom(n: u64, k: u64) -> u64 {
+    let k = k.min(n - k);
+    let mut r = 1u64;
+    for i in 0..k {
+        r = r * (n - i) / (i + 1);
+    }
+    r
 }
 
 /// Contiguous class-block placements (each class's stages adjacent), in
@@ -374,6 +523,169 @@ mod tests {
             ClusterSpace::enumerate_hetero(&split, &[2]),
             ClusterSpace::enumerate_hetero(&merged, &[2])
         );
+    }
+
+    #[test]
+    fn factorizations_are_duplicate_free_deterministic_and_cover_n() {
+        use crate::util::proptest::{check, UsizeIn};
+        check(60, &UsizeIn(1, 96), |&n| {
+            let fs = ClusterSpace::factorizations(n);
+            let set: std::collections::HashSet<_> = fs.iter().collect();
+            set.len() == fs.len()
+                && fs == ClusterSpace::factorizations(n)
+                && fs.iter().all(|&(dp, pp, tp)| dp * pp * tp == n)
+                // deterministic order: strictly lexicographic in (dp, pp)
+                && fs
+                    .windows(2)
+                    .all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1))
+        });
+    }
+
+    #[test]
+    fn hetero_enumeration_is_duplicate_free_and_deterministically_ordered() {
+        use crate::parallelism::DeviceClass;
+        use crate::util::proptest::{check, UsizeIn};
+        check(6, &UsizeIn(1, 5), |&edge_n| {
+            let hc = HeteroCluster::new(vec![
+                (DeviceClass::edge(), edge_n),
+                (DeviceClass::datacenter(), 6 - edge_n),
+            ]);
+            let pts = ClusterSpace::enumerate_hetero(&hc, &[2, 4]);
+            let set: std::collections::HashSet<&HeteroPoint> = pts.iter().collect();
+            set.len() == pts.len()
+                && pts == ClusterSpace::enumerate_hetero(&hc, &[2, 4])
+                // outer loop ascends through total device counts
+                && pts.windows(2).all(|w| w[0].devices() <= w[1].devices())
+        });
+    }
+
+    /// Two-class placements are contiguous blocks iff the class indices
+    /// are monotone (all of one class adjacent, then the other).
+    fn is_monotone(p: &[usize]) -> bool {
+        p.windows(2).all(|w| w[0] <= w[1]) || p.windows(2).all(|w| w[0] >= w[1])
+    }
+
+    #[test]
+    fn block_fallback_engages_exactly_beyond_max_exhaustive_placement() {
+        use crate::parallelism::DeviceClass;
+
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 6),
+            (DeviceClass::datacenter(), 6),
+        ]);
+        let pts = ClusterSpace::enumerate_hetero(&hc, &[2]);
+        let max = ClusterSpace::MAX_EXHAUSTIVE_PLACEMENT;
+
+        // at the boundary depth the enumeration is still exhaustive: the
+        // dp=tp=1, m=1 placements are exactly `class_sequences`, and some
+        // of them interleave classes (not a contiguous block)
+        let at_max: Vec<Vec<usize>> = pts
+            .iter()
+            .filter(|p| p.pp == max && p.dp == 1 && p.tp == 1 && p.microbatches == 1)
+            .map(|p| p.placement.clone())
+            .collect();
+        assert_eq!(at_max, class_sequences(max, &[6, 6]));
+        assert!(at_max.iter().any(|p| !is_monotone(p)));
+
+        // beyond the boundary every placement degrades to a contiguous
+        // class block, at most two (ascending/descending) per factorization
+        let mut per_fact: std::collections::HashMap<
+            (usize, usize, usize),
+            std::collections::HashSet<Vec<usize>>,
+        > = std::collections::HashMap::new();
+        for p in pts.iter().filter(|p| p.pp > max) {
+            assert!(is_monotone(&p.placement), "non-block deep placement: {p:?}");
+            per_fact
+                .entry((p.dp, p.pp, p.tp))
+                .or_default()
+                .insert(p.placement.clone());
+        }
+        assert!(!per_fact.is_empty(), "pool admits no pipelines deeper than {max}");
+        for set in per_fact.values() {
+            assert!(set.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn count_hetero_matches_the_materialized_enumeration() {
+        use crate::parallelism::DeviceClass;
+        use crate::util::proptest::{check, UsizeIn};
+        check(6, &UsizeIn(1, 6), |&edge_n| {
+            let hc = HeteroCluster::new(vec![
+                (DeviceClass::edge(), edge_n),
+                (DeviceClass::datacenter(), 7 - edge_n),
+            ]);
+            ClusterSpace::count_hetero(&hc, &[2, 4])
+                == ClusterSpace::enumerate_hetero(&hc, &[2, 4]).len() as u64
+                // duplicate menu entries must not inflate the count
+                && ClusterSpace::count_hetero(&hc, &[1, 2, 2])
+                    == ClusterSpace::enumerate_hetero(&hc, &[1, 2, 2]).len() as u64
+        });
+        // single-class pool too (no placement choice at all)
+        let uni = HeteroCluster::new(vec![(DeviceClass::server(), 9)]);
+        assert_eq!(
+            ClusterSpace::count_hetero(&uni, &[4]),
+            ClusterSpace::enumerate_hetero(&uni, &[4]).len() as u64
+        );
+    }
+
+    #[test]
+    fn fallback_enumeration_is_a_block_only_subset_of_the_full_one() {
+        use crate::parallelism::DeviceClass;
+        let hc = HeteroCluster::new(vec![
+            (DeviceClass::edge(), 6),
+            (DeviceClass::datacenter(), 6),
+        ]);
+        let full = ClusterSpace::enumerate_hetero(&hc, &[2]);
+        let fallback = ClusterSpace::enumerate_hetero_fallback(&hc, &[2]);
+        assert!(!fallback.is_empty());
+        let set: std::collections::HashSet<&HeteroPoint> = fallback.iter().collect();
+        assert_eq!(set.len(), fallback.len(), "duplicate fallback points");
+        assert!(fallback.len() < full.len());
+        // subset of the full enumeration, and every placement is a block
+        let full_set: std::collections::HashSet<&HeteroPoint> = full.iter().collect();
+        for p in &fallback {
+            assert!(full_set.contains(p), "fallback point not in full enumeration: {p:?}");
+            assert!(is_monotone(&p.placement), "non-block fallback placement: {p:?}");
+        }
+        // beyond the exhaustive wall the two enumerations coincide exactly
+        let max = ClusterSpace::MAX_EXHAUSTIVE_PLACEMENT;
+        let deep_full: Vec<&HeteroPoint> = full.iter().filter(|p| p.pp > max).collect();
+        let deep_fb: Vec<&HeteroPoint> = fallback.iter().filter(|p| p.pp > max).collect();
+        assert_eq!(deep_full, deep_fb);
+    }
+
+    #[test]
+    fn genome_point_mapping_round_trips() {
+        let p = HeteroPoint { dp: 2, pp: 3, microbatches: 4, tp: 1, placement: vec![0, 1, 1] };
+        let g = ClusterSpace::hetero_to_genome(&p);
+        assert_eq!(g.dp, 2);
+        assert_eq!(g.pp, 3);
+        assert_eq!(g.microbatches, 4);
+        assert_eq!(g.tp, 1);
+        assert_eq!(g.placement, vec![0, 1, 1]);
+        assert_eq!(ClusterSpace::genome_to_hetero(&g), p);
+    }
+
+    #[test]
+    fn sequence_count_dp_matches_the_recursive_generator() {
+        for (len, caps) in [
+            (2usize, vec![2usize, 1]),
+            (4, vec![2, 2]),
+            (4, vec![1, 1]),
+            (3, vec![3, 3, 3]),
+            (8, vec![6, 6]),
+            (5, vec![0, 5, 2]),
+        ] {
+            assert_eq!(
+                count_class_sequences(len, &caps),
+                class_sequences(len, &caps).len() as u64,
+                "len={len} caps={caps:?}"
+            );
+        }
+        assert_eq!(binom(8, 0), 1);
+        assert_eq!(binom(8, 3), 56);
+        assert_eq!(binom(8, 8), 1);
     }
 
     #[test]

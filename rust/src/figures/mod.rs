@@ -327,6 +327,45 @@ pub fn fig5_cluster_pareto(
     figures
 }
 
+/// CSV emitter for the `ga-cluster` command, in the Fig 5 column layout
+/// plus a `front` provenance column: every point of the final
+/// (backbone ∪ GA) rank-0 front, followed by the block-fallback baseline
+/// front it is measured against — so the head-to-head comparison the CLI
+/// prints is reproducible from the artifact alone.
+pub fn write_ga_cluster_csv(
+    dir: &Path,
+    workload: &str,
+    out: &crate::dse::GaClusterOutcome,
+) -> std::io::Result<()> {
+    fn row(workload: &str, front: &str, r: &crate::dse::ClusterRow) -> Vec<String> {
+        vec![
+            workload.to_string(),
+            front.to_string(),
+            r.index.to_string(),
+            format!("\"{}\"", r.label),
+            r.tier.as_str().to_string(),
+            r.devices.to_string(),
+            r.dp.to_string(),
+            r.pp.to_string(),
+            r.microbatches.to_string(),
+            r.tp.to_string(),
+            format!("\"{}\"", r.placement),
+            format!("{:.6e}", r.latency_cycles),
+            format!("{:.6e}", r.energy_pj),
+            r.per_device_mem_bytes.to_string(),
+            format!("{:.6e}", r.comm_bytes),
+        ]
+    }
+    write_csv(
+        dir.join(format!("ga_cluster_front_{workload}.csv")),
+        "workload,front,index,label,tier,devices,dp,pp,microbatches,tp,placement,latency_cycles,energy_pj,per_device_mem_bytes,comm_bytes",
+        out.rows
+            .iter()
+            .map(|r| row(workload, "union", r))
+            .chain(out.fallback_front.iter().map(|r| row(workload, "fallback", r))),
+    )
+}
+
 // ---------------------------------------------------------------------------
 // Fig 9 — GPT-2 on the FuseMax space
 // ---------------------------------------------------------------------------

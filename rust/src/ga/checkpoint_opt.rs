@@ -327,7 +327,8 @@ impl<'a> CheckpointProblem<'a> {
                 return self.optimize(ga);
             }
         };
-        let resume_cp = payloads.iter().rev().find_map(|p| journal::decode_ga_checkpoint(p));
+        let resume_cp =
+            payloads.iter().rev().find_map(|p| journal::decode_ga_checkpoint::<Genome>(p));
         let mut file = file;
         let mut dead = false;
         let front = nsga2_resumable(
@@ -486,6 +487,55 @@ mod tests {
         let resumed = p.optimize_journaled(&ga, &dir, true);
         assert_eq!(key(&plain), key(&resumed), "resume diverged");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unseeded_checkpointing_run_is_unchanged_on_the_generic_core() {
+        // satellite of the generify PR: the warm-start machinery
+        // (plan_to_genome round-trip, memoized optimize) now rides the
+        // generic NSGA-II core through the BitmaskProblem instance — an
+        // unseeded run must be bit-identical to driving the core directly.
+        use crate::ga::nsga2::{nsga2_problem, BitmaskProblem};
+        let (tg, accel) = problem_parts();
+        let p = CheckpointProblem::new(
+            &tg,
+            &accel,
+            MappingConfig::default(),
+            FusionConstraints::default(),
+        );
+        let ga = GaConfig { population: 8, generations: 3, workers: 1, ..Default::default() };
+        let mut memo: HashMap<Genome, Objectives> = HashMap::new();
+        let via_problem = p.optimize_with_memo(&ga, &mut memo);
+        let mut direct_memo: HashMap<Genome, Objectives> = HashMap::new();
+        let (front, stats) = nsga2_problem(
+            &BitmaskProblem { width: p.candidates.len() },
+            &ga,
+            |genome| {
+                let (lat, en, mem) = p.evaluate(&p.genome_to_plan(genome));
+                vec![lat, en, mem as f64]
+            },
+            &mut direct_memo,
+            None,
+            |_| {},
+        );
+        let key = |v: &[CheckpointSolution]| {
+            v.iter()
+                .map(|s| (s.plan.clone(), s.latency_cycles.to_bits(), s.energy_pj.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        let direct = p.solutions_from(front);
+        assert_eq!(key(&via_problem), key(&direct), "wrapper diverged from the generic core");
+        // both paths evaluated the identical genome set
+        assert_eq!(memo.len(), direct_memo.len());
+        assert_eq!(stats.evaluated, direct_memo.len());
+        assert_eq!(stats.repaired, 0, "bitmask genomes never need repair");
+        // plan_to_genome inverts genome_to_plan for every front member, so
+        // persisted warm-start seeds re-enter the search unchanged
+        for s in &via_problem {
+            let g = p.plan_to_genome(&s.plan);
+            assert_eq!(p.genome_to_plan(&g), s.plan);
+            assert_eq!(g.len(), p.candidates.len());
+        }
     }
 
     #[test]

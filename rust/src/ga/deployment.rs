@@ -1,0 +1,377 @@
+//! The deployment-search genome: NSGA-II over heterogeneous cluster
+//! deployments instead of exhaustive enumeration (ROADMAP item 2, walls
+//! (b)/(c)). A [`DeploymentGenome`] encodes one `(dp, pp, m, tp)`
+//! factorization plus the per-stage device-class placement — the same
+//! information as a [`HeteroPoint`](crate::parallelism::HeteroPoint), see
+//! [`crate::dse::ClusterSpace::genome_to_hetero`] — and
+//! [`DeploymentProblem`] supplies the variation operators:
+//!
+//! * **mutation** moves one axis or one stage at a time (double/halve a
+//!   gang axis, grow/shrink the pipeline by one stage, re-draw the
+//!   microbatch count, reassign one stage's class), so consecutive
+//!   genomes share almost all of their fused-group structure and the
+//!   warm `CostCache`/`StageCutsMemo` keep re-evaluation cheap;
+//! * **crossover** swaps whole axes between parents (the pipeline depth
+//!   and its placement travel together);
+//! * **repair** deterministically restores feasibility against the
+//!   [`HeteroCluster`] capacity — shrink the `dp·tp` gang until some
+//!   class can host a stage, clamp the pipeline depth to the available
+//!   stage slots, and reassign over-capacity stages to the class with
+//!   the most remaining room. Repair consumes no RNG (the
+//!   [`GaProblem`] contract), so resume/worker bit-identity survives
+//!   infeasible offspring.
+//!
+//! Out of scope (ROADMAP wall (a)): a genome's `dp` gang never spans
+//! device classes — that needs the mixed-ring all-reduce model.
+
+use crate::ga::nsga2::GaProblem;
+use crate::parallelism::HeteroCluster;
+use crate::util::rng::Rng;
+
+/// One deployment candidate: `dp·tp`-device gangs per stage, `pp` stages,
+/// `microbatches` pipeline microbatches, and the device class hosting
+/// each stage (indices into [`HeteroCluster::classes`]). `Ord` is derived
+/// so genome collections have a canonical order independent of hash/
+/// evaluation order — the GA's archive front is sorted by it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeploymentGenome {
+    pub dp: usize,
+    pub pp: usize,
+    pub microbatches: usize,
+    pub tp: usize,
+    /// Class index per pipeline stage; length `pp`.
+    pub placement: Vec<usize>,
+}
+
+/// The [`GaProblem`] instance evolving [`DeploymentGenome`]s against one
+/// device pool.
+pub struct DeploymentProblem<'a> {
+    pub hc: &'a HeteroCluster,
+    /// Microbatch counts the search may assign to pipelined genomes
+    /// (`m = 1` is always available — the minimum-energy corner).
+    pub microbatches: Vec<usize>,
+}
+
+impl<'a> DeploymentProblem<'a> {
+    /// The deduplicated microbatch menu, `1` first (mirrors the
+    /// enumeration's `ms` list).
+    pub fn menu(&self) -> Vec<usize> {
+        let mut ms = vec![1usize];
+        for &m in &self.microbatches {
+            if !ms.contains(&m) {
+                ms.push(m);
+            }
+        }
+        ms
+    }
+
+    /// Class with the most remaining capacity (lowest index wins ties) —
+    /// the deterministic target for repairing over-capacity stages.
+    fn roomiest(left: &[usize]) -> usize {
+        (0..left.len())
+            .max_by_key(|&j| (left[j], std::cmp::Reverse(j)))
+            .expect("a HeteroCluster always has at least one class")
+    }
+}
+
+impl<'a> GaProblem for DeploymentProblem<'a> {
+    type Genome = DeploymentGenome;
+
+    /// Deterministic corners: per class, the single-device deployment and
+    /// the all-of-class data-parallel deployment; plus the two contiguous
+    /// class-block pipelines over the whole pool (the best the fallback
+    /// enumeration can do at full depth).
+    fn anchors(&self) -> Vec<DeploymentGenome> {
+        let mut out: Vec<DeploymentGenome> = vec![];
+        for c in 0..self.hc.classes.len() {
+            for g in [
+                DeploymentGenome { dp: 1, pp: 1, microbatches: 1, tp: 1, placement: vec![c] },
+                DeploymentGenome {
+                    dp: self.hc.counts[c],
+                    pp: 1,
+                    microbatches: 1,
+                    tp: 1,
+                    placement: vec![c],
+                },
+            ] {
+                if !out.contains(&g) {
+                    out.push(g);
+                }
+            }
+        }
+        let total = self.hc.total_devices();
+        for rev in [false, true] {
+            let order: Vec<usize> = if rev {
+                (0..self.hc.classes.len()).rev().collect()
+            } else {
+                (0..self.hc.classes.len()).collect()
+            };
+            let mut placement = Vec::with_capacity(total);
+            for &c in &order {
+                for _ in 0..self.hc.counts[c] {
+                    placement.push(c);
+                }
+            }
+            let g = DeploymentGenome { dp: 1, pp: total, microbatches: 1, tp: 1, placement };
+            if !out.contains(&g) {
+                out.push(g);
+            }
+        }
+        out
+    }
+
+    fn fit_seed(&self, seed: &DeploymentGenome) -> DeploymentGenome {
+        let mut g = seed.clone();
+        self.repair(&mut g);
+        g
+    }
+
+    fn random(&self, rng: &mut Rng) -> DeploymentGenome {
+        let total = self.hc.total_devices();
+        let k = self.hc.classes.len();
+        let bits = total.max(1).ilog2() as usize;
+        let dp = 1usize << rng.usize(bits + 1);
+        let tp = 1usize << rng.usize(bits + 1);
+        let pp = 1 + rng.usize(total);
+        let menu = self.menu();
+        let microbatches = menu[rng.usize(menu.len())];
+        let placement: Vec<usize> = (0..pp).map(|_| rng.usize(k)).collect();
+        let mut g = DeploymentGenome { dp, pp, microbatches, tp, placement };
+        self.repair(&mut g);
+        g
+    }
+
+    /// Axis-wise uniform crossover: each of dp, tp, m, and the pipeline
+    /// (depth + placement, swapped as a unit) comes from either parent.
+    fn crossover(&self, child: &mut DeploymentGenome, other: &DeploymentGenome, rng: &mut Rng) {
+        if rng.bool(0.5) {
+            child.dp = other.dp;
+        }
+        if rng.bool(0.5) {
+            child.tp = other.tp;
+        }
+        if rng.bool(0.5) {
+            child.microbatches = other.microbatches;
+        }
+        if rng.bool(0.5) {
+            child.pp = other.pp;
+            child.placement = other.placement.clone();
+        }
+    }
+
+    /// One move at a time: double/halve `dp` or `tp`, grow/shrink the
+    /// pipeline by one stage, re-draw the microbatch count, or reassign
+    /// one stage's class — then another move with probability
+    /// `mutation_p`, geometrically. Small steps keep consecutive
+    /// evaluations close in the cost caches.
+    fn mutate(&self, g: &mut DeploymentGenome, rng: &mut Rng, mutation_p: f64) {
+        let k = self.hc.classes.len();
+        let menu = self.menu();
+        loop {
+            match rng.usize(5) {
+                0 => g.dp = if rng.bool(0.5) { g.dp * 2 } else { (g.dp / 2).max(1) },
+                1 => g.tp = if rng.bool(0.5) { g.tp * 2 } else { (g.tp / 2).max(1) },
+                2 => {
+                    if rng.bool(0.5) {
+                        g.pp += 1;
+                        g.placement.push(rng.usize(k));
+                    } else if g.pp > 1 {
+                        g.pp -= 1;
+                        g.placement.pop();
+                    }
+                }
+                3 => g.microbatches = menu[rng.usize(menu.len())],
+                _ => {
+                    if !g.placement.is_empty() {
+                        let i = rng.usize(g.placement.len());
+                        g.placement[i] = rng.usize(k);
+                    }
+                }
+            }
+            if !rng.bool(mutation_p) {
+                break;
+            }
+        }
+    }
+
+    /// Deterministic, RNG-free feasibility repair against the pool:
+    ///
+    /// 1. clamp every axis to ≥ 1;
+    /// 2. halve the `dp·tp` gang (tp first) until some class can host at
+    ///    least one stage;
+    /// 3. clamp `pp` to the total stage slots and sync the placement
+    ///    length;
+    /// 4. walk the placement, re-homing invalid/over-capacity stages to
+    ///    the class with the most remaining room (lowest index on ties);
+    /// 5. canonicalize `m = 1` for non-pipelined genomes.
+    ///
+    /// Returns whether anything changed. The result always satisfies
+    /// [`HeteroPoint::feasible`](crate::parallelism::HeteroPoint::feasible).
+    fn repair(&self, g: &mut DeploymentGenome) -> bool {
+        let orig = g.clone();
+        let counts = &self.hc.counts;
+        g.dp = g.dp.max(1);
+        g.tp = g.tp.max(1);
+        g.pp = g.pp.max(1);
+        let mut gang = g.dp * g.tp;
+        while gang > 1 && counts.iter().all(|&c| c / gang == 0) {
+            if g.tp > 1 {
+                g.tp /= 2;
+            } else {
+                g.dp /= 2;
+            }
+            gang = g.dp * g.tp;
+        }
+        let caps: Vec<usize> = counts.iter().map(|&c| c / gang).collect();
+        let slots: usize = caps.iter().sum();
+        g.pp = g.pp.min(slots).max(1);
+        g.placement.truncate(g.pp);
+        let mut left = caps;
+        for i in 0..g.placement.len() {
+            let c = g.placement[i];
+            if c < left.len() && left[c] > 0 {
+                left[c] -= 1;
+            } else {
+                let best = Self::roomiest(&left);
+                g.placement[i] = best;
+                left[best] -= 1;
+            }
+        }
+        while g.placement.len() < g.pp {
+            let best = Self::roomiest(&left);
+            g.placement.push(best);
+            left[best] -= 1;
+        }
+        if g.pp <= 1 {
+            g.microbatches = 1;
+        } else {
+            g.microbatches = g.microbatches.max(1);
+        }
+        *g != orig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::ClusterSpace;
+    use crate::parallelism::DeviceClass;
+    use crate::util::proptest::{check, UsizeIn};
+
+    fn pool() -> HeteroCluster {
+        HeteroCluster::new(vec![
+            (DeviceClass::edge(), 6),
+            (DeviceClass::server(), 3),
+            (DeviceClass::datacenter(), 2),
+        ])
+    }
+
+    #[test]
+    fn anchors_are_feasible_and_cover_the_per_class_extremes() {
+        let hc = pool();
+        let problem = DeploymentProblem { hc: &hc, microbatches: vec![2, 4] };
+        let anchors = problem.anchors();
+        assert!(!anchors.is_empty());
+        let set: std::collections::HashSet<&DeploymentGenome> = anchors.iter().collect();
+        assert_eq!(set.len(), anchors.len(), "duplicate anchors");
+        for g in &anchors {
+            assert!(ClusterSpace::genome_to_hetero(g).feasible(&hc), "infeasible anchor {g:?}");
+        }
+        for c in 0..hc.classes.len() {
+            assert!(anchors.iter().any(|g| g.placement == vec![c] && g.dp == 1));
+            assert!(anchors.iter().any(|g| g.placement == vec![c] && g.dp == hc.counts[c]));
+        }
+        // the two full-depth contiguous block pipelines
+        assert!(anchors.iter().any(|g| g.pp == hc.total_devices()));
+    }
+
+    #[test]
+    fn repair_always_restores_feasibility_without_rng() {
+        let hc = pool();
+        let problem = DeploymentProblem { hc: &hc, microbatches: vec![2, 4] };
+        check(80, &UsizeIn(0, u32::MAX as usize), |&seed| {
+            let mut rng = Rng::seed_from_u64(seed as u64);
+            // raw, deliberately out-of-range genome
+            let pp = rng.usize(20);
+            let mut g = DeploymentGenome {
+                dp: rng.usize(40),
+                pp,
+                microbatches: rng.usize(9),
+                tp: rng.usize(40),
+                placement: (0..rng.usize(pp + 4)).map(|_| rng.usize(6)).collect(),
+            };
+            let mut again = g.clone();
+            problem.repair(&mut g);
+            problem.repair(&mut again);
+            // deterministic (no RNG): repairing the same input twice agrees,
+            // and re-repairing a repaired genome is a no-op
+            let mut fixed = g.clone();
+            let changed = problem.repair(&mut fixed);
+            g == again
+                && !changed
+                && fixed == g
+                && ClusterSpace::genome_to_hetero(&g).feasible(&hc)
+                && (g.pp > 1 || g.microbatches == 1)
+        });
+    }
+
+    #[test]
+    fn operators_are_deterministic_and_stay_feasible_after_repair() {
+        let hc = pool();
+        let problem = DeploymentProblem { hc: &hc, microbatches: vec![2, 4] };
+        check(40, &UsizeIn(0, u32::MAX as usize), |&seed| {
+            let mut a = Rng::seed_from_u64(seed as u64);
+            let mut b = Rng::seed_from_u64(seed as u64);
+            let ga = problem.random(&mut a);
+            let gb = problem.random(&mut b);
+            if ga != gb || !ClusterSpace::genome_to_hetero(&ga).feasible(&hc) {
+                return false;
+            }
+            let other = problem.random(&mut a);
+            let mut ca = ga.clone();
+            let mut cb = gb.clone();
+            let mut a2 = Rng::seed_from_u64(seed as u64 ^ 0x5EED);
+            let mut b2 = Rng::seed_from_u64(seed as u64 ^ 0x5EED);
+            problem.crossover(&mut ca, &other, &mut a2);
+            problem.crossover(&mut cb, &other, &mut b2);
+            problem.mutate(&mut ca, &mut a2, 0.1);
+            problem.mutate(&mut cb, &mut b2, 0.1);
+            problem.repair(&mut ca);
+            problem.repair(&mut cb);
+            ca == cb && ClusterSpace::genome_to_hetero(&ca).feasible(&hc)
+        });
+    }
+
+    #[test]
+    fn mutation_moves_one_axis_at_a_time() {
+        let hc = pool();
+        let problem = DeploymentProblem { hc: &hc, microbatches: vec![2, 4] };
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..200 {
+            let g = problem.random(&mut rng);
+            let mut m = g.clone();
+            // mutation_p = 0: exactly one move
+            problem.mutate(&mut m, &mut rng, 0.0);
+            let mut diffs = 0;
+            diffs += (m.dp != g.dp) as usize;
+            diffs += (m.tp != g.tp) as usize;
+            diffs += (m.microbatches != g.microbatches) as usize;
+            // the pipeline (depth + placement) counts as one axis
+            diffs += (m.pp != g.pp || m.placement != g.placement) as usize;
+            assert!(diffs <= 1, "one move changed {diffs} axes: {g:?} -> {m:?}");
+        }
+    }
+
+    #[test]
+    fn genome_hetero_round_trip_is_lossless() {
+        let hc = pool();
+        let problem = DeploymentProblem { hc: &hc, microbatches: vec![2] };
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..50 {
+            let g = problem.random(&mut rng);
+            let p = ClusterSpace::genome_to_hetero(&g);
+            assert_eq!(ClusterSpace::hetero_to_genome(&p), g);
+            assert_eq!(p.devices(), g.dp * g.tp * g.pp);
+        }
+    }
+}

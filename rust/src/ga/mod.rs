@@ -1,25 +1,33 @@
 //! Multi-objective genetic optimization (DESIGN.md S10): NSGA-II and the
-//! activation-checkpointing problem encoding (paper §V-B).
+//! problem encodings it evolves — activation checkpointing (paper §V-B)
+//! and heterogeneous cluster deployment.
 //!
-//! [`nsga2`] is a generic parallel NSGA-II over bit-genomes: `Fn + Sync`
-//! evaluation fanned over `GaConfig::workers` threads of the generic DSE
-//! pool ([`crate::dse::engine::map_parallel`]) with a
-//! genome→objectives memo, bit-identical for any worker count, plus
-//! `pareto_rank0` — the N-objective rank-0 dominance set the cluster DSE
-//! reuses for its 4-objective fronts. [`checkpoint_opt`] encodes the
-//! checkpointing problem (genome bit = recompute this activation),
+//! [`nsga2`] hosts the generic parallel NSGA-II core
+//! ([`nsga2::nsga2_problem`]), generic over a [`nsga2::GaProblem`] genome
+//! type: `Fn + Sync` evaluation fanned over `GaConfig::workers` threads
+//! of the generic DSE pool ([`crate::dse::engine::map_parallel`]) with a
+//! hash-keyed genome→objectives memo, bit-identical for any worker
+//! count, plus `pareto_rank0` — the N-objective rank-0 dominance set the
+//! cluster DSE reuses for its 4-objective fronts. Two problem instances
+//! exist: [`checkpoint_opt`] encodes the checkpointing problem through
+//! the historical boolean genome (bit = recompute this activation),
 //! evaluates through the shared [`crate::eval::CostCache`], and
 //! warm-starts across process restarts via persisted front + memo
-//! snapshots (see `CheckpointProblem::optimize_persistent`). [`milp`] is
+//! snapshots (see `CheckpointProblem::optimize_persistent`);
+//! [`deployment`] encodes a heterogeneous cluster deployment —
+//! `(dp, pp, m, tp)` + per-stage class placement — with feasibility
+//! repair against the pool, the search behind `ga-cluster`. [`milp`] is
 //! the linear Checkmate-style formulation (eq. 6) kept as the ablation
 //! baseline the GA is measured against.
 
 pub mod checkpoint_opt;
+pub mod deployment;
 pub mod milp;
 pub mod nsga2;
 
 pub use checkpoint_opt::{CheckpointProblem, CheckpointSolution};
+pub use deployment::{DeploymentGenome, DeploymentProblem};
 pub use nsga2::{
-    dominates, nsga2, nsga2_resumable, nsga2_with_memo, pareto_rank0, GaCheckpoint, GaConfig,
-    Genome, Individual, Objectives,
+    dominates, nsga2, nsga2_problem, nsga2_resumable, nsga2_with_memo, pareto_rank0,
+    BitmaskProblem, GaCheckpoint, GaConfig, GaProblem, GaStats, Genome, Individual, Objectives,
 };

@@ -1,8 +1,20 @@
 //! NSGA-II (Deb et al. 2002) — the multi-objective GA the paper uses for
 //! activation checkpointing (§V-B2): elitist survival via fast
 //! non-dominated sorting, diversity via crowding distance, binary
-//! tournament selection, uniform crossover and bit-flip mutation over
-//! boolean genomes. All objectives are minimized.
+//! tournament selection, and problem-supplied variation operators. All
+//! objectives are minimized.
+//!
+//! §Generify (the deployment-genome PR): the core ([`nsga2_problem`]) is
+//! generic over a [`GaProblem`] — anchors, seed fitting, random
+//! initialization, crossover, mutation and deterministic feasibility
+//! repair all come from the problem, while the core keeps the RNG
+//! discipline, hash-keyed genome memoization, checkpointing and batch
+//! evaluation. The original boolean-genome GA is the [`BitmaskProblem`]
+//! instance (uniform crossover, per-bit flip mutation, all-false/all-true
+//! anchors); [`nsga2`]/[`nsga2_with_memo`]/[`nsga2_resumable`] wrap it
+//! with their historical signatures and are **bit-identical** to the
+//! pre-refactor implementation — same RNG stream, same genomes, same
+//! front (pinned by `reference_bitmask_ga_matches_the_generic_core`).
 //!
 //! §Perf (the memoized-evaluation PR): objective evaluation is the GA's
 //! entire cost — each call runs the full checkpoint→fuse→schedule pipeline
@@ -20,15 +32,133 @@ use std::collections::{HashMap, HashSet};
 
 use crate::util::rng::Rng;
 
+/// The historical boolean genome (activation-checkpointing masks). The
+/// type parameter of every generic item below defaults to this, so
+/// pre-refactor call sites compile unchanged.
 pub type Genome = Vec<bool>;
 pub type Objectives = Vec<f64>;
 
 #[derive(Debug, Clone)]
-pub struct Individual {
-    pub genome: Genome,
+pub struct Individual<G = Genome> {
+    pub genome: G,
     pub objectives: Objectives,
     pub rank: usize,
     pub crowding: f64,
+}
+
+/// A search problem NSGA-II can evolve: the genome representation plus
+/// the variation operators over it. The core supplies selection,
+/// survival, memoization, batching and checkpointing; the problem
+/// supplies everything genome-shaped.
+///
+/// RNG discipline: every method receives the single GA RNG and must
+/// consume draws deterministically (same genome in → same draws). The
+/// exception is [`GaProblem::repair`], which must consume **no** RNG —
+/// repair runs only on infeasible genomes, and an RNG draw there would
+/// make the stream depend on feasibility, breaking resume bit-identity
+/// whenever a checkpoint boundary splits a brood.
+pub trait GaProblem: Sync {
+    type Genome: Clone + Eq + std::hash::Hash + std::fmt::Debug + Send + Sync;
+
+    /// Deterministic corner-case genomes that occupy the first population
+    /// slots (the bitmask GA anchors all-false = "save everything" and
+    /// all-true = "recompute everything"). Consumes no RNG.
+    fn anchors(&self) -> Vec<Self::Genome>;
+
+    /// Clip/pad an injected warm-start seed to this problem's shape.
+    /// Consumes no RNG.
+    fn fit_seed(&self, seed: &Self::Genome) -> Self::Genome;
+
+    /// Draw a random genome for the initial population.
+    fn random(&self, rng: &mut Rng) -> Self::Genome;
+
+    /// Mix `other` into `child` in place (uniform crossover for bitmasks).
+    fn crossover(&self, child: &mut Self::Genome, other: &Self::Genome, rng: &mut Rng);
+
+    /// Mutate `genome` in place; `mutation_p` is the per-locus flip
+    /// probability the config carries.
+    fn mutate(&self, genome: &mut Self::Genome, rng: &mut Rng, mutation_p: f64);
+
+    /// Deterministically repair an infeasible genome in place, consuming
+    /// no RNG; returns whether anything changed. The default is a no-op
+    /// for problems (like bitmasks) where every genome is feasible.
+    fn repair(&self, _genome: &mut Self::Genome) -> bool {
+        false
+    }
+}
+
+/// The original fixed-width boolean-genome GA as a [`GaProblem`]. Its
+/// operators replicate the pre-refactor hard-coded implementation draw
+/// for draw, which is what makes [`nsga2_resumable`] bit-identical to
+/// the historical behavior.
+pub struct BitmaskProblem {
+    pub width: usize,
+}
+
+impl GaProblem for BitmaskProblem {
+    type Genome = Vec<bool>;
+
+    fn anchors(&self) -> Vec<Vec<bool>> {
+        vec![vec![false; self.width], vec![true; self.width]]
+    }
+
+    fn fit_seed(&self, seed: &Vec<bool>) -> Vec<bool> {
+        let mut g = seed.clone();
+        g.resize(self.width, false);
+        g
+    }
+
+    fn random(&self, rng: &mut Rng) -> Vec<bool> {
+        let p = rng.range_f64(0.05, 0.8);
+        (0..self.width).map(|_| rng.bool(p)).collect()
+    }
+
+    fn crossover(&self, child: &mut Vec<bool>, other: &Vec<bool>, rng: &mut Rng) {
+        for i in 0..self.width {
+            if rng.bool(0.5) {
+                child[i] = other[i];
+            }
+        }
+    }
+
+    fn mutate(&self, genome: &mut Vec<bool>, rng: &mut Rng, mutation_p: f64) {
+        for bit in genome.iter_mut() {
+            if rng.bool(mutation_p) {
+                *bit = !*bit;
+            }
+        }
+    }
+}
+
+/// Evaluation/search counters accumulated by [`nsga2_problem`] —
+/// observability for tuning operators on new genome types (how much the
+/// memo saves, how often repair fires) surfaced in end-of-run reports.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GaStats {
+    /// Genomes sent to the objective function (memo misses).
+    pub evaluated: usize,
+    /// Genome lookups satisfied by the memo (within-batch duplicates,
+    /// converged-population repeats, and warm-start entries).
+    pub memo_hits: usize,
+    /// Generations actually run this call (0 when resumed at/past the
+    /// configured end).
+    pub generations: usize,
+    /// Genomes produced by initialization + variation (the repair-rate
+    /// denominator).
+    pub produced: usize,
+    /// Produced genomes the problem's repair hook had to fix.
+    pub repaired: usize,
+}
+
+impl GaStats {
+    /// Fraction of produced genomes that were infeasible before repair.
+    pub fn repair_rate(&self) -> f64 {
+        if self.produced == 0 {
+            0.0
+        } else {
+            self.repaired as f64 / self.produced as f64
+        }
+    }
 }
 
 /// `a` Pareto-dominates `b` (all ≤, at least one <).
@@ -47,7 +177,7 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
 
 /// Fast non-dominated sort; returns fronts (vectors of indices) and writes
 /// ranks into the individuals.
-pub fn non_dominated_sort(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+pub fn non_dominated_sort<G>(pop: &mut [Individual<G>]) -> Vec<Vec<usize>> {
     let n = pop.len();
     let mut dominated_by: Vec<Vec<usize>> = vec![vec![]; n]; // i dominates these
     let mut dom_count = vec![0usize; n];
@@ -86,7 +216,7 @@ pub fn non_dominated_sort(pop: &mut [Individual]) -> Vec<Vec<usize>> {
 }
 
 /// Crowding distance within one front (writes into individuals).
-pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
+pub fn crowding_distance<G>(pop: &mut [Individual<G>], front: &[usize]) {
     if front.is_empty() {
         return;
     }
@@ -149,7 +279,7 @@ pub fn pareto_rank0(objectives: &[Objectives]) -> Vec<usize> {
 }
 
 #[derive(Debug, Clone)]
-pub struct GaConfig {
+pub struct GaConfig<G = Genome> {
     pub population: usize,
     pub generations: usize,
     pub crossover_p: f64,
@@ -160,13 +290,14 @@ pub struct GaConfig {
     pub workers: usize,
     /// Genomes injected into the initial population — cross-restart
     /// warm-starts pass the previous run's Pareto front here. Each is
-    /// clipped/padded to the problem width; at most `population - 2` are
-    /// used (slots 0/1 keep the all-false/all-true anchors). Empty (the
-    /// default) reproduces the unseeded population exactly.
-    pub seeds: Vec<Genome>,
+    /// fitted to the problem's shape via [`GaProblem::fit_seed`]; at most
+    /// `population - anchors` are used (the problem's anchor genomes keep
+    /// the first slots). Empty (the default) reproduces the unseeded
+    /// population exactly.
+    pub seeds: Vec<G>,
 }
 
-impl Default for GaConfig {
+impl<G> Default for GaConfig<G> {
     fn default() -> Self {
         GaConfig {
             population: 32,
@@ -192,16 +323,16 @@ impl Default for GaConfig {
 /// generation (`generation == g + 1`); `dse::journal` gives them a
 /// checksummed on-disk encoding.
 #[derive(Debug, Clone, PartialEq)]
-pub struct GaCheckpoint {
+pub struct GaCheckpoint<G = Genome> {
     /// Index of the next generation to run (0 = none run yet).
     pub generation: usize,
     /// Raw xoshiro256** state at the checkpoint boundary.
     pub rng: [u64; 4],
     /// Surviving population, in truncation order.
-    pub population: Vec<(Genome, Objectives)>,
+    pub population: Vec<(G, Objectives)>,
 }
 
-fn checkpoint_of(generation: usize, rng: &Rng, pop: &[Individual]) -> GaCheckpoint {
+fn checkpoint_of<G: Clone>(generation: usize, rng: &Rng, pop: &[Individual<G>]) -> GaCheckpoint<G> {
     GaCheckpoint {
         generation,
         rng: rng.state(),
@@ -218,21 +349,24 @@ fn checkpoint_of(generation: usize, rng: &Rng, pop: &[Individual]) -> GaCheckpoi
 /// pool. Order of the returned individuals matches `genomes`; the memo
 /// makes duplicate genomes — common once the population converges — cost
 /// one lookup.
-fn evaluate_batch(
-    genomes: Vec<Genome>,
-    eval: &(impl Fn(&Genome) -> Objectives + Sync),
-    memo: &mut HashMap<Genome, Objectives>,
+fn evaluate_batch<G: Clone + Eq + std::hash::Hash + Sync>(
+    genomes: Vec<G>,
+    eval: &(impl Fn(&G) -> Objectives + Sync),
+    memo: &mut HashMap<G, Objectives>,
     workers: usize,
-) -> Vec<Individual> {
-    let mut need: Vec<Genome> = vec![];
+    stats: &mut GaStats,
+) -> Vec<Individual<G>> {
+    let mut need: Vec<G> = vec![];
     {
-        let mut pending: HashSet<&Genome> = HashSet::new();
+        let mut pending: HashSet<&G> = HashSet::new();
         for g in &genomes {
             if !memo.contains_key(g) && pending.insert(g) {
                 need.push(g.clone());
             }
         }
     }
+    stats.evaluated += need.len();
+    stats.memo_hits += genomes.len() - need.len();
 
     // the generic engine's deterministic parallel map: fresh[i] ==
     // eval(&need[i]) for any worker count (serial when one suffices) —
@@ -301,8 +435,29 @@ pub fn nsga2_resumable(
     eval: impl Fn(&Genome) -> Objectives + Sync,
     memo: &mut HashMap<Genome, Objectives>,
     resume: Option<GaCheckpoint>,
-    mut on_generation: impl FnMut(&GaCheckpoint),
+    on_generation: impl FnMut(&GaCheckpoint),
 ) -> Vec<Individual> {
+    nsga2_problem(&BitmaskProblem { width }, cfg, eval, memo, resume, on_generation).0
+}
+
+/// The generic NSGA-II core: evolve any [`GaProblem`] genome type with
+/// hash-keyed memoization, batched parallel evaluation, crash-safe
+/// checkpointing and elitist (μ+λ) survival. Returns the deduplicated
+/// first front plus the run's [`GaStats`].
+///
+/// Everything documented on [`nsga2_resumable`] (purity of `eval`, the
+/// resume/worker-count determinism contracts, checkpoint cadence) holds
+/// verbatim here for any problem whose operators are deterministic
+/// functions of `(genome, rng)` and whose repair consumes no RNG.
+pub fn nsga2_problem<P: GaProblem>(
+    problem: &P,
+    cfg: &GaConfig<P::Genome>,
+    eval: impl Fn(&P::Genome) -> Objectives + Sync,
+    memo: &mut HashMap<P::Genome, Objectives>,
+    resume: Option<GaCheckpoint<P::Genome>>,
+    mut on_generation: impl FnMut(&GaCheckpoint<P::Genome>),
+) -> (Vec<Individual<P::Genome>>, GaStats) {
+    let mut stats = GaStats::default();
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let start_gen;
     let mut pop;
@@ -320,33 +475,35 @@ pub fn nsga2_resumable(
             })
             .collect::<Vec<_>>();
     } else {
-        // initial population: all-false (save everything = the baseline),
-        // all-true, any injected warm-start genomes (previous front), then
-        // random genomes with varying density. Injected genomes consume no
-        // RNG, so an empty `cfg.seeds` reproduces the unseeded stream.
-        let injected: Vec<Genome> = cfg
+        // initial population: the problem's anchor genomes, any injected
+        // warm-start genomes (previous front), then random genomes.
+        // Anchors and injected genomes consume no RNG, so an empty
+        // `cfg.seeds` reproduces the unseeded stream.
+        let anchors = problem.anchors();
+        let injected: Vec<P::Genome> = cfg
             .seeds
             .iter()
-            .take(cfg.population.saturating_sub(2))
-            .map(|s| {
-                let mut g = s.clone();
-                g.resize(width, false);
+            .take(cfg.population.saturating_sub(anchors.len()))
+            .map(|s| problem.fit_seed(s))
+            .collect();
+        let seeds: Vec<P::Genome> = (0..cfg.population)
+            .map(|i| {
+                let mut g = if i < anchors.len() {
+                    anchors[i].clone()
+                } else if i - anchors.len() < injected.len() {
+                    injected[i - anchors.len()].clone()
+                } else {
+                    problem.random(&mut rng)
+                };
+                stats.produced += 1;
+                if problem.repair(&mut g) {
+                    stats.repaired += 1;
+                }
                 g
             })
             .collect();
-        let seeds: Vec<Genome> = (0..cfg.population)
-            .map(|i| match i {
-                0 => vec![false; width],
-                1 => vec![true; width],
-                i if i >= 2 && i - 2 < injected.len() => injected[i - 2].clone(),
-                _ => {
-                    let p = rng.range_f64(0.05, 0.8);
-                    (0..width).map(|_| rng.bool(p)).collect()
-                }
-            })
-            .collect();
         start_gen = 0;
-        pop = evaluate_batch(seeds, &eval, memo, cfg.workers);
+        pop = evaluate_batch(seeds, &eval, memo, cfg.workers, &mut stats);
         on_generation(&checkpoint_of(0, &rng, &pop));
     }
 
@@ -356,15 +513,15 @@ pub fn nsga2_resumable(
             crowding_distance(&mut pop, f);
         }
         // binary tournament by (rank, crowding)
-        let better = |a: &Individual, b: &Individual| -> bool {
+        let better = |a: &Individual<P::Genome>, b: &Individual<P::Genome>| -> bool {
             a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding)
         };
         // generate the whole brood first (same RNG stream as the serial
         // implementation — eval never touched the RNG), then evaluate it
         // as one memoized, parallel batch
-        let mut brood: Vec<Genome> = Vec::with_capacity(cfg.population);
+        let mut brood: Vec<P::Genome> = Vec::with_capacity(cfg.population);
         while brood.len() < cfg.population {
-            let pick = |rng: &mut Rng, pop: &[Individual]| -> Genome {
+            let pick = |rng: &mut Rng, pop: &[Individual<P::Genome>]| -> P::Genome {
                 let a = rng.usize(pop.len());
                 let b = rng.usize(pop.len());
                 if better(&pop[a], &pop[b]) { pop[a].genome.clone() } else { pop[b].genome.clone() }
@@ -372,20 +529,16 @@ pub fn nsga2_resumable(
             let mut c1 = pick(&mut rng, &pop);
             let c2 = pick(&mut rng, &pop);
             if rng.bool(cfg.crossover_p) {
-                for i in 0..width {
-                    if rng.bool(0.5) {
-                        c1[i] = c2[i];
-                    }
-                }
+                problem.crossover(&mut c1, &c2, &mut rng);
             }
-            for bit in c1.iter_mut() {
-                if rng.bool(cfg.mutation_p) {
-                    *bit = !*bit;
-                }
+            problem.mutate(&mut c1, &mut rng, cfg.mutation_p);
+            stats.produced += 1;
+            if problem.repair(&mut c1) {
+                stats.repaired += 1;
             }
             brood.push(c1);
         }
-        let offspring = evaluate_batch(brood, &eval, memo, cfg.workers);
+        let offspring = evaluate_batch(brood, &eval, memo, cfg.workers, &mut stats);
         // elitist survival: μ+λ, keep best `population` by (rank, crowding)
         pop.extend(offspring);
         let fronts = non_dominated_sort(&mut pop);
@@ -400,12 +553,13 @@ pub fn nsga2_resumable(
                 .then(b.crowding.total_cmp(&a.crowding))
         });
         pop.truncate(cfg.population);
+        stats.generations += 1;
         on_generation(&checkpoint_of(_gen + 1, &rng, &pop));
     }
 
     // return the deduplicated first front
     let fronts = non_dominated_sort(&mut pop);
-    let mut out: Vec<Individual> = vec![];
+    let mut out: Vec<Individual<P::Genome>> = vec![];
     if let Some(first) = fronts.first() {
         let mut seen = std::collections::HashSet::new();
         for &i in first {
@@ -414,7 +568,7 @@ pub fn nsga2_resumable(
             }
         }
     }
-    out
+    (out, stats)
 }
 
 #[cfg(test)]
@@ -695,6 +849,136 @@ mod tests {
             v.iter().map(|i| (i.genome.clone(), i.objectives.clone())).collect::<Vec<_>>()
         };
         assert_eq!(key(&full), key(&resumed));
+    }
+
+    /// Line-for-line port of the pre-refactor hard-coded `Vec<bool>`
+    /// NSGA-II (serial, memoized): the generic core behind the wrappers
+    /// must reproduce it bit for bit — same RNG draws, same genomes,
+    /// same survival order, same final front.
+    fn reference_nsga2(
+        width: usize,
+        cfg: &GaConfig,
+        eval: impl Fn(&Genome) -> Objectives,
+    ) -> Vec<Individual> {
+        let mut memo: HashMap<Genome, Objectives> = HashMap::new();
+        let mut eval_all = move |genomes: Vec<Genome>| -> Vec<Individual> {
+            genomes
+                .into_iter()
+                .map(|genome| {
+                    let objectives =
+                        memo.entry(genome.clone()).or_insert_with(|| eval(&genome)).clone();
+                    Individual { genome, objectives, rank: 0, crowding: 0.0 }
+                })
+                .collect()
+        };
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let seeds: Vec<Genome> = (0..cfg.population)
+            .map(|i| match i {
+                0 => vec![false; width],
+                1 => vec![true; width],
+                _ => {
+                    let p = rng.range_f64(0.05, 0.8);
+                    (0..width).map(|_| rng.bool(p)).collect()
+                }
+            })
+            .collect();
+        let mut pop = eval_all(seeds);
+        for _gen in 0..cfg.generations {
+            let fronts = non_dominated_sort(&mut pop);
+            for f in &fronts {
+                crowding_distance(&mut pop, f);
+            }
+            let mut brood: Vec<Genome> = vec![];
+            while brood.len() < cfg.population {
+                let pick = |rng: &mut Rng, pop: &[Individual]| -> Genome {
+                    let a = rng.usize(pop.len());
+                    let b = rng.usize(pop.len());
+                    let better = pop[a].rank < pop[b].rank
+                        || (pop[a].rank == pop[b].rank && pop[a].crowding > pop[b].crowding);
+                    if better { pop[a].genome.clone() } else { pop[b].genome.clone() }
+                };
+                let mut c1 = pick(&mut rng, &pop);
+                let c2 = pick(&mut rng, &pop);
+                if rng.bool(cfg.crossover_p) {
+                    for i in 0..width {
+                        if rng.bool(0.5) {
+                            c1[i] = c2[i];
+                        }
+                    }
+                }
+                for bit in c1.iter_mut() {
+                    if rng.bool(cfg.mutation_p) {
+                        *bit = !*bit;
+                    }
+                }
+                brood.push(c1);
+            }
+            pop.extend(eval_all(brood));
+            let fronts = non_dominated_sort(&mut pop);
+            for f in &fronts {
+                crowding_distance(&mut pop, f);
+            }
+            pop.sort_by(|a, b| a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding)));
+            pop.truncate(cfg.population);
+        }
+        let fronts = non_dominated_sort(&mut pop);
+        let mut out: Vec<Individual> = vec![];
+        if let Some(first) = fronts.first() {
+            let mut seen = std::collections::HashSet::new();
+            for &i in first {
+                if seen.insert(pop[i].genome.clone()) {
+                    out.push(pop[i].clone());
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reference_bitmask_ga_matches_the_generic_core() {
+        let cfg = GaConfig { population: 14, generations: 7, workers: 1, ..Default::default() };
+        let eval = |g: &Genome| -> Objectives {
+            let ones = g.iter().filter(|&&b| b).count() as f64;
+            let runs = g.windows(2).filter(|p| p[0] != p[1]).count() as f64;
+            vec![ones, runs]
+        };
+        let key = |v: Vec<Individual>| {
+            v.into_iter().map(|i| (i.genome, i.objectives)).collect::<Vec<_>>()
+        };
+        let legacy = key(reference_nsga2(11, &cfg, eval));
+        let generic = key(nsga2(11, &cfg, eval));
+        assert_eq!(legacy, generic, "generic core diverged from the pre-refactor GA");
+    }
+
+    #[test]
+    fn stats_count_evaluations_memo_hits_and_generations() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cfg = GaConfig { population: 12, generations: 5, workers: 1, ..Default::default() };
+        let calls = AtomicUsize::new(0);
+        let mut memo: HashMap<Genome, Objectives> = HashMap::new();
+        let (front, stats) = nsga2_problem(
+            &BitmaskProblem { width: 6 },
+            &cfg,
+            |g| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                vec![g.iter().filter(|&&b| b).count() as f64]
+            },
+            &mut memo,
+            None,
+            |_| {},
+        );
+        assert!(!front.is_empty());
+        assert_eq!(stats.evaluated, calls.load(Ordering::Relaxed));
+        assert_eq!(stats.evaluated, memo.len());
+        assert_eq!(stats.generations, cfg.generations);
+        // init population + one brood per generation
+        assert_eq!(stats.produced, cfg.population * (cfg.generations + 1));
+        assert_eq!(stats.evaluated + stats.memo_hits, stats.produced);
+        // bitmask genomes are always feasible: repair never fires
+        assert_eq!(stats.repaired, 0);
+        assert_eq!(stats.repair_rate(), 0.0);
+        // width-6 search (64 possible genomes, 72 lookups) must repeat
+        assert!(stats.memo_hits > 0, "no memo hits in a converging run");
     }
 
     #[test]

@@ -41,6 +41,15 @@ COMMANDS
                   space becomes heterogeneous: a mixed device pool with a
                   stage-placement dimension (which class hosts which
                   pipeline stage)
+  ga-cluster      cluster DSE for pools past the exhaustive-enumeration
+                  wall (256+ devices): evolves full (dp, pp, m, tp)
+                  factorizations with per-stage class placements over the
+                  generic NSGA-II core, seeded from — and reported
+                  head-to-head against — the contiguous-block fallback
+                  enumeration. Requires --device-classes; --pop and
+                  --gens size the GA; with --run-dir both the backbone and
+                  every completed GA generation are journaled, so --resume
+                  covers the whole search
   ablation        MILP (eq. 6) vs NSGA-II checkpointing under the true pipeline
   train           end-to-end: train tiny GPT-2 via the AOT HLO artifacts
   validate        cross-check the AOT cost kernel against the native model
@@ -48,34 +57,38 @@ COMMANDS
 
 OPTIONS
   --stride N      design-space subsampling stride (fig1/fig9/all; default 20)
-  --pop N         GA population (fig12/ablation; default 32)
-  --gens N        GA generations (fig12/ablation; default 30)
+  --pop N         GA population (fig12/ablation/ga-cluster; default 32)
+  --gens N        GA generations (fig12/ablation/ga-cluster; default 30)
   --devices N     max cluster size (cluster/fig5; device counts are the
                   powers of two ≤ N; default 8). Ignored by cluster
-                  --device-classes: there the pool defines the size
+                  --device-classes and ga-cluster: there the pool defines
+                  the size
   --batch N       global training batch split across the cluster
-                  (cluster/fig5; default 4)
-  --workload W    cluster workload: resnet18 | gpt2 | both (cluster;
-                  default both — gpt2 is the reduced tiny config, like the
-                  fig9 sweep workload)
+                  (cluster/fig5/ga-cluster; default 4)
+  --workload W    cluster workload: resnet18 | gpt2 | both (cluster and
+                  ga-cluster; default both — gpt2 is the reduced tiny
+                  config, like the fig9 sweep workload)
   --device-classes L
-                  heterogeneous device pool for the cluster command, e.g.
-                  edge:2,datacenter:2 (classes: edge | server |
-                  datacenter). Switches cluster to the stage-placement
-                  DSE: every feasible dp/pp/tp factorization × placement
-                  of pipeline stages onto classes is enumerated, ranked
-                  with the same 4-objective set, and the front is compared
-                  against the best all-edge and all-datacenter deployments
+                  heterogeneous device pool for the cluster and ga-cluster
+                  commands, e.g. edge:2,datacenter:2 (classes: edge |
+                  server | datacenter). Switches cluster to the
+                  stage-placement DSE: every feasible dp/pp/tp
+                  factorization × placement of pipeline stages onto
+                  classes is enumerated, ranked with the same 4-objective
+                  set, and the front is compared against the best all-edge
+                  and all-datacenter deployments. ga-cluster searches the
+                  same space with the GA instead of enumerating it
   --steps N       training steps (train; default 300)
   --config NAME   gpt2 config (train; default tiny)
   --artifacts DIR artifacts directory (default artifacts)
   --out DIR       results directory (default results)
   --no-cache      disable the shared group-cost memo for the sweep commands
-                  (fig1/fig5/fig9/search/cluster/all) — A/B timing; results
-                  are bit-identical with or without it
+                  (fig1/fig5/fig9/search/cluster/ga-cluster/all) — A/B
+                  timing; results are bit-identical with or without it
   --cache-dir DIR persist the group-cost cache across runs: warm-load the
                   snapshot in DIR before a sweep/search/GA, write it back
-                  after (fig1/fig5/fig9/search/cluster/all/fig12; the
+                  after (fig1/fig5/fig9/search/cluster/all/fig12, and the
+                  ga-cluster backbone sweep; the
                   cluster commands share entries across factorizations,
                   placements and link tiers — the stage-schedule
                   memoization win). Stale/incompatible
@@ -87,8 +100,9 @@ OPTIONS
   --cache-cap N   bound the group-cost cache to ~N entries (second-chance/
                   CLOCK eviction; default 0 = unbounded)
   --run-dir DIR   crash-safety: journal every completed design point (and
-                  every completed GA generation for fig12) into DIR as it
-                  finishes (fig1/fig5/fig9/search/cluster/all/fig12). Each
+                  every completed GA generation for fig12/ga-cluster) into
+                  DIR as it finishes
+                  (fig1/fig5/fig9/search/cluster/ga-cluster/all/fig12). Each
                   command journals into its own subdirectory of DIR, so
                   one DIR serves a whole `all` run. Rows are bit-identical
                   with journaling on or off
@@ -640,6 +654,131 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ga-cluster`: the NSGA-II deployment search for pools past the
+/// exhaustive-enumeration wall. The block-fallback enumeration is
+/// evaluated as the journaled backbone and head-to-head baseline; the GA
+/// then evolves full factorization + placement genomes the fallback
+/// never visits.
+fn cmd_ga_cluster(args: &Args) -> Result<()> {
+    use monet::autodiff::TrainingGraph;
+    use monet::dse::{ga_cluster_search, ClusterRow, ClusterSpace, SweepConfig};
+    use monet::figures::{cluster_gpt2_builder, cluster_resnet18_builder};
+    use monet::mapping::MappingConfig;
+    use monet::report::fmt_bytes;
+
+    let spec = match &args.device_classes {
+        Some(s) => s.clone(),
+        None => {
+            eprintln!("error: ga-cluster requires --device-classes (the pool to search)");
+            std::process::exit(2);
+        }
+    };
+    let hc = parse_device_pool(&spec).unwrap_or_else(|| usage());
+    let wanted: Vec<&str> = match args.workload.as_str() {
+        "both" => vec!["resnet18", "gpt2"],
+        "resnet18" => vec!["resnet18"],
+        "gpt2" => vec!["gpt2"],
+        _ => usage(),
+    };
+    // same microbatch options as the enumerating cluster command, so the
+    // GA searches the exact space the enumeration would
+    let microbatches = ClusterSpace::default_space(hc.total_devices()).microbatches;
+    for name in wanted {
+        let ga: GaConfig<monet::ga::DeploymentGenome> =
+            GaConfig { population: args.pop, generations: args.gens, ..Default::default() };
+        let cfg = SweepConfig {
+            mapping: MappingConfig::edge_tpu_default(),
+            use_cache: !args.no_cache,
+            cache_dir: args.cache_dir.clone(),
+            cache_cap: args.cache_cap,
+            run_dir: run_subdir(args, &format!("ga-cluster/{name}")),
+            resume: args.resume,
+            ..Default::default()
+        };
+        eprintln!(
+            "ga-cluster: {name} training, batch {}, pool {} (pop {}, gens {})...",
+            args.batch,
+            hc.label(),
+            args.pop,
+            args.gens
+        );
+        let builder: &(dyn Fn(usize) -> TrainingGraph + Sync) = if name == "resnet18" {
+            &cluster_resnet18_builder
+        } else {
+            &cluster_gpt2_builder
+        };
+        let out =
+            ga_cluster_search(&hc, &microbatches, args.batch, builder, name, &ga, &cfg, progress);
+        println!(
+            "\n[{name} | {}] {} points visited ({} backbone + {} GA) of {} enumerable ({:.2}%) in {:.2}s",
+            hc.label(),
+            out.evaluated,
+            out.evaluated - out.stats.evaluated,
+            out.stats.evaluated,
+            out.enumerated,
+            out.evaluated as f64 / out.enumerated.max(1) as f64 * 100.0,
+            out.secs
+        );
+        println!(
+            "GA: {} generation(s), {} offspring produced, {} evaluated, {} memo hits, {} repaired ({:.1}% repair rate){}",
+            out.stats.generations,
+            out.stats.produced,
+            out.stats.evaluated,
+            out.stats.memo_hits,
+            out.stats.repaired,
+            out.stats.repair_rate() * 100.0,
+            if out.ga_resumed { " — resumed from the GA journal" } else { "" }
+        );
+        print_cache_stats("backbone", &out.cache);
+        print_cache_stats("ga", &out.ga_cache);
+        monet::figures::write_ga_cluster_csv(&args.out, name, &out)?;
+        println!("rows → {}/ga_cluster_front_{name}.csv", args.out.display());
+        report_run_health(&format!("ga-cluster [{name}]"), out.resumed, &out.failures)?;
+        println!(
+            "4-objective front over backbone ∪ GA: {} points (block-fallback front: {} points, every one weakly dominated)",
+            out.rows.len(),
+            out.fallback_front.len()
+        );
+        let mut front_rows: Vec<&ClusterRow> = out.rows.iter().collect();
+        front_rows.sort_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles));
+        println!(
+            "{:<44} {:>13} {:>13} {:>11} {:>12}",
+            "deployment (placement)", "latency (cyc)", "energy (pJ)", "mem/device", "comm (B)"
+        );
+        for r in front_rows.iter().take(16) {
+            println!(
+                "{:<44.44} {:>13.3e} {:>13.3e} {:>11} {:>12.3e}",
+                r.label,
+                r.latency_cycles,
+                r.energy_pj,
+                fmt_bytes(r.per_device_mem_bytes),
+                r.comm_bytes
+            );
+        }
+        if front_rows.len() > 16 {
+            println!("  ... {} more front points", front_rows.len() - 16);
+        }
+        // head-to-head: how much of the baseline front the GA strictly beat
+        let improved = out
+            .fallback_front
+            .iter()
+            .filter(|fb| {
+                let fo = fb.objectives().to_vec();
+                out.rows.iter().any(|r| {
+                    let ro = r.objectives().to_vec();
+                    ro.iter().zip(&fo).all(|(a, b)| a <= b)
+                        && ro.iter().zip(&fo).any(|(a, b)| a < b)
+                })
+            })
+            .count();
+        println!(
+            "head-to-head: {improved}/{} block-fallback front rows strictly dominated by a GA front member",
+            out.fallback_front.len()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_fig9(args: &Args) -> Result<()> {
     eprintln!("FuseMax sweep (Table III, stride {})...", args.stride);
     let run_dir = run_subdir(args, "fig9");
@@ -988,6 +1127,7 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "search" => cmd_search(&args),
         "cluster" => cmd_cluster(&args),
+        "ga-cluster" => cmd_ga_cluster(&args),
         "ablation" => cmd_ablation(&args),
         "train" => cmd_train(&args),
         "validate" => cmd_validate(&args),

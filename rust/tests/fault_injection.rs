@@ -25,13 +25,13 @@ use std::sync::Mutex;
 use monet::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
 use monet::dse::journal::{GA_JOURNAL_FILE, RUN_JOURNAL_FILE};
 use monet::dse::{
-    journal_record_bounds, run_cluster_sweep_outcome, run_hetero_sweep_outcome, run_sweep_outcome,
-    ClusterRow, ClusterSpace, DesignPoint, SweepConfig, SweepRow,
+    ga_cluster_search, journal_record_bounds, run_cluster_sweep_outcome, run_hetero_sweep_outcome,
+    run_sweep_outcome, ClusterRow, ClusterSpace, DesignPoint, SweepConfig, SweepRow,
 };
 use monet::eval::persist;
 use monet::figures::cluster_resnet18_builder;
 use monet::fusion::FusionConstraints;
-use monet::ga::{CheckpointProblem, CheckpointSolution, GaConfig};
+use monet::ga::{CheckpointProblem, CheckpointSolution, DeploymentGenome, GaConfig};
 use monet::hardware::accelerator::Accelerator;
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
@@ -346,6 +346,63 @@ fn ga_front_resumes_bit_identically_from_every_generation_boundary() {
         std::fs::write(&jpath, &complete[..cut as usize]).unwrap();
         let resumed = p.optimize_journaled(&ga, &dir, true);
         assert_eq!(key(&full), key(&resumed), "GA resume from checkpoint {g} diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Deployment-genome GA family (`ga-cluster`): the same per-generation
+/// checkpoint journal covers the cluster deployment search, on top of
+/// the point journal covering its block-fallback backbone — so a run
+/// killed at any GA generation boundary resumes to a final front (and
+/// fallback baseline) bit-identical to the uninterrupted run. A cut
+/// back to the bare journal header degrades to a fresh GA run over the
+/// replayed backbone, still bit-identical.
+#[test]
+fn ga_cluster_front_resumes_bit_identically_from_every_generation_boundary() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fn tiny_builder(batch: usize) -> TrainingGraph {
+        build_training_graph(&mlp(batch.max(1), 8, 16, 2, 4), TrainOptions::default())
+    }
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 2), (DeviceClass::datacenter(), 2)]);
+    let ga: GaConfig<DeploymentGenome> =
+        GaConfig { population: 8, generations: 3, workers: 2, ..Default::default() };
+    let dir = tmp_dir("ga_cluster_resume");
+    let cfg = |resume: bool| SweepConfig {
+        mapping: MappingConfig::edge_tpu_default(),
+        workers: 2,
+        run_dir: Some(dir.clone()),
+        resume,
+        ..Default::default()
+    };
+
+    let full =
+        ga_cluster_search(&hc, &[2], 4, &tiny_builder, "tiny-mlp", &ga, &cfg(false), |_, _| {});
+    assert!(full.failures.is_empty(), "{:?}", full.failures);
+    assert!(!full.rows.is_empty() && !full.fallback_front.is_empty());
+
+    let jpath = dir.join(GA_JOURNAL_FILE);
+    let complete = std::fs::read(&jpath).expect("GA journal missing");
+    let bounds = journal_record_bounds(&jpath).unwrap();
+    // one checkpoint after the initial evaluation + one per generation
+    assert_eq!(bounds.len(), ga.generations + 2, "checkpoint cadence");
+
+    for (g, &cut) in bounds.iter().enumerate() {
+        std::fs::write(&jpath, &complete[..cut as usize]).unwrap();
+        let resumed =
+            ga_cluster_search(&hc, &[2], 4, &tiny_builder, "tiny-mlp", &ga, &cfg(true), |_, _| {});
+        assert!(resumed.resumed > 0, "backbone journal must replay (boundary {g})");
+        assert_eq!(resumed.ga_resumed, g > 0, "checkpoint presence at boundary {g}");
+        cluster_rows_bit_eq(&full.rows, &resumed.rows, &format!("ga-cluster front, boundary {g}"));
+        cluster_rows_bit_eq(
+            &full.fallback_front,
+            &resumed.fallback_front,
+            &format!("ga-cluster fallback front, boundary {g}"),
+        );
+        if g == bounds.len() - 1 {
+            // the final checkpoint carries the whole surviving population:
+            // nothing is re-evaluated
+            assert_eq!(resumed.stats.evaluated, 0, "resume at the final boundary re-evaluated");
+        }
     }
     std::fs::remove_dir_all(&dir).ok();
 }
