@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Fail CI if any BENCH_*.json dropped a previously-present key.
+
+The bench files are the repo's performance trajectory across PRs: a key
+that disappears (a family silently dropped from a bench, a renamed
+field) breaks cross-PR comparability without failing any test. The
+manifest ci/bench_keys.json lists, per bench file, every dotted key
+path that must stay present. Emitting MORE keys is always fine — add
+them to the manifest in the same PR that introduces them, which makes
+them load-bearing for every PR after.
+
+Usage: check_bench_keys.py <dir-holding-BENCH-files>
+"""
+
+import json
+import pathlib
+import sys
+
+
+def key_paths(value, prefix=""):
+    """Every dotted path to a key anywhere in a nested JSON object."""
+    paths = set()
+    if isinstance(value, dict):
+        for k, v in value.items():
+            path = f"{prefix}.{k}" if prefix else k
+            paths.add(path)
+            paths |= key_paths(v, path)
+    return paths
+
+
+def main():
+    bench_dir = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else pathlib.Path(".")
+    manifest_path = pathlib.Path(__file__).with_name("bench_keys.json")
+    manifest = json.loads(manifest_path.read_text())
+    failures = []
+    for fname, required in sorted(manifest.items()):
+        fpath = bench_dir / fname
+        if not fpath.exists():
+            failures.append(f"{fname}: file missing (bench not run?)")
+            continue
+        present = key_paths(json.loads(fpath.read_text()))
+        missing = sorted(set(required) - present)
+        failures.extend(f"{fname}: key '{key}' dropped" for key in missing)
+        print(
+            f"{fname}: {len(required)} required keys, "
+            f"{len(present)} present, {len(missing)} missing"
+        )
+    if failures:
+        print(
+            "\nbench trajectory regression — previously-present keys dropped:",
+            file=sys.stderr,
+        )
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench key trajectory OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+//! `cargo bench --bench bench_serve` — throughput of the `monet serve`
+//! daemon: one in-process server on an ephemeral loopback port, driven
+//! over real TCP by the same one-exchange-per-connection protocol the
+//! CLI smoke test uses. Measures the cold first query (resident cache
+//! empty), the warm steady state, and scaling under 1/4/8 concurrent
+//! clients. Emits `BENCH_serve.json` (uploaded as a CI artifact
+//! alongside `BENCH_eval.json` and `BENCH_dse.json`) so serving
+//! regressions are visible across PRs.
+//!
+//! Every response is asserted byte-identical to the first — cache
+//! warmth and client concurrency may change throughput, never a byte.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use monet::serve::{ServeConfig, Server};
+
+/// The benchmark query: the homogeneous-cluster family, small enough to
+/// answer in well under a second warm, large enough to exercise the
+/// engine + cache path rather than HTTP overhead alone.
+const QUERY: &str = r#"{"family":"cluster","devices":4,"batch":4,"workload":"resnet18"}"#;
+
+fn ask(addr: SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect to daemon");
+    write!(
+        s,
+        "POST /query HTTP/1.1\r\nHost: monet\r\nContent-Length: {}\r\n\r\n{QUERY}",
+        QUERY.len()
+    )
+    .expect("send query");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    assert!(raw.starts_with("HTTP/1.1 200"), "query failed: {raw}");
+    raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).expect("response body")
+}
+
+/// Drive `clients` concurrent client threads, `per_client` queries each
+/// (serial per client, like real callers); returns (total, secs).
+fn drive(addr: SocketAddr, reference: &str, clients: usize, per_client: usize) -> (usize, f64) {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(move || {
+                for _ in 0..per_client {
+                    ask(addr);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    // one post-drive check per load level: still bit-identical
+    assert_eq!(ask(addr), reference, "concurrency changed the answer");
+    (clients * per_client, secs)
+}
+
+fn main() {
+    println!("== MONET serve daemon throughput (cold vs warm, concurrent clients) ==\n");
+    let server = Server::bind(ServeConfig { serve_workers: 4, ..Default::default() })
+        .expect("bind daemon");
+    let addr = server.local_addr();
+    let daemon = std::thread::spawn(move || server.run().expect("serve loop"));
+
+    // cold: the resident cache is empty, every group cost is computed
+    let t0 = Instant::now();
+    let reference = ask(addr);
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let cold_qps = 1.0 / cold_secs;
+
+    // warm steady state, single client
+    const WARM_QUERIES: usize = 8;
+    let t1 = Instant::now();
+    for _ in 0..WARM_QUERIES {
+        assert_eq!(ask(addr), reference, "warmth changed the answer");
+    }
+    let warm_secs = t1.elapsed().as_secs_f64();
+    let warm_qps = WARM_QUERIES as f64 / warm_secs;
+    assert!(
+        warm_qps > cold_qps,
+        "warm queries/sec ({warm_qps:.2}) must beat cold ({cold_qps:.2}) — the resident cache is the point of the daemon"
+    );
+
+    println!("{:<10} {:>10} {:>12} {:>14}", "phase", "queries", "secs", "queries/s");
+    println!("{:<10} {:>10} {:>12.3} {:>14.2}", "cold", 1, cold_secs, cold_qps);
+    println!("{:<10} {:>10} {:>12.3} {:>14.2}", "warm", WARM_QUERIES, warm_secs, warm_qps);
+
+    // warm scaling under concurrent clients
+    const PER_CLIENT: usize = 4;
+    let mut client_json: Vec<String> = vec![];
+    for clients in [1usize, 4, 8] {
+        let (queries, secs) = drive(addr, &reference, clients, PER_CLIENT);
+        let qps = queries as f64 / secs;
+        println!("{:<10} {:>10} {:>12.3} {:>14.2}", format!("c{clients}"), queries, secs, qps);
+        client_json.push(format!(
+            "    \"c{}\": {{\n      \"clients\": {},\n      \"queries\": {},\n      \"secs\": {:.3},\n      \"queries_per_sec\": {:.2}\n    }}",
+            clients, clients, queries, secs, qps
+        ));
+    }
+
+    // graceful shutdown: drain, persist (no cache_dir here — a no-op),
+    // join — the daemon must exit cleanly under bench load too
+    let mut s = TcpStream::connect(addr).expect("connect for shutdown");
+    write!(s, "POST /shutdown HTTP/1.1\r\nHost: monet\r\nContent-Length: 0\r\n\r\n")
+        .expect("send shutdown");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).ok();
+    daemon.join().expect("daemon thread");
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_daemon_throughput\",\n  \"harness\": \"monet serve (resident cache, bounded queue, {} query workers)\",\n  \"cold\": {{\n    \"secs\": {:.3},\n    \"queries_per_sec\": {:.2}\n  }},\n  \"warm\": {{\n    \"queries\": {},\n    \"secs\": {:.3},\n    \"queries_per_sec\": {:.2},\n    \"speedup_vs_cold\": {:.2}\n  }},\n  \"clients\": {{\n{}\n  }}\n}}\n",
+        4,
+        cold_secs,
+        cold_qps,
+        WARM_QUERIES,
+        warm_secs,
+        warm_qps,
+        warm_qps / cold_qps,
+        client_json.join(",\n")
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("writing BENCH_serve.json");
+    println!("\n    -> BENCH_serve.json written");
+    println!("\nbench_serve done");
+}

@@ -70,7 +70,7 @@ use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 use super::journal::{self, JournalRow, PointRecord};
 use super::space::{ClusterPoint, DesignPoint};
@@ -275,6 +275,26 @@ impl fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+/// A caller-owned resident [`CostCache`] handle, for embedding the
+/// engine in a long-lived process (`monet serve`): the engine uses the
+/// shared cache instead of opening its own, and — crucially — does
+/// **not** persist it at end-of-run. The owner controls the snapshot
+/// lifecycle (the daemon persists at its single shutdown/checkpoint
+/// point), so concurrent queries never race on the snapshot file.
+///
+/// Cached values are pure functions of the key, so sharing one cache
+/// across concurrent runs cannot change any row — warm-daemon results
+/// stay bit-identical to cold one-shot runs (pinned in
+/// `tests/serve.rs`).
+#[derive(Clone)]
+pub struct SharedCache(pub Arc<CostCache>);
+
+impl fmt::Debug for SharedCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SharedCache({} entries)", self.0.stats().entries)
+    }
+}
+
 /// The engine's orchestration knobs: worker count plus the shared
 /// cost-cache lifecycle (the CLI's `--no-cache` / `--cache-dir` /
 /// `--cache-cap` triple — one definition, so the semantics cannot drift
@@ -306,6 +326,12 @@ pub struct EngineConfig {
     /// evaluating (`--resume`): completed points are restored from the
     /// journal, bit-identically, and only the remainder is evaluated.
     pub resume: bool,
+    /// Use this caller-owned resident cache instead of opening one
+    /// (`monet serve`'s warm cache). When set (and `use_cache` is on),
+    /// the engine neither warm-loads a `cache_dir` snapshot nor
+    /// persists one at end-of-run — the cache's owner controls the
+    /// snapshot lifecycle. Ignored when `use_cache` is off.
+    pub shared_cache: Option<SharedCache>,
 }
 
 impl Default for EngineConfig {
@@ -317,6 +343,7 @@ impl Default for EngineConfig {
             cache_cap: 0,
             run_dir: None,
             resume: false,
+            shared_cache: None,
         }
     }
 }
@@ -482,12 +509,22 @@ impl Engine {
                 assert!(seen.insert(id.clone()), "DesignSpace ids must be unique: {id:?}");
             }
         }
-        let cache = if self.cfg.use_cache {
+        // Three cache modes: off (`--no-cache`), engine-owned (open a
+        // fresh/persisted cache for this run, persist it after), or
+        // caller-owned (`shared_cache` — a resident daemon's warm cache;
+        // the engine must not persist it, the owner does).
+        let owned_cache = if self.cfg.use_cache && self.cfg.shared_cache.is_none() {
             Some(persist::open_cost_cache(self.cfg.cache_dir.as_deref(), self.cfg.cache_cap))
         } else {
             None
         };
-        let cache_ref = cache.as_ref();
+        let cache_ref: Option<&CostCache> = if !self.cfg.use_cache {
+            None
+        } else if let Some(shared) = &self.cfg.shared_cache {
+            Some(&shared.0)
+        } else {
+            owned_cache.as_ref()
+        };
 
         let mut slots: Vec<Option<PointRecord<E::Row>>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
@@ -538,11 +575,13 @@ impl Engine {
         }
 
         // persist BEFORE snapshotting the counters, so retried-write
-        // events (CacheStats::io_retries) reach the end-of-run report
-        if let Some(c) = &cache {
+        // events (CacheStats::io_retries) reach the end-of-run report;
+        // only the engine-owned cache is persisted — a shared cache's
+        // owner holds the single persist point
+        if let Some(c) = &owned_cache {
             persist::persist_cost_cache(c, self.cfg.cache_dir.as_deref());
         }
-        let stats = cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+        let stats = cache_ref.map(|c| c.stats()).unwrap_or_default();
 
         let mut rows = Vec::new();
         let mut failures = Vec::new();

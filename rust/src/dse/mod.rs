@@ -50,7 +50,7 @@ pub mod sweep;
 
 pub use engine::{
     map_parallel, try_map_parallel, DesignSpace, Engine, EngineConfig, EngineError, Evaluate,
-    HeteroSpace, Objectives, PointFailure, RunOutcome,
+    HeteroSpace, Objectives, PointFailure, RunOutcome, SharedCache,
 };
 pub use journal::{journal_record_bounds, JournalRow, PointRecord};
 pub use prefilter::{accel_to_cfg, graph_to_layers, prefilter_scores, select_survivors};

@@ -341,14 +341,18 @@ pub fn ga_cluster_search(
             .collect();
     }
 
-    // phase 2: the GA, on its own cost cache (the engine owns the
+    // phase 2: the GA, on the caller's resident cache when one is shared
+    // (`monet serve`), else its own fresh cost cache (the engine owns the
     // backbone's for its lifecycle) — cached and uncached evaluations are
-    // bit-identical, so a cold GA cache is a cost, never a skew
-    let ga_cache = if cfg.use_cache {
-        Some(if cfg.cache_cap > 0 {
-            CostCache::with_capacity(cfg.cache_cap)
-        } else {
-            CostCache::new()
+    // bit-identical, so the cache's temperature is a cost, never a skew
+    let ga_cache: Option<std::sync::Arc<CostCache>> = if cfg.use_cache {
+        Some(match &cfg.shared_cache {
+            Some(shared) => shared.0.clone(),
+            None => std::sync::Arc::new(if cfg.cache_cap > 0 {
+                CostCache::with_capacity(cfg.cache_cap)
+            } else {
+                CostCache::new()
+            }),
         })
     } else {
         None
@@ -357,7 +361,7 @@ pub fn ga_cluster_search(
     let eval = |g: &DeploymentGenome| {
         let p = ClusterSpace::genome_to_hetero(g);
         let mut scratch = heval.scratch();
-        heval.evaluate(0, &p, ga_cache.as_ref(), &mut scratch)[0].objectives().to_vec()
+        heval.evaluate(0, &p, ga_cache.as_deref(), &mut scratch)[0].objectives().to_vec()
     };
     let problem = DeploymentProblem { hc, microbatches: microbatches.to_vec() };
     let (ga_front, stats, ga_resumed) = match &cfg.run_dir {
@@ -433,7 +437,7 @@ pub fn ga_cluster_search(
             let p = ClusterSpace::genome_to_hetero(&extra[off].0);
             rows.push(
                 heval
-                    .evaluate(points.len() + off, &p, ga_cache.as_ref(), &mut scratch)
+                    .evaluate(points.len() + off, &p, ga_cache.as_deref(), &mut scratch)
                     .remove(0),
             );
         }
@@ -447,7 +451,7 @@ pub fn ga_cluster_search(
         enumerated: ClusterSpace::count_hetero(hc, microbatches),
         secs: t0.elapsed().as_secs_f64(),
         cache: out.cache,
-        ga_cache: ga_cache.as_ref().map(|c| c.stats()).unwrap_or_default(),
+        ga_cache: ga_cache.as_deref().map(|c| c.stats()).unwrap_or_default(),
         resumed: out.resumed,
         ga_resumed,
         failures: out.failures,

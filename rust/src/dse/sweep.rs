@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use super::engine::{
-    Engine, EngineConfig, EngineError, Evaluate, HeteroSpace, Objectives, RunOutcome,
+    Engine, EngineConfig, EngineError, Evaluate, HeteroSpace, Objectives, RunOutcome, SharedCache,
 };
 use super::space::{ClusterPoint, DesignPoint};
 use crate::autodiff::TrainingGraph;
@@ -110,6 +110,11 @@ pub struct SweepConfig {
     /// completed points are restored bit-identically, only the remainder
     /// evaluates.
     pub resume: bool,
+    /// Use a caller-owned resident cache (`monet serve`'s warm cache)
+    /// instead of opening one per run; the owner controls snapshot
+    /// persistence. See [`SharedCache`]. Ignored when `use_cache` is
+    /// off.
+    pub shared_cache: Option<SharedCache>,
 }
 
 impl Default for SweepConfig {
@@ -125,6 +130,7 @@ impl Default for SweepConfig {
             cache_cap: 0,
             run_dir: None,
             resume: false,
+            shared_cache: None,
         }
     }
 }
@@ -142,6 +148,7 @@ impl SweepConfig {
             cache_cap: self.cache_cap,
             run_dir: self.run_dir.clone(),
             resume: self.resume,
+            shared_cache: self.shared_cache.clone(),
         }
     }
 }

@@ -189,8 +189,20 @@ fn verified_reader<'a>(buf: &'a [u8], magic: &[u8; 8]) -> Option<Reader<'a>> {
     Some(r)
 }
 
+/// Per-process sequence number for snapshot temp files. A pid-only
+/// suffix is unique across processes but NOT across threads of one
+/// process: two concurrent in-process persists (the daemon's periodic
+/// checkpoint racing a shutdown persist) would share one temp path, and
+/// a rename could then publish a half-written file. The (pid, seq) pair
+/// makes every in-flight write its own temp file, keeping the
+/// rename-into-place atomic for any number of concurrent writers
+/// (pinned in `tests/fault_injection.rs`).
+static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
 /// Checksum, then write-to-temp + rename (atomic on POSIX within one
-/// filesystem). Consults the fault-injection hooks
+/// filesystem). Safe under concurrent in-process writers: each write
+/// gets a unique temp file, so the published snapshot is always exactly
+/// one writer's complete buffer. Consults the fault-injection hooks
 /// ([`crate::util::fault`]) so tests can fail or corrupt exactly the n-th
 /// snapshot write; with no plan armed both hooks are no-ops.
 fn write_snapshot(dir: &Path, file: &str, mut buf: Vec<u8>) -> io::Result<PathBuf> {
@@ -200,9 +212,13 @@ fn write_snapshot(dir: &Path, file: &str, mut buf: Vec<u8>) -> io::Result<PathBu
     crate::util::fault::write_gate(file)?;
     crate::util::fault::maybe_flip(&mut buf);
     let path = dir.join(file);
-    let tmp = dir.join(format!("{file}.tmp.{}", std::process::id()));
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = dir.join(format!("{file}.tmp.{}.{seq}", std::process::id()));
     fs::write(&tmp, &buf)?;
-    fs::rename(&tmp, &path)?;
+    if let Err(e) = fs::rename(&tmp, &path) {
+        fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
     Ok(path)
 }
 

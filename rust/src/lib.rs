@@ -24,6 +24,8 @@
 //!   evaluation harness (one worker pool + cache lifecycle behind every
 //!   sweep/search/GA batch) plus the searchable spaces
 //! * [`figures`] — one function per paper artifact (CSV + returned rows)
+//! * [`serve`] — DSE-as-a-service: the `monet serve` HTTP/JSON daemon
+//!   answering concurrent optimization queries from one resident cache
 //! * [`runtime`] — PJRT client executing AOT-compiled JAX/Pallas artifacts
 //! * [`report`] — CSV / ASCII figure emitters
 //! * [`util`] — small self-contained infrastructure (RNG, JSON, stats)
@@ -41,6 +43,7 @@ pub mod parallelism;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod workload;
 
 pub mod util;

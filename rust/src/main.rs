@@ -11,6 +11,7 @@ use monet::util::error::{Context, Result};
 use monet::ga::GaConfig;
 use monet::report::{ascii_bars, ascii_scatter, fmt_bytes};
 use monet::runtime::{Corpus, CostKernel, Gpt2Runner, Runtime};
+use monet::serve::parse_device_pool;
 
 /// The CLI grammar. `docs/CLI.md` is checked against this text by the
 /// `cli_reference_covers_usage` unit test, so the two cannot drift.
@@ -54,6 +55,19 @@ COMMANDS
   train           end-to-end: train tiny GPT-2 via the AOT HLO artifacts
   validate        cross-check the AOT cost kernel against the native model
   info            workload/hardware inventory
+  serve           DSE-as-a-service: a resident optimizer daemon answering
+                  concurrent HTTP/JSON optimization queries (every design-
+                  space family: sweep, cluster, hetero, ga-cluster) from
+                  one warm shared cost cache. Endpoints: POST /query
+                  (blocking), POST /jobs + GET /jobs/<id> (pollable
+                  progress for long GA queries), GET /healthz, GET /stats
+                  (cache hit/miss/eviction counters), POST /shutdown
+                  (graceful: drains the queue, persists the --cache-dir
+                  snapshot, exits 0)
+  query           answer one serve-API JSON request body (--request FILE)
+                  as a one-shot run and print the answer — the daemon's
+                  CLI fallback, bit-identical to the same query against a
+                  warm serve daemon
 
 OPTIONS
   --stride N      design-space subsampling stride (fig1/fig9/all; default 20)
@@ -112,7 +126,21 @@ OPTIONS
                   last intact record; a journal from a different design
                   space or format is quarantined to a .corrupt sidecar and
                   the run starts fresh. Resumed results are bit-identical
-                  to an uninterrupted run";
+                  to an uninterrupted run
+  --port N        serve: TCP port to listen on, bound to 127.0.0.1
+                  (default 0 = ephemeral; the bound address is printed at
+                  boot as `serving on http://ADDR`)
+  --serve-workers N
+                  serve: worker threads answering queries from the shared
+                  bounded queue (default 2)
+  --queue N       serve: bounded request-queue depth; requests arriving
+                  past it are rejected with a structured 503, never
+                  buffered unboundedly (default 64)
+  --checkpoint-every N
+                  serve: with --cache-dir, also persist the cache snapshot
+                  after every N completed queries, not only at graceful
+                  shutdown (default 32; 0 = shutdown-only)
+  --request FILE  query: read the serve-API JSON request body from FILE";
 
 fn usage() -> ! {
     eprintln!("{USAGE}");
@@ -137,6 +165,11 @@ struct Args {
     cache_cap: usize,
     run_dir: Option<PathBuf>,
     resume: bool,
+    port: u16,
+    serve_workers: usize,
+    queue: usize,
+    checkpoint_every: u64,
+    request: Option<PathBuf>,
 }
 
 fn parse_args() -> Args {
@@ -158,6 +191,11 @@ fn parse_args() -> Args {
         cache_cap: 0,
         run_dir: None,
         resume: false,
+        port: 0,
+        serve_workers: 2,
+        queue: 64,
+        checkpoint_every: 32,
+        request: None,
     };
     let mut it = std::env::args().skip(1);
     match it.next() {
@@ -183,6 +221,11 @@ fn parse_args() -> Args {
             "--cache-cap" => args.cache_cap = val().parse().unwrap_or_else(|_| usage()),
             "--run-dir" => args.run_dir = Some(val().into()),
             "--resume" => args.resume = true,
+            "--port" => args.port = val().parse().unwrap_or_else(|_| usage()),
+            "--serve-workers" => args.serve_workers = val().parse().unwrap_or_else(|_| usage()),
+            "--queue" => args.queue = val().parse().unwrap_or_else(|_| usage()),
+            "--checkpoint-every" => args.checkpoint_every = val().parse().unwrap_or_else(|_| usage()),
+            "--request" => args.request = Some(val().into()),
             _ => usage(),
         }
     }
@@ -414,23 +457,6 @@ fn cmd_fig5(args: &Args) -> Result<()> {
         report_run_health(&what, f.outcome.resumed, &f.outcome.failures)?;
     }
     Ok(())
-}
-
-/// Parse `edge:2,datacenter:2` into a device pool.
-fn parse_device_pool(spec: &str) -> Option<monet::parallelism::HeteroCluster> {
-    use monet::parallelism::{DeviceClass, HeteroCluster};
-    let mut pool = vec![];
-    for part in spec.split(',') {
-        let (name, count) = part.split_once(':')?;
-        let class = DeviceClass::by_name(name.trim())?;
-        let count: usize = count.trim().parse().ok()?;
-        pool.push((class, count));
-    }
-    let hc = HeteroCluster::new(pool);
-    if hc.total_devices() == 0 {
-        return None;
-    }
-    Some(hc)
 }
 
 /// `cluster --device-classes …`: the heterogeneous stage-placement DSE.
@@ -1104,6 +1130,52 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// `monet serve`: boot the resident optimizer daemon and block until a
+/// graceful `POST /shutdown` drains the queue and persists the cache.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use monet::serve::{ServeConfig, Server};
+    let cfg = ServeConfig {
+        addr: format!("127.0.0.1:{}", args.port),
+        serve_workers: args.serve_workers,
+        queue_cap: args.queue,
+        use_cache: !args.no_cache,
+        cache_dir: args.cache_dir.clone(),
+        cache_cap: args.cache_cap,
+        checkpoint_every: args.checkpoint_every,
+    };
+    let server = Server::bind(cfg).context("binding the serve listener")?;
+    // the smoke test and the worked README example scrape this line for
+    // the ephemeral port, so its shape is load-bearing
+    println!("serving on http://{}", server.local_addr());
+    server.run().context("running the serve daemon")?;
+    eprintln!("serve: graceful shutdown complete (queue drained, snapshot persisted)");
+    Ok(())
+}
+
+/// `monet query`: answer one serve-API request body as a one-shot run.
+/// Prints exactly the bytes a warm daemon would return for the same
+/// body — the reference side of the serving bit-identity bar.
+fn cmd_query(args: &Args) -> Result<()> {
+    let Some(path) = &args.request else {
+        bail!("query requires --request FILE (a serve-API JSON request body)");
+    };
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading request body {}", path.display()))?;
+    let opts = monet::serve::OneShotOpts {
+        use_cache: !args.no_cache,
+        cache_dir: args.cache_dir.clone(),
+        cache_cap: args.cache_cap,
+    };
+    match monet::serve::one_shot(&body, &opts) {
+        // the response is newline-terminated already; print byte-for-byte
+        Ok(resp) => {
+            print!("{resp}");
+            Ok(())
+        }
+        Err(e) => bail!("query failed ({}): {}", e.status, e.message),
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     std::fs::create_dir_all(&args.out).ok();
@@ -1132,6 +1204,8 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         _ => usage(),
     }
 }

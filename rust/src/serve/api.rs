@@ -1,0 +1,498 @@
+//! The pure core of `monet serve`: request parsing/validation, query
+//! execution against a caller-supplied cache handle, and deterministic
+//! response rendering. The daemon (`super::Server`) and the one-shot
+//! CLI (`monet query`) both call [`answer`] — one code path, so the
+//! bit-identity contract between them is structural, not coincidental.
+//!
+//! Every validation failure is a structured [`ApiError`] (HTTP status +
+//! message), never a panic: the daemon must survive arbitrary client
+//! input.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
+use crate::dse::{
+    cluster_search, ga_cluster_search, hetero_search, pareto_front, run_sweep_stats, ClusterRow,
+    DesignPoint, Mode, SharedCache, SweepConfig,
+};
+use crate::eval::{open_cost_cache, persist_cost_cache, CostCache};
+use crate::figures::{cluster_gpt2_builder, cluster_resnet18_builder, cluster_setup};
+use crate::ga::{DeploymentGenome, GaConfig};
+use crate::mapping::MappingConfig;
+use crate::parallelism::{DeviceClass, HeteroCluster};
+use crate::util::json::Json;
+use crate::workload::models::resnet18;
+use crate::workload::op::Optimizer;
+
+/// A structured request failure: an HTTP status plus a human-readable
+/// message, rendered as `{"error":{"message":…,"status":…}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn bad(message: impl Into<String>) -> ApiError {
+        ApiError { status: 400, message: message.into() }
+    }
+
+    pub fn with_status(status: u16, message: impl Into<String>) -> ApiError {
+        ApiError { status, message: message.into() }
+    }
+
+    /// The response body for this error (newline-terminated, like every
+    /// response body).
+    pub fn render(&self) -> String {
+        let j = Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("message", Json::Str(self.message.clone())),
+                ("status", Json::Num(self.status as f64)),
+            ]),
+        )]);
+        format!("{j}\n")
+    }
+}
+
+/// The workload axis shared by the cluster-shaped families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Resnet18,
+    Gpt2,
+}
+
+impl Workload {
+    fn by_name(name: &str) -> Option<Workload> {
+        match name {
+            "resnet18" => Some(Workload::Resnet18),
+            "gpt2" => Some(Workload::Gpt2),
+            _ => None,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Workload::Resnet18 => "resnet18",
+            Workload::Gpt2 => "gpt2",
+        }
+    }
+
+    fn builder(&self) -> &'static (dyn Fn(usize) -> TrainingGraph + Sync) {
+        match self {
+            Workload::Resnet18 => &cluster_resnet18_builder,
+            Workload::Gpt2 => &cluster_gpt2_builder,
+        }
+    }
+}
+
+/// A validated optimization query — one variant per design-space family.
+#[derive(Debug, Clone)]
+pub enum Query {
+    /// Single-device accelerator sweep (the fig1 family), training mode.
+    Sweep { stride: usize },
+    /// Homogeneous cluster deployments (the `cluster` command family).
+    Cluster { devices: usize, batch: usize, workload: Workload },
+    /// Heterogeneous stage placements (`cluster --device-classes`).
+    Hetero {
+        pool: HeteroCluster,
+        pool_spec: String,
+        microbatches: Vec<usize>,
+        batch: usize,
+        workload: Workload,
+    },
+    /// Past-the-wall deployment GA (the `ga-cluster` command family).
+    GaCluster {
+        pool: HeteroCluster,
+        pool_spec: String,
+        microbatches: Vec<usize>,
+        batch: usize,
+        workload: Workload,
+        pop: usize,
+        gens: usize,
+        seed: u64,
+    },
+}
+
+/// Parse `edge:2,datacenter:2` into a device pool. Shared with the CLI's
+/// `--device-classes` flag so the serve API and the command line cannot
+/// drift on pool syntax.
+pub fn parse_device_pool(spec: &str) -> Option<HeteroCluster> {
+    let mut pool = vec![];
+    for part in spec.split(',') {
+        let (name, count) = part.split_once(':')?;
+        let class = DeviceClass::by_name(name.trim())?;
+        let count: usize = count.trim().parse().ok()?;
+        pool.push((class, count));
+    }
+    let hc = HeteroCluster::new(pool);
+    if hc.total_devices() == 0 {
+        return None;
+    }
+    Some(hc)
+}
+
+fn field_usize(
+    j: &Json,
+    key: &str,
+    default: usize,
+    min: usize,
+    max: usize,
+) -> Result<usize, ApiError> {
+    let Some(v) = j.get(key) else {
+        return Ok(default);
+    };
+    let n = v
+        .as_f64()
+        .ok_or_else(|| ApiError::bad(format!("field '{key}' must be a number")))?;
+    if n.fract() != 0.0 || n < 0.0 {
+        return Err(ApiError::bad(format!("field '{key}' must be a non-negative integer")));
+    }
+    let n = n as usize;
+    if n < min || n > max {
+        return Err(ApiError::bad(format!("field '{key}' must be in {min}..={max} (got {n})")));
+    }
+    Ok(n)
+}
+
+fn field_workload(j: &Json) -> Result<Workload, ApiError> {
+    let Some(v) = j.get("workload") else {
+        return Ok(Workload::Resnet18);
+    };
+    let s = v.as_str().ok_or_else(|| ApiError::bad("field 'workload' must be a string"))?;
+    Workload::by_name(s)
+        .ok_or_else(|| ApiError::bad(format!("unknown workload '{s}' (expected resnet18|gpt2)")))
+}
+
+fn field_pool(j: &Json) -> Result<(HeteroCluster, String), ApiError> {
+    let v = j
+        .get("device_classes")
+        .ok_or_else(|| ApiError::bad("field 'device_classes' is required for this family"))?;
+    let spec = v
+        .as_str()
+        .ok_or_else(|| ApiError::bad("field 'device_classes' must be a string"))?;
+    let hc = parse_device_pool(spec).ok_or_else(|| {
+        ApiError::bad(format!(
+            "bad device pool '{spec}' (expected e.g. 'edge:2,datacenter:1'; \
+             classes: edge|server|datacenter)"
+        ))
+    })?;
+    if hc.total_devices() > 512 {
+        return Err(ApiError::bad(format!(
+            "device pool too large for a serving query: {} devices (max 512)",
+            hc.total_devices()
+        )));
+    }
+    Ok((hc, spec.to_string()))
+}
+
+fn field_microbatches(j: &Json, pool: &HeteroCluster) -> Result<Vec<usize>, ApiError> {
+    let Some(v) = j.get("microbatches") else {
+        // the CLI default: the canonical space's microbatch options
+        return Ok(crate::dse::ClusterSpace::default_space(pool.total_devices()).microbatches);
+    };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ApiError::bad("field 'microbatches' must be an array of integers"))?;
+    if arr.is_empty() || arr.len() > 8 {
+        return Err(ApiError::bad("field 'microbatches' must hold 1..=8 options"));
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| ApiError::bad("field 'microbatches' must be an array of integers"))?;
+        if n.fract() != 0.0 || n < 1.0 || n > 4096.0 {
+            return Err(ApiError::bad("each microbatch option must be an integer in 1..=4096"));
+        }
+        out.push(n as usize);
+    }
+    Ok(out)
+}
+
+/// Reject unknown keys so a typo'd field name fails loudly instead of
+/// silently falling back to its default.
+fn check_keys(j: &Json, allowed: &[&str]) -> Result<(), ApiError> {
+    if let Json::Obj(m) = j {
+        let mut unknown: Vec<&str> =
+            m.keys().map(|k| k.as_str()).filter(|k| !allowed.contains(k)).collect();
+        unknown.sort_unstable();
+        if !unknown.is_empty() {
+            return Err(ApiError::bad(format!(
+                "unknown field(s) {unknown:?} (allowed: {allowed:?})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Parse and validate a request body into a [`Query`]. Every failure is
+/// a structured 400 — malformed JSON, wrong types, out-of-range values,
+/// unknown fields — never a panic.
+pub fn parse_query(body: &str) -> Result<Query, ApiError> {
+    let j = Json::parse(body).map_err(|e| ApiError::bad(format!("bad JSON: {e}")))?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(ApiError::bad("request must be a JSON object"));
+    }
+    let family = j
+        .get("family")
+        .ok_or_else(|| ApiError::bad("field 'family' is required"))?
+        .as_str()
+        .ok_or_else(|| ApiError::bad("field 'family' must be a string"))?;
+    match family {
+        "sweep" => {
+            check_keys(&j, &["family", "stride"])?;
+            Ok(Query::Sweep { stride: field_usize(&j, "stride", 20, 1, 10_000)? })
+        }
+        "cluster" => {
+            check_keys(&j, &["family", "devices", "batch", "workload"])?;
+            Ok(Query::Cluster {
+                devices: field_usize(&j, "devices", 4, 1, 64)?,
+                batch: field_usize(&j, "batch", 4, 1, 4096)?,
+                workload: field_workload(&j)?,
+            })
+        }
+        "hetero" => {
+            check_keys(&j, &["family", "device_classes", "microbatches", "batch", "workload"])?;
+            let (pool, pool_spec) = field_pool(&j)?;
+            let microbatches = field_microbatches(&j, &pool)?;
+            Ok(Query::Hetero {
+                pool,
+                pool_spec,
+                microbatches,
+                batch: field_usize(&j, "batch", 4, 1, 4096)?,
+                workload: field_workload(&j)?,
+            })
+        }
+        "ga-cluster" => {
+            check_keys(
+                &j,
+                &[
+                    "family",
+                    "device_classes",
+                    "microbatches",
+                    "batch",
+                    "workload",
+                    "pop",
+                    "gens",
+                    "seed",
+                ],
+            )?;
+            let (pool, pool_spec) = field_pool(&j)?;
+            let microbatches = field_microbatches(&j, &pool)?;
+            Ok(Query::GaCluster {
+                pool,
+                pool_spec,
+                microbatches,
+                batch: field_usize(&j, "batch", 4, 1, 4096)?,
+                workload: field_workload(&j)?,
+                pop: field_usize(&j, "pop", 16, 2, 256)?,
+                gens: field_usize(&j, "gens", 4, 1, 64)?,
+                seed: field_usize(&j, "seed", 0xACAC, 0, (1usize << 53) - 1)? as u64,
+            })
+        }
+        other => Err(ApiError::bad(format!(
+            "unknown family '{other}' (expected sweep|cluster|hetero|ga-cluster)"
+        ))),
+    }
+}
+
+/// The per-query sweep config: the caller's resident cache (when any) is
+/// attached as a [`SharedCache`], so the engine neither opens nor
+/// persists a snapshot — the cache owner controls that lifecycle.
+fn base_cfg(mapping: MappingConfig, cache: Option<&Arc<CostCache>>) -> SweepConfig {
+    SweepConfig {
+        mapping,
+        use_cache: cache.is_some(),
+        shared_cache: cache.map(|c| SharedCache(c.clone())),
+        ..Default::default()
+    }
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn cluster_row_json(r: &ClusterRow) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(r.label.clone())),
+        ("devices", num(r.devices as f64)),
+        ("tier", Json::Str(r.tier.as_str().to_string())),
+        ("dp", num(r.dp as f64)),
+        ("pp", num(r.pp as f64)),
+        ("microbatches", num(r.microbatches as f64)),
+        ("tp", num(r.tp as f64)),
+        ("placement", Json::Str(r.placement.clone())),
+        ("latency_cycles", num(r.latency_cycles)),
+        ("energy_pj", num(r.energy_pj)),
+        ("per_device_mem_bytes", num(r.per_device_mem_bytes as f64)),
+        ("comm_bytes", num(r.comm_bytes)),
+    ])
+}
+
+fn render(j: Json) -> String {
+    format!("{j}\n")
+}
+
+/// Points whose evaluation panicked are isolated by the engine; a
+/// serving query reports them as a structured 500 instead of returning
+/// a silently degraded front.
+fn check_failures(failures: &[crate::dse::PointFailure]) -> Result<(), ApiError> {
+    if let Some(f) = failures.first() {
+        return Err(ApiError::with_status(
+            500,
+            format!(
+                "{} point(s) failed during evaluation (first: {} — {})",
+                failures.len(),
+                f.point_id,
+                f.diagnostic
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Answer a validated [`Query`] against an optional resident cache.
+///
+/// The response is a **pure function of the query** (see the module
+/// contract on [`crate::serve`]): no timings, no cache counters, no
+/// daemon state — those live on `/stats`. This is what makes a warm
+/// daemon answer bit-identical to a cold one-shot run.
+///
+/// `progress(done, total)` fires as the underlying engine completes
+/// points (for `ga-cluster`, over the backbone enumeration phase).
+pub fn answer(
+    q: &Query,
+    cache: Option<&Arc<CostCache>>,
+    progress: &mut dyn FnMut(usize, usize),
+) -> Result<String, ApiError> {
+    match q {
+        Query::Sweep { stride } => {
+            let fwd = resnet18(1, 32, 10);
+            let tg = build_training_graph(
+                &fwd,
+                TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+            );
+            let points = DesignPoint::edge_space(*stride);
+            let mut cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+            cfg.modes = vec![Mode::Training];
+            let (rows, _stats) =
+                run_sweep_stats(&points, &fwd, &tg.graph, &cfg, &mut *progress);
+            let front = pareto_front(&rows);
+            let front_rows: Vec<Json> = front
+                .iter()
+                .map(|&i| {
+                    let r = &rows[i];
+                    Json::obj(vec![
+                        ("label", Json::Str(r.label.clone())),
+                        ("latency_cycles", num(r.latency_cycles)),
+                        ("energy_pj", num(r.energy_pj)),
+                        ("peak_dram_bytes", num(r.peak_dram_bytes as f64)),
+                        ("utilization", num(r.utilization)),
+                    ])
+                })
+                .collect();
+            Ok(render(Json::obj(vec![
+                ("family", Json::Str("sweep".into())),
+                ("stride", num(*stride as f64)),
+                ("points", num(points.len() as f64)),
+                ("front", Json::Arr(front_rows)),
+            ])))
+        }
+        Query::Cluster { devices, batch, workload } => {
+            let (space, accel, mapping) = cluster_setup(*devices);
+            let cfg = base_cfg(mapping, cache);
+            let out = cluster_search(&space, *batch, workload.builder(), &accel, &cfg, &mut *progress);
+            check_failures(&out.failures)?;
+            let front_rows: Vec<Json> =
+                out.front.iter().map(|&i| cluster_row_json(&out.rows[i])).collect();
+            Ok(render(Json::obj(vec![
+                ("family", Json::Str("cluster".into())),
+                ("workload", Json::Str(workload.name().into())),
+                ("devices", num(*devices as f64)),
+                ("batch", num(*batch as f64)),
+                ("points", num(out.n_points as f64)),
+                ("front", Json::Arr(front_rows)),
+            ])))
+        }
+        Query::Hetero { pool, pool_spec, microbatches, batch, workload } => {
+            let cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+            let out = hetero_search(pool, microbatches, *batch, workload.builder(), &cfg, &mut *progress);
+            check_failures(&out.failures)?;
+            let front_rows: Vec<Json> =
+                out.front.iter().map(|&i| cluster_row_json(&out.rows[i])).collect();
+            Ok(render(Json::obj(vec![
+                ("family", Json::Str("hetero".into())),
+                ("workload", Json::Str(workload.name().into())),
+                ("device_classes", Json::Str(pool_spec.clone())),
+                ("batch", num(*batch as f64)),
+                ("points", num(out.n_points as f64)),
+                ("front", Json::Arr(front_rows)),
+            ])))
+        }
+        Query::GaCluster { pool, pool_spec, microbatches, batch, workload, pop, gens, seed } => {
+            let cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+            let ga: GaConfig<DeploymentGenome> = GaConfig {
+                population: *pop,
+                generations: *gens,
+                seed: *seed,
+                ..Default::default()
+            };
+            let out = ga_cluster_search(
+                pool,
+                microbatches,
+                *batch,
+                workload.builder(),
+                workload.name(),
+                &ga,
+                &cfg,
+                &mut *progress,
+            );
+            check_failures(&out.failures)?;
+            let front_rows: Vec<Json> = out.rows.iter().map(cluster_row_json).collect();
+            Ok(render(Json::obj(vec![
+                ("family", Json::Str("ga-cluster".into())),
+                ("workload", Json::Str(workload.name().into())),
+                ("device_classes", Json::Str(pool_spec.clone())),
+                ("batch", num(*batch as f64)),
+                ("pop", num(*pop as f64)),
+                ("gens", num(*gens as f64)),
+                ("seed", num(*seed as f64)),
+                ("evaluated", num(out.evaluated as f64)),
+                ("enumerated", num(out.enumerated as f64)),
+                ("generations", num(out.stats.generations as f64)),
+                ("fallback_front_size", num(out.fallback_front.len() as f64)),
+                ("front", Json::Arr(front_rows)),
+            ])))
+        }
+    }
+}
+
+/// Cache flags for a one-shot query (the CLI triple).
+#[derive(Debug, Clone, Default)]
+pub struct OneShotOpts {
+    pub use_cache: bool,
+    pub cache_dir: Option<PathBuf>,
+    pub cache_cap: usize,
+}
+
+/// Answer one request body the way a freshly started daemon would —
+/// the CLI `monet query` entry point, and the reference side of the
+/// bit-identity pin in `tests/serve.rs`. Opens the cache per the CLI
+/// flags, answers through the same [`answer`] path the daemon uses, and
+/// persists the snapshot afterwards when a `cache_dir` is set (the
+/// one-shot process owns its cache lifecycle, like any CLI command).
+pub fn one_shot(body: &str, opts: &OneShotOpts) -> Result<String, ApiError> {
+    let q = parse_query(body)?;
+    let cache = if opts.use_cache {
+        Some(Arc::new(open_cost_cache(opts.cache_dir.as_deref(), opts.cache_cap)))
+    } else {
+        None
+    };
+    let resp = answer(&q, cache.as_ref(), &mut |_, _| {})?;
+    if let Some(c) = &cache {
+        persist_cost_cache(c, opts.cache_dir.as_deref());
+    }
+    Ok(resp)
+}

@@ -1,0 +1,154 @@
+//! A deliberately tiny HTTP/1.1 codec over `std::io` — just enough for
+//! the daemon's JSON API: one request per connection (`Connection:
+//! close`), bounded head and body sizes, `Content-Length` bodies only
+//! (no chunked encoding). Anything outside that envelope is a
+//! structured client error, never a panic.
+
+use std::io::{self, Read, Write};
+
+/// Maximum request head (request line + headers) the codec will buffer.
+const MAX_HEAD: usize = 16 * 1024;
+/// Maximum request body. Query bodies are tiny; anything near this is a
+/// client error.
+const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed request: method, path (query string not split off — the API
+/// has no use for one), body bytes.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read: a transport error (drop the
+/// connection) vs a protocol violation (answer with the status).
+#[derive(Debug)]
+pub enum ReadError {
+    Io(io::Error),
+    Bad(u16, &'static str),
+}
+
+impl From<io::Error> for ReadError {
+    fn from(e: io::Error) -> Self {
+        ReadError::Io(e)
+    }
+}
+
+/// Read and parse one request. Bounded: at most [`MAX_HEAD`] head bytes
+/// and [`MAX_BODY`] body bytes are ever buffered.
+pub fn read_request(stream: &mut impl Read) -> Result<Request, ReadError> {
+    // read until the blank line terminating the head
+    let mut head = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    loop {
+        let n = stream.read(&mut byte)?;
+        if n == 0 {
+            return Err(ReadError::Bad(400, "truncated request head"));
+        }
+        head.push(byte[0]);
+        if head.ends_with(b"\r\n\r\n") {
+            break;
+        }
+        if head.len() >= MAX_HEAD {
+            return Err(ReadError::Bad(431, "request head too large"));
+        }
+    }
+    let head = std::str::from_utf8(&head).map_err(|_| ReadError::Bad(400, "non-UTF-8 head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().ok_or(ReadError::Bad(400, "empty request line"))?.to_string();
+    let path = parts.next().ok_or(ReadError::Bad(400, "missing request path"))?.to_string();
+
+    let mut content_length: usize = 0;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| ReadError::Bad(400, "bad Content-Length"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(ReadError::Bad(413, "request body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body).map_err(|_| ReadError::Bad(400, "truncated request body"))?;
+    Ok(Request { method, path, body })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one JSON response and flush. Always `Connection: close` — the
+/// codec serves exactly one exchange per connection.
+pub fn write_response(stream: &mut impl Write, status: u16, body: &str) -> io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        reason(status),
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = b"POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let r = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/query");
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_a_get_without_body() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let r = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_truncation_and_oversize() {
+        assert!(matches!(
+            read_request(&mut &b"GET /x HTTP/1.1\r\n"[..]),
+            Err(ReadError::Bad(400, _))
+        ));
+        let raw = b"POST /q HTTP/1.1\r\nContent-Length: 9999999999\r\n\r\n";
+        assert!(matches!(read_request(&mut &raw[..]), Err(ReadError::Bad(413, _))));
+        let raw = b"POST /q HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        assert!(matches!(read_request(&mut &raw[..]), Err(ReadError::Bad(400, _))));
+    }
+
+    #[test]
+    fn response_has_content_length_and_close() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{}\n").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 3\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}\n"));
+    }
+}

@@ -1,0 +1,457 @@
+//! `monet serve` — DSE-as-a-service: a std-only HTTP/JSON daemon that
+//! keeps one warm, bounded, persisted [`CostCache`] resident and
+//! answers concurrent optimization queries ("best deployment for model
+//! M on pool P under batch B") by building a per-query design space and
+//! running it through the existing `dse` engine (ROADMAP item 1;
+//! OptDNN ships its optimizer in exactly this HTTP-service-with-CLI-
+//! fallback shape).
+//!
+//! ## Architecture
+//!
+//! * **One resident cache.** All queries share a single [`CostCache`]
+//!   (it is `Sync` and read-lock-hit), attached to every per-query
+//!   engine run as a [`crate::dse::SharedCache`] — the engine neither
+//!   opens nor persists snapshots; the daemon owns that lifecycle.
+//! * **Bounded admission.** Requests enter a bounded queue
+//!   (`queue_cap`) drained by a fixed pool of query workers
+//!   (`serve_workers`). A full queue is a structured `503`, not an
+//!   unbounded pile-up.
+//! * **Sync and pollable queries.** `POST /query` blocks until the
+//!   answer; `POST /jobs` + `GET /jobs/<id>` is the pollable variant
+//!   for long GA queries (progress = engine completion ticks over the
+//!   enumeration backbone).
+//! * **Snapshot lifecycle.** With `--cache-dir`, the snapshot is
+//!   warm-loaded at boot and persisted at exactly two kinds of points,
+//!   both serialized by one persist lock: a periodic checkpoint (every
+//!   `checkpoint_every` completed queries) and graceful shutdown
+//!   (`POST /shutdown`, which stops admission, drains the queue, joins
+//!   the workers, persists, and returns from [`Server::run`]).
+//! * **Eviction pressure.** Many tenants colliding on one `--cache-cap`
+//!   shows up as a rising `evictions` counter on `GET /stats` (the
+//!   [`CacheStats`] counters plus daemon counters); results never
+//!   change — eviction costs recomputation, not correctness.
+//!
+//! ## The handler contract (what a query handler may and may NOT read)
+//!
+//! Mirroring the `Evaluate` purity contract (`dse::engine`): the
+//! response to a query must be a **pure function of the request body**
+//! (plus the build's constants — model zoo, hardware presets). A
+//! handler may not read:
+//!
+//! * wall-clock time, timings, or anything derived from them;
+//! * cache *statistics* or cache *temperature* — cached values are pure
+//!   functions of their keys, so hits may make a query faster, never
+//!   different;
+//! * other queries' state, the queue depth, worker identity, or any
+//!   daemon counter (those belong to `/stats` and `/healthz` only);
+//! * environment variables or global mutable state.
+//!
+//! This is what the non-negotiable serving bar rests on: **a query
+//! answered by the warm daemon is bit-identical to the same query run
+//! as a one-shot CLI command** (`monet query`), pinned in
+//! `tests/serve.rs` and exercised end-to-end by the CI `serve-smoke`
+//! job.
+
+pub mod api;
+pub mod http;
+
+pub use api::{one_shot, parse_device_pool, ApiError, OneShotOpts};
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::eval::{open_cost_cache, persist_cost_cache, CacheStats, CostCache};
+use crate::util::json::Json;
+
+/// Daemon knobs (the `monet serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (printed by the CLI).
+    pub addr: String,
+    /// Query worker threads draining the request queue. Each query
+    /// additionally parallelizes internally over the engine's own pool.
+    pub serve_workers: usize,
+    /// Bounded request-queue capacity; a full queue rejects with 503.
+    pub queue_cap: usize,
+    /// The resident cache triple — same semantics as every CLI command
+    /// (`--no-cache` / `--cache-dir` / `--cache-cap`).
+    pub use_cache: bool,
+    pub cache_dir: Option<PathBuf>,
+    pub cache_cap: usize,
+    /// Persist the snapshot every this many completed queries (0 =
+    /// only at shutdown). Only meaningful with `cache_dir`.
+    pub checkpoint_every: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            serve_workers: 2,
+            queue_cap: 64,
+            use_cache: true,
+            cache_dir: None,
+            cache_cap: 0,
+            checkpoint_every: 32,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobStatus {
+    Queued,
+    Running,
+    Done,
+}
+
+struct JobState {
+    status: JobStatus,
+    done: usize,
+    total: usize,
+    result: Option<Result<String, ApiError>>,
+}
+
+struct State {
+    cfg: ServeConfig,
+    cache: Option<Arc<CostCache>>,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    queries_done: AtomicU64,
+    queries_rejected: AtomicU64,
+    jobs: Mutex<HashMap<u64, JobState>>,
+    next_job: AtomicU64,
+    /// The daemon's single persist point: checkpoint and shutdown
+    /// persists serialize here, so at most one snapshot write-out is in
+    /// flight per daemon (the tmp+rename in `eval::persist` is
+    /// additionally safe under concurrent writers — defense in depth).
+    persist_lock: Mutex<()>,
+}
+
+impl State {
+    fn persist(&self) {
+        if let (Some(cache), Some(_)) = (&self.cache, &self.cfg.cache_dir) {
+            let _guard = self.persist_lock.lock().unwrap_or_else(|e| e.into_inner());
+            persist_cost_cache(cache, self.cfg.cache_dir.as_deref());
+        }
+    }
+
+    /// Bump the completed-query counter; checkpoint the snapshot on the
+    /// configured cadence.
+    fn note_done(&self) {
+        let done = self.queries_done.fetch_add(1, Ordering::Relaxed) + 1;
+        let every = self.cfg.checkpoint_every;
+        if every > 0 && done % every == 0 {
+            self.persist();
+        }
+    }
+
+    fn stats_body(&self) -> String {
+        let cache = self.cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+        let jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        let jobs_open = jobs.values().filter(|j| j.status != JobStatus::Done).count();
+        let j = Json::obj(vec![
+            ("cache", cache_stats_json(&cache)),
+            ("cache_capacity", Json::Num(self.cfg.cache_cap as f64)),
+            ("queue_capacity", Json::Num(self.cfg.queue_cap as f64)),
+            ("serve_workers", Json::Num(self.cfg.serve_workers as f64)),
+            ("queries_done", Json::Num(self.queries_done.load(Ordering::Relaxed) as f64)),
+            ("queries_rejected", Json::Num(self.queries_rejected.load(Ordering::Relaxed) as f64)),
+            ("jobs_open", Json::Num(jobs_open as f64)),
+            ("jobs_total", Json::Num(jobs.len() as f64)),
+        ]);
+        format!("{j}\n")
+    }
+}
+
+fn cache_stats_json(s: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("entries", Json::Num(s.entries as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+        ("snapshots_rejected", Json::Num(s.snapshots_rejected as f64)),
+        ("snapshots_quarantined", Json::Num(s.snapshots_quarantined as f64)),
+        ("io_retries", Json::Num(s.io_retries as f64)),
+    ])
+}
+
+enum Task {
+    /// A blocking `POST /query`: the connection thread waits on `reply`.
+    Sync { query: api::Query, reply: mpsc::Sender<Result<String, ApiError>> },
+    /// A pollable `POST /jobs` job.
+    Job { id: u64, query: api::Query },
+}
+
+/// The resident optimizer daemon. [`Server::bind`] opens the listener
+/// and warm-loads the cache; [`Server::run`] serves until a graceful
+/// `POST /shutdown`, then drains, persists, and returns.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<State>,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let cache = if cfg.use_cache {
+            Some(Arc::new(open_cost_cache(cfg.cache_dir.as_deref(), cfg.cache_cap)))
+        } else {
+            None
+        };
+        let state = Arc::new(State {
+            cache,
+            addr,
+            cfg,
+            shutdown: AtomicBool::new(false),
+            queries_done: AtomicU64::new(0),
+            queries_rejected: AtomicU64::new(0),
+            jobs: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+            persist_lock: Mutex::new(()),
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Serve until graceful shutdown. Blocking; returns after the
+    /// request queue has drained, the query workers have joined, and
+    /// the final snapshot (with `cache_dir`) has been persisted.
+    pub fn run(self) -> io::Result<()> {
+        let state = self.state;
+        let (tx, rx) = mpsc::sync_channel::<Task>(state.cfg.queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers: Vec<_> = (0..state.cfg.serve_workers.max(1))
+            .map(|_| {
+                let state = Arc::clone(&state);
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(&state, &rx))
+            })
+            .collect();
+
+        for stream in self.listener.incoming() {
+            if state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let state = Arc::clone(&state);
+            let tx = tx.clone();
+            std::thread::spawn(move || handle_connection(stream, &state, &tx));
+        }
+
+        // graceful drain: closing the queue lets each worker finish its
+        // current and queued tasks, then exit
+        drop(tx);
+        for w in workers {
+            w.join().ok();
+        }
+        state.persist();
+        Ok(())
+    }
+}
+
+fn worker_loop(state: &State, rx: &Mutex<mpsc::Receiver<Task>>) {
+    loop {
+        let task = {
+            let rx = rx.lock().unwrap_or_else(|e| e.into_inner());
+            rx.recv()
+        };
+        let Ok(task) = task else { return };
+        match task {
+            Task::Sync { query, reply } => {
+                let res = api::answer(&query, state.cache.as_ref(), &mut |_, _| {});
+                reply.send(res).ok();
+                state.note_done();
+            }
+            Task::Job { id, query } => {
+                set_job(state, id, |j| j.status = JobStatus::Running);
+                let mut tick = 0usize;
+                let res = api::answer(&query, state.cache.as_ref(), &mut |done, total| {
+                    // throttle map-lock traffic: every 8th tick + the last
+                    tick += 1;
+                    if tick % 8 == 0 || done == total {
+                        set_job(state, id, |j| {
+                            j.done = done;
+                            j.total = total;
+                        });
+                    }
+                });
+                set_job(state, id, |j| {
+                    j.status = JobStatus::Done;
+                    j.result = Some(res);
+                });
+                state.note_done();
+            }
+        }
+    }
+}
+
+fn set_job(state: &State, id: u64, f: impl FnOnce(&mut JobState)) {
+    let mut jobs = state.jobs.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(j) = jobs.get_mut(&id) {
+        f(j);
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) {
+    http::write_response(stream, status, body).ok();
+}
+
+fn respond_err(stream: &mut TcpStream, e: &ApiError) {
+    respond(stream, e.status, &e.render());
+}
+
+fn handle_connection(mut stream: TcpStream, state: &State, tx: &mpsc::SyncSender<Task>) {
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(http::ReadError::Io(_)) => return,
+        Err(http::ReadError::Bad(status, msg)) => {
+            respond_err(&mut stream, &ApiError::with_status(status, msg));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, "{\"status\":\"ok\"}\n"),
+        ("GET", "/stats") => {
+            let body = state.stats_body();
+            respond(&mut stream, 200, &body);
+        }
+        ("POST", "/shutdown") => {
+            respond(&mut stream, 200, "{\"status\":\"shutting down\"}\n");
+            state.shutdown.store(true, Ordering::SeqCst);
+            // poke the accept loop awake so it observes the flag
+            TcpStream::connect(state.addr).ok();
+        }
+        ("POST", "/query") => handle_query(&mut stream, state, tx, &req.body),
+        ("POST", "/jobs") => handle_job_submit(&mut stream, state, tx, &req.body),
+        ("GET", path) if path.starts_with("/jobs/") => handle_job_poll(&mut stream, state, path),
+        (_, "/healthz" | "/stats" | "/shutdown" | "/query" | "/jobs") => {
+            respond_err(&mut stream, &ApiError::with_status(405, "method not allowed"));
+        }
+        _ => respond_err(&mut stream, &ApiError::with_status(404, "no such endpoint")),
+    }
+}
+
+fn parse_body_query(state: &State, body: &[u8]) -> Result<api::Query, ApiError> {
+    if state.shutdown.load(Ordering::SeqCst) {
+        return Err(ApiError::with_status(503, "daemon is shutting down"));
+    }
+    let body = std::str::from_utf8(body).map_err(|_| ApiError::bad("body must be UTF-8"))?;
+    api::parse_query(body)
+}
+
+fn handle_query(stream: &mut TcpStream, state: &State, tx: &mpsc::SyncSender<Task>, body: &[u8]) {
+    let query = match parse_body_query(state, body) {
+        Ok(q) => q,
+        Err(e) => return respond_err(stream, &e),
+    };
+    let (reply_tx, reply_rx) = mpsc::channel();
+    match tx.try_send(Task::Sync { query, reply: reply_tx }) {
+        Ok(()) => {}
+        Err(mpsc::TrySendError::Full(_)) => {
+            state.queries_rejected.fetch_add(1, Ordering::Relaxed);
+            return respond_err(
+                stream,
+                &ApiError::with_status(503, "request queue is full; retry later"),
+            );
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => {
+            return respond_err(stream, &ApiError::with_status(503, "daemon is shutting down"));
+        }
+    }
+    match reply_rx.recv() {
+        Ok(Ok(resp)) => respond(stream, 200, &resp),
+        Ok(Err(e)) => respond_err(stream, &e),
+        Err(_) => respond_err(stream, &ApiError::with_status(500, "query worker died")),
+    }
+}
+
+fn handle_job_submit(
+    stream: &mut TcpStream,
+    state: &State,
+    tx: &mpsc::SyncSender<Task>,
+    body: &[u8],
+) {
+    let query = match parse_body_query(state, body) {
+        Ok(q) => q,
+        Err(e) => return respond_err(stream, &e),
+    };
+    let id = state.next_job.fetch_add(1, Ordering::Relaxed);
+    {
+        let mut jobs = state.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        jobs.insert(
+            id,
+            JobState { status: JobStatus::Queued, done: 0, total: 0, result: None },
+        );
+    }
+    match tx.try_send(Task::Job { id, query }) {
+        Ok(()) => {
+            let j = Json::obj(vec![
+                ("job", Json::Num(id as f64)),
+                ("poll", Json::Str(format!("/jobs/{id}"))),
+            ]);
+            respond(stream, 202, &format!("{j}\n"));
+        }
+        Err(_) => {
+            let mut jobs = state.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            jobs.remove(&id);
+            drop(jobs);
+            state.queries_rejected.fetch_add(1, Ordering::Relaxed);
+            respond_err(stream, &ApiError::with_status(503, "request queue is full; retry later"));
+        }
+    }
+}
+
+fn handle_job_poll(stream: &mut TcpStream, state: &State, path: &str) {
+    let Ok(id) = path["/jobs/".len()..].parse::<u64>() else {
+        return respond_err(stream, &ApiError::bad("bad job id"));
+    };
+    let jobs = state.jobs.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(job) = jobs.get(&id) else {
+        drop(jobs);
+        return respond_err(stream, &ApiError::with_status(404, "no such job"));
+    };
+    let status = match job.status {
+        JobStatus::Queued => "queued",
+        JobStatus::Running => "running",
+        JobStatus::Done => "done",
+    };
+    let mut fields = vec![
+        ("job", Json::Num(id as f64)),
+        ("status", Json::Str(status.into())),
+        ("done", Json::Num(job.done as f64)),
+        ("total", Json::Num(job.total as f64)),
+    ];
+    match &job.result {
+        Some(Ok(resp)) => {
+            // the response body is itself JSON; re-parse so it nests as a
+            // value (cheap — responses are small) rather than a string
+            if let Ok(v) = Json::parse(resp) {
+                fields.push(("result", v));
+            }
+        }
+        Some(Err(e)) => {
+            fields.push((
+                "error",
+                Json::obj(vec![
+                    ("message", Json::Str(e.message.clone())),
+                    ("status", Json::Num(e.status as f64)),
+                ]),
+            ));
+        }
+        None => {}
+    }
+    let body = format!("{}\n", Json::obj(fields));
+    drop(jobs);
+    respond(stream, 200, &body);
+}

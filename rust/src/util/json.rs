@@ -1,7 +1,16 @@
-//! Minimal JSON parser — enough to read `artifacts/meta.json` (objects,
-//! arrays, strings, numbers, booleans, null). serde_json is not vendored in
-//! this offline environment; the artifact metadata is small and trusted, so
-//! a ~200-line recursive-descent parser is the right tool.
+//! Minimal JSON parser and serializer — enough to read
+//! `artifacts/meta.json` (objects, arrays, strings, numbers, booleans,
+//! null) and to render `monet serve` responses. serde_json is not
+//! vendored in this offline environment; the artifact metadata is small
+//! and trusted, so a ~200-line recursive-descent parser is the right
+//! tool.
+//!
+//! Serialization (`Display`) is **deterministic**: object keys are
+//! emitted in sorted order (the in-memory representation is a
+//! `HashMap`, whose iteration order must never leak into output) and
+//! numbers use Rust's shortest-roundtrip `f64` formatting. Equal values
+//! therefore always serialize to equal bytes — the property the
+//! daemon-vs-one-shot bit-identity contract in `serve` rests on.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -73,6 +82,67 @@ impl Json {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
+        }
+    }
+
+    /// Build an object from key/value pairs (ergonomics for response
+    /// construction; ordering is irrelevant — `Display` sorts keys).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+impl fmt::Display for Json {
+    /// Compact, deterministic serialization: sorted object keys,
+    /// shortest-roundtrip numbers, no insignificant whitespace.
+    /// Non-finite numbers (unrepresentable in JSON) render as `null`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                f.write_str("[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                f.write_str("{")?;
+                for (i, k) in keys.into_iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{}", m[k])?;
+                }
+                f.write_str("}")
+            }
         }
     }
 }
@@ -289,6 +359,40 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn serializes_deterministically_with_sorted_keys() {
+        let j = Json::obj(vec![
+            ("zeta", Json::Num(2.0)),
+            ("alpha", Json::Arr(vec![Json::Num(1.5), Json::Bool(true), Json::Null])),
+            ("mid", Json::Str("a\n\"b\"\\".into())),
+        ]);
+        assert_eq!(
+            j.to_string(),
+            r#"{"alpha":[1.5,true,null],"mid":"a\n\"b\"\\","zeta":2}"#
+        );
+    }
+
+    #[test]
+    fn serialization_round_trips_through_the_parser() {
+        let src = r#"{"a": [1, 2.25, {"b": "c d"}], "d": {"e": false, "f": null}}"#;
+        let j = Json::parse(src).unwrap();
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), j);
+        // fixed point: serializing the reparse yields the same bytes
+        assert_eq!(Json::parse(&s).unwrap().to_string(), s);
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn control_chars_escape_as_unicode() {
+        assert_eq!(Json::Str("\u{1}".into()).to_string(), "\"\\u0001\"");
     }
 
     #[test]

@@ -474,3 +474,69 @@ fn transient_snapshot_write_failure_is_retried() {
     sweep_rows_bit_eq(&out.rows, &warm.rows, "rows across retried persist");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Concurrent snapshot writers to one `--cache-dir` — the serve daemon's
+/// periodic checkpoint racing its shutdown persist, or two processes'
+/// threads — must never publish a torn file. Each writer stages to a
+/// unique tmp name (pid + per-process sequence, not pid alone: that
+/// collides across threads) and publishes with an atomic rename, so the
+/// surviving snapshot is exactly ONE writer's complete content, and no
+/// tmp litter outlives the race.
+#[test]
+fn concurrent_snapshot_writers_never_publish_a_torn_file() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmp_dir("concurrent_persist");
+    std::fs::create_dir_all(&dir).unwrap();
+    const WRITERS: usize = 8;
+    const KEYS: u128 = 64;
+    const ROUNDS: usize = 10;
+    // same key set per writer, writer-identifying values: a mixed file
+    // would either fail validation or show two writers' values
+    let caches: Vec<monet::eval::CostCache> = (0..WRITERS)
+        .map(|t| {
+            let c = monet::eval::CostCache::new();
+            for k in 0..KEYS {
+                c.insert_loaded(
+                    k,
+                    monet::cost::NodeCost {
+                        cycles: (t as f64) * 1000.0 + k as f64,
+                        ..Default::default()
+                    },
+                );
+            }
+            c
+        })
+        .collect();
+    std::thread::scope(|s| {
+        for c in &caches {
+            let dir = dir.clone();
+            s.spawn(move || {
+                for _ in 0..ROUNDS {
+                    persist::save_cost_cache(c, &dir).expect("save under contention");
+                }
+            });
+        }
+    });
+    let loaded = persist::load_cost_cache(&dir, 0)
+        .expect("published snapshot must load intact — a torn file would be rejected");
+    let mut entries = loaded.export_entries();
+    entries.sort_by_key(|(k, _)| *k);
+    assert_eq!(entries.len(), KEYS as usize, "snapshot lost entries");
+    let winner = (entries[0].1.cycles / 1000.0).floor() as usize;
+    assert!(winner < WRITERS, "snapshot value from no writer: {}", entries[0].1.cycles);
+    for (k, cost) in &entries {
+        assert_eq!(
+            cost.cycles,
+            (winner as f64) * 1000.0 + *k as f64,
+            "snapshot mixes two writers' content (key {k})"
+        );
+    }
+    let litter: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains(".tmp."))
+        .collect();
+    assert!(litter.is_empty(), "atomic publish left tmp litter: {litter:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,285 @@
+//! Integration pins for `monet serve`, the DSE-as-a-service daemon:
+//!
+//! * **bit-identity** — a query answered by the warm daemon (even under
+//!   concurrent clients) is byte-identical to the same query run as a
+//!   one-shot CLI command, for every design-space family;
+//! * **robustness** — malformed requests get structured 4xx JSON errors,
+//!   never a panic, and the daemon keeps serving afterwards;
+//! * **observability** — repeated identical queries hit the resident
+//!   cache (hits strictly grow, misses/entries stay put) without ever
+//!   changing an answer;
+//! * **pollable jobs** — `POST /jobs` + `GET /jobs/<id>` converge to the
+//!   same answer as the blocking path, with progress that lands on
+//!   done == total;
+//! * **snapshot lifecycle** — graceful shutdown persists the cache
+//!   snapshot, and a second daemon warm-loads it into pure hits.
+//!
+//! Each test boots its own daemon on an ephemeral loopback port, so the
+//! binary is safe under the default parallel test runner.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use monet::eval::persist;
+use monet::serve::{one_shot, OneShotOpts, ServeConfig, Server};
+use monet::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("monet_serve_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Minimal HTTP/1.1 client for the daemon's one-exchange-per-connection
+/// protocol. Returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to daemon");
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: monet\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|w| w.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn boot(cfg: ServeConfig) -> (SocketAddr, thread::JoinHandle<()>) {
+    let server = Server::bind(cfg).expect("bind daemon");
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.run().expect("serve loop"));
+    (addr, handle)
+}
+
+fn shutdown(addr: SocketAddr, handle: thread::JoinHandle<()>) {
+    let (status, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200, "graceful shutdown must be acknowledged");
+    handle.join().expect("daemon thread");
+}
+
+fn stat_f64(stats_body: &str, group: &str, key: &str) -> f64 {
+    let j = Json::parse(stats_body).expect("stats body is JSON");
+    match group {
+        "" => j.get(key).and_then(|v| v.as_f64()),
+        g => j.get(g).and_then(|c| c.get(key)).and_then(|v| v.as_f64()),
+    }
+    .unwrap_or_else(|| panic!("stats missing {group}/{key}: {stats_body}"))
+}
+
+/// One small query per design-space family — the whole serving surface.
+const FAMILY_QUERIES: [&str; 4] = [
+    r#"{"family":"sweep","stride":1500}"#,
+    r#"{"family":"cluster","devices":2,"batch":2,"workload":"resnet18"}"#,
+    r#"{"family":"hetero","device_classes":"edge:1,datacenter:1","batch":2,"microbatches":[2],"workload":"resnet18"}"#,
+    r#"{"family":"ga-cluster","device_classes":"edge:2,datacenter:1","batch":2,"microbatches":[2],"workload":"resnet18","pop":4,"gens":2,"seed":7}"#,
+];
+
+/// The non-negotiable serving bar: for every family, the warm daemon —
+/// answering all four families *concurrently*, twice — returns exactly
+/// the bytes of the one-shot CLI path. Cache warmth may change speed,
+/// never a byte.
+#[test]
+fn warm_daemon_answers_bit_identical_to_one_shot_for_every_family() {
+    let opts = OneShotOpts { use_cache: true, cache_dir: None, cache_cap: 0 };
+    let expected: Vec<String> = FAMILY_QUERIES
+        .iter()
+        .map(|q| one_shot(q, &opts).expect("one-shot reference run"))
+        .collect();
+
+    let (addr, handle) = boot(ServeConfig { serve_workers: 4, ..Default::default() });
+    let ask_all = || -> Vec<(u16, String)> {
+        let clients: Vec<_> = FAMILY_QUERIES
+            .iter()
+            .copied()
+            .map(|q| thread::spawn(move || http(addr, "POST", "/query", q)))
+            .collect();
+        clients.into_iter().map(|c| c.join().expect("client thread")).collect()
+    };
+
+    for pass in ["cold", "warm"] {
+        for (i, (status, body)) in ask_all().into_iter().enumerate() {
+            assert_eq!(status, 200, "[{pass}] family {i}: {body}");
+            assert_eq!(
+                body, expected[i],
+                "[{pass}] family query {i} drifted from the one-shot answer"
+            );
+        }
+    }
+    shutdown(addr, handle);
+}
+
+/// Arbitrary client input is a structured JSON error with the right
+/// status — never a panic — and the daemon keeps serving afterwards.
+#[test]
+fn malformed_requests_get_structured_errors_never_panics() {
+    let (addr, handle) = boot(ServeConfig::default());
+    let bad_bodies = [
+        "{not json",
+        "[1,2,3]",
+        r#"{"stride":20}"#,
+        r#"{"family":"warp"}"#,
+        r#"{"family":"sweep","stride":0}"#,
+        r#"{"family":"sweep","strid":20}"#,
+        r#"{"family":"cluster","devices":1000000000}"#,
+        r#"{"family":"cluster","workload":"alexnet"}"#,
+        r#"{"family":"hetero"}"#,
+        r#"{"family":"hetero","device_classes":"edge:0"}"#,
+        r#"{"family":"ga-cluster","device_classes":"edge:2","pop":1}"#,
+        r#"{"family":"ga-cluster","device_classes":"edge:2","microbatches":[]}"#,
+    ];
+    for body in bad_bodies {
+        let (status, resp) = http(addr, "POST", "/query", body);
+        assert_eq!(status, 400, "case {body:?} → {resp}");
+        let j = Json::parse(&resp).expect("error body must be JSON");
+        let msg = j.get("error").and_then(|e| e.get("message")).and_then(|m| m.as_str());
+        assert!(msg.is_some_and(|m| !m.is_empty()), "no error message in {resp}");
+    }
+    assert_eq!(http(addr, "GET", "/nope", "").0, 404);
+    assert_eq!(http(addr, "DELETE", "/healthz", "").0, 405);
+    assert_eq!(http(addr, "GET", "/query", "").0, 405);
+    // after all that abuse the daemon still answers
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"), "unhealthy after bad input: {body}");
+    shutdown(addr, handle);
+}
+
+/// Repeating one identical query warms the resident cache: hits grow
+/// strictly, misses and entries freeze after the first pass, and the
+/// answer never changes by a byte.
+#[test]
+fn cache_stats_grow_monotonically_across_repeated_identical_queries() {
+    let (addr, handle) = boot(ServeConfig::default());
+    let q = r#"{"family":"cluster","devices":2,"batch":2,"workload":"resnet18"}"#;
+    let stats = |label: &str| -> (f64, f64, f64) {
+        let (status, body) = http(addr, "GET", "/stats", "");
+        assert_eq!(status, 200, "{label}: {body}");
+        (
+            stat_f64(&body, "cache", "hits"),
+            stat_f64(&body, "cache", "misses"),
+            stat_f64(&body, "cache", "entries"),
+        )
+    };
+
+    let mut first_answer: Option<String> = None;
+    let mut prev = stats("before any query");
+    for round in 0..3 {
+        let (status, body) = http(addr, "POST", "/query", q);
+        assert_eq!(status, 200, "round {round}: {body}");
+        match &first_answer {
+            None => first_answer = Some(body),
+            Some(a) => assert_eq!(a, &body, "cache warmth changed the answer (round {round})"),
+        }
+        let cur = stats("after query");
+        assert!(cur.0 >= prev.0 && cur.1 >= prev.1, "counters went backwards");
+        if round > 0 {
+            assert!(cur.0 > prev.0, "round {round}: an identical query must hit the warm cache");
+            assert_eq!(cur.1, prev.1, "round {round}: a fully warm query must add no misses");
+            assert_eq!(cur.2, prev.2, "round {round}: a fully warm query must add no entries");
+        }
+        prev = cur;
+    }
+    let (_, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(stat_f64(&body, "", "queries_done"), 3.0, "queries_done miscounted");
+    shutdown(addr, handle);
+}
+
+/// The pollable path (`POST /jobs`, `GET /jobs/<id>`) converges to the
+/// same answer as the blocking path, reports progress that lands on
+/// done == total, and 404s unknown job ids.
+#[test]
+fn pollable_jobs_match_the_sync_answer_and_report_progress() {
+    let (addr, handle) = boot(ServeConfig::default());
+    let q = FAMILY_QUERIES[3]; // the GA family — what /jobs exists for
+    let (status, sync_body) = http(addr, "POST", "/query", q);
+    assert_eq!(status, 200, "sync reference: {sync_body}");
+
+    let (status, accept) = http(addr, "POST", "/jobs", q);
+    assert_eq!(status, 202, "job submit: {accept}");
+    let j = Json::parse(&accept).expect("accept body is JSON");
+    let poll = j.get("poll").and_then(|p| p.as_str()).expect("accept carries a poll path").to_string();
+
+    let mut done_body = None;
+    for _ in 0..600 {
+        let (status, body) = http(addr, "GET", &poll, "");
+        assert_eq!(status, 200, "poll: {body}");
+        let j = Json::parse(&body).expect("poll body is JSON");
+        match j.get("status").and_then(|s| s.as_str()) {
+            Some("done") => {
+                done_body = Some(body);
+                break;
+            }
+            Some("queued" | "running") => thread::sleep(Duration::from_millis(100)),
+            other => panic!("bad job status {other:?} in {body}"),
+        }
+    }
+    let done_body = done_body.expect("job never finished within 60s");
+    let j = Json::parse(&done_body).unwrap();
+    let total = j.get("total").and_then(|v| v.as_f64()).unwrap();
+    let done = j.get("done").and_then(|v| v.as_f64()).unwrap();
+    assert!(total > 0.0 && done == total, "progress must land on done == total: {done_body}");
+    // the nested result is the same JSON value the sync path returned
+    // (Display is deterministic, so comparing renderings compares values)
+    let job_result = j.get("result").expect("done job carries its result");
+    let sync_value = Json::parse(&sync_body).unwrap();
+    assert_eq!(
+        format!("{job_result}"),
+        format!("{sync_value}"),
+        "job answer drifted from the sync answer"
+    );
+    assert_eq!(http(addr, "GET", "/jobs/999999", "").0, 404);
+    shutdown(addr, handle);
+}
+
+/// Graceful shutdown is the persist point: with `checkpoint_every: 0`
+/// nothing touches disk while serving, the snapshot lands on shutdown,
+/// and a second daemon warm-loads it into pure hits — answering
+/// bit-identically to the first.
+#[test]
+fn graceful_shutdown_persists_the_snapshot_and_a_second_daemon_warm_loads_it() {
+    let dir = tmp_dir("daemon_snapshot");
+    let cfg = ServeConfig {
+        cache_dir: Some(dir.clone()),
+        checkpoint_every: 0,
+        ..Default::default()
+    };
+    let q = r#"{"family":"cluster","devices":2,"batch":2,"workload":"resnet18"}"#;
+
+    let (addr, handle) = boot(cfg.clone());
+    let (status, first) = http(addr, "POST", "/query", q);
+    assert_eq!(status, 200, "first daemon: {first}");
+    assert!(
+        !dir.join(persist::COST_SNAPSHOT_FILE).exists(),
+        "checkpoint_every=0 must not persist while serving"
+    );
+    shutdown(addr, handle);
+    assert!(
+        dir.join(persist::COST_SNAPSHOT_FILE).exists(),
+        "graceful shutdown must persist the snapshot"
+    );
+    let snapshot = monet::eval::load_cost_cache(&dir, 0).expect("persisted snapshot loads");
+    assert!(snapshot.stats().entries > 0, "snapshot must carry the resident entries");
+
+    let (addr2, handle2) = boot(cfg);
+    let (status, second) = http(addr2, "POST", "/query", q);
+    assert_eq!(status, 200, "second daemon: {second}");
+    assert_eq!(first, second, "warm-loaded daemon answer drifted from the cold one");
+    let (_, stats) = http(addr2, "GET", "/stats", "");
+    assert!(
+        stat_f64(&stats, "cache", "hits") > 0.0,
+        "the warm-loaded snapshot produced no hits: {stats}"
+    );
+    shutdown(addr2, handle2);
+    std::fs::remove_dir_all(&dir).ok();
+}
