@@ -14,10 +14,10 @@ use std::time::Instant;
 
 use monet::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
 use monet::dse::{
-    ga_cluster_search, run_cluster_sweep, run_hetero_sweep, run_sweep_outcome, run_sweep_stats,
-    ClusterRow, ClusterSpace, DesignPoint, SweepConfig,
+    ga_cluster_search, run_cluster_sweep, run_cluster_sweep_outcome, run_hetero_sweep,
+    run_sweep_outcome, run_sweep_stats, ClusterRow, ClusterSpace, DesignPoint, SweepConfig,
 };
-use monet::ga::{DeploymentGenome, GaConfig};
+use monet::ga::{pareto_rank0, DeploymentGenome, GaConfig};
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
 use monet::parallelism::{DeviceClass, HeteroCluster, LinkTier};
@@ -177,6 +177,74 @@ fn main() {
         (points.len(), journaled_secs, replay_secs)
     };
 
+    // bound-based front pruning (ROADMAP item 5): the tiny-GPT-2 cluster
+    // deployment space, full enumeration vs pruned — the front must be
+    // bit-identical while a large fraction of the space never schedules
+    let (pruned_points, pruned_skipped, pruned_json) = {
+        let space = ClusterSpace {
+            device_counts: vec![4, 8],
+            tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+            microbatches: vec![2, 4],
+        };
+        let points = space.enumerate();
+        let accel = EdgeTpuParams::baseline().build();
+        let cfg = |prune: bool| SweepConfig {
+            mapping: MappingConfig::edge_tpu_default(),
+            prune,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let full = run_cluster_sweep_outcome(
+            &points,
+            4,
+            &monet::figures::cluster_gpt2_builder,
+            &accel,
+            &cfg(false),
+            |_, _| {},
+        )
+        .expect("full cluster sweep");
+        let full_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let pruned = run_cluster_sweep_outcome(
+            &points,
+            4,
+            &monet::figures::cluster_gpt2_builder,
+            &accel,
+            &cfg(true),
+            |_, _| {},
+        )
+        .expect("pruned cluster sweep");
+        let pruned_secs = t1.elapsed().as_secs_f64();
+        let front_key = |rows: &[ClusterRow]| -> Vec<(u64, u64, u64, usize)> {
+            let objs: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
+            pareto_rank0(&objs)
+                .into_iter()
+                .map(|i| {
+                    let r = &rows[i];
+                    (
+                        r.latency_cycles.to_bits(),
+                        r.energy_pj.to_bits(),
+                        r.per_device_mem_bytes,
+                        r.devices,
+                    )
+                })
+                .collect()
+        };
+        let identical = front_key(&full.rows) == front_key(&pruned.rows);
+        assert!(identical, "pruning moved the gpt2 cluster front");
+        let json = format!(
+            "  \"pruned\": {{\n    \"points\": {},\n    \"skipped\": {},\n    \"skipped_fraction\": {:.4},\n    \"points_per_sec_full\": {:.2},\n    \"points_per_sec_pruned\": {:.2},\n    \"speedup\": {:.3},\n    \"front_identical\": {}\n  }},\n",
+            points.len(),
+            pruned.skipped.len(),
+            pruned.skipped.len() as f64 / points.len().max(1) as f64,
+            points.len() as f64 / full_secs,
+            points.len() as f64 / pruned_secs,
+            full_secs / pruned_secs.max(1e-300),
+            identical
+        );
+        (points.len(), pruned.skipped.len(), json)
+    };
+
     // past-the-wall deployment GA (the ga-cluster family): front quality
     // vs the block-fallback baseline on a 256-device pool, plus how small
     // a fraction of the enumerable space the search visits
@@ -275,6 +343,10 @@ fn main() {
         "run_journal", journal_points, journaled_secs, replay_secs
     );
     println!(
+        "{:<16} {:>8} {:>12}              ({} of {} points bound-pruned, front bit-identical)",
+        "pruned", pruned_points, "", pruned_skipped, pruned_points
+    );
+    println!(
         "{:<16} {:>8} {:>12.3}              ({} of {} enumerable points visited, {:.2}%)",
         "ga_cluster",
         ga_evaluated,
@@ -290,8 +362,9 @@ fn main() {
         journal_points as f64 / replay_secs
     );
     let json = format!(
-        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n{}{}  \"families\": {{\n{}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"dse_engine_throughput\",\n  \"harness\": \"dse::engine (one generic worker pool + cache lifecycle for every sweep family)\",\n{}{}{}  \"families\": {{\n{}\n  }}\n}}\n",
         journal_json,
+        pruned_json,
         ga_json,
         families_json.join(",\n")
     );

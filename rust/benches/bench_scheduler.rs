@@ -3,18 +3,27 @@
 //! autodiff, fusion solving, scheduling, and GA generation cost. These are
 //! the §Perf numbers tracked in EXPERIMENTS.md.
 
+use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use monet::autodiff::{
     apply_checkpointing, build_training_graph, stored_activation_bytes, TrainOptions,
+    TrainingGraph,
 };
-use monet::dse::{evaluate_point, DesignPoint, SweepConfig};
+use monet::dse::{
+    evaluate_point, ClusterScratch, ClusterSpace, DesignPoint, Evaluate, HeteroEval, SweepConfig,
+};
 use monet::fusion::{enumerate_candidates, fuse, fuse_greedy, FusionConstraints};
-use monet::ga::{nsga2, CheckpointProblem, GaConfig, Genome, Objectives};
+use monet::ga::{
+    nsga2, nsga2_problem, CheckpointProblem, DeploymentGenome, DeploymentProblem, GaConfig,
+    Genome, Objectives,
+};
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
+use monet::parallelism::{DeviceClass, HeteroCluster};
 use monet::scheduler::{schedule, Partition};
-use monet::workload::models::{gpt2, resnet18, Gpt2Config};
+use monet::workload::models::{gpt2, mlp, resnet18, Gpt2Config};
 use monet::workload::op::Optimizer;
 
 fn bench(name: &str, reps: usize, mut f: impl FnMut()) -> f64 {
@@ -195,8 +204,89 @@ fn main() {
         fronts_identical
     );
 
+    // ---- incremental GA re-evaluation (ROADMAP item 5): deployment-genome
+    // throughput, a cold `ClusterScratch` per genome (full re-evaluation)
+    // vs warm scratches recycled through a pool (a mutant re-costs only
+    // the stage schedules it changed) — objectives bit-identical ----
+    println!();
+    let hc = HeteroCluster::new(vec![
+        (DeviceClass::edge(), 4),
+        (DeviceClass::server(), 4),
+        (DeviceClass::datacenter(), 4),
+    ]);
+    fn stage_builder(batch: usize) -> TrainingGraph {
+        build_training_graph(&mlp(batch.max(1), 16, 32, 3, 8), TrainOptions::default())
+    }
+    let builder: &(dyn Fn(usize) -> TrainingGraph + Sync) = &stage_builder;
+    let heval = HeteroEval {
+        hc: &hc,
+        full_batch: 8,
+        builder,
+        mapping: MappingConfig::edge_tpu_default(),
+    };
+    let dproblem = DeploymentProblem { hc: &hc, microbatches: vec![2, 4] };
+    let dga: GaConfig<DeploymentGenome> =
+        GaConfig { population: 16, generations: 8, ..Default::default() };
+    let devals = (dga.population * (dga.generations + 1)) as f64;
+
+    let eval_full = |g: &DeploymentGenome| {
+        let p = ClusterSpace::genome_to_hetero(g);
+        let mut scratch = heval.scratch();
+        heval.evaluate(0, &p, None, &mut scratch)[0].objectives().to_vec()
+    };
+    let mut memo_full: HashMap<DeploymentGenome, Objectives> = HashMap::new();
+    let t3 = Instant::now();
+    let (pop_full, _) = nsga2_problem(&dproblem, &dga, eval_full, &mut memo_full, None, |_| {});
+    let full_secs = t3.elapsed().as_secs_f64();
+
+    let pool: Mutex<Vec<ClusterScratch>> = Mutex::new(Vec::new());
+    let eval_inc = |g: &DeploymentGenome| {
+        let p = ClusterSpace::genome_to_hetero(g);
+        let mut scratch =
+            pool.lock().ok().and_then(|mut v| v.pop()).unwrap_or_else(|| heval.scratch());
+        let objs = heval.evaluate(0, &p, None, &mut scratch)[0].objectives().to_vec();
+        if let Ok(mut v) = pool.lock() {
+            v.push(scratch);
+        }
+        objs
+    };
+    let mut memo_inc: HashMap<DeploymentGenome, Objectives> = HashMap::new();
+    let t4 = Instant::now();
+    let (pop_inc, _) = nsga2_problem(&dproblem, &dga, eval_inc, &mut memo_inc, None, |_| {});
+    let inc_secs = t4.elapsed().as_secs_f64();
+
+    let dkey = |f: &[monet::ga::Individual<DeploymentGenome>]| -> Vec<(DeploymentGenome, Vec<u64>)> {
+        f.iter()
+            .map(|i| (i.genome.clone(), i.objectives.iter().map(|o| o.to_bits()).collect()))
+            .collect()
+    };
+    let objectives_identical = dkey(&pop_full) == dkey(&pop_inc);
+    assert!(objectives_identical, "incremental GA diverged from full re-evaluation");
+    for (name, secs) in [
+        ("ga-eval: deployment pop16x8gens, cold scratch/genome", full_secs),
+        ("ga-eval: deployment pop16x8gens, pooled warm scratch", inc_secs),
+    ] {
+        println!("{name:<52} {:>9.2} ms   ({:.0} genomes/s)", secs * 1e3, devals / secs);
+    }
+    println!(
+        "    -> incremental speedup {:.1}x; objectives identical: {}",
+        full_secs / inc_secs,
+        objectives_identical
+    );
+
+    let incremental_json = format!(
+        "  \"incremental\": {{\n    \"pool_devices\": {},\n    \"population\": {},\n    \"generations\": {},\n    \"genomes_per_sec_full\": {:.2},\n    \"genomes_per_sec_incremental\": {:.2},\n    \"speedup\": {:.3},\n    \"objectives_identical\": {}\n  }}",
+        hc.total_devices(),
+        dga.population,
+        dga.generations,
+        devals / full_secs,
+        devals / inc_secs,
+        full_secs / inc_secs.max(1e-300),
+        objectives_identical
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"ga_eval_throughput\",\n  \"workload\": \"resnet18(1,32,10) training, Adam, EdgeTPU baseline\",\n  \"baseline\": \"serial, pipeline uncached (nsga2 genome memo active -> speedups are conservative)\",\n  \"population\": {ga_pop},\n  \"generations\": {ga_gens},\n  \"evaluations\": {},\n  \"genomes_per_sec_baseline\": {:.2},\n  \"genomes_per_sec_cold_cache\": {:.2},\n  \"genomes_per_sec_warm_cache\": {:.2},\n  \"speedup_cold\": {:.3},\n  \"speedup_warm\": {:.3},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"fronts_identical\": {}\n}}\n",
+        "{{\n  \"bench\": \"ga_eval_throughput\",\n  \"workload\": \"resnet18(1,32,10) training, Adam, EdgeTPU baseline\",\n  \"baseline\": \"serial, pipeline uncached (nsga2 genome memo active -> speedups are conservative)\",\n  \"population\": {ga_pop},\n  \"generations\": {ga_gens},\n  \"evaluations\": {},\n  \"genomes_per_sec_baseline\": {:.2},\n  \"genomes_per_sec_cold_cache\": {:.2},\n  \"genomes_per_sec_warm_cache\": {:.2},\n  \"speedup_cold\": {:.3},\n  \"speedup_warm\": {:.3},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"fronts_identical\": {},\n{}\n}}\n",
         evals as u64,
         evals / base_secs,
         evals / cold_secs,
@@ -205,7 +295,8 @@ fn main() {
         base_secs / warm_secs,
         stats.hits,
         stats.misses,
-        fronts_identical
+        fronts_identical,
+        incremental_json
     );
     std::fs::write("BENCH_eval.json", &json).expect("writing BENCH_eval.json");
     println!("    -> BENCH_eval.json written");

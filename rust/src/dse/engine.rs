@@ -183,8 +183,11 @@ pub trait Evaluate: Sync {
     /// One result row; a point may emit several (e.g. one per mode).
     type Row: Send;
     /// Per-worker scratch: memos of pure functions only (training-graph
-    /// memo, stage-cuts memo). Created once per worker, never shared.
-    type Scratch;
+    /// memo, stage-cuts memo). Created once per worker, never shared
+    /// concurrently — the pruned path hands idle scratches to later
+    /// workers through a pool (hence `Send`), which is sound because a
+    /// memo hit must be bit-identical to a recompute.
+    type Scratch: Send;
 
     /// Fresh scratch for one worker.
     fn scratch(&self) -> Self::Scratch;
@@ -198,6 +201,49 @@ pub trait Evaluate: Sync {
         cache: Option<&CostCache>,
         scratch: &mut Self::Scratch,
     ) -> Vec<Self::Row>;
+
+    /// Cheap **admissible lower bounds** on the rows this point would
+    /// produce, or `None` for "no bound" (the conservative default: the
+    /// point always evaluates).
+    ///
+    /// # The admissibility contract (what makes pruning sound)
+    ///
+    /// The returned vectors and [`Evaluate::row_objectives`] must agree
+    /// on one minimized objective geometry (same length, same component
+    /// meaning), and for **every** row `r` the point's evaluation would
+    /// emit, some returned bound `b` must satisfy
+    /// `b[k] <= row_objectives(r)[k]` for every component `k` — a bound
+    /// may be arbitrarily loose, but must **never** exceed the true
+    /// value in any component. Under that contract, an already-evaluated
+    /// row that Pareto-dominates every bound of a point strictly
+    /// dominates every row the point would produce, so skipping the
+    /// point can remove only dominated rows and the rank-0 front is
+    /// bit-identical with pruning on or off (ties are not dominance:
+    /// a point whose true objectives merely equal an incumbent's is
+    /// never skipped through a bound `<=` its truth).
+    ///
+    /// Like [`Evaluate::evaluate`], the bound must be a pure function of
+    /// `(index, point, &self)` (the scratch only as a memo of pure
+    /// functions), and it must not read or write the cost cache —
+    /// pruning must not change what gets cached for surviving points.
+    /// Return one bound per prospective row (or any covering set); an
+    /// empty set is treated as "no bound".
+    fn lower_bound(
+        &self,
+        _index: usize,
+        _point: &Self::Point,
+        _scratch: &mut Self::Scratch,
+    ) -> Option<Vec<Vec<f64>>> {
+        None
+    }
+
+    /// The minimized objective vector of one emitted row, in the same
+    /// geometry as [`Evaluate::lower_bound`], or `None` for "this family
+    /// does not participate in pruning". Both hooks must be implemented
+    /// (and agree) for the engine to prune.
+    fn row_objectives(&self, _row: &Self::Row) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// One design point whose evaluation panicked: the engine's per-point
@@ -225,6 +271,11 @@ pub struct RunOutcome<R> {
     pub cache: CacheStats,
     pub failures: Vec<PointFailure>,
     pub resumed: usize,
+    /// Indices of points the bound-based pruner skipped without
+    /// evaluating (sorted; includes skips replayed from a resumed
+    /// journal). Every skipped point's rows are Pareto-dominated by a
+    /// returned row, so fronts are unaffected.
+    pub skipped: Vec<usize>,
 }
 
 impl<R> RunOutcome<R> {
@@ -332,6 +383,13 @@ pub struct EngineConfig {
     /// persists one at end-of-run — the cache's owner controls the
     /// snapshot lifecycle. Ignored when `use_cache` is off.
     pub shared_cache: Option<SharedCache>,
+    /// Skip points whose [`Evaluate::lower_bound`] cannot beat the
+    /// incumbent front (`true`, the default; `--no-prune` turns it
+    /// off). Only engages for evaluators that implement both pruning
+    /// hooks — the rank-0 Pareto front is bit-identical either way
+    /// (pinned by `tests/front_equivalence.rs`), only dominated rows
+    /// may be elided.
+    pub prune: bool,
 }
 
 impl Default for EngineConfig {
@@ -344,6 +402,7 @@ impl Default for EngineConfig {
             run_dir: None,
             resume: false,
             shared_cache: None,
+            prune: true,
         }
     }
 }
@@ -376,7 +435,17 @@ impl Engine {
     ///   `cache_cap`) before evaluation and persisted back after; with
     ///   `use_cache` off nothing is loaded, counted or saved;
     /// * **progress** — `progress(done, total)` fires once per completed
-    ///   point, in completion order.
+    ///   point, in completion order (a pruned-away point counts as
+    ///   completed the moment it is skipped);
+    /// * **pruning** — with `cfg.prune` (the default) and an evaluator
+    ///   implementing [`Evaluate::lower_bound`] +
+    ///   [`Evaluate::row_objectives`], points whose bound is Pareto-
+    ///   dominated by an already-produced row are skipped without
+    ///   evaluation ([`RunOutcome::skipped`]). The skip set is itself
+    ///   deterministic (bound-sorted order, fixed-size chunks, incumbent
+    ///   grown only at chunk barriers), and by the admissibility
+    ///   contract only dominated rows can be elided — the rank-0 front
+    ///   is bit-identical to a `--no-prune` run.
     ///
     /// # Failure semantics
     ///
@@ -538,33 +607,134 @@ impl Engine {
         if resumed > 0 {
             progress(done, n);
         }
-        run_pool(
-            self.cfg.workers,
-            pending.len(),
-            &|| eval.scratch(),
-            &|j, scratch: &mut E::Scratch| {
-                let i = pending[j];
-                // AssertUnwindSafe: a panicking evaluation may only have
-                // touched its own per-worker scratch (dropped with the
-                // worker) and the cost cache outside its locks (compute
-                // happens unlocked; see CostCache::get_or_compute), so no
-                // shared state observable by other points is left torn.
-                match catch_unwind(AssertUnwindSafe(|| {
-                    crate::util::fault::panic_point(i);
-                    eval.evaluate(i, &points[i], cache_ref, scratch)
-                })) {
-                    Ok(rows) => PointRecord::Rows(rows),
-                    Err(payload) => PointRecord::Failed(panic_message(payload)),
+
+        // Bound pass (ROADMAP item 5): with pruning on, ask the evaluator
+        // for an admissible lower bound per pending point — serially, on
+        // one dedicated scratch that later seeds the worker pool. Bounds
+        // never touch the cost cache, so what gets cached for surviving
+        // points is byte-identical to a `--no-prune` run.
+        let mut bounds: HashMap<usize, Vec<Vec<f64>>> = HashMap::new();
+        let mut seed_scratch: Vec<E::Scratch> = Vec::new();
+        if self.cfg.prune && !pending.is_empty() {
+            let mut sc = eval.scratch();
+            for &i in &pending {
+                if let Some(bs) = eval.lower_bound(i, &points[i], &mut sc) {
+                    if !bs.is_empty() {
+                        bounds.insert(i, bs);
+                    }
                 }
-            },
-            |j, rec| {
-                let i = pending[j];
-                on_complete(i, &rec);
-                slots[i] = Some(rec);
-                done += 1;
-                progress(done, n);
-            },
-        );
+            }
+            seed_scratch.push(sc);
+        }
+
+        if bounds.is_empty() {
+            // the exhaustive path: pruning off, or a family with no bound
+            run_pool(
+                self.cfg.workers,
+                pending.len(),
+                &|| eval.scratch(),
+                &|j, scratch: &mut E::Scratch| {
+                    let i = pending[j];
+                    // AssertUnwindSafe: a panicking evaluation may only have
+                    // touched its own per-worker scratch (dropped with the
+                    // worker) and the cost cache outside its locks (compute
+                    // happens unlocked; see CostCache::get_or_compute), so no
+                    // shared state observable by other points is left torn.
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        crate::util::fault::panic_point(i);
+                        eval.evaluate(i, &points[i], cache_ref, scratch)
+                    })) {
+                        Ok(rows) => PointRecord::Rows(rows),
+                        Err(payload) => PointRecord::Failed(panic_message(payload)),
+                    }
+                },
+                |j, rec| {
+                    let i = pending[j];
+                    on_complete(i, &rec);
+                    slots[i] = Some(rec);
+                    done += 1;
+                    progress(done, n);
+                },
+            );
+        } else {
+            // The pruned path. Every skip decision is a pure function of
+            // the space (never of worker timing): points are processed in
+            // a deterministic bound-sorted order, in fixed-size chunks,
+            // and the incumbent row set only grows at chunk barriers — so
+            // the set of skipped points is bit-identical across worker
+            // counts and cache settings.
+            let mut incumbent: Vec<Vec<f64>> = Vec::new();
+            for slot in slots.iter().flatten() {
+                if let PointRecord::Rows(rows) = slot {
+                    for row in rows {
+                        if let Some(o) = eval.row_objectives(row) {
+                            incumbent.push(o);
+                        }
+                    }
+                }
+            }
+            // promising (small-bound) points first, so the incumbent
+            // front gets strong early and later chunks skip hard;
+            // unbounded points (never skippable) go first of all
+            let mut order = pending.clone();
+            order.sort_by(|&a, &b| match (bounds.get(&a), bounds.get(&b)) {
+                (Some(x), Some(y)) => bound_order(x, y).then(a.cmp(&b)),
+                (None, Some(_)) => std::cmp::Ordering::Less,
+                (Some(_), None) => std::cmp::Ordering::Greater,
+                (None, None) => a.cmp(&b),
+            });
+            let pool = std::sync::Mutex::new(seed_scratch);
+            for chunk in order.chunks(PRUNE_CHUNK) {
+                let mut to_run: Vec<usize> = Vec::with_capacity(chunk.len());
+                for &i in chunk {
+                    let skip = bounds.get(&i).is_some_and(|bs| {
+                        bs.iter().all(|b| incumbent.iter().any(|r| dominates(r, b)))
+                    });
+                    if skip {
+                        let rec = PointRecord::Skipped;
+                        on_complete(i, &rec);
+                        slots[i] = Some(rec);
+                        done += 1;
+                        progress(done, n);
+                    } else {
+                        to_run.push(i);
+                    }
+                }
+                run_pool(
+                    self.cfg.workers,
+                    to_run.len(),
+                    &|| PooledScratch::checkout(&pool, || eval.scratch()),
+                    &|j, scratch: &mut PooledScratch<'_, E::Scratch>| {
+                        let i = to_run[j];
+                        // AssertUnwindSafe: as on the exhaustive path
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            crate::util::fault::panic_point(i);
+                            eval.evaluate(i, &points[i], cache_ref, scratch.get())
+                        })) {
+                            Ok(rows) => PointRecord::Rows(rows),
+                            Err(payload) => PointRecord::Failed(panic_message(payload)),
+                        }
+                    },
+                    |j, rec| {
+                        let i = to_run[j];
+                        on_complete(i, &rec);
+                        slots[i] = Some(rec);
+                        done += 1;
+                        progress(done, n);
+                    },
+                );
+                // chunk barrier: fold the chunk's rows into the incumbent
+                for &i in &to_run {
+                    if let Some(PointRecord::Rows(rows)) = &slots[i] {
+                        for row in rows {
+                            if let Some(o) = eval.row_objectives(row) {
+                                incumbent.push(o);
+                            }
+                        }
+                    }
+                }
+            }
+        }
 
         // satellite of the robustness PR: a structured error instead of
         // the old `expect("pool delivered every index")`
@@ -585,6 +755,7 @@ impl Engine {
 
         let mut rows = Vec::new();
         let mut failures = Vec::new();
+        let mut skipped = Vec::new();
         for (i, slot) in slots.into_iter().enumerate() {
             match slot {
                 Some(PointRecord::Rows(r)) => rows.extend(r),
@@ -593,10 +764,83 @@ impl Engine {
                     point_id: space.point_id(i),
                     diagnostic,
                 }),
+                Some(PointRecord::Skipped) => skipped.push(i),
                 None => unreachable!("missing indices returned above"),
             }
         }
-        Ok(RunOutcome { rows, cache: stats, failures, resumed })
+        Ok(RunOutcome { rows, cache: stats, failures, resumed, skipped })
+    }
+}
+
+/// Points per pruning chunk: skip decisions are made for a whole chunk
+/// against the incumbent front, the chunk evaluates over the pool, and
+/// the barrier folds its rows in. A constant (never derived from the
+/// worker count) so the skipped set is identical for any `workers`.
+const PRUNE_CHUNK: usize = 8;
+
+/// `a` Pareto-dominates `b` (both minimized): `<=` in every component,
+/// `<` in at least one. Length mismatches and NaNs compare as
+/// non-dominating — an uncomparable pair must never justify a skip.
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if !(x <= y) {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Deterministic total order over bound sets: lexicographic over the
+/// flattened components (`total_cmp`), then by total length. Pure
+/// tie-breaking structure — any total order keeps pruning sound; this
+/// one fronts points with small bounds.
+fn bound_order(a: &[Vec<f64>], b: &[Vec<f64>]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+        match x.total_cmp(y) {
+            std::cmp::Ordering::Equal => {}
+            o => return o,
+        }
+    }
+    let la: usize = a.iter().map(Vec::len).sum();
+    let lb: usize = b.iter().map(Vec::len).sum();
+    la.cmp(&lb)
+}
+
+/// A worker scratch checked out of a shared pool and returned on drop,
+/// so per-worker memos survive across the pruned path's chunk barriers
+/// (each chunk spawns a fresh pool). Sound because scratches are memos
+/// of pure functions: a warm checkout returns bit-identical rows to a
+/// cold one.
+struct PooledScratch<'p, S> {
+    slot: Option<S>,
+    pool: &'p std::sync::Mutex<Vec<S>>,
+}
+
+impl<'p, S> PooledScratch<'p, S> {
+    fn checkout(pool: &'p std::sync::Mutex<Vec<S>>, fresh: impl FnOnce() -> S) -> Self {
+        let warm = pool.lock().ok().and_then(|mut p| p.pop());
+        PooledScratch { slot: Some(warm.unwrap_or_else(fresh)), pool }
+    }
+
+    fn get(&mut self) -> &mut S {
+        self.slot.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl<S> Drop for PooledScratch<'_, S> {
+    fn drop(&mut self) {
+        if let Some(s) = self.slot.take() {
+            if let Ok(mut p) = self.pool.lock() {
+                p.push(s);
+            }
+        }
     }
 }
 
@@ -989,6 +1233,174 @@ mod tests {
         let space = HeteroSpace { points: &points, cluster: &hc };
         assert_eq!(space.len(), 1);
         assert_eq!(space.point_id(0), points[0].label(&hc));
+    }
+
+    /// Identity objectives with an exact lower bound: evaluation emits
+    /// the point's value as its single minimized objective, and the
+    /// bound equals the truth — the sharpest admissible bound there is.
+    struct BoundedEval;
+
+    impl Evaluate for BoundedEval {
+        type Point = u64;
+        type Row = (usize, u64);
+        type Scratch = ();
+
+        fn scratch(&self) {}
+
+        fn evaluate(
+            &self,
+            index: usize,
+            point: &u64,
+            _cache: Option<&CostCache>,
+            _scratch: &mut (),
+        ) -> Vec<(usize, u64)> {
+            vec![(index, *point)]
+        }
+
+        fn lower_bound(
+            &self,
+            _index: usize,
+            point: &u64,
+            _scratch: &mut (),
+        ) -> Option<Vec<Vec<f64>>> {
+            Some(vec![vec![*point as f64]])
+        }
+
+        fn row_objectives(&self, row: &(usize, u64)) -> Option<Vec<f64>> {
+            Some(vec![row.1 as f64])
+        }
+    }
+
+    #[test]
+    fn pruning_skips_dominated_points_deterministically() {
+        // 40 distinct values: the bound-sorted first chunk establishes
+        // the global minimum, so every later chunk is dominated
+        let space = IntSpace((0..40u64).map(|i| 2000 - i * 3).collect());
+        let min_val = *space.0.iter().min().unwrap();
+        let run = |workers: usize, prune: bool| {
+            let mut calls = 0usize;
+            let out = Engine::new(EngineConfig {
+                prune,
+                ..no_cache_cfg(workers)
+            })
+            .run(&space, &BoundedEval, |_, _| calls += 1)
+            .unwrap();
+            assert_eq!(calls, space.len(), "skips must still tick progress");
+            out
+        };
+        let full = run(1, false);
+        assert!(full.skipped.is_empty());
+        assert_eq!(full.rows.len(), 40);
+
+        let pruned = run(1, true);
+        assert_eq!(pruned.rows.len(), PRUNE_CHUNK, "later chunks all skip");
+        assert_eq!(pruned.skipped.len(), 40 - PRUNE_CHUNK);
+        assert!(pruned.rows.iter().any(|r| r.1 == min_val), "front row survives");
+        // the minimized front (here: the single minimum) is identical
+        assert_eq!(
+            pruned.rows.iter().map(|r| r.1).min(),
+            full.rows.iter().map(|r| r.1).min()
+        );
+        // and the skip set is bit-identical across worker counts
+        for workers in [2usize, 8] {
+            let p = run(workers, true);
+            assert_eq!(p.rows, pruned.rows);
+            assert_eq!(p.skipped, pruned.skipped);
+        }
+    }
+
+    #[test]
+    fn objective_ties_are_never_pruned() {
+        /// Objective = point % 3: three big tie groups.
+        struct ModEval;
+        impl Evaluate for ModEval {
+            type Point = u64;
+            type Row = (usize, u64);
+            type Scratch = ();
+            fn scratch(&self) {}
+            fn evaluate(
+                &self,
+                index: usize,
+                point: &u64,
+                _cache: Option<&CostCache>,
+                _scratch: &mut (),
+            ) -> Vec<(usize, u64)> {
+                vec![(index, point % 3)]
+            }
+            fn lower_bound(
+                &self,
+                _index: usize,
+                point: &u64,
+                _scratch: &mut (),
+            ) -> Option<Vec<Vec<f64>>> {
+                Some(vec![vec![(point % 3) as f64]])
+            }
+            fn row_objectives(&self, row: &(usize, u64)) -> Option<Vec<f64>> {
+                Some(vec![row.1 as f64])
+            }
+        }
+        let space = IntSpace((0..30).collect());
+        let out = Engine::new(EngineConfig { prune: true, ..no_cache_cfg(4) })
+            .run(&space, &ModEval, |_, _| {})
+            .unwrap();
+        // every value-0 row ties the incumbent (ties are not dominance),
+        // so all 10 survive; the dominated 1s and 2s are skipped
+        assert_eq!(out.rows.len(), 10);
+        assert!(out.rows.iter().all(|r| r.1 == 0));
+        assert_eq!(out.skipped.len(), 20);
+    }
+
+    #[test]
+    fn pruned_journal_resumes_skips_without_reevaluating() {
+        let dir = std::env::temp_dir()
+            .join(format!("monet_engine_prune_journal_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let space = IntSpace((0..30u64).map(|i| i * 5 + 1).collect());
+        let cfg = EngineConfig {
+            workers: 2,
+            use_cache: false,
+            run_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let full =
+            Engine::new(cfg.clone()).run_journaled(&space, &BoundedEval, |_, _| {}).unwrap();
+        assert!(!full.skipped.is_empty(), "pruning must engage");
+
+        /// Refuses to evaluate: the journal must replay rows AND skips.
+        struct MustNotRun;
+        impl Evaluate for MustNotRun {
+            type Point = u64;
+            type Row = (usize, u64);
+            type Scratch = ();
+            fn scratch(&self) {}
+            fn evaluate(
+                &self,
+                _i: usize,
+                _p: &u64,
+                _c: Option<&CostCache>,
+                _s: &mut (),
+            ) -> Vec<(usize, u64)> {
+                panic!("resume of a complete pruned journal re-evaluated a point")
+            }
+        }
+        let resumed = Engine::new(EngineConfig { resume: true, ..cfg })
+            .run_journaled(&space, &MustNotRun, |_, _| {})
+            .unwrap();
+        assert_eq!(resumed.resumed, space.len(), "skips count as completed");
+        assert_eq!(resumed.rows, full.rows);
+        assert_eq!(resumed.skipped, full.skipped);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dominance_is_strict_and_nan_safe() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(dominates(&[0.5, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]), "ties do not dominate");
+        assert!(!dominates(&[1.0, 4.0], &[2.0, 3.0]), "trade-offs do not dominate");
+        assert!(!dominates(&[1.0], &[1.0, 2.0]), "length mismatch");
+        assert!(!dominates(&[f64::NAN, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[f64::NAN, 2.0]));
     }
 
     #[test]

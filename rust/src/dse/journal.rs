@@ -77,12 +77,18 @@ pub const HEADER_LEN: usize = 56;
 const MAX_RECORD_LEN: usize = 1 << 26; // 64 MiB
 
 /// What the journal remembers about one completed design point: its rows,
-/// or the diagnostic of its isolated failure. Replay restores either —
-/// a resumed run neither re-evaluates nor forgets a failed point.
+/// the diagnostic of its isolated failure, or the fact that the
+/// bound-based pruner skipped it. Replay restores any of the three — a
+/// resumed run neither re-evaluates nor forgets a failed or skipped
+/// point, so `--resume` of a pruned run reproduces the uninterrupted
+/// run's front bit-identically.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PointRecord<R> {
     Rows(Vec<R>),
     Failed(String),
+    /// The engine's pruner proved the point's rows dominated and never
+    /// evaluated it (see `Evaluate::lower_bound`).
+    Skipped,
 }
 
 /// A row type the engine can journal: a self-contained binary encoding
@@ -349,6 +355,13 @@ pub fn encode_point_record<R: JournalRow>(index: usize, rec: &PointRecord<R>) ->
             put_u64(&mut buf, index as u64);
             put_str(&mut buf, diag);
         }
+        // kind 2 is additive: readers predating it decode the record to
+        // `None` and simply re-evaluate the point, so the byte format
+        // stays at JOURNAL_FORMAT_VERSION 1
+        PointRecord::Skipped => {
+            buf.push(2);
+            put_u64(&mut buf, index as u64);
+        }
     }
     buf
 }
@@ -369,6 +382,7 @@ pub fn decode_point_record<R: JournalRow>(payload: &[u8]) -> Option<(usize, Poin
             PointRecord::Rows(rows)
         }
         1 => PointRecord::Failed(r.str()?),
+        2 => PointRecord::Skipped,
         _ => return None,
     };
     if !r.exhausted() {
@@ -658,6 +672,15 @@ mod tests {
         let mut bad = payload.clone();
         bad[0] = 7;
         assert!(decode_point_record::<SweepRow>(&bad).is_none());
+
+        // the pruner's skipped-point record (kind 2)
+        let payload = encode_point_record::<SweepRow>(17, &PointRecord::Skipped);
+        let (idx, rec) = decode_point_record::<SweepRow>(&payload).unwrap();
+        assert_eq!(idx, 17);
+        assert_eq!(rec, PointRecord::Skipped);
+        for cut in 0..payload.len() {
+            assert!(decode_point_record::<SweepRow>(&payload[..cut]).is_none());
+        }
     }
 
     #[test]

@@ -21,8 +21,8 @@ use super::journal;
 use super::prefilter::{accel_to_cfg, graph_to_layers, select_survivors};
 use super::space::{ClusterSpace, DesignPoint};
 use super::sweep::{
-    pareto_front, run_cluster_sweep_outcome, run_hetero_sweep_outcome, ClusterRow, HeteroEval,
-    Mode, SweepConfig, SweepEval, SweepPartitions, SweepRow,
+    pareto_front, run_cluster_sweep_outcome, run_hetero_sweep_outcome, ClusterRow,
+    ClusterScratch, HeteroEval, Mode, SweepConfig, SweepEval, SweepPartitions, SweepRow,
 };
 use crate::autodiff::TrainingGraph;
 use crate::eval::{CacheStats, CostCache, StructuralHasher};
@@ -85,6 +85,10 @@ pub fn search(
     let t1 = Instant::now();
     let mut cfg = cfg.clone();
     cfg.modes = vec![Mode::Training];
+    // the staged search prunes with its own roofline prefilter (stage 1)
+    // and reports *every* survivor row (a ranked list, not just a front),
+    // so the engine's bound-based front pruning must stay out of stage 2
+    cfg.prune = false;
     let parts = SweepPartitions::prepare(fwd, train, &cfg);
     let survivor_points: Vec<DesignPoint> = survivors.iter().map(|&i| points[i]).collect();
     let eval = SweepEval { fwd, train, parts: &parts, cfg: &cfg };
@@ -139,6 +143,11 @@ pub struct ClusterSearchOutcome {
     /// Points replayed from a resumed `cfg.run_dir` journal instead of
     /// re-evaluated (0 without `--resume`).
     pub resumed: usize,
+    /// Points skipped by bound-based front pruning (`cfg.prune`): their
+    /// roofline lower bound was already dominated by evaluated rows, so
+    /// they are absent from `rows` — and provably absent from the
+    /// rank-0 `front`, which is bit-identical with pruning on or off.
+    pub skipped: usize,
 }
 
 /// Enumerate and evaluate a [`ClusterSpace`] for one training workload
@@ -168,6 +177,7 @@ pub fn cluster_search(
         cache: out.cache,
         failures: out.failures,
         resumed: out.resumed,
+        skipped: out.skipped.len(),
     }
 }
 
@@ -200,6 +210,7 @@ pub fn hetero_search(
         cache: out.cache,
         failures: out.failures,
         resumed: out.resumed,
+        skipped: out.skipped.len(),
     }
 }
 
@@ -224,9 +235,14 @@ pub struct GaClusterOutcome {
     /// GA counters: genomes evaluated vs memo hits, generations
     /// completed, offspring repair rate.
     pub stats: GaStats,
-    /// Deployment points the search visits end to end: the fallback
-    /// backbone plus the GA's fresh genome evaluations.
+    /// Deployment points the search actually evaluates end to end: the
+    /// fallback backbone (minus any bound-pruned points) plus the GA's
+    /// fresh genome evaluations.
     pub evaluated: usize,
+    /// Backbone points skipped by bound-based front pruning
+    /// (`cfg.prune`): dominated before evaluation, so absent from the
+    /// ranking — which is bit-identical with pruning on or off.
+    pub skipped: usize,
     /// Exact size of the full exhaustive enumeration this search avoids
     /// ([`ClusterSpace::count_hetero`]) — the denominator of the ≤10%
     /// acceptance bar.
@@ -358,10 +374,26 @@ pub fn ga_cluster_search(
         None
     };
     let heval = HeteroEval { hc, full_batch, builder, mapping: cfg.mapping };
+    // Incremental GA evaluation (ROADMAP item 5): genome mutations touch
+    // one factorization knob or one stage placement, so most of a
+    // mutant's stage schedules are already in a sibling's scratch memos
+    // (training graphs, latency-balanced cuts, per-stage StageEval rows —
+    // see `parallelism::StageCutsMemo`). Recycling scratches through a
+    // pool instead of building a fresh one per genome turns each
+    // re-evaluation into "re-cost only the changed stages". Memos are
+    // pure-function caches, so a warm scratch is bit-identical to a cold
+    // one — pinned per generation by `tests/front_equivalence.rs`.
+    let scratch_pool: std::sync::Mutex<Vec<ClusterScratch>> = std::sync::Mutex::new(Vec::new());
     let eval = |g: &DeploymentGenome| {
         let p = ClusterSpace::genome_to_hetero(g);
-        let mut scratch = heval.scratch();
-        heval.evaluate(0, &p, ga_cache.as_deref(), &mut scratch)[0].objectives().to_vec()
+        let mut scratch =
+            scratch_pool.lock().ok().and_then(|mut v| v.pop()).unwrap_or_default();
+        let objs =
+            heval.evaluate(0, &p, ga_cache.as_deref(), &mut scratch)[0].objectives().to_vec();
+        if let Ok(mut v) = scratch_pool.lock() {
+            v.push(scratch);
+        }
+        objs
     };
     let problem = DeploymentProblem { hc, microbatches: microbatches.to_vec() };
     let (ga_front, stats, ga_resumed) = match &cfg.run_dir {
@@ -424,7 +456,10 @@ pub fn ga_cluster_search(
     let mut union_objs = fb_objs;
     union_objs.extend(extra.iter().map(|(_, o)| o.clone()));
     let front_idx = pareto_rank0(&union_objs);
-    let mut scratch = heval.scratch();
+    // re-derive full rows with a warm scratch from the GA pool: the front
+    // genomes were all costed during the run, so this is pure memo replay
+    let mut scratch =
+        scratch_pool.lock().ok().and_then(|mut v| v.pop()).unwrap_or_default();
     let mut rows = Vec::with_capacity(front_idx.len());
     for &i in &front_idx {
         if i < out.rows.len() {
@@ -447,7 +482,8 @@ pub fn ga_cluster_search(
         rows,
         fallback_front,
         stats,
-        evaluated: points.len() + stats.evaluated,
+        evaluated: points.len() - out.skipped.len() + stats.evaluated,
+        skipped: out.skipped.len(),
         enumerated: ClusterSpace::count_hetero(hc, microbatches),
         secs: t0.elapsed().as_secs_f64(),
         cache: out.cache,

@@ -24,10 +24,10 @@ use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
 use crate::parallelism::{
-    model_strategy_hetero_memo, model_strategy_memo, HeteroCluster, HeteroPoint, LinkTier,
-    StageCutsMemo,
+    model_strategy_bound, model_strategy_hetero_bound, model_strategy_hetero_memo,
+    model_strategy_memo, HeteroCluster, HeteroPoint, LinkTier, StageCutsMemo,
 };
-use crate::scheduler::{schedule_with_cache, Partition};
+use crate::scheduler::{schedule_lower_bound, schedule_with_cache, Partition};
 use crate::workload::graph::Graph;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,6 +115,16 @@ pub struct SweepConfig {
     /// persistence. See [`SharedCache`]. Ignored when `use_cache` is
     /// off.
     pub shared_cache: Option<SharedCache>,
+    /// Bound-based front pruning (ROADMAP item 5): skip design points
+    /// whose admissible lower bound ([`Evaluate::lower_bound`]) is
+    /// Pareto-dominated by an already-evaluated row. `false` (the
+    /// library default) enumerates the whole space — the figure and CSV
+    /// entry points want every row; the CLI commands and the
+    /// `monet serve` daemon default it **on** (`--no-prune` is the
+    /// escape hatch) because only dominated rows are ever elided: the
+    /// rank-0 Pareto front is bit-identical either way, pinned by
+    /// `tests/front_equivalence.rs`.
+    pub prune: bool,
 }
 
 impl Default for SweepConfig {
@@ -131,6 +141,7 @@ impl Default for SweepConfig {
             run_dir: None,
             resume: false,
             shared_cache: None,
+            prune: false,
         }
     }
 }
@@ -149,6 +160,7 @@ impl SweepConfig {
             run_dir: self.run_dir.clone(),
             resume: self.resume,
             shared_cache: self.shared_cache.clone(),
+            prune: self.prune,
         }
     }
 }
@@ -247,6 +259,18 @@ pub struct SweepEval<'a> {
     pub cfg: &'a SweepConfig,
 }
 
+/// One-hot mode prefix of the sweep family's pruning geometry
+/// (`[inference, training]`). Rows of different modes must never
+/// dominate each other — the per-mode Pareto fronts are independent —
+/// and one-hot components make cross-mode vectors incomparable while
+/// same-mode prefixes tie exactly.
+fn mode_tag(mode: Mode) -> [f64; 2] {
+    match mode {
+        Mode::Inference => [1.0, 0.0],
+        Mode::Training => [0.0, 1.0],
+    }
+}
+
 impl Evaluate for SweepEval<'_> {
     type Point = DesignPoint;
     type Row = SweepRow;
@@ -262,6 +286,41 @@ impl Evaluate for SweepEval<'_> {
         _scratch: &mut (),
     ) -> Vec<SweepRow> {
         evaluate_point_cached(index, point, self.fwd, self.train, self.parts, self.cfg, cache)
+    }
+
+    /// One admissible bound per configured mode, in the geometry
+    /// `[mode one-hot ×2, latency_cycles, energy_pj]`: the MAC/bandwidth
+    /// roofline of [`schedule_lower_bound`] never exceeds the scheduled
+    /// latency or energy of any fusion/mapping choice (the admissibility
+    /// proof lives on that function), and the one-hot prefix keeps
+    /// dominance within a mode.
+    fn lower_bound(
+        &self,
+        _index: usize,
+        point: &DesignPoint,
+        _scratch: &mut (),
+    ) -> Option<Vec<Vec<f64>>> {
+        let accel = point.build();
+        Some(
+            self.cfg
+                .modes
+                .iter()
+                .map(|&mode| {
+                    let g = match mode {
+                        Mode::Inference => self.fwd,
+                        Mode::Training => self.train,
+                    };
+                    let b = schedule_lower_bound(g, &accel, &self.cfg.mapping);
+                    let [mi, mt] = mode_tag(mode);
+                    vec![mi, mt, b.latency_cycles, b.energy_pj]
+                })
+                .collect(),
+        )
+    }
+
+    fn row_objectives(&self, row: &SweepRow) -> Option<Vec<f64>> {
+        let [mi, mt] = mode_tag(row.mode);
+        Some(vec![mi, mt, row.latency_cycles, row.energy_pj])
     }
 }
 
@@ -470,6 +529,41 @@ impl Evaluate for ClusterEval<'_> {
             comm_bytes: r.comm_bytes,
         }]
     }
+
+    /// The deployment-model roofline ([`model_strategy_bound`]) in the
+    /// four-objective cluster geometry: latency/energy are admissible
+    /// lower bounds, memory and device count are exact — so a faster
+    /// tier twin can prune its slower sibling. Bounds never touch the
+    /// cost cache (`None`): pruning must not change what gets cached
+    /// for surviving points.
+    fn lower_bound(
+        &self,
+        _index: usize,
+        p: &ClusterPoint,
+        scratch: &mut ClusterScratch,
+    ) -> Option<Vec<Vec<f64>>> {
+        let local_builder = scratch.graph_builder(self.builder);
+        let r = model_strategy_bound(
+            p.strategy(),
+            self.full_batch,
+            &local_builder,
+            self.accel,
+            &self.mapping,
+            &p.cluster(),
+            None,
+            Some(&scratch.cuts),
+        );
+        Some(vec![vec![
+            r.latency_cycles,
+            r.energy_pj,
+            r.per_device_mem_bytes as f64,
+            r.devices as f64,
+        ]])
+    }
+
+    fn row_objectives(&self, row: &ClusterRow) -> Option<Vec<f64>> {
+        Some(row.objectives().to_vec())
+    }
 }
 
 /// Evaluate every [`ClusterPoint`] over the engine's worker pool,
@@ -561,6 +655,37 @@ impl Evaluate for HeteroEval<'_> {
             per_device_mem_bytes: r.per_device_mem_bytes,
             comm_bytes: r.comm_bytes,
         }]
+    }
+
+    /// Placement-aware sibling of [`ClusterEval::lower_bound`]
+    /// ([`model_strategy_hetero_bound`]): admissible latency/energy,
+    /// exact memory and device count, no cache traffic.
+    fn lower_bound(
+        &self,
+        _index: usize,
+        p: &HeteroPoint,
+        scratch: &mut ClusterScratch,
+    ) -> Option<Vec<Vec<f64>>> {
+        let local_builder = scratch.graph_builder(self.builder);
+        let r = model_strategy_hetero_bound(
+            p,
+            self.full_batch,
+            &local_builder,
+            &self.mapping,
+            self.hc,
+            None,
+            Some(&scratch.cuts),
+        );
+        Some(vec![vec![
+            r.latency_cycles,
+            r.energy_pj,
+            r.per_device_mem_bytes as f64,
+            r.devices as f64,
+        ]])
+    }
+
+    fn row_objectives(&self, row: &ClusterRow) -> Option<Vec<f64>> {
+        Some(row.objectives().to_vec())
     }
 }
 

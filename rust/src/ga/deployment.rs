@@ -10,7 +10,11 @@
 //!   gang axis, grow/shrink the pipeline by one stage, re-draw the
 //!   microbatch count, reassign one stage's class), so consecutive
 //!   genomes share almost all of their fused-group structure and the
-//!   warm `CostCache`/`StageCutsMemo` keep re-evaluation cheap;
+//!   warm `CostCache`/`StageCutsMemo` keep re-evaluation cheap —
+//!   `dse::search::ga_cluster_search` exploits this by recycling worker
+//!   scratches (graph + cuts + per-stage `StageEval` memos) across
+//!   genomes and generations, so a one-move mutant re-costs only the
+//!   stage schedules it actually changed;
 //! * **crossover** swaps whole axes between parents (the pipeline depth
 //!   and its placement travel together);
 //! * **repair** deterministically restores feasibility against the

@@ -449,6 +449,13 @@ pub fn nsga2_resumable(
 /// resume/worker-count determinism contracts, checkpoint cadence) holds
 /// verbatim here for any problem whose operators are deterministic
 /// functions of `(genome, rng)` and whose repair consumes no RNG.
+///
+/// "Pure" does not mean stateless: `eval` may keep interior-mutable memo
+/// caches of pure sub-computations (the deployment GA recycles
+/// `ClusterScratch` stage memos across genomes so a mutant re-costs only
+/// its changed stages). The contract is on *results* — the objective
+/// vector must be bit-identical whether the caches are cold or warm, for
+/// any evaluation order.
 pub fn nsga2_problem<P: GaProblem>(
     problem: &P,
     cfg: &GaConfig<P::Genome>,

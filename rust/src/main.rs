@@ -96,6 +96,16 @@ OPTIONS
   --config NAME   gpt2 config (train; default tiny)
   --artifacts DIR artifacts directory (default artifacts)
   --out DIR       results directory (default results)
+  --no-prune      disable bound-based front pruning for the cluster and
+                  ga-cluster commands (pruning is on by default there):
+                  with pruning, design points whose roofline lower bound
+                  is already Pareto-dominated by evaluated rows are
+                  skipped — the 4-objective rank-0 front is bit-identical
+                  either way, but dominated diagnostic rows (per-tier
+                  latency optima, full-enumeration CSV exports) may be
+                  thinned. The figure commands (fig5/all) and search
+                  always enumerate every row; serve/query requests carry
+                  their own \"prune\" key (default true)
   --no-cache      disable the shared group-cost memo for the sweep commands
                   (fig1/fig5/fig9/search/cluster/ga-cluster/all) — A/B
                   timing; results are bit-identical with or without it
@@ -161,6 +171,7 @@ struct Args {
     artifacts: PathBuf,
     out: PathBuf,
     no_cache: bool,
+    no_prune: bool,
     cache_dir: Option<PathBuf>,
     cache_cap: usize,
     run_dir: Option<PathBuf>,
@@ -187,6 +198,7 @@ fn parse_args() -> Args {
         artifacts: "artifacts".into(),
         out: "results".into(),
         no_cache: false,
+        no_prune: false,
         cache_dir: None,
         cache_cap: 0,
         run_dir: None,
@@ -217,6 +229,7 @@ fn parse_args() -> Args {
             "--artifacts" => args.artifacts = val().into(),
             "--out" => args.out = val().into(),
             "--no-cache" => args.no_cache = true,
+            "--no-prune" => args.no_prune = true,
             "--cache-dir" => args.cache_dir = Some(val().into()),
             "--cache-cap" => args.cache_cap = val().parse().unwrap_or_else(|_| usage()),
             "--run-dir" => args.run_dir = Some(val().into()),
@@ -487,6 +500,7 @@ fn cmd_cluster_hetero(args: &Args, spec: &str) -> Result<()> {
         cache_cap: args.cache_cap,
         run_dir: run_subdir(args, &format!("cluster-hetero/{series}")),
         resume: args.resume,
+        prune: !args.no_prune,
         ..Default::default()
     };
     // the uniform extremes the mixed front is measured against: latency vs
@@ -524,6 +538,14 @@ fn cmd_cluster_hetero(args: &Args, spec: &str) -> Result<()> {
             out.rows.len(),
             out.secs
         );
+        if out.skipped > 0 {
+            println!(
+                "bound pruning: {} of {} points skipped ({:.1}%) — front unchanged (--no-prune for every row)",
+                out.skipped,
+                out.n_points,
+                out.skipped as f64 / out.n_points.max(1) as f64 * 100.0
+            );
+        }
         print_cache_stats("cluster", &out.cache);
         report_run_health(&format!("cluster [{name}]"), out.resumed, &out.failures)?;
         let facts = front_factorizations(&out);
@@ -616,6 +638,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         cache_cap: args.cache_cap,
         run_dir: run_subdir(args, &format!("cluster/{series}")),
         resume: args.resume,
+        prune: !args.no_prune,
         ..Default::default()
     };
     for name in wanted {
@@ -639,6 +662,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             out.rows.len(),
             out.secs
         );
+        if out.skipped > 0 {
+            println!(
+                "bound pruning: {} of {} points skipped ({:.1}%) — front unchanged (--no-prune for every row)",
+                out.skipped,
+                out.n_points,
+                out.skipped as f64 / out.n_points.max(1) as f64 * 100.0
+            );
+        }
         print_cache_stats("cluster", &out.cache);
         report_run_health(&format!("cluster [{name}]"), out.resumed, &out.failures)?;
         let facts = front_factorizations(&out);
@@ -719,6 +750,7 @@ fn cmd_ga_cluster(args: &Args) -> Result<()> {
             cache_cap: args.cache_cap,
             run_dir: run_subdir(args, &format!("ga-cluster/{name}")),
             resume: args.resume,
+            prune: !args.no_prune,
             ..Default::default()
         };
         eprintln!(
@@ -745,6 +777,12 @@ fn cmd_ga_cluster(args: &Args) -> Result<()> {
             out.evaluated as f64 / out.enumerated.max(1) as f64 * 100.0,
             out.secs
         );
+        if out.skipped > 0 {
+            println!(
+                "bound pruning: {} backbone point(s) skipped — ranking unchanged (--no-prune to evaluate them)",
+                out.skipped
+            );
+        }
         println!(
             "GA: {} generation(s), {} offspring produced, {} evaluated, {} memo hits, {} repaired ({:.1}% repair rate){}",
             out.stats.generations,

@@ -50,8 +50,8 @@ use crate::hardware::presets::EdgeTpuParams;
 use crate::mapping::MappingConfig;
 
 use super::{
-    allreduce_cycles, fused_schedule_cached, stage_mem_parts, stage_subgraph, tp_reduce_stats,
-    Cluster, LinkTier, MultiDeviceResult, Strategy,
+    allreduce_cycles, stage_mem_parts, stage_subgraph, tp_reduce_stats, Cluster, LinkTier,
+    MultiDeviceResult, Strategy,
 };
 
 /// One device class of a heterogeneous cluster: an accelerator
@@ -337,20 +337,23 @@ pub fn model_strategy_hetero_memo(
     let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
 
     // one record per used (non-empty) stage, in stage order:
-    // (class, schedule, tp reduce bytes, tp collectives, stage states,
-    //  in-flight activation bytes, outgoing boundary bytes)
-    type StageInfo = (usize, crate::scheduler::ScheduleResult, f64, usize, u64, u64, f64);
+    // (class, stage eval [schedule + reduce footprint + boundary bytes],
+    //  stage states, in-flight activation bytes). The stage eval goes
+    //  through the per-worker memo: a `DeploymentGenome` mutation leaves
+    //  most stages' (microbatch, class, node set) keys untouched, so only
+    //  the changed stages are re-scheduled (incremental GA evaluation).
+    type StageInfo = (usize, super::StageEval, u64, u64);
     let mut infos: Vec<StageInfo> = vec![];
     if pp == 1 {
         // single stage: schedule the replica graph directly (no induced-
         // subgraph rebuild), mirroring the homogeneous arm so the
         // degenerate corners replay it bit for bit
         let c = point.placement[0];
-        let r = fused_schedule_cached(&tg.graph, &hc.classes[c].accel, mapping, cache);
-        let (reduce_bytes, n_collectives) =
-            tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+        let se = super::stage_eval_memo(
+            &tg.graph, None, &hc.classes[c].accel, mapping, cache, micro_batch, c, cuts,
+        );
         let states = tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
-        infos.push((c, r, reduce_bytes, n_collectives, states, tg.saved_activation_bytes(), 0.0));
+        infos.push((c, se, states, tg.saved_activation_bytes()));
     } else {
         let stage_accels: Vec<&Accelerator> =
             point.placement.iter().map(|&c| &hc.classes[c].accel).collect();
@@ -368,18 +371,22 @@ pub fn model_strategy_hetero_memo(
                 continue;
             }
             let c = point.placement[s];
-            let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
-            let r = fused_schedule_cached(&sub, &hc.classes[c].accel, mapping, cache);
-            let (reduce_bytes, n_collectives) = tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+            let se = super::stage_eval_memo(
+                &tg.graph,
+                Some(stage),
+                &hc.classes[c].accel,
+                mapping,
+                cache,
+                micro_batch,
+                c,
+                cuts,
+            );
             let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
             infos.push((
                 c,
-                r,
-                reduce_bytes,
-                n_collectives,
+                se,
                 stage_params * states_mult,
                 stage_acts * (pp.min(m) as u64),
-                stage_boundary,
             ));
         }
     }
@@ -398,31 +405,29 @@ pub fn model_strategy_hetero_memo(
     let mut stage_energy_sum = 0f64;
     let mut per_dev_mem = 0u64;
 
-    for (i, (c, r, reduce_bytes, n_collectives, stage_states, stage_acts, boundary)) in
-        infos.iter().enumerate()
-    {
+    for (i, (c, se, stage_states, stage_acts)) in infos.iter().enumerate() {
         let c = *c;
         // TP inside a stage runs on the stage class's own fabric
         let tp_link = hc.link(c, c, tp);
         let tp_lat = if tp > 1 {
-            r.latency_cycles / tp as f64
-                + allreduce_cycles(*reduce_bytes, &tp_link)
-                + *n_collectives as f64 * tp_link.hop_cycles
+            se.latency_cycles / tp as f64
+                + allreduce_cycles(se.reduce_bytes, &tp_link)
+                + se.n_collectives as f64 * tp_link.hop_cycles
         } else {
-            r.latency_cycles
+            se.latency_cycles
         };
         stage_time = stage_time.max(tp_lat);
-        stage_energy_sum += r.energy_pj * hc.classes[c].energy_scale;
+        stage_energy_sum += se.energy_pj * hc.classes[c].energy_scale;
         if tp > 1 {
             *tp_bytes.entry((c, c)).or_insert(0.0) +=
-                reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
+                se.reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
         }
         per_dev_mem = per_dev_mem.max(stage_states / tp as u64 + stage_acts);
         // a stage's boundary tensors cross to the next used stage's class
-        if i + 1 < used_n && *boundary > 0.0 {
+        if i + 1 < used_n && se.boundary_bytes > 0.0 {
             let next_c = infos[i + 1].0;
             let key = (c.min(next_c), c.max(next_c));
-            *boundary_bytes.entry(key).or_insert(0.0) += *boundary;
+            *boundary_bytes.entry(key).or_insert(0.0) += se.boundary_bytes;
         }
     }
     for i in 1..used_n {
@@ -468,6 +473,197 @@ pub fn model_strategy_hetero_memo(
     let latency = stage_time * (m + pp - 1) as f64 + boundary_lat + hop_lat + dp_sync;
 
     // total comm bytes + comm energy, per link-class pair
+    let mut keys: BTreeSet<(usize, usize)> = BTreeSet::new();
+    keys.extend(tp_bytes.keys().copied());
+    keys.extend(boundary_bytes.keys().copied());
+    if let Some(k) = dp_worst_key {
+        keys.insert(k);
+    }
+    let mut comm_total = 0f64;
+    let mut comm_energy = 0f64;
+    for &(a, b) in &keys {
+        let t = tp_bytes.get(&(a, b)).copied().unwrap_or(0.0);
+        let bd = boundary_bytes.get(&(a, b)).copied().unwrap_or(0.0);
+        let mut k_comm = (t * m as f64 + bd * m as f64) * dp as f64;
+        if dp_worst_key == Some((a, b)) {
+            k_comm += dp_comm;
+        }
+        comm_total += k_comm;
+        comm_energy += k_comm * hc.link(a, b, 2).link_energy_pj;
+    }
+
+    MultiDeviceResult {
+        strategy: Strategy::Hybrid { dp, pp_stages: pp, microbatches: m, tp },
+        devices,
+        latency_cycles: latency,
+        energy_pj: (stage_energy_sum * m as f64) * dp as f64 + comm_energy,
+        per_device_mem_bytes: per_dev_mem,
+        comm_bytes: comm_total,
+    }
+}
+
+/// Admissible lower bound of [`model_strategy_hetero_memo`] — the
+/// heterogeneous sibling of [`super::model_strategy_bound`], with the
+/// same contract: every stage's *scheduled* latency/energy is replaced by
+/// its roofline [`crate::scheduler::ScheduleBound`] (energy still scaled
+/// by the class's [`DeviceClass::energy_scale`]), while the
+/// latency-balanced split (shared through the [`super::StageCutsMemo`]),
+/// per-pair boundary buckets, collective launches, the worst-ring dp sync
+/// and the memory accounting mirror evaluation exactly. Guarantee:
+/// `latency_cycles`/`energy_pj`/`comm_bytes` are `<=`, and
+/// `per_device_mem_bytes`/`devices` `==`, the corresponding
+/// [`model_strategy_hetero_memo`] fields for the same point.
+pub fn model_strategy_hetero_bound(
+    point: &HeteroPoint,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    mapping: &MappingConfig,
+    hc: &HeteroCluster,
+    cache: Option<&CostCache>,
+    cuts: Option<&super::StageCutsMemo>,
+) -> MultiDeviceResult {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let dp = point.dp.max(1);
+    let pp = point.pp.max(1);
+    let m = point.microbatches.max(1);
+    let tp = point.tp.max(1);
+    assert_eq!(
+        point.placement.len(),
+        pp,
+        "placement must assign every pipeline stage a device class"
+    );
+    let devices = dp * pp * tp;
+
+    let replica_batch = full_batch.div_ceil(dp);
+    let micro_batch = replica_batch.div_ceil(m).max(1);
+    let tg = tg_builder(micro_batch);
+    let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
+
+    // (class, latency lb, energy lb, reduce bytes, collectives, states,
+    //  in-flight acts, boundary bytes) per used stage — the bound twin of
+    //  the memo path's StageInfo
+    type StageInfo = (usize, f64, f64, f64, usize, u64, u64, f64);
+    let mut infos: Vec<StageInfo> = vec![];
+    if pp == 1 {
+        let c = point.placement[0];
+        let b = crate::scheduler::schedule_lower_bound(&tg.graph, &hc.classes[c].accel, mapping);
+        let (reduce_bytes, n_collectives) =
+            tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+        let states = tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
+        infos.push((
+            c,
+            b.latency_cycles,
+            b.energy_pj,
+            reduce_bytes,
+            n_collectives,
+            states,
+            tg.saved_activation_bytes(),
+            0.0,
+        ));
+    } else {
+        let stage_accels: Vec<&Accelerator> =
+            point.placement.iter().map(|&c| &hc.classes[c].accel).collect();
+        let stages = super::balanced_stages(
+            &tg.graph,
+            &stage_accels,
+            mapping,
+            cache,
+            micro_batch,
+            point.placement.clone(),
+            cuts,
+        );
+        for (s, stage) in stages.iter().enumerate() {
+            if stage.is_empty() {
+                continue;
+            }
+            let c = point.placement[s];
+            let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
+            let b = crate::scheduler::schedule_lower_bound(&sub, &hc.classes[c].accel, mapping);
+            let (reduce_bytes, n_collectives) = tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+            let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
+            infos.push((
+                c,
+                b.latency_cycles,
+                b.energy_pj,
+                reduce_bytes,
+                n_collectives,
+                stage_params * states_mult,
+                stage_acts * (pp.min(m) as u64),
+                stage_boundary,
+            ));
+        }
+    }
+    let used_n = infos.len();
+
+    let mut tp_bytes: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut boundary_bytes: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut boundary_hops: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+
+    let mut stage_time = 0f64;
+    let mut stage_energy_sum = 0f64;
+    let mut per_dev_mem = 0u64;
+
+    for (i, (c, lat_lb, energy_lb, reduce_bytes, n_collectives, stage_states, stage_acts, boundary)) in
+        infos.iter().enumerate()
+    {
+        let c = *c;
+        let tp_link = hc.link(c, c, tp);
+        let tp_lat = if tp > 1 {
+            lat_lb / tp as f64
+                + allreduce_cycles(*reduce_bytes, &tp_link)
+                + *n_collectives as f64 * tp_link.hop_cycles
+        } else {
+            *lat_lb
+        };
+        stage_time = stage_time.max(tp_lat);
+        stage_energy_sum += energy_lb * hc.classes[c].energy_scale;
+        if tp > 1 {
+            *tp_bytes.entry((c, c)).or_insert(0.0) +=
+                reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
+        }
+        per_dev_mem = per_dev_mem.max(stage_states / tp as u64 + stage_acts);
+        if i + 1 < used_n && *boundary > 0.0 {
+            let next_c = infos[i + 1].0;
+            let key = (c.min(next_c), c.max(next_c));
+            *boundary_bytes.entry(key).or_insert(0.0) += *boundary;
+        }
+    }
+    for i in 1..used_n {
+        let (a, b) = (infos[i - 1].0, infos[i].0);
+        *boundary_hops.entry((a.min(b), a.max(b))).or_insert(0) += 1;
+    }
+
+    let mut dp_sync = 0f64;
+    let mut dp_worst_key: Option<(usize, usize)> = None;
+    if dp > 1 {
+        for info in &infos {
+            let c = info.0;
+            let link = hc.link(c, c, dp);
+            let t = link.hop_cycles
+                + allreduce_cycles(tg.grad_bytes() as f64 / (pp * tp) as f64, &link);
+            if t > dp_sync || dp_worst_key.is_none() {
+                dp_sync = t;
+                dp_worst_key = Some((c, c));
+            }
+        }
+    }
+    let dp_comm = if dp > 1 {
+        2.0 * (dp as f64 - 1.0) / dp as f64 * tg.grad_bytes() as f64 * dp as f64
+    } else {
+        0.0
+    };
+
+    let mut boundary_lat = 0f64;
+    for (&(a, b), &bytes) in &boundary_bytes {
+        boundary_lat += bytes / hc.link(a, b, 2).link_bw.max(1.0);
+    }
+    let mut hop_lat = 0f64;
+    for (&(a, b), &cnt) in &boundary_hops {
+        hop_lat += cnt as f64 * hc.link(a, b, 2).hop_cycles;
+    }
+    let latency = stage_time * (m + pp - 1) as f64 + boundary_lat + hop_lat + dp_sync;
+
     let mut keys: BTreeSet<(usize, usize)> = BTreeSet::new();
     keys.extend(tp_bytes.keys().copied());
     keys.extend(boundary_bytes.keys().copied());

@@ -43,12 +43,13 @@ use crate::eval::CostCache;
 use crate::fusion::{fuse_greedy, FusionConstraints};
 use crate::hardware::accelerator::Accelerator;
 use crate::mapping::MappingConfig;
-use crate::scheduler::{schedule_with_cache, ScheduleResult};
+use crate::scheduler::{schedule_lower_bound, schedule_with_cache, ScheduleBound, ScheduleResult};
 use crate::workload::graph::Graph;
 use crate::workload::op::Phase;
 
 pub use hetero::{
-    model_strategy_hetero, model_strategy_hetero_memo, DeviceClass, HeteroCluster, HeteroPoint,
+    model_strategy_hetero, model_strategy_hetero_bound, model_strategy_hetero_memo, DeviceClass,
+    HeteroCluster, HeteroPoint,
 };
 
 /// The inter-device fabric (NVLink/PCIe/NoC-class, in cycle units of the
@@ -238,6 +239,32 @@ pub struct StageCutsMemo {
     stages: std::cell::RefCell<std::collections::HashMap<(usize, Vec<usize>), Vec<Vec<usize>>>>,
     hits: std::cell::Cell<usize>,
     misses: std::cell::Cell<usize>,
+    /// Per-stage *evaluation* memo (the incremental-GA seam, ROADMAP
+    /// item 5): key = (microbatch size, hosting class index, stage node
+    /// set — `None` for the whole-graph pp==1 path), value = the stage's
+    /// scheduled latency/energy + TP reduction footprint + outgoing
+    /// boundary bytes. A `DeploymentGenome` mutation moves one axis, so
+    /// most stages of the mutant share (microbatch, class, node set) with
+    /// already-evaluated genomes and skip their `fused_schedule_cached`
+    /// walk entirely — only the changed stages are re-costed. Same
+    /// validity scope and purity argument as the cuts memo above.
+    evals: std::cell::RefCell<
+        std::collections::HashMap<(usize, usize, Option<Vec<usize>>), StageEval>,
+    >,
+    eval_hits: std::cell::Cell<usize>,
+    eval_misses: std::cell::Cell<usize>,
+}
+
+/// One stage's memoized evaluation: pure function of (microbatch graph,
+/// stage node set, hosting accelerator) — deliberately excludes anything
+/// that varies per deployment point (tp width, in-flight multipliers).
+#[derive(Clone)]
+pub(crate) struct StageEval {
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+    pub reduce_bytes: f64,
+    pub n_collectives: usize,
+    pub boundary_bytes: f64,
 }
 
 impl StageCutsMemo {
@@ -255,6 +282,17 @@ impl StageCutsMemo {
         self.misses.get()
     }
 
+    /// Stage-evaluation memo hits so far (stages re-used without
+    /// re-scheduling — the incremental-GA counter).
+    pub fn eval_hits(&self) -> usize {
+        self.eval_hits.get()
+    }
+
+    /// Stage-evaluation memo misses so far (stages actually scheduled).
+    pub fn eval_misses(&self) -> usize {
+        self.eval_misses.get()
+    }
+
     pub fn len(&self) -> usize {
         self.stages.borrow().len()
     }
@@ -262,6 +300,60 @@ impl StageCutsMemo {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// Schedule + reduction footprint of one stage (or, with `stage: None`,
+/// the whole graph) on `accel`, through the optional per-worker stage
+/// memo. A hit returns bit-identical numbers to a recompute (scheduler
+/// determinism + builder purity — the [`StageCutsMemo`] contract), so
+/// incremental and full evaluation cannot diverge.
+pub(crate) fn stage_eval_memo(
+    g: &Graph,
+    stage: Option<&[usize]>,
+    accel: &Accelerator,
+    mapping: &MappingConfig,
+    cache: Option<&CostCache>,
+    micro_batch: usize,
+    class_idx: usize,
+    memo: Option<&StageCutsMemo>,
+) -> StageEval {
+    let key = (micro_batch, class_idx, stage.map(|s| s.to_vec()));
+    if let Some(m) = memo {
+        if let Some(v) = m.evals.borrow().get(&key) {
+            m.eval_hits.set(m.eval_hits.get() + 1);
+            return v.clone();
+        }
+    }
+    let v = match stage {
+        None => {
+            let r = fused_schedule_cached(g, accel, mapping, cache);
+            let (reduce_bytes, n_collectives) = tp_reduce_stats(g.nodes.iter(), g.elem_bytes);
+            StageEval {
+                latency_cycles: r.latency_cycles,
+                energy_pj: r.energy_pj,
+                reduce_bytes,
+                n_collectives,
+                boundary_bytes: 0.0,
+            }
+        }
+        Some(stage) => {
+            let (sub, boundary_bytes) = stage_subgraph(g, stage);
+            let r = fused_schedule_cached(&sub, accel, mapping, cache);
+            let (reduce_bytes, n_collectives) = tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+            StageEval {
+                latency_cycles: r.latency_cycles,
+                energy_pj: r.energy_pj,
+                reduce_bytes,
+                n_collectives,
+                boundary_bytes,
+            }
+        }
+    };
+    if let Some(m) = memo {
+        m.eval_misses.set(m.eval_misses.get() + 1);
+        m.evals.borrow_mut().insert(key, v.clone());
+    }
+    v
 }
 
 /// [`split_stages_balanced`] behind the optional per-worker memo:
@@ -515,11 +607,12 @@ pub fn model_strategy_memo(
             let mut per_dev_mem = 0u64;
             let mut used_stages = 0usize;
             for stage in stages.iter().filter(|s| !s.is_empty()) {
-                let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
-                boundary_bytes += stage_boundary;
-                let r = fused_schedule_cached(&sub, accel, mapping, cache);
-                stage_time = stage_time.max(r.latency_cycles);
-                stage_energy_sum += r.energy_pj;
+                let se = stage_eval_memo(
+                    &tg.graph, Some(stage), accel, mapping, cache, micro_batch, 0, cuts,
+                );
+                boundary_bytes += se.boundary_bytes;
+                stage_time = stage_time.max(se.latency_cycles);
+                stage_energy_sum += se.energy_pj;
                 used_stages += 1;
                 // stage weights/states + in-flight microbatch activations
                 let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
@@ -590,26 +683,25 @@ pub fn model_strategy_memo(
             let mut tp_comm_bytes = 0f64; // per microbatch, summed over stages
             let mut used_stages = 0usize;
 
-            // one stage's contribution; `r` is its single-device schedule,
-            // `stage_states`/`stage_acts_inflight` its per-device memory
-            // before TP sharding
-            let mut eval_stage = |r: &ScheduleResult,
-                                  reduce_bytes: f64,
-                                  n_collectives: usize,
+            // one stage's contribution ([`StageEval`] is its single-device
+            // schedule + reduction footprint); `stage_states`/
+            // `stage_acts_inflight` its per-device memory before TP
+            // sharding
+            let mut eval_stage = |se: &StageEval,
                                   stage_states: u64,
                                   stage_acts_inflight: u64| {
                 let tp_lat = if tp > 1 {
-                    r.latency_cycles / tp as f64
-                        + allreduce_cycles(reduce_bytes, &tp_cluster)
-                        + n_collectives as f64 * cluster.hop_cycles
+                    se.latency_cycles / tp as f64
+                        + allreduce_cycles(se.reduce_bytes, &tp_cluster)
+                        + se.n_collectives as f64 * cluster.hop_cycles
                 } else {
-                    r.latency_cycles
+                    se.latency_cycles
                 };
                 stage_time = stage_time.max(tp_lat);
-                stage_energy_sum += r.energy_pj;
+                stage_energy_sum += se.energy_pj;
                 if tp > 1 {
                     tp_comm_bytes +=
-                        reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
+                        se.reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
                 }
                 per_dev_mem = per_dev_mem.max(stage_states / tp as u64 + stage_acts_inflight);
                 used_stages += 1;
@@ -619,28 +711,25 @@ pub fn model_strategy_memo(
                 // single stage: schedule the replica graph directly — no
                 // induced-subgraph rebuild, so `Hybrid{1,1,1,1}` replays
                 // the single-device `schedule()` bit for bit
-                let r = fused_schedule_cached(&tg.graph, accel, mapping, cache);
-                let (reduce_bytes, n_collectives) =
-                    tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+                let se = stage_eval_memo(
+                    &tg.graph, None, accel, mapping, cache, micro_batch, 0, cuts,
+                );
                 let states =
                     tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
-                eval_stage(&r, reduce_bytes, n_collectives, states, tg.saved_activation_bytes());
+                eval_stage(&se, states, tg.saved_activation_bytes());
             } else {
                 let stage_accels = vec![accel; pp];
                 let stages = balanced_stages(
                     &tg.graph, &stage_accels, mapping, cache, micro_batch, vec![0; pp], cuts,
                 );
                 for stage in stages.iter().filter(|s| !s.is_empty()) {
-                    let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
-                    boundary_bytes += stage_boundary;
-                    let r = fused_schedule_cached(&sub, accel, mapping, cache);
-                    let (reduce_bytes, n_collectives) =
-                        tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+                    let se = stage_eval_memo(
+                        &tg.graph, Some(stage), accel, mapping, cache, micro_batch, 0, cuts,
+                    );
+                    boundary_bytes += se.boundary_bytes;
                     let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
                     eval_stage(
-                        &r,
-                        reduce_bytes,
-                        n_collectives,
+                        &se,
                         stage_params * states_mult,
                         stage_acts * (pp.min(m) as u64),
                     );
@@ -687,6 +776,141 @@ pub fn model_strategy_memo(
                 comm_bytes: comm,
             }
         }
+    }
+}
+
+/// Admissible per-point lower bound of [`model_strategy_memo`] — the
+/// deployment-level mirror of [`schedule_lower_bound`], powering the DSE
+/// engine's bound-based pruning (`Evaluate::lower_bound`).
+///
+/// The `Hybrid` arithmetic is mirrored term by term, except each stage's
+/// *scheduled* latency/energy is replaced by its roofline
+/// [`ScheduleBound`]. Everything else — the latency-balanced stage split
+/// (derived through the same shared [`StageCutsMemo`], so bound and
+/// evaluation pay for it once), stage-boundary bytes, collective launch
+/// latencies, the dp gradient sync and the per-device memory accounting —
+/// is computed *exactly* as evaluation would. That tightness is what lets
+/// an incumbent row on a fast fabric dominate the bound of the same
+/// factorization on a slow one.
+///
+/// ## Admissibility contract
+///
+/// For every strategy (pure strategies are bounded through their
+/// degenerate `Hybrid` corners, bit-identical by the module's degeneracy
+/// contract): `latency_cycles`, `energy_pj` and `comm_bytes` are `<=`,
+/// and `per_device_mem_bytes`/`devices` are `==`, the corresponding
+/// [`model_strategy_memo`] fields for the same inputs.
+/// `tests/front_equivalence.rs` property-checks this against full
+/// evaluation on randomized spaces.
+#[allow(clippy::too_many_arguments)]
+pub fn model_strategy_bound(
+    strategy: Strategy,
+    full_batch: usize,
+    tg_builder: &dyn Fn(usize) -> TrainingGraph,
+    accel: &Accelerator,
+    mapping: &MappingConfig,
+    cluster: &Cluster,
+    cache: Option<&CostCache>,
+    cuts: Option<&StageCutsMemo>,
+) -> MultiDeviceResult {
+    let n = cluster.devices.max(1);
+    let (dp, pp, m, tp) = match strategy {
+        Strategy::DataParallel => (n, 1, 1, 1),
+        Strategy::Pipeline { microbatches } => (1, n, microbatches.max(1), 1),
+        Strategy::TensorParallel => (1, 1, 1, n),
+        Strategy::Hybrid { dp, pp_stages, microbatches, tp } => {
+            (dp.max(1), pp_stages.max(1), microbatches.max(1), tp.max(1))
+        }
+    };
+    let devices = dp * pp * tp;
+    let tp_cluster = Cluster { devices: tp, ..*cluster };
+    let dp_cluster = Cluster { devices: dp, ..*cluster };
+    let replica_batch = full_batch.div_ceil(dp);
+    let micro_batch = replica_batch.div_ceil(m).max(1);
+    let tg = tg_builder(micro_batch);
+    let states_mult = 1 + tg.optimizer.states_per_param() as u64 + 1;
+
+    let mut stage_time = 0f64;
+    let mut stage_energy_sum = 0f64;
+    let mut boundary_bytes = 0f64;
+    let mut per_dev_mem = 0u64;
+    let mut tp_comm_bytes = 0f64;
+    let mut used_stages = 0usize;
+
+    // mirror of `eval_stage` with the stage's schedule replaced by its
+    // roofline bound; all adders are the exact evaluation terms
+    let mut bound_stage = |b: &ScheduleBound,
+                           reduce_bytes: f64,
+                           n_collectives: usize,
+                           stage_states: u64,
+                           stage_acts_inflight: u64| {
+        let tp_lat = if tp > 1 {
+            b.latency_cycles / tp as f64
+                + allreduce_cycles(reduce_bytes, &tp_cluster)
+                + n_collectives as f64 * cluster.hop_cycles
+        } else {
+            b.latency_cycles
+        };
+        stage_time = stage_time.max(tp_lat);
+        stage_energy_sum += b.energy_pj;
+        if tp > 1 {
+            tp_comm_bytes += reduce_bytes * 2.0 * (tp as f64 - 1.0) / tp as f64 * tp as f64;
+        }
+        per_dev_mem = per_dev_mem.max(stage_states / tp as u64 + stage_acts_inflight);
+        used_stages += 1;
+    };
+
+    if pp == 1 {
+        let b = schedule_lower_bound(&tg.graph, accel, mapping);
+        let (reduce_bytes, n_collectives) =
+            tp_reduce_stats(tg.graph.nodes.iter(), tg.graph.elem_bytes);
+        let states = tg.param_bytes() + tg.grad_bytes() + tg.optimizer_state_bytes();
+        bound_stage(&b, reduce_bytes, n_collectives, states, tg.saved_activation_bytes());
+    } else {
+        let stage_accels = vec![accel; pp];
+        let stages = balanced_stages(
+            &tg.graph, &stage_accels, mapping, cache, micro_batch, vec![0; pp], cuts,
+        );
+        for stage in stages.iter().filter(|s| !s.is_empty()) {
+            let (sub, stage_boundary) = stage_subgraph(&tg.graph, stage);
+            boundary_bytes += stage_boundary;
+            let b = schedule_lower_bound(&sub, accel, mapping);
+            let (reduce_bytes, n_collectives) =
+                tp_reduce_stats(sub.nodes.iter(), sub.elem_bytes);
+            let (stage_params, stage_acts) = stage_mem_parts(&tg, stage);
+            bound_stage(
+                &b,
+                reduce_bytes,
+                n_collectives,
+                stage_params * states_mult,
+                stage_acts * (pp.min(m) as u64),
+            );
+        }
+    }
+
+    let dp_sync = if dp > 1 {
+        cluster.hop_cycles
+            + allreduce_cycles(tg.grad_bytes() as f64 / (pp * tp) as f64, &dp_cluster)
+    } else {
+        0.0
+    };
+    let dp_comm = if dp > 1 {
+        2.0 * (dp as f64 - 1.0) / dp as f64 * tg.grad_bytes() as f64 * dp as f64
+    } else {
+        0.0
+    };
+    let latency = stage_time * (m + pp - 1) as f64
+        + boundary_bytes / cluster.link_bw.max(1.0)
+        + used_stages.saturating_sub(1) as f64 * cluster.hop_cycles
+        + dp_sync;
+    let comm = (tp_comm_bytes * m as f64 + boundary_bytes * m as f64) * dp as f64 + dp_comm;
+    MultiDeviceResult {
+        strategy,
+        devices,
+        latency_cycles: latency,
+        energy_pj: (stage_energy_sum * m as f64) * dp as f64 + comm * cluster.link_energy_pj,
+        per_device_mem_bytes: per_dev_mem,
+        comm_bytes: comm,
     }
 }
 

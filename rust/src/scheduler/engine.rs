@@ -67,6 +67,106 @@ impl ScheduleResult {
     }
 }
 
+/// A cheap, **admissible** lower bound on what [`schedule`] /
+/// [`schedule_with_cache`] can report for `graph` on `accel` — the
+/// MAC/peak-bandwidth roofline the DSE engine's bound-based pruning rests
+/// on.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleBound {
+    pub latency_cycles: f64,
+    pub energy_pj: f64,
+}
+
+/// Admissible roofline lower bound of scheduling `graph` on `accel`.
+///
+/// ## Admissibility contract
+///
+/// For **every** partition (fused or singleton), core assignment and gang
+/// width the scheduler could pick, the returned `latency_cycles` /
+/// `energy_pj` are `<=` the corresponding fields of [`schedule`]'s
+/// result (same `graph`, `accel`, `cfg`). The bound is built only from
+/// terms the cost model charges unconditionally:
+///
+/// * every MAC of a conv/GEMM node costs at least
+///   `1 / max_over_(core, gang)(peak_macs · spatial_utilization)` busy
+///   cycles on whatever core hosts it (`node_cost`'s compute roofline —
+///   the fused elementwise rider never rewrites conv/GEMM cycles);
+/// * every node moves at least its weight + output bytes through some
+///   core's local SRAM (`onchip` in `node_cost` counts them regardless of
+///   placement), which also floors the rewritten elementwise-rider
+///   cycles;
+/// * aggregate busy time over `n` cores floors the makespan at
+///   `busy / n`, and the shared DRAM bus floors it at
+///   `weight_bytes / offchip_bw` (weights always stream off-chip);
+/// * energy counts only the unconditional MAC, register-file, local-SRAM
+///   and weight-stream DRAM terms, plus idle leakage over the latency
+///   bound itself.
+///
+/// Anything placement- or schedule-dependent (transfers, spills, input
+/// placement) is dropped, never estimated — looser, but provably below
+/// the truth. `tests/front_equivalence.rs` property-checks the contract
+/// against full evaluation on randomized spaces.
+pub fn schedule_lower_bound(
+    graph: &Graph,
+    accel: &Accelerator,
+    cfg: &MappingConfig,
+) -> ScheduleBound {
+    let n_cores = accel.cores.len().max(1);
+    let gang_cap = cfg.tensor_parallel.max(1);
+    // node_cost clamps every bandwidth denominator with .max(1.0); mirror
+    // that so the floor never exceeds the model's own arithmetic
+    let max_onchip_bw =
+        accel.cores.iter().map(|c| c.onchip_bw).fold(0.0, f64::max).max(1.0);
+    let max_peak = accel.cores.iter().map(|c| c.peak_macs()).max().unwrap_or(1).max(1);
+    let mut busy_sum = 0f64; // lower bound on total core-busy cycles
+    let mut busy_max = 0f64; // lower bound on any single node's elapsed time
+    let mut weight_bytes = 0f64;
+    let mut energy = 0f64;
+    for node in &graph.nodes {
+        let kind = &node.kind;
+        let macs = kind.macs() as f64;
+        let wb = (kind.weight_elems() * graph.elem_bytes) as f64;
+        let ob = (kind.out_elems() * graph.elem_bytes) as f64;
+        weight_bytes += wb;
+        // weights + outputs always pass the hosting core's local SRAM
+        let mem_busy = (wb + ob) / max_onchip_bw;
+        let busy = if kind.is_conv() || kind.is_gemm() {
+            // compute roofline: the cheapest (core, gang) the scheduler
+            // could possibly place this node on
+            let mut best = f64::INFINITY;
+            for core in &accel.cores {
+                for gang in 1..=gang_cap {
+                    let eff = (core.peak_macs() as f64
+                        * core.spatial_utilization(kind, gang))
+                    .max(1.0);
+                    best = best.min(macs / eff);
+                }
+            }
+            best.max(mem_busy)
+        } else {
+            // non-MAC nodes may be rewritten to the fused elementwise
+            // rider (pure local-bandwidth cost), so only the SRAM floor
+            // is unconditional
+            mem_busy
+        };
+        busy_sum += busy;
+        busy_max = busy_max.max(busy / gang_cap as f64);
+        energy += macs * energy::E_MAC_PJ
+            + 3.0 * macs * graph.elem_bytes as f64 / (max_peak as f64).sqrt().max(1.0)
+                * energy::E_RF_PJ_PER_BYTE
+            + (wb + ob) * energy::E_LOCAL_PJ_PER_BYTE
+            + wb * energy::E_DRAM_PJ_PER_BYTE;
+    }
+    let latency = (busy_sum / n_cores as f64)
+        .max(busy_max)
+        .max(weight_bytes / accel.offchip_bw.max(1.0));
+    ScheduleBound {
+        latency_cycles: latency,
+        energy_pj: energy
+            + energy::E_IDLE_PJ_PER_CYCLE * latency * accel.cores.len() as f64,
+    }
+}
+
 /// Identical-core classes (for gang scheduling): cores with equal dataflow
 /// and memory are interchangeable.
 fn core_classes(accel: &Accelerator) -> Vec<Vec<usize>> {

@@ -17,5 +17,8 @@
 pub mod engine;
 pub mod partition;
 
-pub use engine::{phase_index, schedule, schedule_with_cache, GroupRecord, ScheduleResult};
+pub use engine::{
+    phase_index, schedule, schedule_lower_bound, schedule_with_cache, GroupRecord, ScheduleBound,
+    ScheduleResult,
+};
 pub use partition::Partition;

@@ -88,12 +88,17 @@ impl Workload {
 }
 
 /// A validated optimization query — one variant per design-space family.
+/// Every variant carries `prune` (request key `"prune"`, default `true`):
+/// bound-based front pruning skips design points whose roofline lower
+/// bound is already dominated. The reported front is bit-identical with
+/// it on or off — it is part of the query (not daemon state) so the
+/// pure-function-of-the-query response contract holds either way.
 #[derive(Debug, Clone)]
 pub enum Query {
     /// Single-device accelerator sweep (the fig1 family), training mode.
-    Sweep { stride: usize },
+    Sweep { stride: usize, prune: bool },
     /// Homogeneous cluster deployments (the `cluster` command family).
-    Cluster { devices: usize, batch: usize, workload: Workload },
+    Cluster { devices: usize, batch: usize, workload: Workload, prune: bool },
     /// Heterogeneous stage placements (`cluster --device-classes`).
     Hetero {
         pool: HeteroCluster,
@@ -101,6 +106,7 @@ pub enum Query {
         microbatches: Vec<usize>,
         batch: usize,
         workload: Workload,
+        prune: bool,
     },
     /// Past-the-wall deployment GA (the `ga-cluster` command family).
     GaCluster {
@@ -112,6 +118,7 @@ pub enum Query {
         pop: usize,
         gens: usize,
         seed: u64,
+        prune: bool,
     },
 }
 
@@ -154,6 +161,14 @@ fn field_usize(
         return Err(ApiError::bad(format!("field '{key}' must be in {min}..={max} (got {n})")));
     }
     Ok(n)
+}
+
+fn field_bool(j: &Json, key: &str, default: bool) -> Result<bool, ApiError> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(ApiError::bad(format!("field '{key}' must be a boolean"))),
+    }
 }
 
 fn field_workload(j: &Json) -> Result<Workload, ApiError> {
@@ -242,19 +257,26 @@ pub fn parse_query(body: &str) -> Result<Query, ApiError> {
         .ok_or_else(|| ApiError::bad("field 'family' must be a string"))?;
     match family {
         "sweep" => {
-            check_keys(&j, &["family", "stride"])?;
-            Ok(Query::Sweep { stride: field_usize(&j, "stride", 20, 1, 10_000)? })
+            check_keys(&j, &["family", "stride", "prune"])?;
+            Ok(Query::Sweep {
+                stride: field_usize(&j, "stride", 20, 1, 10_000)?,
+                prune: field_bool(&j, "prune", true)?,
+            })
         }
         "cluster" => {
-            check_keys(&j, &["family", "devices", "batch", "workload"])?;
+            check_keys(&j, &["family", "devices", "batch", "workload", "prune"])?;
             Ok(Query::Cluster {
                 devices: field_usize(&j, "devices", 4, 1, 64)?,
                 batch: field_usize(&j, "batch", 4, 1, 4096)?,
                 workload: field_workload(&j)?,
+                prune: field_bool(&j, "prune", true)?,
             })
         }
         "hetero" => {
-            check_keys(&j, &["family", "device_classes", "microbatches", "batch", "workload"])?;
+            check_keys(
+                &j,
+                &["family", "device_classes", "microbatches", "batch", "workload", "prune"],
+            )?;
             let (pool, pool_spec) = field_pool(&j)?;
             let microbatches = field_microbatches(&j, &pool)?;
             Ok(Query::Hetero {
@@ -263,6 +285,7 @@ pub fn parse_query(body: &str) -> Result<Query, ApiError> {
                 microbatches,
                 batch: field_usize(&j, "batch", 4, 1, 4096)?,
                 workload: field_workload(&j)?,
+                prune: field_bool(&j, "prune", true)?,
             })
         }
         "ga-cluster" => {
@@ -277,6 +300,7 @@ pub fn parse_query(body: &str) -> Result<Query, ApiError> {
                     "pop",
                     "gens",
                     "seed",
+                    "prune",
                 ],
             )?;
             let (pool, pool_spec) = field_pool(&j)?;
@@ -290,6 +314,7 @@ pub fn parse_query(body: &str) -> Result<Query, ApiError> {
                 pop: field_usize(&j, "pop", 16, 2, 256)?,
                 gens: field_usize(&j, "gens", 4, 1, 64)?,
                 seed: field_usize(&j, "seed", 0xACAC, 0, (1usize << 53) - 1)? as u64,
+                prune: field_bool(&j, "prune", true)?,
             })
         }
         other => Err(ApiError::bad(format!(
@@ -368,7 +393,7 @@ pub fn answer(
     progress: &mut dyn FnMut(usize, usize),
 ) -> Result<String, ApiError> {
     match q {
-        Query::Sweep { stride } => {
+        Query::Sweep { stride, prune } => {
             let fwd = resnet18(1, 32, 10);
             let tg = build_training_graph(
                 &fwd,
@@ -377,6 +402,7 @@ pub fn answer(
             let points = DesignPoint::edge_space(*stride);
             let mut cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
             cfg.modes = vec![Mode::Training];
+            cfg.prune = *prune;
             let (rows, _stats) =
                 run_sweep_stats(&points, &fwd, &tg.graph, &cfg, &mut *progress);
             let front = pareto_front(&rows);
@@ -400,9 +426,10 @@ pub fn answer(
                 ("front", Json::Arr(front_rows)),
             ])))
         }
-        Query::Cluster { devices, batch, workload } => {
+        Query::Cluster { devices, batch, workload, prune } => {
             let (space, accel, mapping) = cluster_setup(*devices);
-            let cfg = base_cfg(mapping, cache);
+            let mut cfg = base_cfg(mapping, cache);
+            cfg.prune = *prune;
             let out = cluster_search(&space, *batch, workload.builder(), &accel, &cfg, &mut *progress);
             check_failures(&out.failures)?;
             let front_rows: Vec<Json> =
@@ -416,8 +443,9 @@ pub fn answer(
                 ("front", Json::Arr(front_rows)),
             ])))
         }
-        Query::Hetero { pool, pool_spec, microbatches, batch, workload } => {
-            let cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+        Query::Hetero { pool, pool_spec, microbatches, batch, workload, prune } => {
+            let mut cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+            cfg.prune = *prune;
             let out = hetero_search(pool, microbatches, *batch, workload.builder(), &cfg, &mut *progress);
             check_failures(&out.failures)?;
             let front_rows: Vec<Json> =
@@ -431,8 +459,9 @@ pub fn answer(
                 ("front", Json::Arr(front_rows)),
             ])))
         }
-        Query::GaCluster { pool, pool_spec, microbatches, batch, workload, pop, gens, seed } => {
-            let cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+        Query::GaCluster { pool, pool_spec, microbatches, batch, workload, pop, gens, seed, prune } => {
+            let mut cfg = base_cfg(MappingConfig::edge_tpu_default(), cache);
+            cfg.prune = *prune;
             let ga: GaConfig<DeploymentGenome> = GaConfig {
                 population: *pop,
                 generations: *gens,

@@ -29,9 +29,9 @@ use monet::dse::{
     run_sweep_outcome, ClusterRow, ClusterSpace, DesignPoint, SweepConfig, SweepRow,
 };
 use monet::eval::persist;
-use monet::figures::cluster_resnet18_builder;
+use monet::figures::{cluster_gpt2_builder, cluster_resnet18_builder};
 use monet::fusion::FusionConstraints;
-use monet::ga::{CheckpointProblem, CheckpointSolution, DeploymentGenome, GaConfig};
+use monet::ga::{pareto_rank0, CheckpointProblem, CheckpointSolution, DeploymentGenome, GaConfig};
 use monet::hardware::accelerator::Accelerator;
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
@@ -246,6 +246,119 @@ fn cluster_and_hetero_sweeps_resume_bit_identically() {
         cluster_rows_bit_eq(&hfull.rows, &out.rows, &format!("hetero resume {k}"));
     }
     std::fs::remove_dir_all(&hdir).ok();
+}
+
+/// Bound-pruned journaled runs stay crash-safe: with pruning on, every
+/// point still lands exactly one journal record — evaluated row or
+/// `Skipped` — and a run killed at **every** record boundary (cuts land
+/// between skip records too, since skips are journaled in bound order
+/// interleaved with evaluations) resumes to a 4-objective rank-0 front
+/// bit-identical to both the uninterrupted pruned run and the full
+/// unpruned enumeration. Only fronts are compared: a resume may
+/// legitimately skip *more* points than the run it replays (the
+/// replayed rows hand it a stronger incumbent before the remainder is
+/// bounded), so row sets can differ while the front cannot.
+#[test]
+fn pruned_runs_resume_to_the_same_front_at_every_record_boundary() {
+    let _g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let space = ClusterSpace {
+        device_counts: vec![4, 8],
+        tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+        microbatches: vec![2, 4],
+    };
+    let points = space.enumerate();
+    let accel = EdgeTpuParams::baseline().build();
+    let full_batch = 4usize;
+    let dir = tmp_dir("pruned_resume");
+    let cache = tmp_dir("pruned_resume_cache");
+    let cfg = |run: bool, resume: bool| SweepConfig {
+        mapping: MappingConfig::edge_tpu_default(),
+        workers: 2,
+        prune: true,
+        run_dir: run.then(|| dir.clone()),
+        resume,
+        cache_dir: Some(cache.clone()),
+        ..Default::default()
+    };
+    let front_key = |rows: &[ClusterRow]| -> Vec<(String, u64, u64, u64, usize)> {
+        let objs: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
+        pareto_rank0(&objs)
+            .into_iter()
+            .map(|i| {
+                let r = &rows[i];
+                (
+                    r.label.clone(),
+                    r.latency_cycles.to_bits(),
+                    r.energy_pj.to_bits(),
+                    r.per_device_mem_bytes,
+                    r.devices,
+                )
+            })
+            .collect()
+    };
+
+    let unpruned = run_cluster_sweep_outcome(
+        &points,
+        full_batch,
+        &cluster_gpt2_builder,
+        &accel,
+        &SweepConfig {
+            mapping: MappingConfig::edge_tpu_default(),
+            workers: 2,
+            cache_dir: Some(cache.clone()),
+            ..Default::default()
+        },
+        |_, _| {},
+    )
+    .expect("unpruned reference");
+    let full = run_cluster_sweep_outcome(
+        &points,
+        full_batch,
+        &cluster_gpt2_builder,
+        &accel,
+        &cfg(true, false),
+        |_, _| {},
+    )
+    .expect("pruned journaled run");
+    assert!(full.is_clean(), "{:?}", full.failures);
+    assert!(!full.skipped.is_empty(), "pruning never skipped — no Skipped records to cut at");
+    assert_eq!(front_key(&unpruned.rows), front_key(&full.rows), "pruning moved the front");
+
+    let jpath = dir.join(RUN_JOURNAL_FILE);
+    let complete = std::fs::read(&jpath).expect("journal missing");
+    let bounds = journal_record_bounds(&jpath).expect("journal unreadable");
+    assert_eq!(
+        bounds.len(),
+        points.len() + 1,
+        "every point must land one record, skipped points included"
+    );
+    let reference_front = front_key(&full.rows);
+    for (k, &cut) in bounds.iter().enumerate() {
+        std::fs::write(&jpath, &complete[..cut as usize]).unwrap();
+        let out = run_cluster_sweep_outcome(
+            &points,
+            full_batch,
+            &cluster_gpt2_builder,
+            &accel,
+            &cfg(true, true),
+            |_, _| {},
+        )
+        .expect("pruned resume");
+        assert!(out.is_clean(), "boundary {k}: {:?}", out.failures);
+        assert_eq!(out.resumed, k, "boundary {k}: skip records must replay as resumed too");
+        assert_eq!(
+            out.rows.len() + out.skipped.len(),
+            points.len(),
+            "boundary {k}: every point accounted for"
+        );
+        assert_eq!(
+            reference_front,
+            front_key(&out.rows),
+            "boundary {k}: resumed pruned front diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&cache).ok();
 }
 
 /// An injected panic on one point must not take down the sweep: the

@@ -1,0 +1,462 @@
+//! The front-equivalence harness pinning ROADMAP item 5 (bound-based
+//! front pruning + incremental GA re-evaluation):
+//!
+//! * **pruned ≡ full fronts** — for every sweep family (single-device
+//!   accelerator points, homogeneous cluster deployments, heterogeneous
+//!   stage placements, the past-the-wall deployment GA), a run with
+//!   bound-based pruning enabled produces a rank-0 Pareto front
+//!   **bit-identical** to the full enumeration, at every worker count
+//!   and cache temperature — pruning may only elide rows that are
+//!   strictly dominated by a returned row;
+//! * **surviving rows are untouched** — pruning must not change what
+//!   gets computed (or cached) for the points it does not skip: every
+//!   surviving row is bit-identical to the same point's row in the full
+//!   run;
+//! * **the skip set is deterministic** — the same points are skipped at
+//!   1, 2 and 8 workers, cold or warm cache;
+//! * **incremental ≡ full GA evaluation** — recycling warm
+//!   `ClusterScratch` memos across genomes (the `ga-cluster` fast path)
+//!   is bit-identical to evaluating every genome with a cold scratch, at
+//!   **every generation boundary** (RNG state, population genomes and
+//!   objective bits), not just in the final front.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use monet::autodiff::{build_training_graph, TrainOptions, TrainingGraph};
+use monet::dse::{
+    ga_cluster_search, pareto_front, run_cluster_sweep_outcome, run_hetero_sweep_outcome,
+    run_sweep_outcome, ClusterRow, ClusterScratch, ClusterSpace, DesignPoint, Evaluate, HeteroEval,
+    Mode, SweepConfig, SweepRow,
+};
+use monet::figures::{cluster_gpt2_builder, cluster_resnet18_builder};
+use monet::ga::{
+    nsga2_problem, pareto_rank0, DeploymentGenome, DeploymentProblem, GaCheckpoint, GaConfig,
+};
+use monet::hardware::presets::EdgeTpuParams;
+use monet::mapping::MappingConfig;
+use monet::parallelism::{DeviceClass, HeteroCluster, LinkTier};
+use monet::workload::models::{mlp, resnet18};
+use monet::workload::op::Optimizer;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("monet_front_eq_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn sweep_rows_bit_eq(expect: &[SweepRow], got: &[SweepRow], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: row count");
+    for (a, b) in expect.iter().zip(got) {
+        assert_eq!(a.index, b.index, "{what}: index");
+        assert_eq!(a.label, b.label, "{what}: label");
+        assert_eq!(a.mode, b.mode, "{what}: mode");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(), "{what}: latency");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(a.peak_dram_bytes, b.peak_dram_bytes, "{what}: peak dram");
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{what}: utilization");
+    }
+}
+
+fn cluster_rows_bit_eq(expect: &[ClusterRow], got: &[ClusterRow], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: row count");
+    for (a, b) in expect.iter().zip(got) {
+        assert_eq!(a.index, b.index, "{what}: index");
+        assert_eq!(a.label, b.label, "{what}: label");
+        assert_eq!(a.placement, b.placement, "{what}: placement");
+        assert_eq!(a.tier, b.tier, "{what}: tier");
+        assert_eq!(a.devices, b.devices, "{what}: devices");
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(), "{what}: latency");
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+        assert_eq!(a.per_device_mem_bytes, b.per_device_mem_bytes, "{what}: mem");
+        assert_eq!(a.comm_bytes.to_bits(), b.comm_bytes.to_bits(), "{what}: comm");
+    }
+}
+
+/// Rank-0 front of a cluster-row set under the 4-objective dominance
+/// set, as rows in `pareto_rank0`'s deterministic order.
+fn rank0_rows(rows: &[ClusterRow]) -> Vec<ClusterRow> {
+    let objs: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
+    pareto_rank0(&objs).into_iter().map(|i| rows[i].clone()).collect()
+}
+
+fn mode_idx(m: Mode) -> usize {
+    match m {
+        Mode::Inference => 0,
+        Mode::Training => 1,
+    }
+}
+
+/// Per-mode 2-objective Pareto fronts of a single-device sweep (the
+/// fronts `fig1`/`fig8` report), as rows in `pareto_front`'s order.
+fn mode_fronts(rows: &[SweepRow]) -> Vec<Vec<SweepRow>> {
+    [Mode::Inference, Mode::Training]
+        .iter()
+        .map(|&m| {
+            let sub: Vec<SweepRow> = rows.iter().filter(|r| r.mode == m).cloned().collect();
+            pareto_front(&sub).into_iter().map(|i| sub[i].clone()).collect()
+        })
+        .collect()
+}
+
+/// Single-device family: pruning thins the row set but the per-mode
+/// Pareto fronts are bit-identical to the full enumeration, every
+/// surviving row is bit-identical to the full run's row for the same
+/// point, and the skip set is the same at every worker count and cache
+/// temperature.
+#[test]
+fn pruned_single_device_fronts_are_bit_identical_per_mode() {
+    let fwd = resnet18(1, 32, 10);
+    let tg = build_training_graph(
+        &fwd,
+        TrainOptions { optimizer: Optimizer::SgdMomentum, include_update: true },
+    );
+    let points = DesignPoint::edge_space(3000);
+    assert!(points.len() >= 2);
+
+    let dir = tmp_dir("sweep");
+    let full = run_sweep_outcome(
+        &points,
+        &fwd,
+        &tg.graph,
+        &SweepConfig { workers: 2, cache_dir: Some(dir.clone()), ..Default::default() },
+        |_, _| {},
+    )
+    .expect("full sweep");
+    assert!(full.is_clean(), "{:?}", full.failures);
+    assert!(full.skipped.is_empty(), "prune off must never skip");
+    let full_fronts = mode_fronts(&full.rows);
+    let full_by_key: HashMap<(usize, usize), &SweepRow> =
+        full.rows.iter().map(|r| ((r.index, mode_idx(r.mode)), r)).collect();
+
+    let mut skip_set: Option<Vec<usize>> = None;
+    // the full run above persisted a snapshot into `dir`, so the
+    // cache_dir cells run warm; the `None` cells run on a cold
+    // in-memory cache
+    for workers in [1usize, 2, 8] {
+        for cache_dir in [None, Some(dir.clone())] {
+            let what = format!("sweep workers={workers} warm={}", cache_dir.is_some());
+            let cfg = SweepConfig { workers, prune: true, cache_dir, ..Default::default() };
+            let out = run_sweep_outcome(&points, &fwd, &tg.graph, &cfg, |_, _| {})
+                .expect("pruned sweep");
+            assert!(out.is_clean(), "{what}: {:?}", out.failures);
+            assert_eq!(
+                out.rows.len() + 2 * out.skipped.len(),
+                full.rows.len(),
+                "{what}: rows + skipped points must account for the space"
+            );
+            for r in &out.rows {
+                let reference = full_by_key
+                    .get(&(r.index, mode_idx(r.mode)))
+                    .unwrap_or_else(|| panic!("{what}: row for unknown point {}", r.index));
+                sweep_rows_bit_eq(
+                    std::slice::from_ref(*reference),
+                    std::slice::from_ref(r),
+                    &format!("{what}: surviving point {}", r.index),
+                );
+            }
+            let got_fronts = mode_fronts(&out.rows);
+            assert_eq!(full_fronts.len(), got_fronts.len(), "{what}: mode count");
+            for (m, (e, g)) in full_fronts.iter().zip(&got_fronts).enumerate() {
+                sweep_rows_bit_eq(e, g, &format!("{what}: mode-{m} Pareto front"));
+            }
+            match &skip_set {
+                None => skip_set = Some(out.skipped.clone()),
+                Some(s) => assert_eq!(s, &out.skipped, "{what}: skip set not deterministic"),
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Homogeneous cluster family on the tiny-GPT-2 deployment space — the
+/// ROADMAP item 5 acceptance workload: the pruned run must skip at
+/// least 30% of the space while the 4-objective rank-0 front stays
+/// bit-identical to the full enumeration, across worker counts and
+/// cache temperatures.
+#[test]
+fn pruned_gpt2_cluster_front_is_bit_identical_and_skips_a_third_of_the_space() {
+    let space = ClusterSpace {
+        device_counts: vec![4, 8],
+        tiers: vec![LinkTier::Edge, LinkTier::Datacenter],
+        microbatches: vec![2, 4],
+    };
+    let points = space.enumerate();
+    assert!(points.len() >= 10);
+    let accel = EdgeTpuParams::baseline().build();
+    let mapping = MappingConfig::edge_tpu_default();
+    let full_batch = 4usize;
+
+    let dir = tmp_dir("cluster_gpt2");
+    let full = run_cluster_sweep_outcome(
+        &points,
+        full_batch,
+        &cluster_gpt2_builder,
+        &accel,
+        &SweepConfig { mapping, workers: 2, cache_dir: Some(dir.clone()), ..Default::default() },
+        |_, _| {},
+    )
+    .expect("full cluster sweep");
+    assert!(full.is_clean(), "{:?}", full.failures);
+    assert!(full.skipped.is_empty(), "prune off must never skip");
+    let full_front = rank0_rows(&full.rows);
+    assert!(!full_front.is_empty());
+    let full_by_index: HashMap<usize, &ClusterRow> =
+        full.rows.iter().map(|r| (r.index, r)).collect();
+
+    let mut skip_set: Option<Vec<usize>> = None;
+    for (workers, cache_dir) in
+        [(1usize, Some(dir.clone())), (2, Some(dir.clone())), (8, Some(dir.clone())), (8, None)]
+    {
+        let what = format!("gpt2 cluster workers={workers} warm={}", cache_dir.is_some());
+        let cfg = SweepConfig { mapping, workers, prune: true, cache_dir, ..Default::default() };
+        let out = run_cluster_sweep_outcome(
+            &points,
+            full_batch,
+            &cluster_gpt2_builder,
+            &accel,
+            &cfg,
+            |_, _| {},
+        )
+        .expect("pruned cluster sweep");
+        assert!(out.is_clean(), "{what}: {:?}", out.failures);
+        assert_eq!(out.rows.len() + out.skipped.len(), points.len(), "{what}: accounting");
+        // the acceptance bar: the roofline bound retires >=30% of the
+        // tiny-GPT-2 deployment space without scheduling it
+        assert!(
+            out.skipped.len() * 10 >= points.len() * 3,
+            "{what}: skipped only {}/{} points (<30%)",
+            out.skipped.len(),
+            points.len()
+        );
+        for r in &out.rows {
+            let reference = full_by_index
+                .get(&r.index)
+                .unwrap_or_else(|| panic!("{what}: row for unknown point {}", r.index));
+            cluster_rows_bit_eq(
+                std::slice::from_ref(*reference),
+                std::slice::from_ref(r),
+                &format!("{what}: surviving point {}", r.index),
+            );
+        }
+        cluster_rows_bit_eq(
+            &full_front,
+            &rank0_rows(&out.rows),
+            &format!("{what}: rank-0 front"),
+        );
+        match &skip_set {
+            None => skip_set = Some(out.skipped.clone()),
+            Some(s) => assert_eq!(s, &out.skipped, "{what}: skip set not deterministic"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Heterogeneous stage-placement family: same contract on the mixed
+/// edge+datacenter pool — front bit-identity, surviving-row
+/// bit-identity, deterministic skips.
+#[test]
+fn pruned_hetero_front_is_bit_identical_on_the_mixed_pool() {
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 2), (DeviceClass::datacenter(), 2)]);
+    let points = ClusterSpace::enumerate_hetero(&hc, &[2]);
+    assert!(points.len() >= 4);
+    let mapping = MappingConfig::edge_tpu_default();
+    let full_batch = 4usize;
+
+    let full = run_hetero_sweep_outcome(
+        &points,
+        &hc,
+        full_batch,
+        &cluster_resnet18_builder,
+        &SweepConfig { mapping, workers: 2, ..Default::default() },
+        |_, _| {},
+    )
+    .expect("full hetero sweep");
+    assert!(full.is_clean(), "{:?}", full.failures);
+    assert!(full.skipped.is_empty(), "prune off must never skip");
+    let full_front = rank0_rows(&full.rows);
+    let full_by_index: HashMap<usize, &ClusterRow> =
+        full.rows.iter().map(|r| (r.index, r)).collect();
+
+    let mut skip_set: Option<Vec<usize>> = None;
+    for workers in [1usize, 2, 8] {
+        let what = format!("hetero workers={workers}");
+        let cfg = SweepConfig { mapping, workers, prune: true, ..Default::default() };
+        let out = run_hetero_sweep_outcome(
+            &points,
+            &hc,
+            full_batch,
+            &cluster_resnet18_builder,
+            &cfg,
+            |_, _| {},
+        )
+        .expect("pruned hetero sweep");
+        assert!(out.is_clean(), "{what}: {:?}", out.failures);
+        assert_eq!(out.rows.len() + out.skipped.len(), points.len(), "{what}: accounting");
+        for r in &out.rows {
+            let reference = full_by_index
+                .get(&r.index)
+                .unwrap_or_else(|| panic!("{what}: row for unknown point {}", r.index));
+            cluster_rows_bit_eq(
+                std::slice::from_ref(*reference),
+                std::slice::from_ref(r),
+                &format!("{what}: surviving point {}", r.index),
+            );
+        }
+        cluster_rows_bit_eq(
+            &full_front,
+            &rank0_rows(&out.rows),
+            &format!("{what}: rank-0 front"),
+        );
+        match &skip_set {
+            None => skip_set = Some(out.skipped.clone()),
+            Some(s) => assert_eq!(s, &out.skipped, "{what}: skip set not deterministic"),
+        }
+    }
+}
+
+fn tiny_mlp_builder(batch: usize) -> TrainingGraph {
+    build_training_graph(&mlp(batch.max(1), 8, 16, 2, 4), TrainOptions::default())
+}
+
+/// `ga-cluster` family: pruning the journaled backbone sweep must not
+/// move the reported front or the block-fallback baseline by a bit —
+/// skipped backbone rows are strictly dominated, so the rank-0 union
+/// front and the GA's warm-start seeds are unchanged.
+#[test]
+fn pruned_ga_cluster_search_reports_the_same_front_and_baseline() {
+    let hc = HeteroCluster::new(vec![(DeviceClass::edge(), 2), (DeviceClass::datacenter(), 2)]);
+    let ga: GaConfig<DeploymentGenome> =
+        GaConfig { population: 8, generations: 3, workers: 2, ..Default::default() };
+    let cfg = |prune: bool| SweepConfig {
+        mapping: MappingConfig::edge_tpu_default(),
+        workers: 2,
+        prune,
+        ..Default::default()
+    };
+
+    let full = ga_cluster_search(&hc, &[2], 4, &tiny_mlp_builder, "tiny-mlp", &ga, &cfg(false), |_, _| {});
+    assert!(full.failures.is_empty(), "{:?}", full.failures);
+    assert_eq!(full.skipped, 0, "prune off must never skip");
+
+    let pruned = ga_cluster_search(&hc, &[2], 4, &tiny_mlp_builder, "tiny-mlp", &ga, &cfg(true), |_, _| {});
+    assert!(pruned.failures.is_empty(), "{:?}", pruned.failures);
+    cluster_rows_bit_eq(&full.rows, &pruned.rows, "ga-cluster rank-0 front");
+    cluster_rows_bit_eq(&full.fallback_front, &pruned.fallback_front, "ga-cluster fallback front");
+    assert!(
+        pruned.evaluated <= full.evaluated,
+        "pruning must not evaluate more points ({} > {})",
+        pruned.evaluated,
+        full.evaluated
+    );
+}
+
+fn checkpoint_key(
+    cps: &[GaCheckpoint<DeploymentGenome>],
+) -> Vec<(usize, [u64; 4], Vec<(DeploymentGenome, Vec<u64>)>)> {
+    cps.iter()
+        .map(|cp| {
+            (
+                cp.generation,
+                cp.rng,
+                cp.population
+                    .iter()
+                    .map(|(g, o)| (g.clone(), o.iter().map(|v| v.to_bits()).collect()))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// The incremental-evaluation half of ROADMAP item 5: the `ga-cluster`
+/// eval closure recycles `ClusterScratch`es (training-graph memo,
+/// balanced stage cuts, per-stage `StageEval` rows) through a pool, so
+/// a mutant genome re-costs only the stage schedules it changed. A warm
+/// memo must be bit-identical to a cold one — pinned here by running
+/// NSGA-II twice over the same problem, once with a cold scratch per
+/// genome and once with the pooled warm scratches, and comparing every
+/// generation checkpoint (RNG state, population genomes, objective
+/// bits) plus the final population.
+#[test]
+fn incremental_ga_evaluation_is_bit_identical_to_cold_scratch_evaluation() {
+    let hc = HeteroCluster::new(vec![
+        (DeviceClass::edge(), 2),
+        (DeviceClass::server(), 2),
+        (DeviceClass::datacenter(), 2),
+    ]);
+    let builder: &(dyn Fn(usize) -> TrainingGraph + Sync) = &tiny_mlp_builder;
+    let heval = HeteroEval {
+        hc: &hc,
+        full_batch: 4,
+        builder,
+        mapping: MappingConfig::edge_tpu_default(),
+    };
+    let problem = DeploymentProblem { hc: &hc, microbatches: vec![2] };
+
+    for workers in [1usize, 2] {
+        let ga: GaConfig<DeploymentGenome> =
+            GaConfig { population: 8, generations: 4, workers, ..Default::default() };
+
+        // reference: every genome pays for a cold scratch
+        let eval_cold = |g: &DeploymentGenome| {
+            let p = ClusterSpace::genome_to_hetero(g);
+            let mut scratch = heval.scratch();
+            heval.evaluate(0, &p, None, &mut scratch)[0].objectives().to_vec()
+        };
+        let mut memo_cold = HashMap::new();
+        let mut cps_cold: Vec<GaCheckpoint<DeploymentGenome>> = vec![];
+        let (pop_cold, _) =
+            nsga2_problem(&problem, &ga, eval_cold, &mut memo_cold, None, |cp| {
+                cps_cold.push(cp.clone())
+            });
+
+        // incremental: warm scratches recycled through a pool, exactly
+        // as `dse::search::ga_cluster_search` does
+        let pool: Mutex<Vec<ClusterScratch>> = Mutex::new(Vec::new());
+        let eval_warm = |g: &DeploymentGenome| {
+            let p = ClusterSpace::genome_to_hetero(g);
+            let mut scratch =
+                pool.lock().ok().and_then(|mut v| v.pop()).unwrap_or_else(|| heval.scratch());
+            let objs = heval.evaluate(0, &p, None, &mut scratch)[0].objectives().to_vec();
+            if let Ok(mut v) = pool.lock() {
+                v.push(scratch);
+            }
+            objs
+        };
+        let mut memo_warm = HashMap::new();
+        let mut cps_warm: Vec<GaCheckpoint<DeploymentGenome>> = vec![];
+        let (pop_warm, _) =
+            nsga2_problem(&problem, &ga, eval_warm, &mut memo_warm, None, |cp| {
+                cps_warm.push(cp.clone())
+            });
+
+        // the scratches really were recycled: far fewer scratches than
+        // evaluations were ever built
+        let pooled = pool.lock().unwrap().len();
+        assert!(
+            pooled <= workers.max(1) * 2 + 1,
+            "workers={workers}: pool grew to {pooled} scratches — nothing was recycled"
+        );
+
+        assert_eq!(
+            cps_cold.len(),
+            ga.generations + 1,
+            "workers={workers}: checkpoint cadence (init + one per generation)"
+        );
+        assert_eq!(
+            checkpoint_key(&cps_cold),
+            checkpoint_key(&cps_warm),
+            "workers={workers}: a generation boundary diverged between cold and warm scratches"
+        );
+        assert_eq!(pop_cold.len(), pop_warm.len(), "workers={workers}: final population size");
+        for (a, b) in pop_cold.iter().zip(&pop_warm) {
+            assert_eq!(a.genome, b.genome, "workers={workers}: final population genome");
+            let (oa, ob): (Vec<u64>, Vec<u64>) = (
+                a.objectives.iter().map(|v| v.to_bits()).collect(),
+                b.objectives.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(oa, ob, "workers={workers}: final population objectives");
+        }
+    }
+}

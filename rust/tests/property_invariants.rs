@@ -7,13 +7,17 @@ use std::collections::HashSet;
 
 use monet::autodiff::{
     apply_checkpointing, build_training_graph, checkpoint_candidates,
-    stored_activation_bytes, CheckpointPlan, TrainOptions,
+    stored_activation_bytes, CheckpointPlan, TrainOptions, TrainingGraph,
 };
-use monet::dse::{run_sweep, DesignPoint, SweepConfig};
+use monet::dse::{
+    run_cluster_sweep_outcome, run_sweep, ClusterEval, ClusterRow, ClusterSpace, DesignPoint,
+    Evaluate, SweepConfig, SweepEval, SweepPartitions,
+};
 use monet::fusion::{enumerate_candidates, fuse_greedy, solve_exact_cover, FusionConstraints};
-use monet::ga::{dominates, nsga2, GaConfig};
+use monet::ga::{dominates, nsga2, pareto_rank0, GaConfig};
 use monet::hardware::presets::EdgeTpuParams;
 use monet::mapping::MappingConfig;
+use monet::parallelism::LinkTier;
 use monet::scheduler::{schedule, Partition};
 use monet::util::proptest::{check, BitMask, Gen, UsizeIn};
 use monet::util::rng::Rng;
@@ -245,6 +249,169 @@ fn prop_sweep_processes_every_job_exactly_once_under_random_workers() {
         );
         let idx: HashSet<usize> = rows.iter().map(|r| r.index).collect();
         rows.len() == points.len() * 2 && idx.len() == points.len()
+    });
+}
+
+/// Generator: random small homogeneous deployment spaces + global batch.
+struct RandomClusterSpace;
+impl Gen for RandomClusterSpace {
+    type Value = (Vec<usize>, Vec<LinkTier>, Vec<usize>, usize);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let counts = match rng.usize(3) {
+            0 => vec![2],
+            1 => vec![4],
+            _ => vec![2, 4],
+        };
+        let tiers = match rng.usize(4) {
+            0 => vec![LinkTier::Edge],
+            1 => vec![LinkTier::Server],
+            2 => vec![LinkTier::Datacenter],
+            _ => vec![LinkTier::Edge, LinkTier::Datacenter],
+        };
+        let ms = if rng.usize(2) == 0 { vec![2] } else { vec![2, 4] };
+        let batch = 2 << rng.usize(2);
+        (counts, tiers, ms, batch)
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = vec![];
+        if v.0.len() > 1 {
+            out.push((vec![v.0[0]], v.1.clone(), v.2.clone(), v.3));
+        }
+        if v.1.len() > 1 {
+            out.push((v.0.clone(), vec![v.1[0]], v.2.clone(), v.3));
+        }
+        if v.2.len() > 1 {
+            out.push((v.0.clone(), v.1.clone(), vec![v.2[0]], v.3));
+        }
+        out
+    }
+}
+
+fn prop_builder(batch: usize) -> TrainingGraph {
+    build_training_graph(&mlp(batch.max(1), 8, 16, 2, 4), TrainOptions::default())
+}
+
+/// The admissibility contract behind bound-based front pruning
+/// (`Evaluate::lower_bound`), single-device family: for random
+/// accelerator points, every emitted row is covered by a bound vector
+/// that never exceeds the true scheduled latency/energy in any
+/// component — the soundness precondition for the engine skipping a
+/// point whose bounds are dominated.
+#[test]
+fn prop_sweep_lower_bounds_never_exceed_scheduled_truth() {
+    check(12, &RandomMlp, |&dims| {
+        let fwd = graph_of(dims);
+        let tg = build_training_graph(&fwd, TrainOptions::default());
+        let cfg = SweepConfig { workers: 1, ..Default::default() };
+        let parts = SweepPartitions::prepare(&fwd, &tg.graph, &cfg);
+        let eval = SweepEval { fwd: &fwd, train: &tg.graph, parts: &parts, cfg: &cfg };
+        let mut scratch = eval.scratch();
+        DesignPoint::edge_space(1500).iter().enumerate().all(|(i, p)| {
+            let bounds = match eval.lower_bound(i, p, &mut scratch) {
+                Some(b) => b,
+                None => return false, // the sweep family must bound
+            };
+            eval.evaluate(i, p, None, &mut scratch).iter().all(|row| {
+                let truth = eval.row_objectives(row).expect("pruning geometry");
+                bounds.iter().any(|b| {
+                    b.len() == truth.len() && b.iter().zip(&truth).all(|(x, y)| x <= y)
+                })
+            })
+        })
+    });
+}
+
+/// Same admissibility contract, homogeneous cluster family: the
+/// roofline deployment bound never exceeds the true scheduled
+/// objectives of any randomly drawn deployment point in any of the four
+/// components (latency, energy, per-device memory, cluster size).
+#[test]
+fn prop_cluster_lower_bounds_never_exceed_scheduled_truth() {
+    check(8, &RandomClusterSpace, |(counts, tiers, ms, batch)| {
+        let space = ClusterSpace {
+            device_counts: counts.clone(),
+            tiers: tiers.clone(),
+            microbatches: ms.clone(),
+        };
+        let accel = EdgeTpuParams::baseline().build();
+        let eval = ClusterEval {
+            full_batch: *batch,
+            builder: &prop_builder,
+            accel: &accel,
+            mapping: MappingConfig::edge_tpu_default(),
+        };
+        let mut scratch = eval.scratch();
+        space.enumerate().iter().enumerate().all(|(i, p)| {
+            let bounds = match eval.lower_bound(i, p, &mut scratch) {
+                Some(b) => b,
+                None => return false, // the cluster family must bound
+            };
+            eval.evaluate(i, p, None, &mut scratch).iter().all(|row| {
+                let truth = eval.row_objectives(row).expect("pruning geometry");
+                bounds.iter().any(|b| {
+                    b.len() == truth.len() && b.iter().zip(&truth).all(|(x, y)| x <= y)
+                })
+            })
+        })
+    });
+}
+
+/// Pruning soundness end to end on random deployment spaces: whatever
+/// the pruner skips, the 4-objective rank-0 front of the pruned run is
+/// bit-identical to the full enumeration's front — no true front row is
+/// ever dropped, no dominated row is ever promoted.
+#[test]
+fn prop_pruning_never_drops_a_true_front_row() {
+    let front_key = |rows: &[ClusterRow]| -> Vec<(String, u64, u64, u64, usize)> {
+        let objs: Vec<Vec<f64>> = rows.iter().map(|r| r.objectives().to_vec()).collect();
+        pareto_rank0(&objs)
+            .into_iter()
+            .map(|i| {
+                let r = &rows[i];
+                (
+                    r.label.clone(),
+                    r.latency_cycles.to_bits(),
+                    r.energy_pj.to_bits(),
+                    r.per_device_mem_bytes,
+                    r.devices,
+                )
+            })
+            .collect()
+    };
+    check(6, &RandomClusterSpace, |(counts, tiers, ms, batch)| {
+        let space = ClusterSpace {
+            device_counts: counts.clone(),
+            tiers: tiers.clone(),
+            microbatches: ms.clone(),
+        };
+        let points = space.enumerate();
+        let accel = EdgeTpuParams::baseline().build();
+        let cfg = |prune: bool| SweepConfig {
+            mapping: MappingConfig::edge_tpu_default(),
+            workers: 2,
+            prune,
+            ..Default::default()
+        };
+        let full = run_cluster_sweep_outcome(
+            &points,
+            *batch,
+            &prop_builder,
+            &accel,
+            &cfg(false),
+            |_, _| {},
+        )
+        .expect("full run");
+        let pruned = run_cluster_sweep_outcome(
+            &points,
+            *batch,
+            &prop_builder,
+            &accel,
+            &cfg(true),
+            |_, _| {},
+        )
+        .expect("pruned run");
+        pruned.rows.len() + pruned.skipped.len() == points.len()
+            && front_key(&full.rows) == front_key(&pruned.rows)
     });
 }
 

@@ -119,6 +119,36 @@ fn warm_daemon_answers_bit_identical_to_one_shot_for_every_family() {
     shutdown(addr, handle);
 }
 
+/// The `"prune"` key (default `true`) is part of the query surface:
+/// bound-based pruning may only skip dominated rows, so for the
+/// front-only cluster and hetero responses a pruned answer must be
+/// byte-identical to an unpruned one — and the pruned daemon must stay
+/// bit-identical to the one-shot `monet query` path.
+#[test]
+fn prune_key_never_changes_a_front_and_daemon_matches_one_shot() {
+    let opts = OneShotOpts { use_cache: true, cache_dir: None, cache_cap: 0 };
+    let (addr, handle) = boot(ServeConfig::default());
+    for base in [
+        r#""family":"cluster","devices":2,"batch":2,"workload":"resnet18""#,
+        r#""family":"hetero","device_classes":"edge:1,datacenter:1","batch":2,"microbatches":[2],"workload":"resnet18""#,
+    ] {
+        let pruned = format!("{{{base},\"prune\":true}}");
+        let full = format!("{{{base},\"prune\":false}}");
+        let (status, pruned_daemon) = http(addr, "POST", "/query", &pruned);
+        assert_eq!(status, 200, "pruned: {pruned_daemon}");
+        let (status, full_daemon) = http(addr, "POST", "/query", &full);
+        assert_eq!(status, 200, "unpruned: {full_daemon}");
+        assert_eq!(pruned_daemon, full_daemon, "pruning changed a front for {{{base}}}");
+        let reference = one_shot(&pruned, &opts).expect("one-shot pruned reference");
+        assert_eq!(pruned_daemon, reference, "pruned daemon drifted from one-shot for {{{base}}}");
+    }
+    // a non-boolean prune is a structured 400, and the daemon survives it
+    let (status, resp) = http(addr, "POST", "/query", r#"{"family":"sweep","prune":1}"#);
+    assert_eq!(status, 400, "bad prune type: {resp}");
+    assert_eq!(http(addr, "GET", "/healthz", "").0, 200);
+    shutdown(addr, handle);
+}
+
 /// Arbitrary client input is a structured JSON error with the right
 /// status — never a panic — and the daemon keeps serving afterwards.
 #[test]
