@@ -16,7 +16,7 @@ fn timed<T>(name: &str, reps: usize, mut f: impl FnMut() -> T) -> T {
         out = Some(f());
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     let med = times[times.len() / 2];
     println!("{name:<42} {:>10.3} s (median of {reps})", med);
     out.unwrap()
@@ -49,7 +49,7 @@ fn main() {
     let best = f10
         .iter()
         .filter(|r| r.strategy.starts_with("Limit"))
-        .min_by(|a, b| a.latency_cycles.partial_cmp(&b.latency_cycles).unwrap())
+        .min_by(|a, b| a.latency_cycles.total_cmp(&b.latency_cycles))
         .unwrap();
     println!("    best: {} @ {:.3e} cycles", best.strategy, best.latency_cycles);
 
@@ -67,7 +67,7 @@ fn main() {
         .iter()
         .filter(|r| r.latency_overhead < 0.05)
         .map(|r| r.memory_saving)
-        .max_by(|a, b| a.partial_cmp(b).unwrap())
+        .max_by(|a, b| a.total_cmp(b))
     {
         println!("    best ≤5%-overhead saving: {:.0}%", best * 100.0);
     }

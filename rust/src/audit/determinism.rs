@@ -1,0 +1,268 @@
+//! Determinism lint (rules `DT01`/`DT02`) — the PR 2 bug class, as a
+//! static check instead of a postmortem.
+//!
+//! * **DT01** — `partial_cmp(..).unwrap()` (or `.expect(..)`)
+//!   comparators panic on the first NaN an upstream cost-model change
+//!   lets through, killing a worker mid-sweep. `f64::total_cmp` is a
+//!   total order (NaN sorts last) and is what every PR 2 fix switched
+//!   to; the lint points there.
+//! * **DT02** — iterating a `HashMap`/`HashSet` yields a
+//!   process-varying order; when the iteration feeds rows, journals,
+//!   f64 accumulation or serialized output, runs stop being
+//!   bit-identical (the `apply_checkpointing` HashSet-order bug).
+//!   The lint flags iteration over values it can *see* are hash
+//!   containers (declared or constructed as such in the same file)
+//!   unless an order-restoring or order-insensitive consumer (`sort*`,
+//!   `BTreeMap`/`BTreeSet`, `sum`/`count`/`min`/`max`/`all`/`any`/…)
+//!   appears in the same or the immediately following statement.
+//!   Genuinely order-free sites carry an inline
+//!   `// audit:allow(DT02): reason` — the justification is the point.
+//!
+//! Both rules scan test code too: nondeterministic tests are flaky
+//! tests, and the three comparators this lint flagged on day one
+//! included one inside a `#[cfg(test)]` module.
+
+use std::path::Path;
+
+use super::lexer::{Lexed, TokenKind};
+use super::{Finding, Rule, SourceTree};
+
+/// Methods whose receiver ordering escapes into the iteration.
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+
+/// Idents that make a hash-order iteration safe when they appear in the
+/// same statement (or the next one — the `let v: Vec<_> = m.iter()
+/// .collect(); v.sort…` idiom): either they restore a deterministic
+/// order or they reduce order-insensitively.
+const SAFE_CONSUMERS: &[&str] = &[
+    "sort",
+    "sort_by",
+    "sort_by_key",
+    "sort_unstable",
+    "sort_unstable_by",
+    "sort_unstable_by_key",
+    "BTreeMap",
+    "BTreeSet",
+    "BinaryHeap",
+    "sum",
+    "count",
+    "len",
+    "is_empty",
+    "min",
+    "max",
+    "min_by",
+    "max_by",
+    "min_by_key",
+    "max_by_key",
+    "all",
+    "any",
+    "contains",
+    "contains_key",
+];
+
+/// Run both determinism rules over every file.
+pub fn check(tree: &SourceTree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (file, lexed) in &tree.files {
+        check_partial_cmp(file, lexed, &mut findings);
+        check_hash_order(file, lexed, &mut findings);
+    }
+    findings
+}
+
+fn check_partial_cmp(file: &Path, lexed: &Lexed, findings: &mut Vec<Finding>) {
+    let toks = &lexed.tokens;
+    for k in 0..toks.len() {
+        if toks[k].kind != TokenKind::Ident || toks[k].text != "partial_cmp" {
+            continue;
+        }
+        let window = &toks[k + 1..toks.len().min(k + 12)];
+        if window
+            .iter()
+            .any(|t| t.kind == TokenKind::Ident && (t.text == "unwrap" || t.text == "expect"))
+        {
+            findings.push(Finding::new(
+                Rule::Dt01,
+                file,
+                toks[k].line,
+                "NaN-panicking comparator: partial_cmp().unwrap() aborts the worker on \
+                 the first NaN a cost-model change lets through — use f64::total_cmp \
+                 (NaN orders last, deterministically)",
+            ));
+        }
+    }
+}
+
+/// Names in this file the lint can prove are hash containers: bound or
+/// declared against a `HashMap`/`HashSet` type (let bindings, fn params,
+/// struct fields, `= HashMap::new()`.)
+fn hash_container_names(lexed: &Lexed) -> Vec<String> {
+    let toks = &lexed.tokens;
+    let mut names = Vec::new();
+    for k in 0..toks.len() {
+        if toks[k].kind != TokenKind::Ident
+            || (toks[k].text != "HashMap" && toks[k].text != "HashSet")
+        {
+            continue;
+        }
+        // `use std::collections::HashMap` / `HashMap::new()` paths and
+        // nested generic positions (`Vec<HashMap<..>>`) are not bindings
+        if k > 0 && (toks[k - 1].text == "::" || toks[k - 1].text == "<") {
+            continue;
+        }
+        // walk back over `& &mut mut` to the binding shape
+        let mut j = k as isize - 1;
+        while j >= 0 && (toks[j as usize].text == "&" || toks[j as usize].text == "mut") {
+            j -= 1;
+        }
+        if j < 1 {
+            continue;
+        }
+        let (p, p2) = (&toks[j as usize], &toks[j as usize - 1]);
+        let binder = match p.text.as_str() {
+            // `name: HashMap<..>` (let annotation, fn param, struct field)
+            ":" if p2.kind == TokenKind::Ident => Some(&p2.text),
+            // `let name = HashMap::new()`
+            "=" if p2.kind == TokenKind::Ident => Some(&p2.text),
+            _ => None,
+        };
+        if let Some(name) = binder {
+            if !names.contains(name) {
+                names.push(name.clone());
+            }
+        }
+    }
+    names
+}
+
+fn check_hash_order(file: &Path, lexed: &Lexed, findings: &mut Vec<Finding>) {
+    let toks = &lexed.tokens;
+    let names = hash_container_names(lexed);
+    if names.is_empty() {
+        return;
+    }
+    let mut flagged_lines: Vec<u32> = Vec::new();
+    let mut flag = |k: usize, findings: &mut Vec<Finding>, name: &str| {
+        if flagged_lines.contains(&toks[k].line) {
+            return;
+        }
+        flagged_lines.push(toks[k].line);
+        findings.push(Finding::new(
+            Rule::Dt02,
+            file,
+            toks[k].line,
+            format!(
+                "order-sensitive iteration over hash container `{name}`: HashMap/HashSet \
+                 order varies per process, so anything it feeds (rows, journals, f64 \
+                 accumulation, serialized output) loses bit-identity — sort the items, \
+                 collect into a BTree collection, or justify with \
+                 `// audit:allow(DT02): reason`"
+            ),
+        ));
+    };
+    for k in 0..toks.len() {
+        if toks[k].kind != TokenKind::Ident || !names.iter().any(|n| *n == toks[k].text) {
+            continue;
+        }
+        let name = toks[k].text.clone();
+        // `name.iter()` / `.keys()` / … method chains
+        if k + 2 < toks.len()
+            && toks[k + 1].text == "."
+            && ITER_METHODS.contains(&toks[k + 2].text.as_str())
+            && toks.get(k + 3).is_some_and(|t| t.text == "(")
+        {
+            if !consumed_safely(toks, k + 3) {
+                flag(k, findings, &name);
+            }
+            continue;
+        }
+        // `for x in &name {` / `for x in name {`
+        let prev = |i: usize| toks.get(k.wrapping_sub(i)).map(|t| t.text.as_str());
+        let after = toks.get(k + 1).map(|t| t.text.as_str());
+        let preceded_by_in = prev(1) == Some("in")
+            || (prev(1) == Some("&") && prev(2) == Some("in"))
+            || (prev(1) == Some("mut") && prev(2) == Some("&") && prev(3) == Some("in"));
+        if preceded_by_in && after == Some("{") {
+            flag(k, findings, &name);
+        }
+    }
+}
+
+/// Scan forward from the token after an iteration call for a safe
+/// consumer: to the end of this statement, then through the next
+/// statement (40-token budget) — covering both `m.iter().map(..).sum()`
+/// and `let v: Vec<_> = m.iter().collect(); v.sort();`.
+fn consumed_safely(toks: &[super::lexer::Token], from: usize) -> bool {
+    let mut semis = 0;
+    for t in toks.iter().skip(from).take(80) {
+        if t.kind == TokenKind::Ident && SAFE_CONSUMERS.contains(&t.text.as_str()) {
+            return true;
+        }
+        if t.text == ";" {
+            semis += 1;
+            if semis >= 2 {
+                return false;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::lexer::lex;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn run(src: &str) -> Vec<Finding> {
+        let mut files = BTreeMap::new();
+        files.insert(PathBuf::from("src/x.rs"), lex(src));
+        check(&SourceTree { root: PathBuf::from("."), files })
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_flagged_total_cmp_not() {
+        let fs = run(concat!(
+            "fn f(v: &mut Vec<f64>) {\n",
+            " v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n",
+            " v.sort_by(|a, b| a.total_cmp(b));\n}",
+        ));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::Dt01);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn hashmap_for_loop_flagged() {
+        let fs = run(concat!(
+            "fn f() { let m: HashMap<u32, u32> = HashMap::new();\n",
+            "for (k, v) in &m { out.push(*k); }\n}",
+        ));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::Dt02);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn sorted_collect_suppresses() {
+        let fs = run(concat!(
+            "fn f(m: &HashMap<u32, u32>) {\n",
+            " let mut v: Vec<_> = m.iter().collect();\n v.sort_unstable();\n}",
+        ));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn order_insensitive_reduction_suppresses() {
+        let fs = run("fn f(m: &HashMap<u32, u32>) -> u32 { m.values().sum() }");
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn vec_iteration_never_flagged() {
+        let fs = run("fn f(v: &Vec<u32>) { for x in v.iter() { use_it(x); } }");
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

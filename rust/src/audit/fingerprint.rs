@@ -1,0 +1,424 @@
+//! Contract-version drift detection (rules `CV01`–`CV04`).
+//!
+//! The snapshot-header rule (ROADMAP.md, `eval/mod.rs`) says: any change
+//! to the cost formulas, energy constants, cache-key construction,
+//! splitter or scheduler tie-break/transfer behaviour must bump
+//! [`crate::eval::CACHE_CONTRACT_VERSION`] so persisted snapshots
+//! self-invalidate. Runtime tests compare within one build and cannot see
+//! a cross-build violation — so this module pins the *source tokens* of
+//! every contract-scoped region into a checked-in manifest
+//! (`ci/contract_fingerprints.json`) and fails when a region changed
+//! while the version did not.
+//!
+//! Fingerprints are 128-bit [`StructuralHasher`] digests over the
+//! region's token texts (comments and whitespace excluded, so doc edits
+//! never trip; `mod tests` blocks excluded, so test edits never trip).
+//! The manifest itself carries an FNV-64 checksum over its canonical
+//! content: hand-editing a fingerprint to dodge the gate is detected as
+//! `CV02` rather than silently accepted.
+//!
+//! The legitimate workflow for a contract change is:
+//! 1. edit the scoped code, 2. bump `CACHE_CONTRACT_VERSION` (with a
+//! History entry), 3. `monet_audit --bless`, 4. commit code + manifest.
+//! `--bless` refuses to regenerate at an unchanged version — that is the
+//! entire point of the rule.
+
+use std::hash::Hasher;
+use std::path::{Path, PathBuf};
+
+use super::lexer::{Lexed, TokenKind};
+use super::{in_ranges, test_mod_ranges, AuditConfig, Finding, Rule, SourceTree};
+use crate::eval::StructuralHasher;
+use crate::util::json::Json;
+
+/// How a [`Region`]'s tokens are selected from its file.
+#[derive(Debug, Clone)]
+pub enum RegionSpec {
+    /// Every `fn <name>` item (signature + body) for each listed name,
+    /// outside `mod tests`, concatenated in source order.
+    Fns(Vec<String>),
+    /// Every `impl` block whose header mentions the ident.
+    ImplsOf(String),
+    /// All tokens of the file outside `mod tests`.
+    WholeFile,
+}
+
+/// One contract-scoped source region.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub id: String,
+    pub file: String,
+    pub spec: RegionSpec,
+}
+
+impl Region {
+    pub fn new(id: &str, file: &str, spec: RegionSpec) -> Region {
+        Region { id: id.to_string(), file: file.to_string(), spec }
+    }
+}
+
+/// A computed region fingerprint.
+#[derive(Debug, Clone)]
+pub struct RegionFp {
+    pub id: String,
+    pub file: PathBuf,
+    /// Line of the region's first token (where `CV01` points).
+    pub line: u32,
+    /// 32-hex-digit digest of the region tokens.
+    pub fp: String,
+}
+
+/// Token ranges a region spec selects, in source order.
+fn region_ranges(lexed: &Lexed, spec: &RegionSpec) -> Vec<std::ops::Range<usize>> {
+    let toks = &lexed.tokens;
+    let tests = test_mod_ranges(lexed);
+    match spec {
+        RegionSpec::WholeFile => {
+            let mut out = Vec::new();
+            let mut k = 0;
+            while k < toks.len() {
+                if let Some(t) = tests.iter().find(|r| r.contains(&k)) {
+                    k = t.end;
+                    continue;
+                }
+                let start = k;
+                while k < toks.len() && !in_ranges(k, &tests) {
+                    k += 1;
+                }
+                out.push(start..k);
+            }
+            out
+        }
+        RegionSpec::Fns(names) => {
+            let mut out = Vec::new();
+            for k in 0..toks.len().saturating_sub(1) {
+                if in_ranges(k, &tests) {
+                    continue;
+                }
+                if toks[k].kind == TokenKind::Ident
+                    && toks[k].text == "fn"
+                    && toks[k + 1].kind == TokenKind::Ident
+                    && names.contains(&toks[k + 1].text)
+                {
+                    if let Some(open) = (k..toks.len()).find(|&j| toks[j].text == "{") {
+                        out.push(k..super::lexer::match_brace(toks, open));
+                    }
+                }
+            }
+            out.sort_by_key(|r| r.start);
+            out
+        }
+        RegionSpec::ImplsOf(name) => {
+            let mut out = Vec::new();
+            let mut k = 0;
+            while k < toks.len() {
+                if toks[k].kind == TokenKind::Ident
+                    && toks[k].text == "impl"
+                    && !in_ranges(k, &tests)
+                {
+                    if let Some(open) = (k..toks.len()).find(|&j| toks[j].text == "{") {
+                        let header_hits = toks[k..open].iter().any(|t| &t.text == name);
+                        let end = super::lexer::match_brace(toks, open);
+                        if header_hits {
+                            out.push(k..end);
+                        }
+                        k = open + 1; // nested impls don't occur; move past header
+                        continue;
+                    }
+                }
+                k += 1;
+            }
+            out
+        }
+    }
+}
+
+/// Compute every configured region fingerprint. Regions that cannot be
+/// resolved become `CV03` findings instead.
+pub fn compute(tree: &SourceTree, cfg: &AuditConfig) -> (Vec<RegionFp>, Vec<Finding>) {
+    let mut fps = Vec::new();
+    let mut findings = Vec::new();
+    for region in &cfg.regions {
+        let file = PathBuf::from(&region.file);
+        let Some(lexed) = tree.files.get(&file) else {
+            findings.push(Finding::new(
+                Rule::Cv03,
+                &file,
+                0,
+                format!("contract region '{}' names a missing file", region.id),
+            ));
+            continue;
+        };
+        let ranges = region_ranges(lexed, &region.spec);
+        if ranges.is_empty() || ranges.iter().all(|r| r.is_empty()) {
+            findings.push(Finding::new(
+                Rule::Cv03,
+                &file,
+                0,
+                format!("contract region '{}' matched no source items", region.id),
+            ));
+            continue;
+        }
+        let mut h = StructuralHasher::new();
+        let mut line = u32::MAX;
+        for r in &ranges {
+            for t in &lexed.tokens[r.clone()] {
+                h.write(t.text.as_bytes());
+                h.write(&[0x1f]);
+                line = line.min(t.line);
+            }
+        }
+        fps.push(RegionFp {
+            id: region.id.clone(),
+            file,
+            line: if line == u32::MAX { 0 } else { line },
+            fp: format!("{:032x}", h.finish128()),
+        });
+    }
+    fps.sort_by(|a, b| a.id.cmp(&b.id));
+    (fps, findings)
+}
+
+/// Read the `const <name>: u32 = N;` contract version out of the
+/// configured file's token stream.
+pub fn extract_version(tree: &SourceTree, cfg: &AuditConfig) -> Result<u32, Finding> {
+    let file = PathBuf::from(&cfg.version_file);
+    let Some(lexed) = tree.files.get(&file) else {
+        return Err(Finding::new(
+            Rule::Cv03,
+            &file,
+            0,
+            format!("contract-version file '{}' not found", cfg.version_file),
+        ));
+    };
+    let toks = &lexed.tokens;
+    for k in 0..toks.len().saturating_sub(5) {
+        if toks[k].text == "const"
+            && toks[k + 1].text == cfg.version_const
+            && toks[k + 2].text == ":"
+            && toks[k + 3].text == "u32"
+            && toks[k + 4].text == "="
+            && toks[k + 5].kind == TokenKind::Number
+        {
+            let raw: String = toks[k + 5].text.chars().filter(|c| *c != '_').collect();
+            return raw.parse::<u32>().map_err(|_| {
+                Finding::new(
+                    Rule::Cv03,
+                    &file,
+                    toks[k + 5].line,
+                    format!("could not parse {} value '{}'", cfg.version_const, toks[k + 5].text),
+                )
+            });
+        }
+    }
+    Err(Finding::new(
+        Rule::Cv03,
+        &file,
+        0,
+        format!("const {} not found in '{}'", cfg.version_const, cfg.version_file),
+    ))
+}
+
+/// Line on which the version const is declared (for `CV04` reporting);
+/// 0 when unknown.
+fn version_line(tree: &SourceTree, cfg: &AuditConfig) -> u32 {
+    tree.files
+        .get(Path::new(&cfg.version_file))
+        .and_then(|l| l.tokens.iter().find(|t| t.text == cfg.version_const))
+        .map(|t| t.line)
+        .unwrap_or(0)
+}
+
+/// FNV-64 checksum over the manifest's canonical content, so a
+/// hand-edited manifest is rejected (`CV02`) rather than trusted.
+fn manifest_checksum(version: u32, fps: &[(String, String)]) -> String {
+    let mut h = StructuralHasher::new();
+    h.write(format!("contract_version={version}").as_bytes());
+    for (id, fp) in fps {
+        h.write(&[0x1f]);
+        h.write(id.as_bytes());
+        h.write(&[0x1e]);
+        h.write(fp.as_bytes());
+    }
+    format!("{:016x}", h.finish())
+}
+
+/// A parsed, checksum-verified manifest.
+pub struct Manifest {
+    pub contract_version: u32,
+    /// (region id, fingerprint), sorted by id.
+    pub regions: Vec<(String, String)>,
+}
+
+/// Parse and verify `ci/contract_fingerprints.json`.
+pub fn read_manifest(path: &Path) -> Result<Manifest, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("manifest unreadable ({e}) — run --bless to create it"))?;
+    let j = Json::parse(&text).map_err(|e| format!("manifest is not valid JSON: {e:?}"))?;
+    let version = j
+        .get("contract_version")
+        .and_then(|v| v.as_usize())
+        .ok_or("manifest missing 'contract_version'")? as u32;
+    let regions_obj = j.get("regions").ok_or("manifest missing 'regions'")?;
+    let mut regions = Vec::new();
+    if let Json::Obj(m) = regions_obj {
+        // insertion-order iteration is fine: pairs are sorted by id below
+        for (k, v) in m.iter() {
+            let fp = v.as_str().ok_or_else(|| format!("region '{k}' fingerprint is not a string"))?;
+            regions.push((k.clone(), fp.to_string()));
+        }
+    } else {
+        return Err("manifest 'regions' is not an object".to_string());
+    }
+    regions.sort();
+    let recorded = j
+        .get("checksum")
+        .and_then(|v| v.as_str())
+        .ok_or("manifest missing 'checksum'")?;
+    let expect = manifest_checksum(version, &regions);
+    if recorded != expect {
+        return Err(format!(
+            "manifest checksum mismatch (recorded {recorded}, content hashes to {expect}) — \
+             the manifest was hand-edited; regenerate it with --bless after a version bump"
+        ));
+    }
+    Ok(Manifest { contract_version: version, regions })
+}
+
+/// Serialize and write a manifest (deterministic: sorted keys via the
+/// `util::json` renderer, trailing newline).
+pub fn write_manifest(path: &Path, version: u32, fps: &[RegionFp]) -> std::io::Result<()> {
+    let pairs: Vec<(String, String)> =
+        fps.iter().map(|r| (r.id.clone(), r.fp.clone())).collect();
+    let regions = Json::obj(
+        pairs.iter().map(|(id, fp)| (id.as_str(), Json::Str(fp.clone()))).collect(),
+    );
+    let j = Json::obj(vec![
+        ("contract_version", Json::Num(version as f64)),
+        ("regions", regions),
+        ("checksum", Json::Str(manifest_checksum(version, &pairs))),
+    ]);
+    std::fs::write(path, format!("{j}\n"))
+}
+
+/// The `--check` half: compare computed fingerprints against the
+/// manifest under the version-bump rule.
+pub fn check(tree: &SourceTree, cfg: &AuditConfig, manifest_path: &Path) -> Vec<Finding> {
+    let (fps, mut findings) = compute(tree, cfg);
+    let current = match extract_version(tree, cfg) {
+        Ok(v) => v,
+        Err(f) => {
+            findings.push(f);
+            return findings;
+        }
+    };
+    let manifest = match read_manifest(manifest_path) {
+        Ok(m) => m,
+        Err(e) => {
+            findings.push(Finding::new(
+                Rule::Cv02,
+                manifest_path,
+                0,
+                e,
+            ));
+            return findings;
+        }
+    };
+    let config_ids: Vec<&str> = fps.iter().map(|f| f.id.as_str()).collect();
+    let manifest_ids: Vec<&str> = manifest.regions.iter().map(|(id, _)| id.as_str()).collect();
+    if config_ids != manifest_ids {
+        findings.push(Finding::new(
+            Rule::Cv02,
+            manifest_path,
+            0,
+            format!(
+                "manifest regions {manifest_ids:?} do not match the configured set \
+                 {config_ids:?} — run --bless after a version bump"
+            ),
+        ));
+        return findings;
+    }
+    if manifest.contract_version != current {
+        findings.push(Finding::new(
+            Rule::Cv04,
+            Path::new(&cfg.version_file),
+            version_line(tree, cfg),
+            format!(
+                "{} is {} but the manifest records contract {} — run --bless to re-pin \
+                 the fingerprints under the new contract",
+                cfg.version_const, current, manifest.contract_version
+            ),
+        ));
+        return findings;
+    }
+    for (computed, (id, recorded)) in fps.iter().zip(&manifest.regions) {
+        debug_assert_eq!(&computed.id, id);
+        if &computed.fp != recorded {
+            findings.push(Finding::new(
+                Rule::Cv01,
+                &computed.file,
+                computed.line,
+                format!(
+                    "contract region '{}' changed without a {} bump (contract still {}) — \
+                     if the change alters any persisted cost/schedule meaning, bump the \
+                     version (with a History entry) and run --bless; a pure refactor that \
+                     provably keeps bit-identity still requires the bump+bless ritual, \
+                     which is what makes it reviewable",
+                    computed.id, cfg.version_const, current
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+/// The `--bless` half. Refuses to regenerate fingerprints at an
+/// unchanged contract version (that would neuter the gate) and refuses
+/// to overwrite a tampered manifest silently.
+pub fn bless(tree: &SourceTree, cfg: &AuditConfig, manifest_path: &Path) -> Result<String, String> {
+    let (fps, findings) = compute(tree, cfg);
+    if !findings.is_empty() {
+        return Err(findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n"));
+    }
+    let current = extract_version(tree, cfg).map_err(|f| f.to_string())?;
+    match read_manifest(manifest_path) {
+        Ok(m) => {
+            let changed: Vec<&str> = fps
+                .iter()
+                .zip(&m.regions)
+                .filter(|(c, (_, rec))| &c.fp != rec)
+                .map(|(c, _)| c.id.as_str())
+                .collect();
+            let same_region_set =
+                fps.len() == m.regions.len()
+                    && fps.iter().zip(&m.regions).all(|(c, (id, _))| &c.id == id);
+            if m.contract_version == current && same_region_set && !changed.is_empty() {
+                return Err(format!(
+                    "refusing to bless: region(s) {changed:?} changed but {} is still {} — \
+                     bump the version first (eval/mod.rs History), then bless",
+                    cfg.version_const, current
+                ));
+            }
+            write_manifest(manifest_path, current, &fps).map_err(|e| e.to_string())?;
+            Ok(format!(
+                "blessed {} region(s) at contract version {} (was {})",
+                fps.len(),
+                current,
+                m.contract_version
+            ))
+        }
+        Err(_) if !manifest_path.exists() => {
+            write_manifest(manifest_path, current, &fps).map_err(|e| e.to_string())?;
+            Ok(format!(
+                "created manifest: {} region(s) at contract version {}",
+                fps.len(),
+                current
+            ))
+        }
+        Err(e) => Err(format!(
+            "refusing to bless over an invalid manifest ({e}); delete \
+             {} to regenerate from scratch",
+            manifest_path.display()
+        )),
+    }
+}

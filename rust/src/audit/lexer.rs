@@ -1,0 +1,448 @@
+//! A lightweight hand-rolled Rust tokenizer — just enough lexical
+//! structure for the contract audit (see the [`super`] module docs), with
+//! the repo's zero-dependency discipline (no syn/proc-macro).
+//!
+//! The token stream deliberately drops comments and whitespace (so doc
+//! edits never trip a contract fingerprint) but records **line comments**
+//! on the side: that is where the `audit:pure` / `audit:allow` marker
+//! convention lives. Block comments are skipped entirely — markers must be
+//! line comments, which keeps the convention greppable and one-per-line.
+//!
+//! The grammar handled is the subset real `rust/src/**` files exercise:
+//! nested block comments, string/char/byte/raw-string literals (so a
+//! banned identifier *inside a string* is never mistaken for code),
+//! lifetimes vs char literals, numeric literals with `_`/exponents, and
+//! the common multi-character operators (`::`, `->`, `..=`, …) merged
+//! into single tokens so rules can match `Instant :: now` robustly.
+
+/// Lexical class of a [`Token`]. Rules match on `Ident`/`Punct` text;
+/// literal classes exist so a pattern can never match inside a literal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Number,
+    /// String / raw-string / byte-string literal (text is the raw source
+    /// slice, quotes included).
+    Str,
+    /// Character or byte-character literal.
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One source token with its 1-indexed line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub text: String,
+    pub kind: TokenKind,
+    pub line: u32,
+}
+
+/// One `//` line comment (leading `//` stripped, trimmed).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+}
+
+/// Result of lexing one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Multi-character operators merged into one `Punct` token, longest first.
+const MULTI_PUNCT: &[&str] = &[
+    "..=", "...", "<<=", ">>=", "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&",
+    "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become single-char
+/// `Punct` tokens and an unterminated literal consumes to end-of-file —
+/// for a linter, graceful degradation beats a parse error (rustc itself
+/// gates compilability in the same CI run).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    while i < b.len() {
+        let c = b[i];
+        // whitespace
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                text: src[start..j].trim().to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // nested block comment
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < b.len() && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw / byte string prefixes: r" r#" b" br" br#" (and rb variants
+        // do not exist in Rust; b'..' byte chars are handled below)
+        if (c == b'r' || c == b'b') && i + 1 < b.len() {
+            let (prefix_len, rest) = if c == b'b' && b[i + 1] == b'r' {
+                (2, i + 2)
+            } else {
+                (1, i + 1)
+            };
+            let is_raw = prefix_len == 2 || c == b'r';
+            if is_raw && rest < b.len() && (b[rest] == b'"' || b[rest] == b'#') {
+                let mut hashes = 0usize;
+                let mut j = rest;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    // scan to closing quote + same number of hashes
+                    let lit_start = i;
+                    let start_line = line;
+                    j += 1;
+                    'scan: while j < b.len() {
+                        if b[j] == b'\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if b[j] == b'"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < b.len() && b[j + 1 + k] == b'#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    out.tokens.push(Token {
+                        text: src[lit_start..j].to_string(),
+                        kind: TokenKind::Str,
+                        line: start_line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            if c == b'b' && b[i + 1] == b'"' {
+                let (j, nl) = scan_quoted(b, i + 1, b'"');
+                out.tokens.push(Token {
+                    text: src[i..j].to_string(),
+                    kind: TokenKind::Str,
+                    line,
+                });
+                line += nl;
+                i = j;
+                continue;
+            }
+            if c == b'b' && b[i + 1] == b'\'' {
+                let (j, nl) = scan_quoted(b, i + 1, b'\'');
+                out.tokens.push(Token {
+                    text: src[i..j].to_string(),
+                    kind: TokenKind::Char,
+                    line,
+                });
+                line += nl;
+                i = j;
+                continue;
+            }
+        }
+        // string literal
+        if c == b'"' {
+            let (j, nl) = scan_quoted(b, i, b'"');
+            out.tokens.push(Token {
+                text: src[i..j].to_string(),
+                kind: TokenKind::Str,
+                line,
+            });
+            line += nl;
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            let next = b.get(i + 1).copied().unwrap_or(0);
+            let is_char = next == b'\\'
+                || (i + 2 < b.len() && b[i + 2] == b'\'' && next != b'\'')
+                || !is_ident_start(next);
+            if is_char {
+                let (j, nl) = scan_quoted(b, i, b'\'');
+                out.tokens.push(Token {
+                    text: src[i..j].to_string(),
+                    kind: TokenKind::Char,
+                    line,
+                });
+                line += nl;
+                i = j;
+                continue;
+            }
+            // lifetime: 'ident (not followed by a closing quote)
+            let mut j = i + 1;
+            while j < b.len() && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                text: src[i..j].to_string(),
+                kind: TokenKind::Lifetime,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < b.len() && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                text: src[i..j].to_string(),
+                kind: TokenKind::Ident,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // number
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < b.len() {
+                let d = b[j];
+                if is_ident_cont(d) {
+                    // exponent sign: 1e-3, 2.5E+7 (not in hex literals)
+                    if (d == b'e' || d == b'E')
+                        && !src[i..j].starts_with("0x")
+                        && j + 1 < b.len()
+                        && (b[j + 1] == b'+' || b[j + 1] == b'-')
+                    {
+                        j += 2;
+                        continue;
+                    }
+                    j += 1;
+                    continue;
+                }
+                // fractional part: '.' followed by a digit (so `0..n`
+                // stays three tokens) and at most one dot per literal
+                if d == b'.'
+                    && j + 1 < b.len()
+                    && b[j + 1].is_ascii_digit()
+                    && !src[i..j].contains('.')
+                {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            out.tokens.push(Token {
+                text: src[i..j].to_string(),
+                kind: TokenKind::Number,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // punctuation: longest multi-char operator first
+        let mut matched = false;
+        for op in MULTI_PUNCT {
+            if src[i..].starts_with(op) {
+                out.tokens.push(Token {
+                    text: (*op).to_string(),
+                    kind: TokenKind::Punct,
+                    line,
+                });
+                i += op.len();
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        out.tokens.push(Token {
+            text: (c as char).to_string(),
+            kind: TokenKind::Punct,
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Scan a quoted literal starting at the opening quote `b[start] ==
+/// quote`, honouring backslash escapes. Returns (index one past the
+/// closing quote, newlines crossed).
+fn scan_quoted(b: &[u8], start: usize, quote: u8) -> (usize, u32) {
+    let mut j = start + 1;
+    let mut nl = 0u32;
+    while j < b.len() {
+        match b[j] {
+            // an escaped newline (string line-continuation) still ends a
+            // source line; clamp so a trailing backslash at EOF does not
+            // step past the end
+            b'\\' => {
+                if b.get(j + 1) == Some(&b'\n') {
+                    nl += 1;
+                }
+                j = (j + 2).min(b.len());
+            }
+            b'\n' => {
+                nl += 1;
+                j += 1;
+            }
+            c if c == quote => return (j + 1, nl),
+            _ => j += 1,
+        }
+    }
+    (j, nl)
+}
+
+/// Index one past the matching close brace for the open brace at
+/// `tokens[open]` (which must be `{`). Returns `tokens.len()` when
+/// unbalanced — callers treat the tail as the block.
+pub fn match_brace(tokens: &[Token], open: usize) -> usize {
+    debug_assert_eq!(tokens[open].text, "{");
+    let mut depth = 0isize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        if t.kind == TokenKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    tokens.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idents_strings_and_comments_separate() {
+        let l = lex("fn f() { let s = \"Instant::now\"; } // audit:pure");
+        let idents: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["fn", "f", "let", "s"]);
+        // the banned-looking text stays a single Str token
+        assert!(l
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Str && t.text.contains("Instant")));
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].text, "audit:pure");
+    }
+
+    #[test]
+    fn lines_are_tracked_through_literals_and_comments() {
+        let src = "a\n\"two\nline\"\n/* b\nlock */ c\n'x' 'life d";
+        let l = lex(src);
+        let find = |name: &str| l.tokens.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("c"), 5);
+        assert_eq!(find("d"), 6);
+        assert!(l.tokens.iter().any(|t| t.kind == TokenKind::Char && t.line == 6));
+        assert!(l.tokens.iter().any(|t| t.kind == TokenKind::Lifetime));
+    }
+
+    #[test]
+    fn multi_char_punct_merges() {
+        let l = lex("Instant::now() -> x..=y");
+        let texts: Vec<&str> = l.tokens.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"::"));
+        assert!(texts.contains(&"->"));
+        assert!(texts.contains(&"..="));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let l = lex("0..n 1.5e-3 0x1f");
+        let nums: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Number)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, ["0", "1.5e-3", "0x1f"]);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_counts_as_a_line() {
+        // string line-continuations (`\` at end of line) still end a
+        // source line — finding lines after them must not drift
+        let l = lex("let s = \"a\\\nb\\\nc\";\nlet after = 1;");
+        assert_eq!(l.tokens.iter().find(|t| t.text == "after").unwrap().line, 4);
+    }
+
+    #[test]
+    fn raw_strings_and_nesting() {
+        let l = lex(r##"let s = r#"quote " inside"#; /* outer /* inner */ still */ end"##);
+        assert!(l.tokens.iter().any(|t| t.kind == TokenKind::Str && t.text.starts_with("r#")));
+        assert!(l.tokens.iter().any(|t| t.text == "end"));
+    }
+
+    #[test]
+    fn brace_matching() {
+        let l = lex("fn f() { if x { y } else { z } } fn g() {}");
+        let open = l.tokens.iter().position(|t| t.text == "{").unwrap();
+        let end = match_brace(&l.tokens, open);
+        // the token right after f's body is `fn`
+        assert_eq!(l.tokens[end].text, "fn");
+    }
+}

@@ -1,0 +1,544 @@
+//! `monet-audit` — a std-only static contract checker for the standing
+//! contracts in `ROADMAP.md`, run in CI before the test matrix (the
+//! `contract-audit` job) and as `cargo run --bin monet_audit`.
+//!
+//! The runtime test suite pins bit-identity *within one build*; it cannot
+//! catch a cross-build snapshot poisoning (a cost-formula edit that lands
+//! without a [`crate::eval::CACHE_CONTRACT_VERSION`] bump) or a
+//! nondeterminism bug on a path the tests don't exercise. This module
+//! closes that gap with three typed, `file:line`-reporting rule families
+//! over a hand-rolled token stream ([`lexer`] — no syn/proc-macro,
+//! matching the crate's zero-dependency discipline):
+//!
+//! * **CV — contract-version drift** ([`fingerprint`]): the
+//!   contract-scoped source regions (cost formulas, energy constants,
+//!   cache-key construction, the stage splitter, tie-break/transfer
+//!   rules) are fingerprinted into `ci/contract_fingerprints.json`; any
+//!   token-level change to a scoped region without a matching
+//!   `CACHE_CONTRACT_VERSION` bump fails the build. `--bless`
+//!   regenerates the manifest only when the version was bumped.
+//! * **PU — evaluator purity** ([`purity`]): inside declared purity
+//!   scopes (`// audit:pure` markers on `Evaluate` impls, the
+//!   `group_cost`/`node_cost` formulas, `serve::api::answer`), clock
+//!   reads, environment reads, file IO, RNG construction and
+//!   `CacheStats` reads are forbidden.
+//! * **DT — determinism** ([`determinism`]): NaN-panicking
+//!   `partial_cmp().unwrap()` comparators and order-sensitive iteration
+//!   over `HashMap`/`HashSet` without an order-restoring consumer.
+//!
+//! ## Marker convention
+//!
+//! Markers are **line comments** (block comments are not scanned):
+//!
+//! * `// audit:pure` — the next `fn` or `impl` item is a purity scope;
+//!   every token of its body is checked against the banned-pattern list.
+//! * `// audit:allow(RULE_ID): reason` — suppress one finding of
+//!   `RULE_ID` on the same or the next line. The reason is mandatory and
+//!   echoed by the tool (`--verbose`); an allow that suppresses nothing
+//!   is itself an error (`AU01`), so stale waivers cannot accumulate.
+//!   Only `PU01`/`DT01`/`DT02` are allowable — contract-version rules
+//!   cannot be waived inline, by design.
+//!
+//! A per-file module allowlist ([`AuditConfig::module_allow`]) carries
+//! the few whole-file waivers (each with a reason string the tool
+//! echoes); everything else must be justified at the violation site.
+//!
+//! The rule set is self-tested against known-bad fixtures in
+//! `tests/audit.rs`, and the repo tip is pinned clean there too.
+
+pub mod determinism;
+pub mod fingerprint;
+pub mod lexer;
+pub mod purity;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Lexed};
+
+/// Typed rule identifiers. The short ids are the stable interface: they
+/// appear in findings, allow markers, CI annotations and `docs/AUDIT.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Contract-scoped region changed without a `CACHE_CONTRACT_VERSION`
+    /// bump (fingerprint mismatch at equal versions).
+    Cv01,
+    /// Fingerprint manifest missing, unparseable, tampered (checksum
+    /// mismatch) or not covering the configured region set.
+    Cv02,
+    /// A configured contract region was not found in the source tree.
+    Cv03,
+    /// `CACHE_CONTRACT_VERSION` was bumped but the manifest still records
+    /// the old contract — run `--bless`.
+    Cv04,
+    /// Impure construct (clock / env / file IO / RNG / `CacheStats`)
+    /// inside a declared purity scope.
+    Pu01,
+    /// A required purity scope is missing its `audit:pure` marker (or the
+    /// item itself was not found).
+    Pu02,
+    /// NaN-panicking `partial_cmp().unwrap()`/`expect()` comparator.
+    Dt01,
+    /// Order-sensitive iteration over a `HashMap`/`HashSet` value with no
+    /// order-restoring consumer in sight.
+    Dt02,
+    /// Malformed, dangling or unused audit marker.
+    Au01,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Cv01 => "CV01",
+            Rule::Cv02 => "CV02",
+            Rule::Cv03 => "CV03",
+            Rule::Cv04 => "CV04",
+            Rule::Pu01 => "PU01",
+            Rule::Pu02 => "PU02",
+            Rule::Dt01 => "DT01",
+            Rule::Dt02 => "DT02",
+            Rule::Au01 => "AU01",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Rule> {
+        Some(match s {
+            "CV01" => Rule::Cv01,
+            "CV02" => Rule::Cv02,
+            "CV03" => Rule::Cv03,
+            "CV04" => Rule::Cv04,
+            "PU01" => Rule::Pu01,
+            "PU02" => Rule::Pu02,
+            "DT01" => Rule::Dt01,
+            "DT02" => Rule::Dt02,
+            "AU01" => Rule::Au01,
+            _ => return None,
+        })
+    }
+
+    /// Rules an inline `audit:allow` marker may waive. Contract-version
+    /// and marker-hygiene rules are deliberately not waivable.
+    pub fn allowable(self) -> bool {
+        matches!(self, Rule::Pu01 | Rule::Dt01 | Rule::Dt02)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One lint finding. `allowed` is `Some(reason)` when a marker or module
+/// allowlist entry waived it — waived findings are not failures but are
+/// still reported (`--verbose`) with the reason echoed.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Path relative to the audited root (`src/...`).
+    pub file: PathBuf,
+    /// 1-indexed line (0 = file-level finding).
+    pub line: u32,
+    pub message: String,
+    pub allowed: Option<String>,
+}
+
+impl Finding {
+    pub fn new(rule: Rule, file: &Path, line: u32, message: impl Into<String>) -> Finding {
+        Finding { rule, file: file.to_path_buf(), line, message: message.into(), allowed: None }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.allowed.is_none()
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}:{} {}", self.rule, self.file.display(), self.line, self.message)?;
+        if let Some(r) = &self.allowed {
+            write!(f, " [allowed: {r}]")?;
+        }
+        Ok(())
+    }
+}
+
+/// What an `audit:pure` requirement anchors to.
+#[derive(Debug, Clone)]
+pub enum ItemSpec {
+    /// `fn <name>` (first match outside `mod tests`).
+    Fn(String),
+    /// `impl <trait> for <type>` — both idents must appear in the impl
+    /// header (before the body brace).
+    ImplTraitFor(String, String),
+}
+
+impl fmt::Display for ItemSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ItemSpec::Fn(n) => write!(f, "fn {n}"),
+            ItemSpec::ImplTraitFor(t, ty) => write!(f, "impl {t} for {ty}"),
+        }
+    }
+}
+
+/// A purity scope the audited tree is required to declare (`PU02` when
+/// the marker is missing).
+#[derive(Debug, Clone)]
+pub struct RequiredScope {
+    pub file: String,
+    pub item: ItemSpec,
+}
+
+/// Whole-file waiver for one rule, with a reason the tool echoes.
+#[derive(Debug, Clone)]
+pub struct ModuleAllow {
+    pub file: String,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// Everything the audit needs to know about a tree: the contract regions
+/// to fingerprint, where the contract version lives, the purity scopes
+/// that must exist, and the module allowlist. [`default_config`] is the
+/// MONET instance; fixture tests build tiny ones.
+#[derive(Debug, Clone, Default)]
+pub struct AuditConfig {
+    pub regions: Vec<fingerprint::Region>,
+    /// File (relative to root) holding the contract-version const.
+    pub version_file: String,
+    /// Name of the `const <name>: u32` to read.
+    pub version_const: String,
+    pub required_scopes: Vec<RequiredScope>,
+    pub module_allow: Vec<ModuleAllow>,
+}
+
+/// The MONET audit configuration: the standing contracts of `ROADMAP.md`
+/// as machine-checkable scopes. Region ids are stable — they key the
+/// fingerprint manifest and appear in `docs/AUDIT.md`.
+pub fn default_config() -> AuditConfig {
+    use fingerprint::{Region, RegionSpec};
+    let fns = |names: &[&str]| RegionSpec::Fns(names.iter().map(|s| s.to_string()).collect());
+    AuditConfig {
+        regions: vec![
+            // the cost formulas: any value change is a contract bump
+            Region::new("cost.node_cost", "src/cost/mod.rs", fns(&["node_cost"])),
+            Region::new("scheduler.group_cost", "src/scheduler/engine.rs", fns(&["group_cost"])),
+            // tie-breaks, transfer rules and memory accounting: the GA
+            // warm-start memo persists whole-schedule() objectives, so
+            // scheduler behaviour is load-bearing for snapshots
+            Region::new(
+                "scheduler.schedule",
+                "src/scheduler/engine.rs",
+                fns(&["schedule_with_cache", "group_placements"]),
+            ),
+            Region::new(
+                "hardware.energy_constants",
+                "src/hardware/energy.rs",
+                RegionSpec::WholeFile,
+            ),
+            // cache-key construction: both the per-field hash functions
+            // and the hasher that defines what a key byte means
+            Region::new(
+                "eval.cache_key",
+                "src/eval/mod.rs",
+                fns(&["hash_env", "hash_group_node", "hash_core_class"]),
+            ),
+            Region::new(
+                "eval.structural_hasher",
+                "src/eval/cost_cache.rs",
+                RegionSpec::ImplsOf("StructuralHasher".to_string()),
+            ),
+            // the splitter decides every persisted stage shape (the v2→v3
+            // bump in eval/mod.rs history)
+            Region::new(
+                "parallelism.splitter",
+                "src/parallelism/mod.rs",
+                fns(&["split_stages", "split_stages_balanced"]),
+            ),
+            // fabric constants feed scheduled numbers via the collective
+            // model (ROADMAP item 3 re-derives these)
+            Region::new(
+                "parallelism.link_tiers",
+                "src/parallelism/mod.rs",
+                fns(&["cluster", "allreduce_cycles"]),
+            ),
+        ],
+        version_file: "src/eval/mod.rs".to_string(),
+        version_const: "CACHE_CONTRACT_VERSION".to_string(),
+        required_scopes: vec![
+            RequiredScope {
+                file: "src/cost/mod.rs".into(),
+                item: ItemSpec::Fn("node_cost".into()),
+            },
+            RequiredScope {
+                file: "src/scheduler/engine.rs".into(),
+                item: ItemSpec::Fn("group_cost".into()),
+            },
+            RequiredScope {
+                file: "src/dse/sweep.rs".into(),
+                item: ItemSpec::ImplTraitFor("Evaluate".into(), "SweepEval".into()),
+            },
+            RequiredScope {
+                file: "src/dse/sweep.rs".into(),
+                item: ItemSpec::ImplTraitFor("Evaluate".into(), "ClusterEval".into()),
+            },
+            RequiredScope {
+                file: "src/dse/sweep.rs".into(),
+                item: ItemSpec::ImplTraitFor("Evaluate".into(), "HeteroEval".into()),
+            },
+            RequiredScope {
+                file: "src/serve/api.rs".into(),
+                item: ItemSpec::Fn("answer".into()),
+            },
+        ],
+        module_allow: vec![ModuleAllow {
+            file: "src/util/json.rs".into(),
+            rule: Rule::Dt02,
+            reason: "Json::Obj iteration is always key-sorted before anything escapes \
+                     (Display sorts; parse only inserts)"
+                .into(),
+        }],
+    }
+}
+
+/// A parsed audit marker.
+#[derive(Debug, Clone)]
+pub enum Marker {
+    /// `audit:pure` at this line — scopes the next `fn`/`impl` item.
+    Pure { line: u32 },
+    /// `audit:allow(RULE): reason` at this line.
+    Allow { line: u32, rule: Rule, reason: String },
+}
+
+/// Scan a file's line comments for markers. Malformed markers (an
+/// `audit:` comment that parses as neither form, a missing reason, an
+/// unknown or non-allowable rule) become `AU01` findings immediately.
+pub fn parse_markers(file: &Path, lexed: &Lexed) -> (Vec<Marker>, Vec<Finding>) {
+    let mut markers = Vec::new();
+    let mut findings = Vec::new();
+    for c in &lexed.comments {
+        // a marker is a comment that STARTS with `audit:` — doc comments
+        // and prose that merely mention the convention never match
+        if !c.text.starts_with("audit:") {
+            continue;
+        }
+        let body = c.text.as_str();
+        if body.starts_with("audit:pure") {
+            markers.push(Marker::Pure { line: c.line });
+            continue;
+        }
+        if let Some(rest) = body.strip_prefix("audit:allow(") {
+            let Some(close) = rest.find(')') else {
+                findings.push(Finding::new(
+                    Rule::Au01,
+                    file,
+                    c.line,
+                    "malformed audit:allow marker: missing ')'",
+                ));
+                continue;
+            };
+            let rule_id = &rest[..close];
+            let Some(rule) = Rule::from_id(rule_id) else {
+                findings.push(Finding::new(
+                    Rule::Au01,
+                    file,
+                    c.line,
+                    format!("audit:allow names unknown rule '{rule_id}'"),
+                ));
+                continue;
+            };
+            if !rule.allowable() {
+                findings.push(Finding::new(
+                    Rule::Au01,
+                    file,
+                    c.line,
+                    format!("rule {rule} cannot be waived with audit:allow"),
+                ));
+                continue;
+            }
+            let reason = rest[close + 1..].trim_start_matches(':').trim().to_string();
+            if reason.is_empty() {
+                findings.push(Finding::new(
+                    Rule::Au01,
+                    file,
+                    c.line,
+                    format!("audit:allow({rule}) requires a reason after ':'"),
+                ));
+                continue;
+            }
+            markers.push(Marker::Allow { line: c.line, rule, reason });
+            continue;
+        }
+        findings.push(Finding::new(
+            Rule::Au01,
+            file,
+            c.line,
+            format!("unrecognized audit marker: '{}'", c.text),
+        ));
+    }
+    (markers, findings)
+}
+
+/// Recursively list `.rs` files under `root/src`, sorted for
+/// deterministic reports.
+pub fn rust_sources(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join("src")];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> =
+            std::fs::read_dir(&dir)?.collect::<Result<Vec<_>, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lexed sources of one audit run, keyed by root-relative path.
+pub struct SourceTree {
+    pub root: PathBuf,
+    pub files: BTreeMap<PathBuf, Lexed>,
+}
+
+impl SourceTree {
+    /// Read and tokenize every file under `root/src`.
+    pub fn load(root: &Path) -> std::io::Result<SourceTree> {
+        let mut files = BTreeMap::new();
+        for p in rust_sources(root)? {
+            let text = std::fs::read_to_string(&p)?;
+            let rel = p.strip_prefix(root).unwrap_or(&p).to_path_buf();
+            files.insert(rel, lex(&text));
+        }
+        Ok(SourceTree { root: root.to_path_buf(), files })
+    }
+}
+
+/// Run every rule family over `root/src` against `manifest` and apply the
+/// allow mechanisms. The returned list contains *all* findings; callers
+/// treat those with [`Finding::is_active`] as failures.
+pub fn run_audit(root: &Path, cfg: &AuditConfig, manifest: &Path) -> std::io::Result<Vec<Finding>> {
+    let tree = SourceTree::load(root)?;
+    let mut findings = Vec::new();
+    let mut all_markers: BTreeMap<PathBuf, Vec<Marker>> = BTreeMap::new();
+    for (file, lexed) in &tree.files {
+        let (markers, marker_findings) = parse_markers(file, lexed);
+        findings.extend(marker_findings);
+        all_markers.insert(file.clone(), markers);
+    }
+
+    if !cfg.regions.is_empty() {
+        findings.extend(fingerprint::check(&tree, cfg, manifest));
+    }
+    findings.extend(purity::check(&tree, cfg, &all_markers));
+    findings.extend(determinism::check(&tree));
+
+    apply_allows(&mut findings, cfg, &all_markers);
+    findings.sort_by(|a, b| {
+        (a.rule, &a.file, a.line).cmp(&(b.rule, &b.file, b.line))
+    });
+    Ok(findings)
+}
+
+/// Waive findings covered by inline `audit:allow` markers (same or next
+/// line) or the module allowlist; flag unused inline allows as `AU01`.
+fn apply_allows(
+    findings: &mut Vec<Finding>,
+    cfg: &AuditConfig,
+    markers: &BTreeMap<PathBuf, Vec<Marker>>,
+) {
+    let mut used: BTreeMap<(PathBuf, u32, String), bool> = BTreeMap::new();
+    for (file, ms) in markers {
+        for m in ms {
+            if let Marker::Allow { line, rule, .. } = m {
+                used.insert((file.clone(), *line, rule.id().to_string()), false);
+            }
+        }
+    }
+    for f in findings.iter_mut() {
+        if f.allowed.is_some() || !f.rule.allowable() {
+            continue;
+        }
+        if let Some(ms) = markers.get(&f.file) {
+            for m in ms {
+                if let Marker::Allow { line, rule, reason } = m {
+                    if *rule == f.rule && (*line == f.line || *line + 1 == f.line) {
+                        f.allowed = Some(reason.clone());
+                        used.insert((f.file.clone(), *line, rule.id().to_string()), true);
+                        break;
+                    }
+                }
+            }
+        }
+        if f.allowed.is_none() {
+            if let Some(ma) = cfg
+                .module_allow
+                .iter()
+                .find(|ma| ma.rule == f.rule && Path::new(&ma.file) == f.file)
+            {
+                f.allowed = Some(format!("module allowlist: {}", ma.reason));
+            }
+        }
+    }
+    for ((file, line, rule), was_used) in used {
+        if !was_used {
+            findings.push(Finding::new(
+                Rule::Au01,
+                &file,
+                line,
+                format!("audit:allow({rule}) suppresses nothing — remove the stale waiver"),
+            ));
+        }
+    }
+}
+
+/// Find the body token range of the item (fn/impl) that starts at or
+/// after `line` — the scope an `audit:pure` marker at `line` declares.
+/// Returns `(item_token_index, body_range)` or `None`.
+pub fn item_after_line(lexed: &Lexed, line: u32) -> Option<(usize, std::ops::Range<usize>)> {
+    let toks = &lexed.tokens;
+    let start = toks.iter().position(|t| t.line > line)?;
+    let item = (start..toks.len()).find(|&k| {
+        toks[k].kind == lexer::TokenKind::Ident
+            && (toks[k].text == "fn" || toks[k].text == "impl")
+    })?;
+    let open = (item..toks.len()).find(|&k| toks[k].text == "{")?;
+    let end = lexer::match_brace(toks, open);
+    Some((item, open..end))
+}
+
+/// Token ranges of `mod tests { ... }` blocks — excluded from both
+/// fingerprint regions and item resolution so test-code edits and
+/// test-local helpers never alias a contract region.
+pub fn test_mod_ranges(lexed: &Lexed) -> Vec<std::ops::Range<usize>> {
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+    let mut k = 0;
+    while k + 2 < toks.len() {
+        if toks[k].text == "mod"
+            && toks[k].kind == lexer::TokenKind::Ident
+            && toks[k + 1].text == "tests"
+            && toks[k + 2].text == "{"
+        {
+            let end = lexer::match_brace(toks, k + 2);
+            out.push(k..end);
+            k = end;
+        } else {
+            k += 1;
+        }
+    }
+    out
+}
+
+/// True when token index `k` falls inside any of `ranges`.
+pub fn in_ranges(k: usize, ranges: &[std::ops::Range<usize>]) -> bool {
+    ranges.iter().any(|r| r.contains(&k))
+}

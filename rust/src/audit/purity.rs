@@ -1,0 +1,280 @@
+//! Evaluator-purity lint (rules `PU01`/`PU02`).
+//!
+//! The `dse::engine::Evaluate` rustdoc and the `serve` module contract
+//! both state a purity rule in prose: evaluators and query handlers must
+//! be pure functions of their inputs — no clock, no process environment,
+//! no file IO, no RNG construction, no `CacheStats` reads (stats vary
+//! with cache temperature; reading them inside an answer breaks the
+//! warm-daemon ≡ one-shot bit-identity bar). Violations break the
+//! 1/2/8-worker bit-identity matrix *only on exercised paths*; this lint
+//! checks every token of every declared scope.
+//!
+//! Scopes are declared with a `// audit:pure` line comment immediately
+//! above a `fn` or `impl` item (the whole body is the scope). The
+//! [`super::AuditConfig::required_scopes`] list pins the scopes that must
+//! exist — deleting a marker is `PU02`, not a silent un-scoping.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use super::lexer::{Lexed, TokenKind};
+use super::{
+    in_ranges, item_after_line, test_mod_ranges, AuditConfig, Finding, ItemSpec, Marker, Rule,
+    SourceTree,
+};
+
+/// Token patterns forbidden inside a purity scope. Matching is over
+/// `Ident`/`Punct` token text only — a banned name inside a string
+/// literal is one `Str` token and can never match.
+const BANNED: &[(&[&str], &str)] = &[
+    (&["Instant", "::", "now"], "clock read (Instant::now)"),
+    (&["SystemTime"], "clock read (SystemTime)"),
+    (&["std", "::", "env"], "process-environment read (std::env)"),
+    (&["env", "::", "var"], "process-environment read (env::var)"),
+    (&["std", "::", "fs"], "file IO (std::fs)"),
+    (&["fs", "::"], "file IO (fs::)"),
+    (&["File", "::"], "file IO (File::)"),
+    (&["OpenOptions"], "file IO (OpenOptions)"),
+    (&["read_dir"], "file IO (read_dir)"),
+    (&["read_to_string"], "file IO (read_to_string)"),
+    (&["Rng", "::"], "RNG construction (Rng::)"),
+    (&["seed_from_u64"], "RNG construction (seed_from_u64)"),
+    (&["CacheStats"], "CacheStats read"),
+    (&[".", "stats", "("], "CacheStats read (.stats())"),
+    (&["hit_rate"], "CacheStats read (hit_rate)"),
+    (&["thread", "::", "sleep"], "timing dependence (thread::sleep)"),
+];
+
+/// A resolved purity scope.
+struct Scope {
+    file: PathBuf,
+    /// Token index of the `fn`/`impl` keyword.
+    item: usize,
+    body: std::ops::Range<usize>,
+    marker_line: u32,
+}
+
+/// Resolve every `audit:pure` marker to the item it scopes. Dangling
+/// markers become `AU01`.
+fn resolve_scopes(
+    tree: &SourceTree,
+    markers: &BTreeMap<PathBuf, Vec<Marker>>,
+) -> (Vec<Scope>, Vec<Finding>) {
+    let mut scopes = Vec::new();
+    let mut findings = Vec::new();
+    for (file, ms) in markers {
+        let lexed = &tree.files[file];
+        for m in ms {
+            let Marker::Pure { line } = m else { continue };
+            match item_after_line(lexed, *line) {
+                Some((item, body)) => scopes.push(Scope {
+                    file: file.clone(),
+                    item,
+                    body,
+                    marker_line: *line,
+                }),
+                None => findings.push(Finding::new(
+                    Rule::Au01,
+                    file,
+                    *line,
+                    "dangling audit:pure marker: no fn/impl item follows it",
+                )),
+            }
+        }
+    }
+    (scopes, findings)
+}
+
+/// Token index of the item a [`RequiredScope`](super::RequiredScope)
+/// spec names, outside `mod tests`.
+fn find_item(lexed: &Lexed, item: &ItemSpec) -> Option<usize> {
+    let toks = &lexed.tokens;
+    let tests = test_mod_ranges(lexed);
+    match item {
+        ItemSpec::Fn(name) => (0..toks.len().saturating_sub(1)).find(|&k| {
+            !in_ranges(k, &tests)
+                && toks[k].kind == TokenKind::Ident
+                && toks[k].text == "fn"
+                && toks[k + 1].text == *name
+        }),
+        ItemSpec::ImplTraitFor(trait_name, type_name) => (0..toks.len()).find(|&k| {
+            if in_ranges(k, &tests) || toks[k].kind != TokenKind::Ident || toks[k].text != "impl" {
+                return false;
+            }
+            let Some(open) = (k..toks.len()).find(|&j| toks[j].text == "{") else {
+                return false;
+            };
+            let header = &toks[k..open];
+            header.iter().any(|t| &t.text == trait_name)
+                && header.iter().any(|t| &t.text == type_name)
+        }),
+    }
+}
+
+/// Run the purity lint: scope resolution, required-scope presence
+/// (`PU02`), banned-pattern scan (`PU01`, deduped per line).
+pub fn check(
+    tree: &SourceTree,
+    cfg: &AuditConfig,
+    markers: &BTreeMap<PathBuf, Vec<Marker>>,
+) -> Vec<Finding> {
+    let (scopes, mut findings) = resolve_scopes(tree, markers);
+
+    for req in &cfg.required_scopes {
+        let file = PathBuf::from(&req.file);
+        let Some(lexed) = tree.files.get(&file) else {
+            findings.push(Finding::new(
+                Rule::Pu02,
+                &file,
+                0,
+                format!("required purity scope '{}' names a missing file", req.item),
+            ));
+            continue;
+        };
+        let Some(item) = find_item(lexed, &req.item) else {
+            findings.push(Finding::new(
+                Rule::Pu02,
+                &file,
+                0,
+                format!("required purity scope '{}' not found in this file", req.item),
+            ));
+            continue;
+        };
+        if !scopes.iter().any(|s| s.file == file && s.item == item) {
+            findings.push(Finding::new(
+                Rule::Pu02,
+                &file,
+                lexed.tokens[item].line,
+                format!(
+                    "'{}' must carry an `// audit:pure` marker (declared purity contract)",
+                    req.item
+                ),
+            ));
+        }
+    }
+
+    for scope in &scopes {
+        let lexed = &tree.files[&scope.file];
+        let toks = &lexed.tokens;
+        let mut hit_lines: Vec<u32> = Vec::new();
+        for k in scope.body.clone() {
+            for (pat, why) in BANNED {
+                if k + pat.len() > scope.body.end {
+                    continue;
+                }
+                let m = pat.iter().zip(&toks[k..k + pat.len()]).all(|(p, t)| {
+                    matches!(t.kind, TokenKind::Ident | TokenKind::Punct) && t.text == *p
+                });
+                if m && !hit_lines.contains(&toks[k].line) {
+                    hit_lines.push(toks[k].line);
+                    findings.push(Finding::new(
+                        Rule::Pu01,
+                        &scope.file,
+                        toks[k].line,
+                        format!(
+                            "{why} inside the purity scope declared at line {} — \
+                             evaluator/handler results must be pure functions of their inputs",
+                            scope.marker_line
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::lexer::lex;
+    use crate::audit::parse_markers;
+
+    fn tree_of(file: &str, src: &str) -> SourceTree {
+        let mut files = BTreeMap::new();
+        files.insert(PathBuf::from(file), lex(src));
+        SourceTree { root: PathBuf::from("."), files }
+    }
+
+    fn markers_of(tree: &SourceTree) -> BTreeMap<PathBuf, Vec<Marker>> {
+        tree.files
+            .iter()
+            .map(|(f, l)| (f.clone(), parse_markers(f, l).0))
+            .collect()
+    }
+
+    #[test]
+    fn banned_in_scope_flagged_outside_ignored() {
+        let src = "
+fn free() { let t = Instant::now(); }
+// audit:pure
+fn pure_one(x: u64) -> u64 { let t = Instant::now(); x }
+";
+        let tree = tree_of("src/a.rs", src);
+        let cfg = AuditConfig::default();
+        let fs = check(&tree, &cfg, &markers_of(&tree));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::Pu01);
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn string_literals_never_match() {
+        let src = "
+// audit:pure
+fn pure_one() -> &'static str { \"Instant::now SystemTime fs::read\" }
+";
+        let tree = tree_of("src/a.rs", src);
+        let fs = check(&tree, &AuditConfig::default(), &markers_of(&tree));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn required_scope_missing_marker_is_pu02() {
+        let src = "fn answer() {}";
+        let tree = tree_of("src/api.rs", src);
+        let cfg = AuditConfig {
+            required_scopes: vec![super::super::RequiredScope {
+                file: "src/api.rs".into(),
+                item: ItemSpec::Fn("answer".into()),
+            }],
+            ..Default::default()
+        };
+        let fs = check(&tree, &cfg, &markers_of(&tree));
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::Pu02);
+    }
+
+    #[test]
+    fn impl_scope_covers_whole_block() {
+        let src = "
+// audit:pure
+impl Evaluate for SweepEval {
+    fn evaluate(&self) { self.cache.stats(); }
+}
+";
+        let tree = tree_of("src/s.rs", src);
+        let cfg = AuditConfig {
+            required_scopes: vec![super::super::RequiredScope {
+                file: "src/s.rs".into(),
+                item: ItemSpec::ImplTraitFor("Evaluate".into(), "SweepEval".into()),
+            }],
+            ..Default::default()
+        };
+        let fs = check(&tree, &cfg, &markers_of(&tree));
+        // PU01 on .stats(), no PU02 (the marker is present)
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::Pu01);
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn dangling_marker_is_au01() {
+        let src = "// audit:pure\n";
+        let tree = tree_of("src/a.rs", src);
+        let fs = check(&tree, &AuditConfig::default(), &markers_of(&tree));
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::Au01);
+    }
+}

@@ -71,6 +71,7 @@ pub fn apply_checkpointing(tg: &TrainingGraph, plan: &CheckpointPlan) -> Graph {
     // 1. recompute closure over all dropped activations
     let mut closure: HashSet<NodeId> = HashSet::new();
     let mut stack: Vec<NodeId> = plan
+        // audit:allow(DT02): seeds a DFS whose output is the `closure` set — membership is visit-order-independent, and every consumer below iterates it sorted (`closure_sorted`) or via `topo_order`
         .recompute
         .iter()
         .copied()

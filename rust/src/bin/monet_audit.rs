@@ -1,0 +1,164 @@
+//! `monet-audit` — static contract checker for the standing contracts
+//! (see `docs/AUDIT.md` and the `monet::audit` module docs).
+//!
+//! ```text
+//! monet_audit [--check | --bless] [--root DIR] [--manifest FILE]
+//!             [--github] [--prefix P] [--verbose]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 active findings (or bless refused), 2 usage /
+//! IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use monet::audit::{self, default_config, fingerprint, Finding, SourceTree};
+
+const USAGE: &str = "monet-audit: static contract checker (docs/AUDIT.md)
+
+USAGE:
+    monet_audit [--check] [OPTIONS]     verify the standing contracts (default)
+    monet_audit --bless [OPTIONS]       re-pin contract fingerprints after a
+                                        CACHE_CONTRACT_VERSION bump
+
+OPTIONS:
+    --root DIR        crate root holding src/ (default .)
+    --manifest FILE   fingerprint manifest (default ../ci/contract_fingerprints.json)
+    --github          emit GitHub Actions annotations, grouped per rule
+    --prefix P        path prefix for annotations (default rust/)
+    --verbose         also print waived findings with their allow reasons
+    --help            this text
+";
+
+struct Opts {
+    bless: bool,
+    root: PathBuf,
+    manifest: PathBuf,
+    github: bool,
+    prefix: String,
+    verbose: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        bless: false,
+        root: PathBuf::from("."),
+        manifest: PathBuf::from("../ci/contract_fingerprints.json"),
+        github: false,
+        prefix: "rust/".to_string(),
+        verbose: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => opts.bless = false,
+            "--bless" => opts.bless = true,
+            "--github" => opts.github = true,
+            "--verbose" => opts.verbose = true,
+            "--root" => opts.root = PathBuf::from(args.next().ok_or("--root needs a value")?),
+            "--manifest" => {
+                opts.manifest = PathBuf::from(args.next().ok_or("--manifest needs a value")?)
+            }
+            "--prefix" => opts.prefix = args.next().ok_or("--prefix needs a value")?,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument '{other}'\n\n{USAGE}")),
+        }
+    }
+    Ok(opts)
+}
+
+fn print_findings(findings: &[Finding], opts: &Opts) {
+    let active: Vec<&Finding> = findings.iter().filter(|f| f.is_active()).collect();
+    let waived: Vec<&Finding> = findings.iter().filter(|f| !f.is_active()).collect();
+
+    let mut last_rule = None;
+    for f in &active {
+        if opts.github && last_rule != Some(f.rule) {
+            if last_rule.is_some() {
+                println!("::endgroup::");
+            }
+            println!("::group::rule {}", f.rule);
+            last_rule = Some(f.rule);
+        }
+        println!("{f}");
+        if opts.github {
+            println!(
+                "::error file={}{},line={},title={}::{}",
+                opts.prefix,
+                f.file.display(),
+                f.line.max(1),
+                f.rule,
+                f.message.replace('\n', " ")
+            );
+        }
+    }
+    if opts.github && last_rule.is_some() {
+        println!("::endgroup::");
+    }
+    if opts.verbose {
+        for f in &waived {
+            println!("{f}");
+        }
+    }
+    if active.is_empty() {
+        println!(
+            "monet-audit: clean ({} waived finding(s) with documented reasons)",
+            waived.len()
+        );
+    } else {
+        println!(
+            "monet-audit: {} active finding(s), {} waived",
+            active.len(),
+            waived.len()
+        );
+    }
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = default_config();
+
+    if opts.bless {
+        let tree = match SourceTree::load(&opts.root) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("monet-audit: cannot read {}: {e}", opts.root.display());
+                return ExitCode::from(2);
+            }
+        };
+        return match fingerprint::bless(&tree, &cfg, &opts.manifest) {
+            Ok(msg) => {
+                println!("monet-audit: {msg}");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("monet-audit: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    match audit::run_audit(&opts.root, &cfg, &opts.manifest) {
+        Ok(findings) => {
+            print_findings(&findings, &opts);
+            if findings.iter().any(|f| f.is_active()) {
+                ExitCode::FAILURE
+            } else {
+                ExitCode::SUCCESS
+            }
+        }
+        Err(e) => {
+            eprintln!("monet-audit: IO error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

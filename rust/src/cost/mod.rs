@@ -82,6 +82,7 @@ pub struct MemEnv {
 ///   cycles      = max(compute, onchip/bw, (offchip+spill)/bw, global/bw)
 ///   energy      = macs·e_mac + rf·e_rf + onchip·e_local
 ///                 + global·e_glob + (offchip+spill)·e_dram
+// audit:pure
 pub fn node_cost(
     kind: &OpKind,
     core: &Core,

@@ -598,6 +598,7 @@ impl Engine {
         let mut slots: Vec<Option<PointRecord<E::Row>>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
         let resumed = replay.len();
+        // audit:allow(DT02): each entry writes its own `slots[i]` — disjoint indexed stores commute
         for (i, rec) in replay {
             slots[i] = Some(rec);
         }

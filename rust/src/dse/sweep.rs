@@ -271,6 +271,7 @@ fn mode_tag(mode: Mode) -> [f64; 2] {
     }
 }
 
+// audit:pure
 impl Evaluate for SweepEval<'_> {
     type Point = DesignPoint;
     type Row = SweepRow;
@@ -486,6 +487,7 @@ pub struct ClusterEval<'a> {
     pub mapping: MappingConfig,
 }
 
+// audit:pure
 impl Evaluate for ClusterEval<'_> {
     type Point = ClusterPoint;
     type Row = ClusterRow;
@@ -614,6 +616,7 @@ pub struct HeteroEval<'a> {
     pub mapping: MappingConfig,
 }
 
+// audit:pure
 impl Evaluate for HeteroEval<'_> {
     type Point = HeteroPoint;
     type Row = ClusterRow;

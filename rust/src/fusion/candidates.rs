@@ -100,12 +100,13 @@ fn external_outputs(g: &Graph, set: &[NodeId]) -> usize {
 /// is: every member's predecessors are either all outside (entry) or the
 /// inside ones form no "hole". We verify convexity exactly with a bounded
 /// reachability check (sets are ≤ max_len nodes, graphs are modest).
-fn is_convex(g: &Graph, set: &HashSet<NodeId>) -> bool {
+fn is_convex(g: &Graph, members: &HashSet<NodeId>) -> bool {
     // for each edge leaving the set from node u, no descendant outside may
     // re-enter the set; bounded DFS from each exit edge
-    for &u in set {
+    // audit:allow(DT02): the result is an OR over independent per-(u,edge) hole checks, so the boolean is iteration-order-invariant
+    for &u in members {
         for e in g.out_edges(u) {
-            if set.contains(&e.dst) {
+            if members.contains(&e.dst) {
                 continue;
             }
             // walk forward from the outside node; if we re-enter set → hole
@@ -116,7 +117,7 @@ fn is_convex(g: &Graph, set: &HashSet<NodeId>) -> bool {
                     continue;
                 }
                 for s in g.successors(x) {
-                    if set.contains(&s) {
+                    if members.contains(&s) {
                         return false;
                     }
                     if seen.len() < 256 {

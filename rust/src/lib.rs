@@ -29,7 +29,11 @@
 //! * [`runtime`] — PJRT client executing AOT-compiled JAX/Pallas artifacts
 //! * [`report`] — CSV / ASCII figure emitters
 //! * [`util`] — small self-contained infrastructure (RNG, JSON, stats)
+//! * [`audit`] — `monet-audit`: static checker enforcing the standing
+//!   contracts (contract-version drift, evaluator purity, determinism)
+//!   at CI time
 
+pub mod audit;
 pub mod autodiff;
 pub mod cost;
 pub mod eval;

@@ -47,7 +47,9 @@ pub fn candidate_cores(accel: &Accelerator, dominant: &OpKind) -> Vec<usize> {
     ids.sort_by(|&a, &b| {
         let fa = accel.cores[a].affinity(dominant);
         let fb = accel.cores[b].affinity(dominant);
-        fb.partial_cmp(&fa).unwrap()
+        // total order, no NaN panic (affinity() returns constants today,
+        // but the ranking must survive a cost-model change that doesn't)
+        fb.total_cmp(&fa)
     });
     ids
 }
@@ -92,6 +94,27 @@ mod tests {
         let relu = OpKind::Eltwise { kind: EltwiseKind::Relu, elems: 4096, arity: 1 };
         let pref = candidate_cores(&a, &relu);
         assert!(a.simd_cores().contains(&pref[0]));
+    }
+
+    #[test]
+    fn ranking_comparator_tolerates_nan() {
+        // regression: the descending-affinity comparator used to be
+        // partial_cmp().unwrap(). affinity() returns constants today, so a
+        // NaN cannot reach candidate_cores through the public API — this
+        // pins the comparator pattern itself: total ordering, no panic,
+        // NaN ranked ahead of nothing real in descending order.
+        let mut v = [(0usize, 2.0f64), (1, f64::NAN), (2, 5.0)];
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        assert_eq!(v[0].0, 1); // NaN is total_cmp's maximum → first when descending
+        assert_eq!(v[1].0, 2);
+        assert_eq!(v[2].0, 0);
+        // stability: equal affinities keep id order (scheduler tie-break
+        // relies on a deterministic preference list)
+        let a = EdgeTpuParams::baseline().build();
+        let pref = candidate_cores(&a, &conv_kind());
+        let macs: Vec<usize> =
+            pref.iter().copied().filter(|i| a.mac_cores().contains(i)).collect();
+        assert!(macs.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

@@ -994,6 +994,17 @@ mod tests {
     }
 
     #[test]
+    fn ranking_survives_nan_latency() {
+        // regression: the latency ranking above used partial_cmp().unwrap(),
+        // which panics the moment an upstream model change lets a NaN
+        // through — total_cmp ranks NaN last and never panics
+        let mut v = [("a", f64::NAN), ("b", 1.0), ("c", 2.0)];
+        v.sort_by(|x, y| x.1.total_cmp(&y.1));
+        assert_eq!(v[0].0, "b");
+        assert_eq!(v[2].0, "a");
+    }
+
+    #[test]
     fn strategies_disagree_on_the_optimum() {
         // the §II-C1 point: no strategy dominates universally — at n=4 on a
         // bandwidth-limited fabric the rankings by latency and by memory
@@ -1003,7 +1014,7 @@ mod tests {
         let tp = run(Strategy::TensorParallel, 4);
         let by_lat = {
             let mut v = [("dp", dp.latency_cycles), ("pp", pp.latency_cycles), ("tp", tp.latency_cycles)];
-            v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            v.sort_by(|a, b| a.1.total_cmp(&b.1));
             v[0].0
         };
         let by_mem = {

@@ -247,6 +247,7 @@ fn group_placements(
 /// Cost of running a whole fused group sequentially on `core`, honouring
 /// intra-group tensor placements (internal edges stay local — the fusion
 /// payoff) and tensor parallelism.
+// audit:pure
 fn group_cost(
     graph: &Graph,
     group: &[NodeId],
@@ -344,6 +345,7 @@ pub fn schedule_with_cache(
             }
         }
         let mut pair_bytes: HashMap<(usize, usize), u64> = HashMap::new();
+        // audit:allow(DT02): commutative integer += into `pair_bytes`, which is itself sorted before the order-sensitive f64 work below
         for (&(src, b), &bytes) in &tensor_bytes {
             *pair_bytes.entry((gof[src], b)).or_insert(0) += bytes;
         }
@@ -581,6 +583,7 @@ pub fn schedule_with_cache(
             t.1 = t.1.max(group_finish[b]);
         }
         let mut events: Vec<(f64, i64)> = Vec::with_capacity(tensors.len() * 2);
+        // audit:allow(DT02): events are fully sorted by (time, delta) before the running sum, restoring a deterministic order
         for (&src, &(bytes, last_use)) in &tensors {
             events.push((group_finish[gof[src]], bytes as i64));
             events.push((last_use, -(bytes as i64)));

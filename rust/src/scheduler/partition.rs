@@ -68,6 +68,7 @@ impl Partition {
         let mut queue: Vec<usize> = (0..ng).filter(|&i| indeg[i] == 0).collect();
         let mut seen_g = 0;
         let mut succ: HashMap<usize, Vec<usize>> = HashMap::new();
+        // audit:allow(DT02): feeds only the Kahn reachability count (acyclic ⇔ seen_g == ng), which is iteration-order-invariant
         for &(a, b) in adj.keys() {
             succ.entry(a).or_default().push(b);
         }

@@ -387,6 +387,7 @@ fn check_failures(failures: &[crate::dse::PointFailure]) -> Result<(), ApiError>
 ///
 /// `progress(done, total)` fires as the underlying engine completes
 /// points (for `ga-cluster`, over the backbone enumeration phase).
+// audit:pure
 pub fn answer(
     q: &Query,
     cache: Option<&Arc<CostCache>>,

@@ -23,7 +23,8 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts last instead of panicking the comparator
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize) - 1;
     v[rank.min(v.len() - 1)]
 }
@@ -58,6 +59,15 @@ mod tests {
     #[test]
     fn geomean_simple() {
         assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_inputs() {
+        // regression: the comparator used to be partial_cmp().unwrap(),
+        // which panics on the first NaN — total_cmp sorts NaN last
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

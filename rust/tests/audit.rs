@@ -1,0 +1,430 @@
+//! Fixture suite for `monet-audit` (src/audit/, docs/AUDIT.md): every
+//! rule family is proven on a known-bad fixture — failing with the right
+//! rule id at the right file:line — plus a clean fixture that passes,
+//! the tampered-manifest rejection, the `--bless` refusal at an
+//! unchanged contract version, and the repo tip pinned audit-clean
+//! against the checked-in `ci/contract_fingerprints.json`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use monet::audit::fingerprint::{self, Region, RegionSpec};
+use monet::audit::{
+    default_config, run_audit, AuditConfig, Finding, ItemSpec, RequiredScope, Rule, SourceTree,
+};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("monet_audit_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(d.join("src")).unwrap();
+    d
+}
+
+/// Write fixture sources (`rel` is relative to `<root>/`, e.g.
+/// `src/lib.rs`) into a fresh temp root.
+fn fixture(tag: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root = tmp_dir(tag);
+    for (rel, text) in files {
+        let p = root.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(p, text).unwrap();
+    }
+    root
+}
+
+fn active(findings: &[Finding]) -> Vec<&Finding> {
+    findings.iter().filter(|f| f.is_active()).collect()
+}
+
+/// A one-region config over `src/lib.rs` with its own version const.
+fn tiny_cfg() -> AuditConfig {
+    AuditConfig {
+        regions: vec![Region::new(
+            "fixture.cost",
+            "src/lib.rs",
+            RegionSpec::Fns(vec!["node_cost".to_string()]),
+        )],
+        version_file: "src/lib.rs".to_string(),
+        version_const: "CACHE_CONTRACT_VERSION".to_string(),
+        required_scopes: vec![],
+        module_allow: vec![],
+    }
+}
+
+const LIB_V1: &str = "pub const CACHE_CONTRACT_VERSION: u32 = 1;\n\
+                      pub fn node_cost(x: u64) -> u64 { x * 3 + 1 }\n";
+
+#[test]
+fn unbumped_contract_edit_is_cv01_at_the_region() {
+    let root = fixture("cv01", &[("src/lib.rs", LIB_V1)]);
+    let manifest = root.join("manifest.json");
+    let cfg = tiny_cfg();
+
+    let tree = SourceTree::load(&root).unwrap();
+    fingerprint::bless(&tree, &cfg, &manifest).unwrap();
+    assert!(active(&run_audit(&root, &cfg, &manifest).unwrap()).is_empty());
+
+    // change the formula without bumping the version
+    fs::write(
+        root.join("src/lib.rs"),
+        "pub const CACHE_CONTRACT_VERSION: u32 = 1;\n\
+         pub fn node_cost(x: u64) -> u64 { x * 4 + 1 }\n",
+    )
+    .unwrap();
+    let findings = run_audit(&root, &cfg, &manifest).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Cv01);
+    assert_eq!(act[0].file, Path::new("src/lib.rs"));
+    assert_eq!(act[0].line, 2, "CV01 must point at the changed region");
+    assert!(act[0].message.contains("fixture.cost"));
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn doc_and_test_edits_never_trip_cv01() {
+    let root = fixture("cv_docs", &[("src/lib.rs", LIB_V1)]);
+    let manifest = root.join("manifest.json");
+    let cfg = tiny_cfg();
+    let tree = SourceTree::load(&root).unwrap();
+    fingerprint::bless(&tree, &cfg, &manifest).unwrap();
+
+    // comments, whitespace and `mod tests` additions are fingerprint-inert
+    fs::write(
+        root.join("src/lib.rs"),
+        "pub const CACHE_CONTRACT_VERSION: u32 = 1;\n\
+         /// documented now\n\
+         pub fn node_cost(x: u64) -> u64 {\n    x * 3 + 1 // affine\n}\n\
+         #[cfg(test)]\nmod tests { fn node_cost() {} }\n",
+    )
+    .unwrap();
+    let findings = run_audit(&root, &cfg, &manifest).unwrap();
+    assert!(active(&findings).is_empty(), "{findings:?}");
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn version_bump_with_stale_manifest_is_cv04_then_bless_clears() {
+    let root = fixture("cv04", &[("src/lib.rs", LIB_V1)]);
+    let manifest = root.join("manifest.json");
+    let cfg = tiny_cfg();
+    fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest).unwrap();
+
+    // legit change: new formula AND a version bump — but manifest is stale
+    fs::write(
+        root.join("src/lib.rs"),
+        "pub const CACHE_CONTRACT_VERSION: u32 = 2;\n\
+         pub fn node_cost(x: u64) -> u64 { x * 5 }\n",
+    )
+    .unwrap();
+    let findings = run_audit(&root, &cfg, &manifest).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Cv04);
+    assert_eq!(act[0].line, 1, "CV04 points at the version const");
+
+    // the documented workflow: bless after the bump, then check is clean
+    fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest).unwrap();
+    assert!(active(&run_audit(&root, &cfg, &manifest).unwrap()).is_empty());
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn bless_refuses_at_unchanged_version() {
+    let root = fixture("bless_refuse", &[("src/lib.rs", LIB_V1)]);
+    let manifest = root.join("manifest.json");
+    let cfg = tiny_cfg();
+    fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest).unwrap();
+
+    fs::write(
+        root.join("src/lib.rs"),
+        "pub const CACHE_CONTRACT_VERSION: u32 = 1;\n\
+         pub fn node_cost(x: u64) -> u64 { x }\n",
+    )
+    .unwrap();
+    let err = fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest)
+        .expect_err("bless at an unchanged version must refuse");
+    assert!(err.contains("refusing"), "{err}");
+    assert!(err.contains("fixture.cost"), "{err}");
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn tampered_manifest_is_cv02() {
+    let root = fixture("cv02", &[("src/lib.rs", LIB_V1)]);
+    let manifest = root.join("manifest.json");
+    let cfg = tiny_cfg();
+    fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest).unwrap();
+
+    // flip one fingerprint nibble by hand — checksum catches it
+    let text = fs::read_to_string(&manifest).unwrap();
+    let pos = text.find("\"fixture.cost\":\"").unwrap() + "\"fixture.cost\":\"".len();
+    let mut bytes = text.into_bytes();
+    bytes[pos] = if bytes[pos] == b'0' { b'1' } else { b'0' };
+    fs::write(&manifest, bytes).unwrap();
+
+    let findings = run_audit(&root, &cfg, &manifest).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Cv02);
+    assert!(act[0].message.contains("checksum"), "{}", act[0].message);
+
+    // and bless refuses to silently overwrite the tampered file
+    let err = fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest)
+        .expect_err("bless over a tampered manifest must refuse");
+    assert!(err.contains("invalid manifest"), "{err}");
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn missing_manifest_is_cv02() {
+    let root = fixture("cv02_missing", &[("src/lib.rs", LIB_V1)]);
+    let cfg = tiny_cfg();
+    let findings = run_audit(&root, &cfg, &root.join("absent.json")).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Cv02);
+    assert!(act[0].message.contains("--bless"), "{}", act[0].message);
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn unresolvable_region_is_cv03() {
+    let root = fixture("cv03", &[("src/lib.rs", "pub fn other() {}")]);
+    let mut cfg = tiny_cfg(); // names node_cost, which does not exist here
+    cfg.version_file = String::new();
+    let (_, findings) =
+        fingerprint::compute(&SourceTree::load(&root).unwrap(), &cfg);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::Cv03);
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// A purity/determinism-only config (no regions → no manifest needed).
+fn lint_cfg(required: Vec<RequiredScope>) -> AuditConfig {
+    AuditConfig { required_scopes: required, ..Default::default() }
+}
+
+#[test]
+fn impure_evaluate_impl_is_pu01_at_the_call() {
+    let src = "\
+use std::time::Instant;
+// audit:pure
+impl Evaluate for SweepEval {
+    fn evaluate(&self, p: u64) -> u64 {
+        let t = Instant::now();
+        p + t.elapsed().as_nanos() as u64
+    }
+}
+";
+    let root = fixture("pu01", &[("src/lib.rs", src)]);
+    let findings = run_audit(&root, &lint_cfg(vec![]), &root.join("m.json")).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Pu01);
+    assert_eq!(act[0].file, Path::new("src/lib.rs"));
+    assert_eq!(act[0].line, 5, "PU01 points at the Instant::now call");
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn missing_required_marker_is_pu02() {
+    let root = fixture(
+        "pu02",
+        &[("src/lib.rs", "pub fn answer(q: u64) -> u64 { q }")],
+    );
+    let cfg = lint_cfg(vec![RequiredScope {
+        file: "src/lib.rs".into(),
+        item: ItemSpec::Fn("answer".into()),
+    }]);
+    let findings = run_audit(&root, &cfg, &root.join("m.json")).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Pu02);
+    assert_eq!(act[0].line, 1);
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn partial_cmp_sort_is_dt01() {
+    let src = "\
+pub fn rank(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+";
+    let root = fixture("dt01", &[("src/lib.rs", src)]);
+    let findings = run_audit(&root, &lint_cfg(vec![]), &root.join("m.json")).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Dt01);
+    assert_eq!(act[0].line, 2);
+    assert!(act[0].message.contains("total_cmp"), "{}", act[0].message);
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn hashmap_order_leak_is_dt02_and_sorting_suppresses() {
+    let src = "\
+use std::collections::HashMap;
+pub fn rows(m: &HashMap<u32, u32>) -> Vec<u32> {
+    let mut out = Vec::new();
+    for (_, v) in m.iter() {
+        out.push(*v);
+    }
+    out
+}
+pub fn rows_sorted(m: &HashMap<u32, u32>) -> Vec<u32> {
+    let mut v: Vec<u32> = m.values().copied().collect();
+    v.sort_unstable();
+    v
+}
+";
+    let root = fixture("dt02", &[("src/lib.rs", src)]);
+    let findings = run_audit(&root, &lint_cfg(vec![]), &root.join("m.json")).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Dt02);
+    assert_eq!(act[0].line, 4, "only the unsorted iteration is flagged");
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn allow_marker_waives_with_reason_echoed_and_stale_allow_is_au01() {
+    let src = "\
+use std::collections::HashMap;
+pub fn count(m: &HashMap<u32, u32>) -> u64 {
+    let mut n = 0u64;
+    // audit:allow(DT02): accumulation is a commutative integer sum
+    for (_, v) in m.iter() {
+        n += *v as u64;
+    }
+    n
+}
+// audit:allow(DT01): nothing here to waive
+pub fn untouched() {}
+";
+    let root = fixture("allow", &[("src/lib.rs", src)]);
+    let findings = run_audit(&root, &lint_cfg(vec![]), &root.join("m.json")).unwrap();
+    let waived: Vec<&Finding> = findings.iter().filter(|f| !f.is_active()).collect();
+    assert_eq!(waived.len(), 1, "{findings:?}");
+    assert_eq!(waived[0].rule, Rule::Dt02);
+    assert_eq!(
+        waived[0].allowed.as_deref(),
+        Some("accumulation is a commutative integer sum"),
+        "the allow reason must be carried on the finding"
+    );
+    let act = active(&findings);
+    assert_eq!(act.len(), 1, "{act:?}");
+    assert_eq!(act[0].rule, Rule::Au01, "stale allow must be flagged");
+    assert_eq!(act[0].line, 10);
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn malformed_markers_are_au01() {
+    let src = "\
+// audit:allow(DT02)
+pub fn a() {}
+// audit:allow(XX99): made-up rule
+pub fn b() {}
+// audit:allow(CV01): not waivable inline
+pub fn c() {}
+// audit:frobnicate
+pub fn d() {}
+";
+    let root = fixture("au01", &[("src/lib.rs", src)]);
+    let findings = run_audit(&root, &lint_cfg(vec![]), &root.join("m.json")).unwrap();
+    let act = active(&findings);
+    assert_eq!(act.len(), 4, "{act:?}");
+    assert!(act.iter().all(|f| f.rule == Rule::Au01));
+    assert_eq!(
+        act.iter().map(|f| f.line).collect::<Vec<_>>(),
+        vec![1, 3, 5, 7]
+    );
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let src = "\
+use std::collections::BTreeMap;
+// audit:pure
+pub fn node_cost(x: u64, weights: &BTreeMap<u64, u64>) -> u64 {
+    weights.iter().map(|(k, v)| k * v).sum::<u64>() + x
+}
+";
+    let root = fixture(
+        "clean",
+        &[("src/lib.rs", &format!("pub const CACHE_CONTRACT_VERSION: u32 = 1;\n{src}"))],
+    );
+    let manifest = root.join("manifest.json");
+    let cfg = tiny_cfg();
+    fingerprint::bless(&SourceTree::load(&root).unwrap(), &cfg, &manifest).unwrap();
+    let findings = run_audit(&root, &cfg, &manifest).unwrap();
+    assert!(active(&findings).is_empty(), "{findings:?}");
+    let _ = fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------- repo tip
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn checked_in_manifest() -> PathBuf {
+    repo_root().join("../ci/contract_fingerprints.json")
+}
+
+/// The acceptance bar: `monet-audit --check` exits 0 on the repo tip.
+/// Every finding must be waived with a documented reason.
+#[test]
+fn repo_tip_is_audit_clean() {
+    let findings =
+        run_audit(&repo_root(), &default_config(), &checked_in_manifest()).unwrap();
+    let act = active(&findings);
+    assert!(
+        act.is_empty(),
+        "repo tip has active audit findings:\n{}",
+        act.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    for f in findings.iter().filter(|f| !f.is_active()) {
+        assert!(
+            f.allowed.as_deref().is_some_and(|r| !r.is_empty()),
+            "waived finding without a reason: {f}"
+        );
+    }
+}
+
+/// The checked-in manifest must be exactly what `--bless` regenerates at
+/// the current contract version — catches both drift and a stale bless.
+#[test]
+fn checked_in_manifest_matches_a_fresh_bless() {
+    let tree = SourceTree::load(&repo_root()).unwrap();
+    let cfg = default_config();
+    let dir = tmp_dir("fresh_bless");
+    let fresh = dir.join("manifest.json");
+    fingerprint::bless(&tree, &cfg, &fresh).unwrap();
+    let fresh_text = fs::read_to_string(&fresh).unwrap();
+    let pinned = fs::read_to_string(checked_in_manifest()).unwrap();
+    assert_eq!(
+        fresh_text, pinned,
+        "ci/contract_fingerprints.json is out of date — after a legitimate \
+         CACHE_CONTRACT_VERSION bump, run `cargo run --bin monet_audit -- --bless`"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Bless→check round-trip over the real tree with a throwaway manifest:
+/// the tool is self-consistent end-to-end regardless of the pinned file.
+#[test]
+fn bless_check_round_trip_on_repo_tree() {
+    let dir = tmp_dir("round_trip");
+    let manifest = dir.join("manifest.json");
+    let tree = SourceTree::load(&repo_root()).unwrap();
+    let cfg = default_config();
+    let msg = fingerprint::bless(&tree, &cfg, &manifest).unwrap();
+    assert!(msg.contains("created manifest"), "{msg}");
+    let findings = fingerprint::check(&tree, &cfg, &manifest);
+    assert!(findings.is_empty(), "{findings:?}");
+    let _ = fs::remove_dir_all(&dir);
+}
